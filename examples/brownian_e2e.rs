@@ -1,0 +1,120 @@
+//! END-TO-END DRIVER (deliverable (b) / EXPERIMENTS.md §E2E): the full
+//! three-layer stack on a real workload.
+//!
+//! Runs the paper's Brownian-dynamics benchmark on BOTH backends —
+//!
+//! * host: multithreaded Rust coordinator calling the Rust Philox,
+//! * device: the PJRT runtime executing `brownian_step_16384.hlo.txt`,
+//!   which was AOT-lowered from the JAX model calling the Pallas
+//!   Philox kernel —
+//!
+//! then proves the layers compose: identical RNG streams, matching
+//! trajectories, physics observables on the diffusion law, and
+//! thread-count-invariant hashes. Logs an MSD "loss curve" over time.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example brownian_e2e
+//! # larger run:
+//! N=1048576 STEPS=2000 cargo run --release --example brownian_e2e
+//! ```
+
+use openrand::coordinator::repro;
+use openrand::coordinator::{Backend, SimDriver};
+use openrand::sim::brownian::{BrownianParams, BrownianSim, RngStyle};
+use openrand::sim::observables;
+use openrand::util::format;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("N", 16_384);
+    let steps = env_usize("STEPS", 400) as u32;
+    let seed = 2026;
+    println!("=== OpenRAND E2E: Brownian dynamics, n={n}, steps={steps} ===\n");
+
+    // --- Host path with MSD logging (the "loss curve"). -----------------
+    let params = BrownianParams { n_particles: n, steps: 0, global_seed: seed, style: RngStyle::OpenRand };
+    let mut sim = BrownianSim::new(params);
+    let x0 = sim.x.clone();
+    let y0 = sim.y.clone();
+    let t_host = std::time::Instant::now();
+    let log_every = (steps / 10).max(1);
+    println!("step      MSD        mean|v|   (host, 1 thread)");
+    for s in 0..steps {
+        sim.step_all();
+        if (s + 1) % log_every == 0 {
+            println!(
+                "{:>5}  {:>9.5}  {:>9.5}",
+                s + 1,
+                observables::msd(&sim, &x0, &y0),
+                observables::mean_speed(&sim)
+            );
+        }
+    }
+    let host_time = t_host.elapsed();
+    let host_hash = sim.state_hash();
+    let slope_theory = observables::theoretical_msd_slope();
+    let msd_final = observables::msd(&sim, &x0, &y0);
+    println!("\nhost wall: {:.3}s ({}/s particle-steps)", host_time.as_secs_f64(),
+        format::si(n as f64 * steps as f64 / host_time.as_secs_f64()));
+    println!("final MSD {msd_final:.4} (diffusion-law slope theory {slope_theory:.3e}/step)");
+
+    // --- Device path: same physics, AOT artifact. -----------------------
+    let dev_params = BrownianParams { n_particles: n, steps, global_seed: seed, style: RngStyle::OpenRand };
+    match SimDriver::new(Backend::Device).run(dev_params) {
+        Ok((dev_sim, m)) => {
+            println!("\ndevice wall: {:.3}s ({}/s) [PJRT, artifact brownian_step_{n}]",
+                m.wall.as_secs_f64(), format::si(m.throughput()));
+            // Compare trajectories: XLA may re-associate floats, so use a
+            // tight relative tolerance rather than bitwise.
+            let mut max_rel: f64 = 0.0;
+            for i in 0..n {
+                for (a, b) in [(sim.x[i], dev_sim.x[i]), (sim.y[i], dev_sim.y[i])] {
+                    max_rel = max_rel.max((a - b).abs() / a.abs().max(1e-9));
+                }
+            }
+            println!("host vs device max relative position error: {max_rel:.3e}");
+            assert!(max_rel < 1e-9, "host/device trajectories diverged");
+            println!("host/device agreement: OK");
+        }
+        Err(e) => {
+            println!("\ndevice path unavailable ({e}); run `make artifacts` for the full E2E");
+            std::process::exit(1);
+        }
+    }
+
+    // --- Reproducibility ladder (the paper's core claim). ----------------
+    println!();
+    let ladder_params = BrownianParams { n_particles: n.min(65_536), steps: steps.min(50), global_seed: seed, style: RngStyle::OpenRand };
+    let ladder = repro::verify_thread_invariance(ladder_params, 8)?;
+    print!("{}", ladder.render());
+    assert!(ladder.consistent);
+    println!("single-thread hash {host_hash:016x} reproduced across thread ladder: OK");
+
+    // --- Physics validation. ---------------------------------------------
+    // After the velocity autocorrelation time (~1/(γ·dt) = 200 steps) the
+    // MSD grows linearly with the theoretical slope.
+    if steps >= 400 {
+        let mut probe = BrownianSim::new(BrownianParams { n_particles: n.min(16_384), steps: 0, global_seed: 99, style: RngStyle::OpenRand });
+        let px0 = probe.x.clone();
+        let py0 = probe.y.clone();
+        for _ in 0..400 {
+            probe.step_all();
+        }
+        let m1 = observables::msd(&probe, &px0, &py0);
+        for _ in 0..400 {
+            probe.step_all();
+        }
+        let m2 = observables::msd(&probe, &px0, &py0);
+        let slope = (m2 - m1) / 400.0;
+        let rel = (slope / slope_theory - 1.0).abs();
+        println!("diffusion law: measured slope {slope:.3e}, theory {slope_theory:.3e} (rel err {rel:.2})");
+        assert!(rel < 0.2, "diffusion law violated");
+        println!("physics validation: OK");
+    }
+
+    println!("\nE2E: ALL LAYERS COMPOSE");
+    Ok(())
+}

@@ -1,0 +1,12 @@
+"""Build-time compile path for the OpenRAND reproduction.
+
+Everything under this package runs ONCE at `make artifacts` and never on the
+request path. We enable x64 so uint64 arithmetic (Squares key mixing, Philox
+mul-hi-lo) is available inside jnp / Pallas-interpret kernels; every array in
+this package specifies its dtype explicitly, so the changed defaults are
+inert.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

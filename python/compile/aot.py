@@ -1,0 +1,101 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts + manifest.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the Rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+We lower via stablehlo -> XlaComputation with ``return_tuple=True``; the
+Rust runtime unwraps with ``to_tuple1`` (single-output graphs) or
+``to_vec`` (multi-output).
+
+The manifest is written twice: ``manifest.json`` for humans and
+``manifest.txt`` in a trivial line format for the dependency-free Rust
+parser (`rust/src/runtime/artifact.rs`):
+
+    name|file|in=dtype[shape],...|out=dtype[shape],...
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """Single-output graphs are lowered WITHOUT the tuple wrapper so the
+    Rust runtime can chain their output PjRtBuffer straight into the next
+    step's input (`execute_b`) with no host round-trip — the §Perf device
+    optimization. Multi-output graphs keep the tuple."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(avals) -> str:
+    parts = []
+    for a in avals:
+        shape = ",".join(str(d) for d in a.shape)
+        parts.append(f"{a.dtype}[{shape}]")
+    return ";".join(parts)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--small-only", action="store_true",
+                    help="lower only the small shapes (fast CI mode)")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    if args.small_only:
+        graphs = model.aot_graphs(sizes_block=(65536,), sizes_sim=(16384,))
+    else:
+        graphs = model.aot_graphs()
+
+    manifest = []
+    for name, (fn, example_args) in sorted(graphs.items()):
+        lowered = jax.jit(fn).lower(*example_args)
+        out_avals = jax.eval_shape(fn, *example_args)
+        multi = isinstance(out_avals, (tuple, list))
+        out_avals = out_avals if multi else (out_avals,)
+        text = to_hlo_text(lowered, return_tuple=multi)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": _sig(example_args),
+            "outputs": _sig(out_avals),
+            "tuple": int(multi),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+            "hlo_bytes": len(text),
+        }
+        manifest.append(entry)
+        print(f"  {name:34s} -> {fname} ({len(text) / 1024:.0f} KiB)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        for e in manifest:
+            f.write(
+                f"{e['name']}|{e['file']}|in={e['inputs']}|out={e['outputs']}|tuple={e['tuple']}\n"
+            )
+    print(f"wrote {len(manifest)} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""L1 Pallas kernels + pure-jnp oracles for the OpenRAND CBRNG family."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,95 @@
+"""Counter/stream layout contract — shared, bit-exact, with `rust/src/core/counter.rs`.
+
+This module is one of the two normative definitions of how an OpenRAND
+stream `(seed: u64, ctr: u32)` maps onto raw CBRNG invocations.  The other
+is `rust/src/core/counter.rs`; the integration test `cross_layer.rs` and
+`python/tests/test_kat.py` hold them bit-identical.
+
+Contract (documented identically on the Rust side):
+
+* ``seed_lo = seed & 0xffff_ffff``, ``seed_hi = seed >> 32``.
+* **Philox4x32-10** — key ``[seed_lo, seed_hi]``; block ``j`` (yielding
+  output words ``4j..4j+4`` of the stream) uses counter
+  ``[j, ctr, 0, 0]``.
+* **Philox2x32-10** — key ``seed_lo ^ (seed_hi * 0x9E3779B9 mod 2^32)``;
+  block ``j`` (words ``2j..2j+2``) uses counter ``[j, ctr]``.
+* **Threefry4x32-20** — key ``[seed_lo, seed_hi, 0, 0]``; counter
+  ``[j, ctr, 0, 0]``.
+* **Threefry2x32-20** — key ``[seed_lo, seed_hi]``; counter ``[j, ctr]``.
+* **Squares32** — key ``splitmix64(seed) | 1`` (odd, well-mixed); output
+  word ``j`` uses the 64-bit counter ``(ctr << 32) | j``.
+* **Tyche / Tyche-i** — not strictly counter-based: state seeded as
+  ``a = seed_hi, b = seed_lo, c = 2654435769, d = 1367130551 ^ ctr`` then
+  20 warm-up MIX rounds; word ``j`` is produced by the ``j``-th subsequent
+  MIX (sequential access only).
+
+Stream-to-uniform conversions (also normative):
+
+* ``f32 in [0,1)`` : ``(u32 >> 8) * 2^-24``
+* ``f64 in [0,1)`` : ``(((hi as u64) << 32 | lo) >> 11) * 2^-53`` where
+  ``hi`` is stream word ``2m`` and ``lo`` is word ``2m+1``.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+U64 = jnp.uint64
+
+# Philox constants (Salmon et al., SC'11).
+PHILOX_M4_0 = np.uint32(0xD2511F53)
+PHILOX_M4_1 = np.uint32(0xCD9E8D57)
+PHILOX_M2_0 = np.uint32(0xD256D193)
+PHILOX_W_0 = np.uint32(0x9E3779B9)  # golden ratio
+PHILOX_W_1 = np.uint32(0xBB67AE85)  # sqrt(3) - 1
+
+# Threefry (Skein) constants.
+SKEIN_PARITY = np.uint32(0x1BD11BDA)
+THREEFRY_R4 = ((10, 26), (11, 21), (13, 27), (23, 5), (6, 20), (17, 11), (25, 10), (18, 20))
+THREEFRY_R2 = (13, 15, 26, 6, 17, 29, 16, 24)
+
+# Tyche init constants (Neves & Araujo, PPAM'11).
+TYCHE_C = np.uint32(2654435769)
+TYCHE_D = np.uint32(1367130551)
+
+
+def split_seed(seed: int):
+    """64-bit python-int seed -> (lo, hi) numpy u32 pair."""
+    seed = int(seed) & 0xFFFF_FFFF_FFFF_FFFF
+    return np.uint32(seed & 0xFFFF_FFFF), np.uint32(seed >> 32)
+
+
+def splitmix64(x: int) -> int:
+    """Reference splitmix64 (python ints) — the Squares key-mixing function."""
+    x = (int(x) + 0x9E3779B97F4A7C15) & 0xFFFF_FFFF_FFFF_FFFF
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & 0xFFFF_FFFF_FFFF_FFFF
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & 0xFFFF_FFFF_FFFF_FFFF
+    return z ^ (z >> 31)
+
+
+def squares_key(seed: int) -> int:
+    """Normative Squares key derivation: splitmix64(seed) | 1 (odd)."""
+    return splitmix64(seed) | 1
+
+
+def mulhilo32(a, b):
+    """(hi, lo) 32-bit halves of the 64-bit product a*b (u32 inputs)."""
+    prod = a.astype(U64) * b.astype(U64)
+    return (prod >> np.uint64(32)).astype(U32), prod.astype(U32)
+
+
+def rotl32(x, n: int):
+    n = int(n)
+    return (x << np.uint32(n)) | (x >> np.uint32(32 - n))
+
+
+def u32_to_f32(u):
+    """u32 -> f32 uniform in [0, 1) — top 24 bits."""
+    return (u >> np.uint32(8)).astype(jnp.float32) * jnp.float32(2.0**-24)
+
+
+def u32x2_to_f64(hi, lo):
+    """two u32 stream words -> f64 uniform in [0, 1) — top 53 bits."""
+    u = (hi.astype(U64) << np.uint64(32)) | lo.astype(U64)
+    return (u >> np.uint64(11)).astype(jnp.float64) * jnp.float64(2.0**-53)

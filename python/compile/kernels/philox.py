@@ -1,0 +1,124 @@
+"""L1 Pallas kernels: Philox4x32-10 and Philox2x32-10 counter-mode blocks.
+
+The kernel arithmetic is written out explicitly (independently of
+`ref.py`) so the pytest bitwise comparison between the two is a real
+double-implementation check, mirroring how the Rust engines are verified.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid axis is the
+HBM↔VMEM schedule the paper expressed with CUDA threadblocks. Each grid
+step materializes `BLOCK` counter blocks *from the lane index alone* —
+there is no state input, which is exactly the paper's "no state
+management" property. Tile footprint: BLOCK×4 u32 out = 16 KiB for
+BLOCK=1024, far under VMEM; the kernel is integer-ALU bound (40 u32
+multiplies per 16 output bytes), MXU intentionally unused.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+U32 = cm.U32
+BLOCK = 1024  # counter blocks per grid step (=> 4*BLOCK u32 words per tile)
+
+
+def _mulhilo(m, x):
+    prod = m.astype(cm.U64) * x.astype(cm.U64)
+    return (prod >> np.uint64(32)).astype(U32), prod.astype(U32)
+
+
+def _philox4_rounds(c0, c1, c2, c3, k0, k1, rounds):
+    m0 = jnp.asarray(cm.PHILOX_M4_0, U32)
+    m1 = jnp.asarray(cm.PHILOX_M4_1, U32)
+    for r in range(rounds):
+        if r > 0:
+            k0 = k0 + cm.PHILOX_W_0
+            k1 = k1 + cm.PHILOX_W_1
+        hi0, lo0 = _mulhilo(m0, c0)
+        hi1, lo1 = _mulhilo(m1, c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+    return c0, c1, c2, c3
+
+
+def _philox4_block_kernel(params_ref, o_ref, *, rounds):
+    # params: (4,) u32 = [seed_lo, seed_hi, ctr, unused]
+    pid = pl.program_id(0).astype(U32)
+    j = pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    k0 = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    k1 = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    c1 = jnp.broadcast_to(params_ref[2], (BLOCK,))
+    z = jnp.zeros((BLOCK,), U32)
+    c0, c1, c2, c3 = _philox4_rounds(j, c1, z, z, k0, k1, rounds)
+    # stream order: block j contributes words 4j..4j+3
+    o_ref[...] = jnp.stack([c0, c1, c2, c3], axis=-1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "rounds"))
+def philox4x32_block(params, n: int, rounds: int = 10):
+    """First `n` u32 words of the Philox4x32-R stream described by `params`.
+
+    params: (4,) u32 `[seed_lo, seed_hi, ctr, 0]`. `n` must be a multiple
+    of 4*BLOCK (the model layer pads and slices).
+    """
+    assert n % (4 * BLOCK) == 0, n
+    grid = n // (4 * BLOCK)
+    return pl.pallas_call(
+        functools.partial(_philox4_block_kernel, rounds=rounds),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((4 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)
+
+
+def _philox2_block_kernel(params_ref, o_ref, *, rounds):
+    # params: (4,) u32 = [key, ctr, unused, unused]  (2x32 key is 1 word)
+    pid = pl.program_id(0).astype(U32)
+    c0 = pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    k0 = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    c1 = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    m = jnp.asarray(cm.PHILOX_M2_0, U32)
+    for r in range(rounds):
+        if r > 0:
+            k0 = k0 + cm.PHILOX_W_0
+        hi, lo = _mulhilo(m, c0)
+        c0, c1 = hi ^ k0 ^ c1, lo
+    o_ref[...] = jnp.stack([c0, c1], axis=-1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "rounds"))
+def philox2x32_block(params, n: int, rounds: int = 10):
+    """First `n` u32 words of the Philox2x32-R stream. params=[key, ctr, 0, 0]."""
+    assert n % (2 * BLOCK) == 0, n
+    grid = n // (2 * BLOCK)
+    return pl.pallas_call(
+        functools.partial(_philox2_block_kernel, rounds=rounds),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((2 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)
+
+
+def philox4_double2_lanes(pid_lo, pid_hi, step, rounds: int = 10):
+    """Per-lane draw_double2: block 0 of stream (seed=lane pid, ctr=step).
+
+    pid_lo/pid_hi: (L,) u32 per-lane seed halves; step: scalar u32.
+    Returns (r1, r2): two (L,) f64 uniforms in [0,1). This is the exact
+    arithmetic of the paper's Fig.-1 kernel body, used by the brownian
+    model and shared between the stateless and stateful step kernels.
+    """
+    z = jnp.zeros_like(pid_lo)
+    c1 = jnp.broadcast_to(jnp.asarray(step, U32), pid_lo.shape)
+    w0, w1, w2, w3 = _philox4_rounds(z, c1, z, z, pid_lo, pid_hi, rounds)
+    return cm.u32x2_to_f64(w0, w1), cm.u32x2_to_f64(w2, w3)

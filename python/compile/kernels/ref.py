@@ -1,0 +1,225 @@
+"""Pure-jnp oracles for every OpenRAND generator.
+
+These are the correctness anchors for the whole stack:
+
+* the Pallas kernels (`philox.py`, `threefry.py`, `squares.py`, `tyche.py`)
+  must match them **bitwise** (pytest),
+* the Rust `core/` engines must match them **bitwise** (cross-layer
+  integration test via the AOT artifacts),
+* the raw cores must match the Random123 known-answer vectors
+  (`test_kat.py`).
+
+Everything is vectorized over a leading axis of counter blocks so oracles
+stay fast enough to sweep with hypothesis.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import common as cm
+
+U32, U64 = cm.U32, cm.U64
+
+
+# ---------------------------------------------------------------------------
+# Raw cores (vectorized over leading axis)
+# ---------------------------------------------------------------------------
+
+def philox4x32(ctr, key, rounds: int = 10):
+    """Philox4x32-R. ctr: (..., 4) u32, key: (..., 2) u32 -> (..., 4) u32."""
+    c0, c1, c2, c3 = (ctr[..., i] for i in range(4))
+    k0, k1 = key[..., 0], key[..., 1]
+    for r in range(rounds):
+        if r > 0:
+            k0 = k0 + cm.PHILOX_W_0
+            k1 = k1 + cm.PHILOX_W_1
+        hi0, lo0 = cm.mulhilo32(jnp.asarray(cm.PHILOX_M4_0, U32), c0)
+        hi1, lo1 = cm.mulhilo32(jnp.asarray(cm.PHILOX_M4_1, U32), c2)
+        c0, c1, c2, c3 = hi1 ^ c1 ^ k0, lo1, hi0 ^ c3 ^ k1, lo0
+    return jnp.stack([c0, c1, c2, c3], axis=-1)
+
+
+def philox2x32(ctr, key, rounds: int = 10):
+    """Philox2x32-R. ctr: (..., 2) u32, key: (...,) u32 -> (..., 2) u32."""
+    c0, c1 = ctr[..., 0], ctr[..., 1]
+    k0 = key
+    for r in range(rounds):
+        if r > 0:
+            k0 = k0 + cm.PHILOX_W_0
+        hi, lo = cm.mulhilo32(jnp.asarray(cm.PHILOX_M2_0, U32), c0)
+        c0, c1 = hi ^ k0 ^ c1, lo
+    return jnp.stack([c0, c1], axis=-1)
+
+
+def threefry4x32(ctr, key, rounds: int = 20):
+    """Threefry4x32-R. ctr/key: (..., 4) u32 -> (..., 4) u32."""
+    ks4 = jnp.asarray(cm.SKEIN_PARITY, U32) ^ key[..., 0] ^ key[..., 1] ^ key[..., 2] ^ key[..., 3]
+    ks = [key[..., 0], key[..., 1], key[..., 2], key[..., 3], ks4]
+    x = [ctr[..., i] + ks[i] for i in range(4)]
+    for r in range(rounds):
+        r0, r1 = cm.THREEFRY_R4[r % 8]
+        if r % 2 == 0:
+            x[0] = x[0] + x[1]
+            x[1] = cm.rotl32(x[1], r0) ^ x[0]
+            x[2] = x[2] + x[3]
+            x[3] = cm.rotl32(x[3], r1) ^ x[2]
+        else:
+            x[0] = x[0] + x[3]
+            x[3] = cm.rotl32(x[3], r0) ^ x[0]
+            x[2] = x[2] + x[1]
+            x[1] = cm.rotl32(x[1], r1) ^ x[2]
+        if (r + 1) % 4 == 0:
+            q = (r + 1) // 4
+            for i in range(4):
+                x[i] = x[i] + ks[(q + i) % 5]
+            x[3] = x[3] + jnp.asarray(np.uint32(q), U32)
+    return jnp.stack(x, axis=-1)
+
+
+def threefry2x32(ctr, key, rounds: int = 20):
+    """Threefry2x32-R. ctr/key: (..., 2) u32 -> (..., 2) u32."""
+    ks = [key[..., 0], key[..., 1], jnp.asarray(cm.SKEIN_PARITY, U32) ^ key[..., 0] ^ key[..., 1]]
+    x0 = ctr[..., 0] + ks[0]
+    x1 = ctr[..., 1] + ks[1]
+    for r in range(rounds):
+        x0 = x0 + x1
+        x1 = cm.rotl32(x1, cm.THREEFRY_R2[r % 8]) ^ x0
+        if (r + 1) % 4 == 0:
+            q = (r + 1) // 4
+            x0 = x0 + ks[q % 3]
+            x1 = x1 + ks[(q + 1) % 3] + jnp.asarray(np.uint32(q), U32)
+    return jnp.stack([x0, x1], axis=-1)
+
+
+def squares32(ctr, key):
+    """Squares (Widynski 2020, 4-round squares32). ctr,key: (...,) u64 -> (...,) u32."""
+    ctr = ctr.astype(U64)
+    key = key.astype(U64)
+    x = ctr * key
+    y = x
+    z = y + key
+    x = x * x + y
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    x = x * x + z
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    x = x * x + y
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    return ((x * x + z) >> np.uint64(32)).astype(U32)
+
+
+def _tyche_mix(a, b, c, d):
+    a = a + b
+    d = cm.rotl32(d ^ a, 16)
+    c = c + d
+    b = cm.rotl32(b ^ c, 12)
+    a = a + b
+    d = cm.rotl32(d ^ a, 8)
+    c = c + d
+    b = cm.rotl32(b ^ c, 7)
+    return a, b, c, d
+
+
+def _tyche_mix_i(a, b, c, d):
+    b = cm.rotl32(b, 32 - 7) ^ c
+    c = c - d
+    d = cm.rotl32(d, 32 - 8) ^ a
+    a = a - b
+    b = cm.rotl32(b, 32 - 12) ^ c
+    c = c - d
+    d = cm.rotl32(d, 32 - 16) ^ a
+    a = a - b
+    return a, b, c, d
+
+
+def tyche_init(seed_lo, seed_hi, ctr, inverse: bool = False):
+    """Tyche state init: 20 warm-up rounds. Inputs (...,) u32 -> 4x (...,) u32."""
+    shape = jnp.shape(ctr)
+    a = jnp.broadcast_to(jnp.asarray(seed_hi, U32), shape)
+    b = jnp.broadcast_to(jnp.asarray(seed_lo, U32), shape)
+    c = jnp.broadcast_to(jnp.asarray(cm.TYCHE_C, U32), shape)
+    d = jnp.asarray(cm.TYCHE_D, U32) ^ jnp.asarray(ctr, U32)
+    mix = _tyche_mix_i if inverse else _tyche_mix
+    for _ in range(20):
+        a, b, c, d = mix(a, b, c, d)
+    return a, b, c, d
+
+
+def tyche_stream(seed_lo, seed_hi, ctr, n: int, inverse: bool = False):
+    """First n outputs of a Tyche (or Tyche-i) stream. Returns (..., n) u32."""
+    a, b, c, d = tyche_init(seed_lo, seed_hi, ctr, inverse)
+    mix = _tyche_mix_i if inverse else _tyche_mix
+    outs = []
+    for _ in range(n):
+        a, b, c, d = mix(a, b, c, d)
+        outs.append(a if inverse else b)
+    return jnp.stack(outs, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Canonical streams per the counter contract (common.py)
+# ---------------------------------------------------------------------------
+
+def philox4x32_stream(seed: int, ctr: int, n: int):
+    """First n u32 words of the OpenRAND Philox4x32-10 stream (seed, ctr)."""
+    lo, hi = cm.split_seed(seed)
+    nblk = (n + 3) // 4
+    j = jnp.arange(nblk, dtype=U32)
+    blocks = jnp.stack(
+        [j, jnp.full_like(j, np.uint32(ctr)), jnp.zeros_like(j), jnp.zeros_like(j)], axis=-1
+    )
+    key = jnp.broadcast_to(jnp.asarray([lo, hi], U32), (nblk, 2))
+    return philox4x32(blocks, key).reshape(-1)[:n]
+
+
+def philox2x32_stream(seed: int, ctr: int, n: int):
+    lo, hi = cm.split_seed(seed)
+    k = np.uint32((int(lo) ^ (int(hi) * 0x9E3779B9)) & 0xFFFF_FFFF)
+    nblk = (n + 1) // 2
+    j = jnp.arange(nblk, dtype=U32)
+    blocks = jnp.stack([j, jnp.full_like(j, np.uint32(ctr))], axis=-1)
+    key = jnp.full((nblk,), k, U32)
+    return philox2x32(blocks, key).reshape(-1)[:n]
+
+
+def threefry4x32_stream(seed: int, ctr: int, n: int):
+    lo, hi = cm.split_seed(seed)
+    nblk = (n + 3) // 4
+    j = jnp.arange(nblk, dtype=U32)
+    blocks = jnp.stack(
+        [j, jnp.full_like(j, np.uint32(ctr)), jnp.zeros_like(j), jnp.zeros_like(j)], axis=-1
+    )
+    key = jnp.broadcast_to(jnp.asarray([lo, hi, np.uint32(0), np.uint32(0)], U32), (nblk, 4))
+    return threefry4x32(blocks, key).reshape(-1)[:n]
+
+
+def threefry2x32_stream(seed: int, ctr: int, n: int):
+    lo, hi = cm.split_seed(seed)
+    nblk = (n + 1) // 2
+    j = jnp.arange(nblk, dtype=U32)
+    blocks = jnp.stack([j, jnp.full_like(j, np.uint32(ctr))], axis=-1)
+    key = jnp.broadcast_to(jnp.asarray([lo, hi], U32), (nblk, 2))
+    return threefry2x32(blocks, key).reshape(-1)[:n]
+
+
+def squares_stream(seed: int, ctr: int, n: int):
+    key = jnp.full((n,), np.uint64(cm.squares_key(seed)), U64)
+    j = jnp.arange(n, dtype=U64)
+    c = jnp.asarray(np.uint64((int(ctr) & 0xFFFF_FFFF) << 32), U64) | j
+    return squares32(c, key)
+
+
+def tyche_stream_api(seed: int, ctr: int, n: int, inverse: bool = False):
+    lo, hi = cm.split_seed(seed)
+    out = tyche_stream(lo, hi, jnp.asarray(np.uint32(ctr), U32), n, inverse)
+    return out.reshape(-1)[:n]
+
+
+STREAMS = {
+    "philox": philox4x32_stream,
+    "philox2x32": philox2x32_stream,
+    "threefry": threefry4x32_stream,
+    "threefry2x32": threefry2x32_stream,
+    "squares": squares_stream,
+    "tyche": tyche_stream_api,
+    "tyche_i": lambda s, c, n: tyche_stream_api(s, c, n, inverse=True),
+}

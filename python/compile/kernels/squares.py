@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: Squares (Widynski 2020) counter-mode block.
+
+Squares is the smallest-state member of the family (64-bit key + 64-bit
+counter) and the fastest on CPUs; the paper's Fig. 4a shows it leading
+the field at long stream lengths. The kernel needs genuine u64 arithmetic
+(x64 is enabled package-wide); on real TPU this would be emulated via
+32-bit pairs — see DESIGN.md §Hardware-Adaptation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+U32, U64 = cm.U32, cm.U64
+BLOCK = 1024
+
+
+def _squares_block_kernel(params_ref, o_ref):
+    # params: (4,) u32 = [key_lo, key_hi, ctr, unused]
+    pid = pl.program_id(0).astype(U32)
+    j = (pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)).astype(U64)
+    key = (params_ref[1].astype(U64) << np.uint64(32)) | params_ref[0].astype(U64)
+    key = jnp.broadcast_to(key, (BLOCK,))
+    ctr = (params_ref[2].astype(U64) << np.uint64(32)) | j
+    x = ctr * key
+    y = x
+    z = y + key
+    x = x * x + y
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    x = x * x + z
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    x = x * x + y
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    o_ref[...] = ((x * x + z) >> np.uint64(32)).astype(U32)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def squares_block(params, n: int):
+    """First `n` u32 outputs of the Squares stream.
+
+    params: (4,) u32 `[key_lo, key_hi, ctr, 0]` where key = squares_key(seed)
+    (the splitmix64 derivation happens host-side; see common.squares_key).
+    """
+    assert n % BLOCK == 0, n
+    grid = n // BLOCK
+    return pl.pallas_call(
+        _squares_block_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)

@@ -1,0 +1,111 @@
+"""L1 Pallas kernels: Threefry4x32-20 and Threefry2x32-20 counter-mode blocks.
+
+Explicit arithmetic, independent of ref.py (see philox.py header for the
+testing rationale and the TPU mapping notes). Threefry is add/rotate/xor
+only — no multiplies — so on hardware without fast 32x32->64 multiply it
+is the preferred member of the family; the ablation bench compares it
+against Philox on this host.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+U32 = cm.U32
+BLOCK = 1024
+
+
+def _rotl(x, n):
+    return (x << np.uint32(n)) | (x >> np.uint32(32 - n))
+
+
+def _tf4_rounds(x0, x1, x2, x3, k0, k1, k2, k3, rounds):
+    ks4 = jnp.asarray(cm.SKEIN_PARITY, U32) ^ k0 ^ k1 ^ k2 ^ k3
+    ks = (k0, k1, k2, k3, ks4)
+    x0, x1, x2, x3 = x0 + k0, x1 + k1, x2 + k2, x3 + k3
+    for r in range(rounds):
+        r0, r1 = cm.THREEFRY_R4[r % 8]
+        if r % 2 == 0:
+            x0 = x0 + x1
+            x1 = _rotl(x1, r0) ^ x0
+            x2 = x2 + x3
+            x3 = _rotl(x3, r1) ^ x2
+        else:
+            x0 = x0 + x3
+            x3 = _rotl(x3, r0) ^ x0
+            x2 = x2 + x1
+            x1 = _rotl(x1, r1) ^ x2
+        if (r + 1) % 4 == 0:
+            q = (r + 1) // 4
+            x0 = x0 + ks[q % 5]
+            x1 = x1 + ks[(q + 1) % 5]
+            x2 = x2 + ks[(q + 2) % 5]
+            x3 = x3 + ks[(q + 3) % 5] + jnp.asarray(np.uint32(q), U32)
+    return x0, x1, x2, x3
+
+
+def _tf4_block_kernel(params_ref, o_ref, *, rounds):
+    # params: (4,) u32 = [seed_lo, seed_hi, ctr, unused]
+    pid = pl.program_id(0).astype(U32)
+    j = pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    k0 = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    k1 = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    c1 = jnp.broadcast_to(params_ref[2], (BLOCK,))
+    z = jnp.zeros((BLOCK,), U32)
+    x0, x1, x2, x3 = _tf4_rounds(j, c1, z, z, k0, k1, z, z, rounds)
+    o_ref[...] = jnp.stack([x0, x1, x2, x3], axis=-1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "rounds"))
+def threefry4x32_block(params, n: int, rounds: int = 20):
+    """First `n` u32 words of the Threefry4x32-R stream. params=[seed_lo, seed_hi, ctr, 0]."""
+    assert n % (4 * BLOCK) == 0, n
+    grid = n // (4 * BLOCK)
+    return pl.pallas_call(
+        functools.partial(_tf4_block_kernel, rounds=rounds),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((4 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)
+
+
+def _tf2_block_kernel(params_ref, o_ref, *, rounds):
+    # params: (4,) u32 = [seed_lo, seed_hi, ctr, unused]
+    pid = pl.program_id(0).astype(U32)
+    j = pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    k0 = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    k1 = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    ks2 = jnp.asarray(cm.SKEIN_PARITY, U32) ^ k0 ^ k1
+    ks = (k0, k1, ks2)
+    x0 = j + k0
+    x1 = jnp.broadcast_to(params_ref[2], (BLOCK,)) + k1
+    for r in range(rounds):
+        x0 = x0 + x1
+        x1 = _rotl(x1, cm.THREEFRY_R2[r % 8]) ^ x0
+        if (r + 1) % 4 == 0:
+            q = (r + 1) // 4
+            x0 = x0 + ks[q % 3]
+            x1 = x1 + ks[(q + 1) % 3] + jnp.asarray(np.uint32(q), U32)
+    o_ref[...] = jnp.stack([x0, x1], axis=-1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "rounds"))
+def threefry2x32_block(params, n: int, rounds: int = 20):
+    """First `n` u32 words of the Threefry2x32-R stream. params=[seed_lo, seed_hi, ctr, 0]."""
+    assert n % (2 * BLOCK) == 0, n
+    grid = n // (2 * BLOCK)
+    return pl.pallas_call(
+        functools.partial(_tf2_block_kernel, rounds=rounds),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((2 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: Tyche / Tyche-i (Neves & Araujo 2011) lane-parallel block.
+
+Tyche is not strictly counter-based — each (seed, ctr) stream is
+sequential — so the parallel-block shape differs from the Philox family:
+lane `i` of the output block is the FIRST output of stream
+`(seed, ctr = base_ctr ^ i)`. That is exactly how the paper uses Tyche on
+devices: one short stream per processing element per kernel launch.
+`words` > 1 unrolls additional sequential outputs per lane, laid out
+word-major *within each grid tile* of BLOCK lanes: word w of tile-local
+lane l in tile g lands at `out[g*BLOCK*words + w*BLOCK + l]`. With
+words=1 (the only layout the model layer uses) this is simply lane i at
+`out[i]`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common as cm
+
+U32 = cm.U32
+BLOCK = 1024
+
+
+def _mix(a, b, c, d):
+    a = a + b
+    d = cm.rotl32(d ^ a, 16)
+    c = c + d
+    b = cm.rotl32(b ^ c, 12)
+    a = a + b
+    d = cm.rotl32(d ^ a, 8)
+    c = c + d
+    b = cm.rotl32(b ^ c, 7)
+    return a, b, c, d
+
+
+def _mix_i(a, b, c, d):
+    b = cm.rotl32(b, 32 - 7) ^ c
+    c = c - d
+    d = cm.rotl32(d, 32 - 8) ^ a
+    a = a - b
+    b = cm.rotl32(b, 32 - 12) ^ c
+    c = c - d
+    d = cm.rotl32(d, 32 - 16) ^ a
+    a = a - b
+    return a, b, c, d
+
+
+def _tyche_block_kernel(params_ref, o_ref, *, words, inverse):
+    # params: (4,) u32 = [seed_lo, seed_hi, base_ctr, unused]
+    pid = pl.program_id(0).astype(U32)
+    lane = pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    a = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    b = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    c = jnp.full((BLOCK,), cm.TYCHE_C, U32)
+    d = jnp.asarray(cm.TYCHE_D, U32) ^ (params_ref[2] ^ lane)
+    mix = _mix_i if inverse else _mix
+    for _ in range(20):
+        a, b, c, d = mix(a, b, c, d)
+    outs = []
+    for _ in range(words):
+        a, b, c, d = mix(a, b, c, d)
+        outs.append(a if inverse else b)
+    o_ref[...] = jnp.stack(outs, axis=0).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "words", "inverse"))
+def tyche_block(params, n: int, words: int = 1, inverse: bool = False):
+    """`n` u32 outputs: `n // words` lanes x `words` sequential outputs each.
+
+    params: (4,) u32 `[seed_lo, seed_hi, base_ctr, 0]`; lane i uses
+    ctr = base_ctr ^ i. Layout lanes-first per word (see module header).
+    """
+    assert n % (BLOCK * words) == 0, n
+    grid = n // (BLOCK * words)
+    return pl.pallas_call(
+        functools.partial(_tyche_block_kernel, words=words, inverse=inverse),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BLOCK * words,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)

@@ -1,0 +1,248 @@
+"""L2: JAX compute graphs for the OpenRAND reproduction.
+
+Device-side analogues of the paper's CUDA kernels, calling the L1 Pallas
+kernels. Every function here is lowered ONCE by `aot.py` to HLO text and
+executed from the Rust coordinator via PJRT — Python never touches the
+request path.
+
+Graphs:
+
+* ``uniform_u32_block`` / ``uniform_f64_block`` / ``normal_f64_block`` —
+  raw block generation for a chosen generator (the device half of the
+  Fig. 4a-style micro measurements, and general-purpose device RNG for
+  downstream users).
+* ``brownian_step`` — one step of the paper's Brownian-dynamics
+  macro-benchmark, **OpenRAND style**: stateless, the RNG stream is
+  re-derived per particle from ``(seed = pid ^ global_seed, ctr = step)``
+  exactly as in the paper's Fig. 1.
+* ``brownian_step_stateful`` + ``curand_state_init`` — the **cuRAND
+  analogue** (paper Fig. 2): a 64-byte-per-particle state tensor is
+  loaded, used, updated and stored every step, and a separate init graph
+  mirrors the dedicated ``curand_init`` kernel. Identical Philox core, so
+  any performance difference is pure state traffic + API overhead.
+* ``brownian_init`` — deterministic initial particle placement.
+
+Particle layout: ``(N, 4) f64 = [x, y, vx, vy]`` (struct-of-rows; pid is
+the row index, as in the paper where ``p.pid`` is assigned from the
+launch index).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import common as cm
+from .kernels import philox as kphilox
+from .kernels import squares as ksquares
+from .kernels import threefry as kthreefry
+from .kernels import tyche as ktyche
+
+U32, U64 = cm.U32, cm.U64
+
+# Physics constants — match rust/src/sim/brownian.rs (normative pair).
+GAMMA = 0.5
+MASS = 1.0
+DT = 0.01
+
+BLOCK_FNS = {
+    "philox": kphilox.philox4x32_block,
+    "philox2x32": kphilox.philox2x32_block,
+    "threefry": kthreefry.threefry4x32_block,
+    "threefry2x32": kthreefry.threefry2x32_block,
+    "squares": ksquares.squares_block,
+    "tyche": ktyche.tyche_block,
+}
+
+
+def uniform_u32_block(params, n: int, gen: str = "philox"):
+    """(n,) u32 raw stream block for generator `gen` (see kernels/)."""
+    return BLOCK_FNS[gen](params, n)
+
+
+def uniform_f64_block(params, n: int, gen: str = "philox"):
+    """(n,) f64 uniforms in [0,1): pairs of u32 words -> 53-bit doubles."""
+    u = uniform_u32_block(params, 2 * n, gen)
+    w = u.reshape(n, 2)
+    return cm.u32x2_to_f64(w[:, 0], w[:, 1])
+
+
+def normal_f64_block(params, n: int, gen: str = "philox"):
+    """(n,) f64 standard normals via Box-Muller on consecutive f64 pairs.
+
+    Matches `rust/src/dist/normal.rs::BoxMuller` bit-for-all-practical
+    (same formula; libm vs XLA trig may differ in the last ulp — the
+    integration test uses a 1e-12 tolerance here, unlike the bitwise u32
+    checks).
+    """
+    u = uniform_f64_block(params, 2 * n, gen).reshape(n, 2)
+    # Guard u1=0 -> log(0): the [0,1) draw can be exactly 0; substitute the
+    # smallest representable step, as the Rust side does.
+    u1 = jnp.maximum(u[:, 0], 2.0**-53)
+    u2 = u[:, 1]
+    r = jnp.sqrt(-2.0 * jnp.log(u1))
+    return r * jnp.cos(2.0 * jnp.pi * u2)
+
+
+def _pid_seed_halves(n: int, params):
+    """Per-particle stream seed = pid ^ global_seed, split into u32 halves."""
+    pid = jnp.arange(n, dtype=U64)
+    gseed = (params[1].astype(U64) << np.uint64(32)) | params[0].astype(U64)
+    seed = pid ^ gseed
+    return seed.astype(U32), (seed >> np.uint64(32)).astype(U32)
+
+
+def brownian_step(pos_vel, params, n: int):
+    """One OpenRAND-style Brownian-dynamics step (paper Fig. 1 kernel).
+
+    pos_vel: (n, 4) f64; params: (4,) u32 [gseed_lo, gseed_hi, step, 0].
+    Returns the updated (n, 4) f64. Drag + uniform random kick on the
+    velocity, then explicit-Euler position update.
+    """
+    x, y, vx, vy = (pos_vel[:, i] for i in range(4))
+    # Drag force.
+    vx = vx - (GAMMA / MASS) * vx * DT
+    vy = vy - (GAMMA / MASS) * vy * DT
+    # Random kick: draw_double2 from stream (seed=pid^gseed, ctr=step).
+    lo, hi = _pid_seed_halves(n, params)
+    r1, r2 = kphilox.philox4_double2_lanes(lo, hi, params[2])
+    sqrt_dt = jnp.sqrt(jnp.float64(DT))
+    vx = vx + (r1 * 2.0 - 1.0) * sqrt_dt
+    vy = vy + (r2 * 2.0 - 1.0) * sqrt_dt
+    # Position update.
+    x = x + vx * DT
+    y = y + vy * DT
+    return jnp.stack([x, y, vx, vy], axis=-1)
+
+
+def curand_state_init(params, n: int):
+    """cuRAND-analogue init kernel: build the per-particle state tensor.
+
+    (n, 16) u32 = 64 bytes/particle, matching the paper's reported
+    ~64 MB per million particles: words 0-3 counter, 4-5 key, 6-9 output
+    buffer, 10 buffer position, 11-15 padding (cuRAND's
+    curandStatePhilox4_32_10_t is 64 B).
+    params: (4,) u32 [gseed_lo, gseed_hi, 0, 0].
+    """
+    pid = jnp.arange(n, dtype=U32)
+    z = jnp.zeros((n,), U32)
+    cols = [
+        pid,  # ctr.x = subsequence (as curand_init(seed, i, 0, ..))
+        z, z, z,
+        jnp.broadcast_to(params[0], (n,)),  # key = global seed
+        jnp.broadcast_to(params[1], (n,)),
+    ] + [z] * 10
+    return jnp.stack(cols, axis=-1)
+
+
+def brownian_step_stateful(pos_vel, state, n: int):
+    """cuRAND-style step (paper Fig. 2): load state, draw, store state.
+
+    state: (n, 16) u32 carried through HBM both ways every step — that
+    round-trip is exactly the overhead the paper attributes to cuRAND.
+    Same Philox4x32-10 core as `brownian_step`.
+    """
+    x, y, vx, vy = (pos_vel[:, i] for i in range(4))
+    vx = vx - (GAMMA / MASS) * vx * DT
+    vy = vy - (GAMMA / MASS) * vy * DT
+    c0, c1, c2, c3 = (state[:, i] for i in range(4))
+    k0, k1 = state[:, 4], state[:, 5]
+    w0, w1, w2, w3 = kphilox._philox4_rounds(c0, c1, c2, c3, k0, k1, 10)
+    r1 = cm.u32x2_to_f64(w0, w1)
+    r2 = cm.u32x2_to_f64(w2, w3)
+    sqrt_dt = jnp.sqrt(jnp.float64(DT))
+    vx = vx + (r1 * 2.0 - 1.0) * sqrt_dt
+    vy = vy + (r2 * 2.0 - 1.0) * sqrt_dt
+    x = x + vx * DT
+    y = y + vy * DT
+    # 128-bit counter increment, then store the full 64 B back.
+    one = jnp.ones_like(c0)
+    nc0 = c0 + one
+    carry0 = (nc0 == 0).astype(U32)
+    nc1 = c1 + carry0
+    carry1 = ((nc1 == 0) & (carry0 == 1)).astype(U32)
+    nc2 = c2 + carry1
+    carry2 = ((nc2 == 0) & (carry1 == 1)).astype(U32)
+    nc3 = c3 + carry2
+    new_state = jnp.concatenate(
+        [
+            jnp.stack([nc0, nc1, nc2, nc3, k0, k1, w0, w1, w2, w3], axis=-1),
+            state[:, 10:],
+        ],
+        axis=-1,
+    )
+    return jnp.stack([x, y, vx, vy], axis=-1), new_state
+
+
+def brownian_step_stateful_pos(pos_vel, state, n: int):
+    """Split stateful step, positions half (single-output so the Rust
+    runtime can buffer-chain it; see aot.to_hlo_text). Reads the full
+    state tensor — the HBM traffic is identical to the combined graph."""
+    return brownian_step_stateful(pos_vel, state, n)[0]
+
+
+def curand_state_update(state, n: int):
+    """Split stateful step, state half: the 128-bit counter increment +
+    full 64 B store-back. The cuRAND out-buffer words (6..10) are left
+    untouched (positions never depend on them; cuRAND's buffering is an
+    implementation detail the split device path does not materialize)."""
+    c0, c1, c2, c3 = (state[:, i] for i in range(4))
+    one = jnp.ones_like(c0)
+    nc0 = c0 + one
+    carry0 = (nc0 == 0).astype(U32)
+    nc1 = c1 + carry0
+    carry1 = ((nc1 == 0) & (carry0 == 1)).astype(U32)
+    nc2 = c2 + carry1
+    carry2 = ((nc2 == 0) & (carry1 == 1)).astype(U32)
+    nc3 = c3 + carry2
+    return jnp.concatenate(
+        [jnp.stack([nc0, nc1, nc2, nc3], axis=-1), state[:, 4:]], axis=-1
+    )
+
+
+def brownian_init(n: int):
+    """Deterministic initial particle placement on a grid, zero velocity.
+
+    Matches rust/src/sim/brownian.rs::init_particles (normative pair).
+    """
+    side = int(np.ceil(np.sqrt(n)))
+    pid = jnp.arange(n, dtype=jnp.float64)
+    gx = jnp.floor_divide(pid, side)
+    gy = jnp.mod(pid, side)
+    z = jnp.zeros((n,), jnp.float64)
+    return jnp.stack([gx, gy, z, z], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points: name -> (fn, example args). Consumed by aot.py.
+# ---------------------------------------------------------------------------
+
+def aot_graphs(sizes_block=(65536, 1048576), sizes_sim=(16384, 1048576)):
+    """All graphs to lower, with their example argument shapes."""
+    p4 = jax.ShapeDtypeStruct((4,), U32)
+    graphs = {}
+    for n in sizes_block:
+        for gen in ("philox", "threefry", "squares", "tyche"):
+            graphs[f"{gen}_u32_{n}"] = (
+                functools.partial(uniform_u32_block, n=n, gen=gen), (p4,))
+        graphs[f"philox_f64_{n // 2}"] = (
+            functools.partial(uniform_f64_block, n=n // 2, gen="philox"), (p4,))
+        graphs[f"normal_f64_{n // 2}"] = (
+            functools.partial(normal_f64_block, n=n // 2, gen="philox"), (p4,))
+    for n in sizes_sim:
+        pv = jax.ShapeDtypeStruct((n, 4), jnp.float64)
+        st = jax.ShapeDtypeStruct((n, 16), U32)
+        graphs[f"brownian_step_{n}"] = (
+            functools.partial(brownian_step, n=n), (pv, p4))
+        graphs[f"brownian_step_stateful_{n}"] = (
+            functools.partial(brownian_step_stateful, n=n), (pv, st))
+        graphs[f"brownian_step_stateful_pos_{n}"] = (
+            functools.partial(brownian_step_stateful_pos, n=n), (pv, st))
+        graphs[f"curand_state_update_{n}"] = (
+            functools.partial(curand_state_update, n=n), (st,))
+        graphs[f"curand_state_init_{n}"] = (
+            functools.partial(curand_state_init, n=n), (p4,))
+        graphs[f"brownian_init_{n}"] = (
+            functools.partial(brownian_init, n=n), ())
+    return graphs

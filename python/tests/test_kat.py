@@ -1,0 +1,143 @@
+"""Known-answer tests for the pure-jnp oracle cores.
+
+Vectors are from the Random123 distribution's ``kat_vectors`` file (Salmon
+et al., SC'11) — zeros, all-ones, and pi-digit counter/key patterns. These
+pin the oracle to the published algorithms; everything else in the stack
+(Pallas kernels, Rust engines) is then pinned to the oracle.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import common as cm
+from compile.kernels import ref
+
+U32 = jnp.uint32
+M = 0xFFFFFFFF
+PI = [0x243F6A88, 0x85A308D3, 0x13198A2E, 0x03707344, 0xA4093822, 0x299F31D0]
+
+
+def u32s(*xs):
+    return jnp.asarray([x & M for x in xs], U32)
+
+
+def check(got, want):
+    got = [int(v) for v in np.asarray(got).reshape(-1)]
+    assert got == [w & M for w in want], (
+        " ".join(f"{g:08x}" for g in got) + " != " + " ".join(f"{w:08x}" for w in want)
+    )
+
+
+@pytest.mark.parametrize(
+    "ctr,key,want",
+    [
+        ((0, 0, 0, 0), (0, 0), (0x6627E8D5, 0xE169C58D, 0xBC57AC4C, 0x9B00DBD8)),
+        ((M, M, M, M), (M, M), (0x408F276D, 0x41C83B0E, 0xA20BC7C6, 0x6D5451FD)),
+        (tuple(PI[:4]), tuple(PI[4:]), (0xD16CFE09, 0x94FDCCEB, 0x5001E420, 0x24126EA1)),
+    ],
+)
+def test_philox4x32_kat(ctr, key, want):
+    check(ref.philox4x32(u32s(*ctr), u32s(*key)), want)
+
+
+@pytest.mark.parametrize(
+    "ctr,key,want",
+    [
+        ((0, 0), 0, (0xFF1DAE59, 0x6CD10DF2)),
+        ((M, M), M, (0x2C3F628B, 0xAB4FD7AD)),
+        ((PI[0], PI[1]), PI[2], (0xDD7CE038, 0xF62A4C12)),
+    ],
+)
+def test_philox2x32_kat(ctr, key, want):
+    check(ref.philox2x32(u32s(*ctr), jnp.asarray(key & M, U32)), want)
+
+
+@pytest.mark.parametrize(
+    "ctr,key,want",
+    [
+        ((0, 0, 0, 0), (0, 0, 0, 0), (0x9C6CA96A, 0xE17EAE66, 0xFC10ECD4, 0x5256A7D8)),
+        ((M, M, M, M), (M, M, M, M), (0x2A881696, 0x57012287, 0xF6C7446E, 0xA16A6732)),
+    ],
+)
+def test_threefry4x32_kat(ctr, key, want):
+    check(ref.threefry4x32(u32s(*ctr), u32s(*key)), want)
+
+
+@pytest.mark.parametrize(
+    "ctr,key,want",
+    [
+        ((0, 0), (0, 0), (0x6B200159, 0x99BA4EFE)),
+        ((M, M), (M, M), (0x1CB996FC, 0xBB002BE7)),
+    ],
+)
+def test_threefry2x32_kat(ctr, key, want):
+    check(ref.threefry2x32(u32s(*ctr), u32s(*key)), want)
+
+
+def test_squares_matches_plain_python():
+    """Independent check: jnp squares32 vs a plain-python-int transcription."""
+
+    def py_squares32(ctr, key):
+        m64 = 0xFFFFFFFFFFFFFFFF
+        x = (ctr * key) & m64
+        y = x
+        z = (y + key) & m64
+        for w in (y, z, y):
+            x = (x * x + w) & m64
+            x = ((x >> 32) | (x << 32)) & m64
+        return ((x * x + z) & m64) >> 32
+
+    key = cm.squares_key(0xDEADBEEF12345678)
+    ctrs = [0, 1, 2, 0xFFFFFFFF, 0x123456789ABCDEF0]
+    got = ref.squares32(
+        jnp.asarray([c & 0xFFFFFFFFFFFFFFFF for c in ctrs], jnp.uint64),
+        jnp.full((len(ctrs),), np.uint64(key), jnp.uint64),
+    )
+    want = [py_squares32(c & 0xFFFFFFFFFFFFFFFF, key) for c in ctrs]
+    check(got, want)
+
+
+def test_tyche_matches_plain_python():
+    """Independent check: jnp tyche vs a plain-python-int transcription."""
+
+    def rotl(x, n):
+        return ((x << n) | (x >> (32 - n))) & M
+
+    def mix(a, b, c, d):
+        a = (a + b) & M
+        d = rotl(d ^ a, 16)
+        c = (c + d) & M
+        b = rotl(b ^ c, 12)
+        a = (a + b) & M
+        d = rotl(d ^ a, 8)
+        c = (c + d) & M
+        b = rotl(b ^ c, 7)
+        return a, b, c, d
+
+    seed, ctr, n = 0x0123456789ABCDEF, 7, 8
+    a, b, c, d = seed >> 32, seed & M, 2654435769, 1367130551 ^ ctr
+    for _ in range(20):
+        a, b, c, d = mix(a, b, c, d)
+    want = []
+    for _ in range(n):
+        a, b, c, d = mix(a, b, c, d)
+        want.append(b)
+    got = ref.tyche_stream_api(seed, ctr, n)
+    check(got, want)
+
+
+def test_avalanche_single_bit_seed_flip():
+    """CBRNG avalanche: flipping one seed bit flips ~half the output bits."""
+    n = 256
+    base = np.asarray(ref.philox4x32_stream(42, 0, n)).view(np.uint8)
+    for bit in (0, 17, 33, 63):
+        other = np.asarray(ref.philox4x32_stream(42 ^ (1 << bit), 0, n)).view(np.uint8)
+        flipped = np.unpackbits(base ^ other).mean()
+        assert 0.45 < flipped < 0.55, (bit, flipped)
+
+
+def test_streams_distinct_across_ctr():
+    a = np.asarray(ref.philox4x32_stream(1, 0, 64))
+    b = np.asarray(ref.philox4x32_stream(1, 1, 64))
+    assert (a != b).mean() > 0.9

@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles — bitwise, plus hypothesis sweeps.
+
+The kernels are a second, independent implementation of each generator
+(explicit unrolled arithmetic inside a pallas_call); equality here is the
+L1 correctness signal required before anything is lowered to artifacts.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import common as cm
+from compile.kernels import philox as kphilox
+from compile.kernels import ref
+from compile.kernels import squares as ksquares
+from compile.kernels import threefry as kthreefry
+from compile.kernels import tyche as ktyche
+
+U32 = jnp.uint32
+BLOCK = kphilox.BLOCK
+
+
+def params4(seed, ctr):
+    lo, hi = cm.split_seed(seed)
+    return jnp.asarray([int(lo), int(hi), ctr & 0xFFFFFFFF, 0], U32)
+
+
+def params2(seed, ctr):
+    lo, hi = cm.split_seed(seed)
+    k = (int(lo) ^ (int(hi) * 0x9E3779B9)) & 0xFFFFFFFF
+    return jnp.asarray([k, ctr & 0xFFFFFFFF, 0, 0], U32)
+
+
+def params_squares(seed, ctr):
+    key = cm.squares_key(seed)
+    return jnp.asarray([key & 0xFFFFFFFF, key >> 32, ctr & 0xFFFFFFFF, 0], U32)
+
+
+CASES = [
+    ("philox", kphilox.philox4x32_block, params4, ref.philox4x32_stream, 4 * BLOCK),
+    ("philox2x32", kphilox.philox2x32_block, params2, ref.philox2x32_stream, 2 * BLOCK),
+    ("threefry", kthreefry.threefry4x32_block, params4, ref.threefry4x32_stream, 4 * BLOCK),
+    ("threefry2x32", kthreefry.threefry2x32_block, params2_tf := params4, ref.threefry2x32_stream, 2 * BLOCK),
+    ("squares", ksquares.squares_block, params_squares, ref.squares_stream, BLOCK),
+]
+
+
+@pytest.mark.parametrize("name,kern,mkparams,oracle,quantum", CASES, ids=[c[0] for c in CASES])
+@pytest.mark.parametrize("seed,ctr", [(0, 0), (42, 0), (42, 7), (0xDEADBEEF12345678, 3)])
+def test_kernel_matches_oracle_bitwise(name, kern, mkparams, oracle, quantum, seed, ctr):
+    n = 2 * quantum  # two grid tiles -> exercises the BlockSpec index map
+    got = np.asarray(kern(mkparams(seed, ctr), n))
+    want = np.asarray(oracle(seed, ctr, n))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("seed,ctr", [(0, 0), (123456789, 5)])
+def test_tyche_kernel_matches_oracle(seed, ctr):
+    n = 2 * BLOCK  # words=1: lane i == first word of stream (seed, ctr ^ i)
+    got = np.asarray(ktyche.tyche_block(params4(seed, ctr), n, words=1))
+    lo, hi = cm.split_seed(seed)
+    lanes = jnp.arange(n, dtype=U32) ^ jnp.asarray(ctr & 0xFFFFFFFF, U32)
+    want = np.asarray(ref.tyche_stream(lo, hi, lanes, 1)).reshape(-1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_tyche_kernel_words_layout():
+    """words>1: word-major within a tile (single-tile case)."""
+    n, words = BLOCK * 4, 4
+    got = np.asarray(ktyche.tyche_block(params4(9, 0), n, words=words))
+    lo, hi = cm.split_seed(9)
+    lanes = jnp.arange(BLOCK, dtype=U32)
+    want = np.asarray(ref.tyche_stream(lo, hi, lanes, words))  # (BLOCK, words)
+    np.testing.assert_array_equal(got.reshape(words, BLOCK), want.T)
+
+
+def test_tyche_inverse_kernel():
+    n = BLOCK
+    got = np.asarray(ktyche.tyche_block(params4(77, 1), n, words=1, inverse=True))
+    lo, hi = cm.split_seed(77)
+    lanes = jnp.arange(n, dtype=U32) ^ jnp.asarray(1, U32)
+    want = np.asarray(ref.tyche_stream(lo, hi, lanes, 1, inverse=True)).reshape(-1)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_philox_rounds_ablation_kernel():
+    """The R-rounds variants (ablation A1) also match the oracle."""
+    for rounds in (6, 7, 10):
+        got = np.asarray(kphilox.philox4x32_block(params4(5, 2), 4 * BLOCK, rounds=rounds))
+        want = np.asarray(ref.philox4x32_stream(5, 2, 4 * BLOCK)) if rounds == 10 else None
+        if rounds == 10:
+            np.testing.assert_array_equal(got, want)
+        else:
+            lo, hi = cm.split_seed(5)
+            j = jnp.arange(BLOCK, dtype=U32)
+            ctr = jnp.stack([j, jnp.full_like(j, 2), jnp.zeros_like(j), jnp.zeros_like(j)], -1)
+            key = jnp.broadcast_to(jnp.asarray([int(lo), int(hi)], U32), (BLOCK, 2))
+            want = np.asarray(ref.philox4x32(ctr, key, rounds=rounds)).reshape(-1)
+            np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**64 - 1),
+    ctr=st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_hypothesis_philox_kernel_vs_oracle(seed, ctr):
+    got = np.asarray(kphilox.philox4x32_block(params4(seed, ctr), 4 * BLOCK))
+    want = np.asarray(ref.philox4x32_stream(seed, ctr, 4 * BLOCK))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(min_value=0, max_value=2**64 - 1),
+    ctr=st.integers(min_value=0, max_value=2**32 - 1),
+    gen=st.sampled_from(["threefry", "squares"]),
+)
+def test_hypothesis_other_kernels_vs_oracle(seed, ctr, gen):
+    if gen == "threefry":
+        got = np.asarray(kthreefry.threefry4x32_block(params4(seed, ctr), 4 * BLOCK))
+        want = np.asarray(ref.threefry4x32_stream(seed, ctr, 4 * BLOCK))
+    else:
+        got = np.asarray(ksquares.squares_block(params_squares(seed, ctr), BLOCK))
+        want = np.asarray(ref.squares_stream(seed, ctr, BLOCK))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**64 - 1))
+def test_hypothesis_determinism(seed):
+    a = np.asarray(kphilox.philox4x32_block(params4(seed, 0), 4 * BLOCK))
+    b = np.asarray(kphilox.philox4x32_block(params4(seed, 0), 4 * BLOCK))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_uniform_conversion_bounds():
+    u = np.asarray(cm.u32_to_f32(jnp.asarray([0, 1, 0xFFFFFFFF], U32)))
+    assert u[0] == 0.0 and u[2] < 1.0
+    d = np.asarray(cm.u32x2_to_f64(jnp.asarray([0xFFFFFFFF], U32), jnp.asarray([0xFFFFFFFF], U32)))
+    assert 0.0 <= d[0] < 1.0

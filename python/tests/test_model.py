@@ -1,0 +1,159 @@
+"""L2 model-graph tests: physics, shapes, determinism, distribution moments."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import common as cm
+
+U32 = jnp.uint32
+N = 4096
+
+
+def params(gseed=0, step=0):
+    lo, hi = cm.split_seed(gseed)
+    return jnp.asarray([int(lo), int(hi), step, 0], U32)
+
+
+def test_brownian_init_grid():
+    pv = np.asarray(model.brownian_init(N))
+    assert pv.shape == (N, 4)
+    assert (pv[:, 2:] == 0).all()
+    # All particles on distinct grid points.
+    pts = {(x, y) for x, y in pv[:, :2]}
+    assert len(pts) == N
+
+
+def test_brownian_step_shapes_and_determinism():
+    pv = model.brownian_init(N)
+    a = np.asarray(model.brownian_step(pv, params(0, 0), N))
+    b = np.asarray(model.brownian_step(pv, params(0, 0), N))
+    np.testing.assert_array_equal(a, b)
+    c = np.asarray(model.brownian_step(pv, params(0, 1), N))
+    assert (a != c).any()
+
+
+def test_brownian_step_physics():
+    """Drag shrinks velocity; kick is bounded by sqrt(dt); positions follow."""
+    pv = jnp.concatenate(
+        [jnp.zeros((N, 2), jnp.float64), jnp.full((N, 2), 10.0, jnp.float64)], axis=1
+    )
+    out = np.asarray(model.brownian_step(pv, params(0, 0), N))
+    sqrt_dt = np.sqrt(model.DT)
+    drag_v = 10.0 - (model.GAMMA / model.MASS) * 10.0 * model.DT
+    assert np.all(np.abs(out[:, 2] - drag_v) <= sqrt_dt + 1e-12)
+    assert np.all(np.abs(out[:, 3] - drag_v) <= sqrt_dt + 1e-12)
+    np.testing.assert_allclose(out[:, 0], out[:, 2] * model.DT, rtol=1e-12)
+
+
+def test_brownian_kick_is_zero_mean_uniform():
+    pv = jnp.zeros((N, 4), jnp.float64)
+    out = np.asarray(model.brownian_step(pv, params(123, 0), N))
+    kick = out[:, 2] / np.sqrt(model.DT)  # in [-1, 1)
+    assert abs(kick.mean()) < 0.05
+    np.testing.assert_allclose(kick.var(), 1.0 / 3.0, rtol=0.1)  # var of U[-1,1]
+    assert kick.min() >= -1.0 and kick.max() < 1.0
+
+
+def test_brownian_matches_fig1_stream_contract():
+    """Particle i's kick == draw_double2 of stream (seed=i^gseed, ctr=step)."""
+    from compile.kernels import ref
+
+    pv = jnp.zeros((N, 4), jnp.float64)
+    gseed, step = 0xABCDEF0123456789, 17
+    out = np.asarray(model.brownian_step(pv, params(gseed, step), N))
+    sqrt_dt = np.sqrt(model.DT)
+    for i in (0, 1, 777, N - 1):
+        w = np.asarray(ref.philox4x32_stream(i ^ gseed, step, 4))
+        r1 = ((int(w[0]) << 32 | int(w[1])) >> 11) * 2.0**-53
+        r2 = ((int(w[2]) << 32 | int(w[3])) >> 11) * 2.0**-53
+        np.testing.assert_allclose(out[i, 2], (r1 * 2 - 1) * sqrt_dt, rtol=1e-12)
+        np.testing.assert_allclose(out[i, 3], (r2 * 2 - 1) * sqrt_dt, rtol=1e-12)
+
+
+def test_stateful_state_init_layout():
+    st = np.asarray(model.curand_state_init(params(42, 0), N))
+    assert st.shape == (N, 16) and st.dtype == np.uint32
+    assert (st[:, 0] == np.arange(N)).all()  # subsequence = pid
+    assert (st[:, 4] == np.uint32(42)).all()  # key lo
+    assert st.nbytes == 64 * N  # the paper's 64 MB per 1M particles
+
+
+def test_stateful_step_advances_counter_and_matches_core():
+    pv = jnp.zeros((N, 4), jnp.float64)
+    st = model.curand_state_init(params(0, 0), N)
+    out, st2 = model.brownian_step_stateful(pv, st, N)
+    out, st2 = np.asarray(out), np.asarray(st2)
+    assert (st2[:, 0] == np.asarray(st)[:, 0] + 1).all()
+    # Same Philox core: particle i, state ctr=[i,0,0,0], key=[0,0] ==
+    # stream (seed=i? no: raw core) — check via raw oracle.
+    from compile.kernels import ref
+
+    i = 99
+    w = np.asarray(
+        ref.philox4x32(
+            jnp.asarray([[i, 0, 0, 0]], U32), jnp.asarray([[0, 0]], U32)
+        )
+    ).reshape(-1)
+    r1 = ((int(w[0]) << 32 | int(w[1])) >> 11) * 2.0**-53
+    np.testing.assert_allclose(out[i, 2], (r1 * 2 - 1) * np.sqrt(model.DT), rtol=1e-12)
+    # Buffered output words stored back (state words 6..10).
+    np.testing.assert_array_equal(st2[i, 6:10], w)
+
+
+def test_stateful_counter_carry():
+    """128-bit counter increment carries across words."""
+    st = jnp.asarray([[0xFFFFFFFF, 0xFFFFFFFF, 0xFFFFFFFF, 7, 0, 0] + [0] * 10], U32)
+    pv = jnp.zeros((1, 4), jnp.float64)
+    _, st2 = model.brownian_step_stateful(pv, st, 1)
+    st2 = np.asarray(st2)
+    assert list(st2[0, :4]) == [0, 0, 0, 8]
+
+
+def test_split_stateful_graphs_match_combined():
+    """The chainable split pair (pos + state-update) must reproduce the
+    combined stateful graph: identical positions, identical counters."""
+    pv = jnp.zeros((N, 4), jnp.float64)
+    st = model.curand_state_init(params(7, 0), N)
+    out_c, st_c = model.brownian_step_stateful(pv, st, N)
+    out_s = model.brownian_step_stateful_pos(pv, st, N)
+    st_s = model.curand_state_update(st, N)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_s))
+    # Counters and key identical; the split path does not materialize the
+    # cuRAND out-buffer words (6..10) — documented deviation.
+    np.testing.assert_array_equal(np.asarray(st_c)[:, :6], np.asarray(st_s)[:, :6])
+
+
+def test_split_stateful_multi_step_trajectory():
+    pv = jnp.zeros((N, 4), jnp.float64)
+    st = model.curand_state_init(params(3, 0), N)
+    pv_c, st_c = pv, st
+    pv_s, st_s = pv, st
+    for _ in range(3):
+        pv_c, st_c = model.brownian_step_stateful(pv_c, st_c, N)
+        pv_s2 = model.brownian_step_stateful_pos(pv_s, st_s, N)
+        st_s = model.curand_state_update(st_s, N)
+        pv_s = pv_s2
+    np.testing.assert_array_equal(np.asarray(pv_c), np.asarray(pv_s))
+
+
+def test_uniform_f64_block_bounds_and_mean():
+    u = np.asarray(model.uniform_f64_block(params(7, 0), 32768))
+    assert u.min() >= 0.0 and u.max() < 1.0
+    assert abs(u.mean() - 0.5) < 0.01
+
+
+def test_normal_block_moments():
+    z = np.asarray(model.normal_f64_block(params(7, 0), 32768))
+    assert abs(z.mean()) < 0.03
+    np.testing.assert_allclose(z.std(), 1.0, rtol=0.03)
+
+
+@pytest.mark.parametrize("gen", ["philox", "threefry", "squares", "tyche"])
+def test_uniform_u32_block_all_generators(gen):
+    u = np.asarray(model.uniform_u32_block(params(3, 1), 4096, gen=gen))
+    assert u.shape == (4096,) and u.dtype == np.uint32
+    # Crude sanity: at least 99% distinct values, mean near 2^31.
+    assert len(np.unique(u)) > 4050
+    assert abs(u.astype(np.float64).mean() / 2**31 - 1.0) < 0.05

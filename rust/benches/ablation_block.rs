@@ -1,0 +1,73 @@
+//! A3 — ablation: device dispatch granularity.
+//!
+//! How large must a device block-generation call be before PJRT dispatch
+//! overhead is amortized? Sweeps the generators' block artifacts and
+//! compares against the host fill path — this sets the crossover point a
+//! user should know when choosing host vs device generation.
+
+use openrand::bench::harness::black_box;
+use openrand::bench::Bencher;
+use openrand::core::{CounterRng, Philox, Rng};
+use openrand::runtime::exec::{Arg, DeviceGraph};
+use openrand::runtime::ArtifactStore;
+
+fn main() {
+    let b = Bencher::from_env();
+    println!("ablation A3: device block-generation throughput by size\n");
+    let store = match ArtifactStore::open_default() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("artifacts unavailable ({e}); run `make artifacts`");
+            std::process::exit(1);
+        }
+    };
+
+    println!(
+        "{:<26} {:>12} {:>14} {:>12}",
+        "path", "n (u32)", "time/call", "words/s"
+    );
+    println!("{}", "-".repeat(68));
+
+    for gen in ["philox", "threefry", "squares", "tyche"] {
+        for n in [65_536usize, 1_048_576] {
+            let name = format!("{gen}_u32_{n}");
+            if store.manifest.get(&name).is_none() {
+                continue;
+            }
+            let graph = DeviceGraph::load(&store, &name).unwrap();
+            let mut ctr = 0u32;
+            let r = b.run(&name, n as u64, || {
+                ctr = ctr.wrapping_add(1);
+                let out = graph.call_u32(&[Arg::U32(&[1, 0, ctr, 0])]).unwrap();
+                black_box(out[0]);
+            });
+            println!(
+                "{:<26} {:>12} {:>14} {:>12}",
+                format!("device/{gen}"),
+                n,
+                openrand::util::format::ns(r.median_ns),
+                openrand::util::format::si(r.throughput())
+            );
+        }
+    }
+
+    // Host fill for comparison.
+    for n in [65_536usize, 1_048_576] {
+        let mut buf = vec![0u32; n];
+        let mut ctr = 0u32;
+        let r = b.run(&format!("host_fill_{n}"), n as u64, || {
+            ctr = ctr.wrapping_add(1);
+            let mut rng = Philox::new(1, ctr);
+            rng.fill_u32(&mut buf);
+            black_box(buf[0]);
+        });
+        println!(
+            "{:<26} {:>12} {:>14} {:>12}",
+            "host/philox fill",
+            n,
+            openrand::util::format::ns(r.median_ns),
+            openrand::util::format::si(r.throughput())
+        );
+    }
+    println!("\nreading: device wins only past the dispatch-amortization point;\nfor small blocks the host path dominates — the coordinator's step\ngranularity (whole simulation step per call) sits on the right side.");
+}

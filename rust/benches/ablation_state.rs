@@ -1,0 +1,68 @@
+//! A2 — ablation: state size / construction cost across the family.
+//!
+//! The register-pressure argument of the paper's background section,
+//! measured: bytes of state, construction (seeding) cost, and steady-
+//! state draw cost for every engine plus mt19937. The interesting
+//! contrast is construction: CBRNGs construct in ~ns (a few dozen integer
+//! ops) while mt19937 pays its 624-word init — this is the whole Fig.-4a
+//! short-stream story in one table.
+
+use openrand::baseline::Mt19937;
+use openrand::bench::harness::black_box;
+use openrand::bench::Bencher;
+use openrand::core::{
+    CounterRng, Generator, Philox, Philox2x32, Rng, Squares, Threefry, Threefry2x32, Tyche,
+    TycheI,
+};
+
+fn bench_engine<R: Rng>(
+    b: &Bencher,
+    name: &str,
+    state_bytes: usize,
+    mut construct: impl FnMut(u64) -> R,
+) {
+    let mut seed = 0u64;
+    // Construction + first draw (what a GPU thread pays per kernel).
+    let ctor = b.run(&format!("{name}/construct+1"), 1, || {
+        seed = seed.wrapping_add(1);
+        let mut r = construct(seed);
+        black_box(r.next_u32());
+    });
+    // Steady-state draw.
+    let mut rng = construct(42);
+    let draw = b.run(&format!("{name}/draw"), 1, || {
+        black_box(rng.next_u32());
+    });
+    println!(
+        "{:<14} {:>10} {:>16.1} {:>14.2}",
+        name,
+        state_bytes,
+        ctor.median_ns,
+        draw.median_ns
+    );
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    println!("ablation A2: state footprint & construction cost\n");
+    println!(
+        "{:<14} {:>10} {:>16} {:>14}",
+        "engine", "state B", "construct+1 ns", "draw ns"
+    );
+    println!("{}", "-".repeat(58));
+    bench_engine(&b, "philox", Generator::Philox.state_bytes(), |s| Philox::new(s, 0));
+    bench_engine(&b, "philox2x32", Generator::Philox2x32.state_bytes(), |s| Philox2x32::new(s, 0));
+    bench_engine(&b, "threefry", Generator::Threefry.state_bytes(), |s| Threefry::new(s, 0));
+    bench_engine(&b, "threefry2x32", Generator::Threefry2x32.state_bytes(), |s| {
+        Threefry2x32::new(s, 0)
+    });
+    bench_engine(&b, "squares", Generator::Squares.state_bytes(), |s| Squares::new(s, 0));
+    bench_engine(&b, "tyche", Generator::Tyche.state_bytes(), |s| Tyche::new(s, 0));
+    bench_engine(&b, "tyche_i", Generator::TycheI.state_bytes(), |s| TycheI::new(s, 0));
+    bench_engine(&b, "mt19937", std::mem::size_of::<Mt19937>(), |s| Mt19937::new(s as u32));
+    println!(
+        "\nGPU context (paper): CUDA allows at most 255 32-bit registers per\n\
+         thread (~1 KiB); every OpenRAND engine fits with room to spare,\n\
+         mt19937's 2.5 KiB does not — hence MTGP's shared-state redesign."
+    );
+}

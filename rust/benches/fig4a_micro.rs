@@ -1,0 +1,107 @@
+//! E1 — Fig. 4a: host micro-benchmark.
+//!
+//! "Time taken by OpenRAND generators versus baselines (std::mt19937 and
+//! r123::philox) to produce specified stream lengths on the host."
+//!
+//! For each stream length the benchmark constructs a FRESH generator and
+//! produces the stream — construction cost included, exactly as in the
+//! paper (that is the effect being measured: mt19937's 624-word init
+//! dominates short streams, the bread-and-butter case of parallel code).
+//! Output: ns per 32-bit word, one series per generator.
+//!
+//! ```bash
+//! cargo bench --bench fig4a_micro          # full
+//! OPENRAND_BENCH_QUICK=1 cargo bench --bench fig4a_micro
+//! ```
+
+use openrand::baseline::{Mt19937, Pcg32, Xoshiro256pp};
+use openrand::bench::harness::black_box;
+use openrand::bench::{Bencher, Series};
+use openrand::core::{
+    CounterRng, Philox, Philox2x32, Rng, Squares, Threefry, Threefry2x32, Tyche, TycheI,
+};
+
+/// Produce `len` words from a freshly-constructed generator, xor-folded
+/// so nothing is optimized away.
+fn produce<R: Rng>(mut rng: R, len: usize) -> u32 {
+    let mut acc = 0u32;
+    // Words are drawn one by one (the paper's loop), not via fill, so
+    // per-call overhead is part of the measurement for every library.
+    for _ in 0..len {
+        acc ^= rng.next_u32();
+    }
+    acc
+}
+
+fn bench_series<R: Rng>(
+    b: &Bencher,
+    name: &str,
+    lens: &[usize],
+    mut make: impl FnMut(u64) -> R,
+) -> Vec<f64> {
+    let mut out = Vec::with_capacity(lens.len());
+    let mut seed = 1u64;
+    for &len in lens {
+        let r = b.run(&format!("{name}/len={len}"), len as u64, || {
+            seed = seed.wrapping_add(1);
+            black_box(produce(make(seed), len));
+        });
+        eprintln!("  {}", r.summary());
+        out.push(r.median_ns / len as f64);
+    }
+    out
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let lens: Vec<usize> = (0..=21).step_by(3).map(|e| 1usize << e).collect(); // 1 .. 2M
+    eprintln!("fig4a micro-benchmark: ns/word for fresh-generator streams");
+
+    let mut fig = Series::new(
+        "Fig 4a — host stream generation",
+        "stream_len",
+        "ns_per_word",
+        lens.iter().map(|&l| l as f64).collect(),
+    );
+
+    fig.push("philox", bench_series(&b, "philox", &lens, |s| Philox::new(s, 0)));
+    fig.push("philox2x32", bench_series(&b, "philox2x32", &lens, |s| Philox2x32::new(s, 0)));
+    fig.push("threefry", bench_series(&b, "threefry", &lens, |s| Threefry::new(s, 0)));
+    fig.push(
+        "threefry2x32",
+        bench_series(&b, "threefry2x32", &lens, |s| Threefry2x32::new(s, 0)),
+    );
+    fig.push("squares", bench_series(&b, "squares", &lens, |s| Squares::new(s, 0)));
+    fig.push("tyche", bench_series(&b, "tyche", &lens, |s| Tyche::new(s, 0)));
+    fig.push("tyche_i", bench_series(&b, "tyche_i", &lens, |s| TycheI::new(s, 0)));
+    // Baselines: the paper's std::mt19937 and r123::philox; plus two
+    // modern sequential generators for context.
+    fig.push("mt19937", bench_series(&b, "mt19937", &lens, |s| Mt19937::new(s as u32)));
+    fig.push("r123_philox", bench_series(&b, "r123_philox", &lens, |s| Philox::new(s, 1)));
+    fig.push("pcg32", bench_series(&b, "pcg32", &lens, |s| Pcg32::new(s, 54)));
+    fig.push("xoshiro256pp", bench_series(&b, "xoshiro256pp", &lens, |s| Xoshiro256pp::new(s)));
+
+    println!("{}", fig.render(|y| format!("{y:.2}")));
+
+    // The paper's headline shape for Fig. 4a, asserted:
+    let mt = &fig.series.iter().find(|(n, _)| n == "mt19937").unwrap().1;
+    let short_idx = 0; // len = 1
+    for gen in ["philox", "squares", "tyche"] {
+        let ys = &fig.series.iter().find(|(n, _)| n == gen).unwrap().1;
+        let ratio = mt[short_idx] / ys[short_idx];
+        println!(
+            "shape check: {gen} beats mt19937 at len=1 by {ratio:.0}x {}",
+            if ratio > 2.0 { "(paper: strong disparity — OK)" } else { "(UNEXPECTED)" }
+        );
+    }
+    let long_idx = fig.x.len() - 1;
+    for gen in ["squares", "tyche"] {
+        let ys = &fig.series.iter().find(|(n, _)| n == gen).unwrap().1;
+        let ratio = mt[long_idx] / ys[long_idx];
+        println!(
+            "shape check: {gen} vs mt19937 at len={}: {ratio:.2}x {}",
+            fig.x[long_idx],
+            if ratio > 1.0 { "(paper: sustained advantage — OK)" } else { "(UNEXPECTED)" }
+        );
+    }
+}

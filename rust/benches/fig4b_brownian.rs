@@ -1,0 +1,92 @@
+//! E2 — Fig. 4b: the Brownian-dynamics macro-benchmark.
+//!
+//! "Wall time for various libraries executing the Brownian Dynamics
+//! benchmark on different GPUs, using the Philox generator in each
+//! library." Paper result: OpenRAND ≈ Random123, both ~1.8x faster than
+//! cuRAND, plus ~64 MB/Mparticle memory saved.
+//!
+//! Here "different GPUs" becomes two backends (DESIGN.md substitutions):
+//! the multithreaded host path and the PJRT device path. The three
+//! "libraries" are the three API styles with the identical Philox core.
+//!
+//! ```bash
+//! cargo bench --bench fig4b_brownian                    # default scale
+//! N=1048576 STEPS=10000 cargo bench --bench fig4b_brownian  # paper scale
+//! ```
+
+use openrand::coordinator::{Backend, SimDriver};
+use openrand::sim::brownian::{BrownianParams, RngStyle};
+use openrand::util::format;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let quick = std::env::var("OPENRAND_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let n = env_usize("N", if quick { 16_384 } else { 262_144 });
+    let steps = env_usize("STEPS", if quick { 50 } else { 400 }) as u32;
+    let threads = env_usize("THREADS", std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4));
+    println!("fig4b macro-benchmark: brownian dynamics, n={n}, steps={steps}");
+    println!("(paper scale: N=1048576 STEPS=10000 — pass via env)\n");
+
+    println!(
+        "{:<26} {:>12} {:>14} {:>12} {:>12}",
+        "backend/style", "wall (s)", "Mpstep/s", "vs openrand", "rng state"
+    );
+    println!("{}", "-".repeat(80));
+
+    let mut openrand_wall = f64::NAN;
+    // Host backend: all three styles.
+    for style in RngStyle::ALL {
+        let params = BrownianParams { n_particles: n, steps, global_seed: 1, style };
+        let (_, m) = SimDriver::new(Backend::Host { threads }).run(params).unwrap();
+        let wall = m.wall.as_secs_f64();
+        if style == RngStyle::OpenRand {
+            openrand_wall = wall;
+        }
+        println!(
+            "{:<26} {:>12.3} {:>14.2} {:>11.2}x {:>12}",
+            format!("host[{}t]/{}", threads, style.name()),
+            wall,
+            m.throughput() / 1e6,
+            wall / openrand_wall,
+            format::bytes(m.rng_state_bytes)
+        );
+    }
+
+    // Device backend: openrand + curand_style (raw123 is stream-identical
+    // to openrand on device — the API difference is host-side only).
+    let mut dev_openrand_wall = f64::NAN;
+    // Device artifacts exist for n in {16384, 1048576}.
+    let dev_n = if n > 65_536 { 1_048_576 } else { 16_384 };
+    let dev_steps = if dev_n == n { steps } else { steps.min(100) };
+    for style in [RngStyle::OpenRand, RngStyle::CurandStyle] {
+        let params = BrownianParams { n_particles: dev_n, steps: dev_steps, global_seed: 1, style };
+        match SimDriver::new(Backend::Device).run(params) {
+            Ok((_, m)) => {
+                let wall = m.wall.as_secs_f64();
+                if style == RngStyle::OpenRand {
+                    dev_openrand_wall = wall;
+                }
+                println!(
+                    "{:<26} {:>12.3} {:>14.2} {:>11.2}x {:>12}",
+                    format!("device[n={dev_n}]/{}", style.name()),
+                    wall,
+                    m.throughput() / 1e6,
+                    wall / dev_openrand_wall,
+                    format::bytes(m.rng_state_bytes)
+                );
+            }
+            Err(e) => {
+                println!("device/{}: unavailable ({e}) — run `make artifacts`", style.name());
+            }
+        }
+    }
+
+    println!(
+        "\npaper shape: openrand ~ random123, curand-style slower (paper: 1.8x on V100/A100)\n\
+         and curand-style pays {} of RNG state per million particles (paper: ~64 MB).",
+        format::bytes(64 * 1_000_000)
+    );
+}

@@ -1,0 +1,118 @@
+//! E3/E4 — §5.2: statistical evaluation, as a bench target so
+//! `cargo bench` regenerates the paper's quality table.
+//!
+//! Runs the Crush-lite battery on every OpenRAND generator (plus the
+//! known-good and known-bad controls) and the HOOMD parallel-stream
+//! suite. Word budget via WORDS env (default 4M per test; the paper used
+//! ~1 TB of PractRand — see DESIGN.md substitutions).
+
+use openrand::baseline::{Lcg64, Mt19937, Pcg32, WeakCounter, Xoshiro256pp};
+use openrand::core::{Generator, Rng};
+use openrand::stats::parallel;
+use openrand::stats::suite::Verdict;
+use openrand::stats::run_battery;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn boxed(gen: Generator, seed: u64) -> Box<dyn Rng> {
+    use openrand::core::*;
+    match gen {
+        Generator::Philox => Box::new(Philox::new(seed, 0)),
+        Generator::Philox2x32 => Box::new(Philox2x32::new(seed, 0)),
+        Generator::Threefry => Box::new(Threefry::new(seed, 0)),
+        Generator::Threefry2x32 => Box::new(Threefry2x32::new(seed, 0)),
+        Generator::Squares => Box::new(Squares::new(seed, 0)),
+        Generator::Tyche => Box::new(Tyche::new(seed, 0)),
+        Generator::TycheI => Box::new(TycheI::new(seed, 0)),
+    }
+}
+
+fn main() {
+    let quick = std::env::var("OPENRAND_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let words = env_usize("WORDS", if quick { 1 << 18 } else { 4 << 20 });
+    println!("statistical battery, {words} words/test (paper: TestU01 BigCrush + 1TB PractRand)\n");
+
+    let mut all_pass = true;
+    for g in Generator::ALL {
+        let report = run_battery(g.name(), words, |i| boxed(g, 0x5EED_0000 + i as u64));
+        println!(
+            "{:<14} {:>2} tests  {:>2} failures  {:>2} suspicious",
+            g.name(),
+            report.results.len(),
+            report.failures(),
+            report.suspicious()
+        );
+        all_pass &= report.passed();
+    }
+    println!();
+
+    // Known-good controls.
+    for (name, mk) in [
+        ("mt19937", Box::new(|i: usize| -> Box<dyn Rng> { Box::new(Mt19937::new(i as u32 + 1)) })
+            as Box<dyn Fn(usize) -> Box<dyn Rng>>),
+        ("pcg32", Box::new(|i| Box::new(Pcg32::new(i as u64, 54)))),
+        ("xoshiro256pp", Box::new(|i| Box::new(Xoshiro256pp::new(i as u64 + 9)))),
+    ] {
+        let report = run_battery(name, words, |i| mk(i));
+        println!(
+            "{:<14} {:>2} tests  {:>2} failures  {:>2} suspicious  (known-good control)",
+            name,
+            report.results.len(),
+            report.failures(),
+            report.suspicious()
+        );
+    }
+
+    // Known-bad controls: the battery MUST flag these.
+    for (name, mk) in [
+        ("weak_counter", Box::new(|_: usize| -> Box<dyn Rng> { Box::new(WeakCounter::new(0)) })
+            as Box<dyn Fn(usize) -> Box<dyn Rng>>),
+        ("lcg64_low", Box::new(|_| Box::new(Lcg64::new(123)))),
+    ] {
+        let report = run_battery(name, words, |i| mk(i));
+        println!(
+            "{:<14} {:>2} tests  {:>2} failures  {:>2} suspicious  (known-BAD control; failures expected)",
+            name,
+            report.results.len(),
+            report.failures(),
+            report.suspicious()
+        );
+        assert!(report.failures() > 0, "battery failed to flag {name}!");
+    }
+    println!();
+
+    // E4: parallel-stream suite for the family (paper: first time for
+    // Tyche and Squares).
+    let pwords = words / 4;
+    for g in Generator::ALL {
+        let results = match g {
+            Generator::Philox => parallel::run_parallel_suite::<openrand::core::Philox>(0, pwords),
+            Generator::Philox2x32 => parallel::run_parallel_suite::<openrand::core::Philox2x32>(0, pwords),
+            Generator::Threefry => parallel::run_parallel_suite::<openrand::core::Threefry>(0, pwords),
+            Generator::Threefry2x32 => parallel::run_parallel_suite::<openrand::core::Threefry2x32>(0, pwords),
+            Generator::Squares => parallel::run_parallel_suite::<openrand::core::Squares>(0, pwords),
+            Generator::Tyche => parallel::run_parallel_suite::<openrand::core::Tyche>(0, pwords),
+            Generator::TycheI => parallel::run_parallel_suite::<openrand::core::TycheI>(0, pwords),
+        };
+        let fails = results.iter().filter(|r| r.verdict() == Verdict::Fail).count();
+        let susp = results.iter().filter(|r| r.verdict() == Verdict::Suspicious).count();
+        println!(
+            "parallel[{:<12}] {:>2} tests  {fails} failures  {susp} suspicious  (16000 particles x 3-word micro-streams)",
+            g.name(),
+            results.len()
+        );
+        all_pass &= fails == 0;
+    }
+
+    println!(
+        "\n{}",
+        if all_pass {
+            "ALL OPENRAND GENERATORS PASS (single + parallel streams)"
+        } else {
+            "SOME GENERATOR FAILED — investigate above"
+        }
+    );
+    assert!(all_pass);
+}

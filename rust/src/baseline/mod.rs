@@ -1,0 +1,27 @@
+//! Baseline generators — every comparator the paper's evaluation uses.
+//!
+//! * [`Mt19937`] — GNU libstdc++'s default engine, the Fig. 4a baseline.
+//!   Full 624-word Mersenne Twister with the standard (expensive) seeding,
+//!   because that init cost *is* the short-stream effect the paper shows.
+//! * [`StatefulPhilox`] — the cuRAND-usage analogue (Fig. 2 / Fig. 4b):
+//!   the identical Philox4x32-10 core, but driven through a 64-byte
+//!   heap-resident state record that must be loaded and stored around
+//!   every draw, plus a separate bulk init pass (`init_states`).
+//! * [`raw123`] — the Random123-style low-level API (Fig. 3): caller
+//!   builds counters/keys by hand and packs u64s from 4-word blocks.
+//! * [`Pcg32`], [`Xoshiro256pp`], [`SplitMix64`], [`Lcg64`] — classic
+//!   sequential baselines for the statistical battery (known-good) and
+//!   its self-test (known-bad: `Lcg64` low bits, `WeakCounter`).
+//! * [`WeakCounter`] — a deliberately broken "generator" (raw counter)
+//!   that the battery MUST flag; used to prove the tests have power.
+
+pub mod mt19937;
+pub mod pcg;
+pub mod raw123;
+pub mod stateful_philox;
+pub mod xoshiro;
+
+pub use mt19937::Mt19937;
+pub use pcg::{Lcg64, Pcg32, SplitMix64, WeakCounter};
+pub use stateful_philox::{CurandPhiloxState, StatefulPhilox};
+pub use xoshiro::Xoshiro256pp;

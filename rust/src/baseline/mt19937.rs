@@ -1,0 +1,113 @@
+//! MT19937 (Matsumoto & Nishimura 1998) — `std::mt19937`, the Fig. 4a
+//! baseline. Faithful reproduction including the standard `init_genrand`
+//! seeding: 624 words of state are fully initialized on construction,
+//! which is exactly why short streams are expensive (the paper's point),
+//! and why 2.5 kB of state disqualifies it from GPU per-thread use.
+
+use crate::core::traits::Rng;
+
+const N: usize = 624;
+const M: usize = 397;
+const MATRIX_A: u32 = 0x9908_B0DF;
+const UPPER_MASK: u32 = 0x8000_0000;
+const LOWER_MASK: u32 = 0x7FFF_FFFF;
+
+/// The C++ `std::mt19937` default seed.
+pub const DEFAULT_SEED: u32 = 5489;
+
+/// Mersenne Twister with the standard 32-bit seeding routine.
+#[derive(Clone)]
+pub struct Mt19937 {
+    mt: [u32; N],
+    mti: usize,
+}
+
+impl Mt19937 {
+    /// `init_genrand` — the standard Knuth-multiplier seeding.
+    pub fn new(seed: u32) -> Self {
+        let mut mt = [0u32; N];
+        mt[0] = seed;
+        for i in 1..N {
+            mt[i] = 1_812_433_253u32
+                .wrapping_mul(mt[i - 1] ^ (mt[i - 1] >> 30))
+                .wrapping_add(i as u32);
+        }
+        Mt19937 { mt, mti: N } // N: force twist on first draw
+    }
+
+    fn twist(&mut self) {
+        for i in 0..N {
+            let y = (self.mt[i] & UPPER_MASK) | (self.mt[(i + 1) % N] & LOWER_MASK);
+            let mut next = self.mt[(i + M) % N] ^ (y >> 1);
+            if y & 1 != 0 {
+                next ^= MATRIX_A;
+            }
+            self.mt[i] = next;
+        }
+        self.mti = 0;
+    }
+}
+
+impl Default for Mt19937 {
+    fn default() -> Self {
+        Mt19937::new(DEFAULT_SEED)
+    }
+}
+
+impl Rng for Mt19937 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.mti >= N {
+            self.twist();
+        }
+        let mut y = self.mt[self.mti];
+        self.mti += 1;
+        // Tempering.
+        y ^= y >> 11;
+        y ^= (y << 7) & 0x9D2C_5680;
+        y ^= (y << 15) & 0xEFC6_0000;
+        y ^= y >> 18;
+        y
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_cpp_std_mt19937_10000th() {
+        // The C++ standard pins mt19937's 10000th consecutive invocation
+        // (default-seeded) to 4123659995 ([rand.predef]).
+        let mut rng = Mt19937::default();
+        let mut last = 0;
+        for _ in 0..10_000 {
+            last = rng.next_u32();
+        }
+        assert_eq!(last, 4_123_659_995);
+    }
+
+    #[test]
+    fn reference_first_outputs_seed_5489() {
+        // First outputs of the canonical mt19937ar with seed 5489.
+        let mut rng = Mt19937::new(5489);
+        let first: Vec<u32> = (0..4).map(|_| rng.next_u32()).collect();
+        assert_eq!(first, vec![3_499_211_612, 581_869_302, 3_890_346_734, 3_586_334_585]);
+    }
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let w = |seed| -> Vec<u32> {
+            let mut r = Mt19937::new(seed);
+            (0..8).map(|_| r.next_u32()).collect()
+        };
+        assert_eq!(w(1), w(1));
+        assert_ne!(w(1), w(2));
+    }
+
+    #[test]
+    fn state_is_2_5_kilobytes() {
+        // The GPU-disqualification number from the paper's background.
+        assert!(std::mem::size_of::<Mt19937>() >= 624 * 4);
+    }
+}

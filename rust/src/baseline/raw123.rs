@@ -1,0 +1,63 @@
+//! The Random123-style low-level API (paper Fig. 3): the caller builds
+//! counter and key by hand, invokes the bijection, and packs doubles from
+//! raw words with `u01`-style helpers. Functionally identical to
+//! `core::Philox`; the point of keeping it is to measure (Fig. 4b "on
+//! par") and to illustrate (example `api_comparison`) the boilerplate
+//! cost the paper's API eliminates.
+
+use crate::core::philox::philox4x32;
+
+/// `r123::Philox4x32::operator()(ctr, key)`.
+#[inline]
+pub fn philox4x32_raw(ctr: [u32; 4], key: [u32; 2]) -> [u32; 4] {
+    philox4x32(ctr, key)
+}
+
+/// `r123::u01<double, uint64_t>` — convert a packed u64 to a double in
+/// (0, 1]-ish the Random123 way; we use the OpenRAND [0,1) convention so
+/// results remain comparable across API styles.
+#[inline]
+pub fn u01_u64(bits: u64) -> f64 {
+    (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The Fig. 3 kernel-body idiom: one call site packs 4 words into 2
+/// doubles for a particle's kick.
+#[inline]
+pub fn double2_from_block(pid: u32, counter: u32) -> (f64, f64) {
+    // Fig. 3 lines 15-26, transcribed: uk[0] = pid; c[0] = counter.
+    let uk: [u32; 2] = [pid, 0];
+    let c: [u32; 4] = [counter, 0, 0, 0];
+    let r = philox4x32_raw(c, uk);
+    let xu = ((r[0] as u64) << 32) | r[1] as u64;
+    let yu = ((r[2] as u64) << 32) | r[3] as u64;
+    (u01_u64(xu), u01_u64(yu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Rng};
+
+    #[test]
+    fn u01_bounds() {
+        assert_eq!(u01_u64(0), 0.0);
+        assert!(u01_u64(u64::MAX) < 1.0);
+    }
+
+    #[test]
+    fn fig3_and_fig1_draws_differ_only_in_counter_layout() {
+        // Same algorithm, different (ctr, key) layouts: Fig. 3 puts the
+        // counter in c[0] and pid in the key; OpenRAND puts the block
+        // index in c[0] and the counter in c[1]. Document the difference
+        // by construction.
+        let (a1, _a2) = double2_from_block(77, 5);
+        let mut openrand = Philox::new(77, 5);
+        let (b1, _b2) = openrand.draw_double2();
+        assert_ne!(a1, b1); // different stream layouts...
+        // ...but identical core: swap layouts and they coincide.
+        let r = philox4x32_raw([0, 5, 0, 0], [77, 0]);
+        let xu = ((r[0] as u64) << 32) | r[1] as u64;
+        assert_eq!(u01_u64(xu), b1);
+    }
+}

@@ -1,0 +1,86 @@
+//! xoshiro256++ (Blackman & Vigna) — a modern sequential baseline,
+//! seeded via splitmix64 as its authors prescribe.
+
+use crate::core::counter::splitmix64;
+use crate::core::traits::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    pub fn new(seed: u64) -> Self {
+        // Authors' recommended seeding: four splitmix64 outputs.
+        let mut sm = seed;
+        let mut s = [0u64; 4];
+        for w in s.iter_mut() {
+            *w = splitmix64(sm);
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        }
+        Xoshiro256pp { s }
+    }
+
+    #[inline]
+    pub fn next_u64_native(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+}
+
+impl Rng for Xoshiro256pp {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        (self.next_u64_native() >> 32) as u32
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.next_u64_native()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let w = |seed| -> Vec<u64> {
+            let mut r = Xoshiro256pp::new(seed);
+            (0..8).map(|_| r.next_u64_native()).collect()
+        };
+        assert_eq!(w(1), w(1));
+        assert_ne!(w(1), w(2));
+    }
+
+    #[test]
+    fn known_algebra_first_step() {
+        // First output is rotl(s0 + s3, 23) + s0 for the seeded state —
+        // check against a hand-computed value from the seeding path.
+        let mut sm = 42u64;
+        let mut s = [0u64; 4];
+        for w in s.iter_mut() {
+            *w = splitmix64(sm);
+            sm = sm.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        }
+        let expect = s[0].wrapping_add(s[3]).rotate_left(23).wrapping_add(s[0]);
+        assert_eq!(Xoshiro256pp::new(42).next_u64_native(), expect);
+    }
+
+    #[test]
+    fn no_trivial_zero_sink() {
+        let mut r = Xoshiro256pp::new(0);
+        assert!((0..16).map(|_| r.next_u64_native()).any(|v| v != 0));
+    }
+}

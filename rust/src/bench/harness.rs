@@ -1,0 +1,169 @@
+//! Timing core: calibrated batches, robust statistics, black_box.
+
+use std::time::{Duration, Instant};
+
+/// Robust timing summary for one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wall time.
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub p10_ns: f64,
+    pub p90_ns: f64,
+    /// Iterations per batch sample.
+    pub batch: u64,
+    pub samples: usize,
+    /// Optional elements processed per iteration (for throughput).
+    pub elements: u64,
+}
+
+impl BenchResult {
+    /// Elements per second (if `elements` set).
+    pub fn throughput(&self) -> f64 {
+        if self.elements == 0 {
+            return 0.0;
+        }
+        self.elements as f64 / (self.median_ns * 1e-9)
+    }
+
+    pub fn summary(&self) -> String {
+        let tput = if self.elements > 0 {
+            format!("  {}/s", crate::util::format::si(self.throughput()))
+        } else {
+            String::new()
+        };
+        format!(
+            "{:<38} {:>10} [{} .. {}]{}",
+            self.name,
+            crate::util::format::ns(self.median_ns),
+            crate::util::format::ns(self.p10_ns),
+            crate::util::format::ns(self.p90_ns),
+            tput
+        )
+    }
+}
+
+/// Opaque value sink (std::hint::black_box wrapper, kept in one place so
+/// future rustc changes need one edit).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub max_samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(600),
+            max_samples: 60,
+        }
+    }
+}
+
+impl Bencher {
+    /// Fast profile for CI / tests.
+    pub fn quick() -> Bencher {
+        Bencher {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(80),
+            max_samples: 15,
+        }
+    }
+
+    /// Environment-controlled: OPENRAND_BENCH_QUICK=1 switches profiles.
+    pub fn from_env() -> Bencher {
+        if std::env::var("OPENRAND_BENCH_QUICK").map(|v| v == "1").unwrap_or(false) {
+            Bencher::quick()
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    /// `elements` = items processed per iteration (throughput metric).
+    pub fn run(&self, name: &str, elements: u64, mut f: impl FnMut()) -> BenchResult {
+        // Calibrate batch size so one batch is ~1ms (amortizes timer
+        // overhead) but at least 1.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(20));
+        let batch = (Duration::from_millis(1).as_nanos() / once.as_nanos()).clamp(1, 1 << 24) as u64;
+
+        // Warmup.
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            for _ in 0..batch {
+                f();
+            }
+        }
+
+        // Measure.
+        let mut samples_ns: Vec<f64> = Vec::with_capacity(self.max_samples);
+        let mstart = Instant::now();
+        while mstart.elapsed() < self.measure && samples_ns.len() < self.max_samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = samples_ns.len();
+        let pct = |q: f64| samples_ns[((n as f64 - 1.0) * q).round() as usize];
+        BenchResult {
+            name: name.to_string(),
+            median_ns: pct(0.5),
+            mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+            p10_ns: pct(0.1),
+            p90_ns: pct(0.9),
+            batch,
+            samples: n,
+            elements,
+        }
+    }
+}
+
+/// One-shot convenience with the env-selected profile.
+pub fn bench_fn(name: &str, elements: u64, f: impl FnMut()) -> BenchResult {
+    Bencher::from_env().run(name, elements, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_sane() {
+        let b = Bencher::quick();
+        let mut acc = 0u64;
+        let r = b.run("spin", 1000, || {
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(black_box(i * 31));
+            }
+        });
+        black_box(acc);
+        assert!(r.median_ns > 0.0);
+        assert!(r.p10_ns <= r.median_ns && r.median_ns <= r.p90_ns);
+        assert!(r.samples >= 1);
+        assert!(r.throughput() > 0.0);
+    }
+
+    #[test]
+    fn summary_contains_name_and_units() {
+        let r = Bencher::quick().run("demo_case", 0, || {
+            black_box(42u64.wrapping_mul(7));
+        });
+        let s = r.summary();
+        assert!(s.contains("demo_case"));
+        assert!(s.contains("ns") || s.contains("us"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Benchmark harness — the criterion substitute (offline environment).
+//!
+//! [`harness`] provides warmup, adaptive iteration-count calibration,
+//! robust statistics (median, p10/p90) and throughput accounting;
+//! [`table`] renders aligned result tables; [`series`] emits the
+//! figure-shaped output (one series per generator/library, one point per
+//! x value) that EXPERIMENTS.md compares against the paper's plots.
+
+pub mod harness;
+pub mod series;
+pub mod table;
+
+pub use harness::{bench_fn, BenchResult, Bencher};
+pub use series::Series;
+pub use table::Table;

@@ -1,0 +1,82 @@
+//! Figure-shaped output: named series over a shared x-axis, rendered as
+//! both a table and a machine-greppable CSV block. The fig4a/fig4b
+//! benches print these; EXPERIMENTS.md quotes them.
+
+use std::fmt::Write as _;
+
+/// A set of named series sharing an x axis (one paper figure).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub title: String,
+    pub x_label: String,
+    pub y_label: String,
+    pub x: Vec<f64>,
+    pub series: Vec<(String, Vec<f64>)>,
+}
+
+impl Series {
+    pub fn new(title: &str, x_label: &str, y_label: &str, x: Vec<f64>) -> Series {
+        Series {
+            title: title.to_string(),
+            x_label: x_label.to_string(),
+            y_label: y_label.to_string(),
+            x,
+            series: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, name: &str, ys: Vec<f64>) {
+        assert_eq!(ys.len(), self.x.len(), "series length mismatch");
+        self.series.push((name.to_string(), ys));
+    }
+
+    /// Render table + csv. `fmt` formats a y value.
+    pub fn render(&self, fmt: impl Fn(f64) -> String) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "## {} ({} vs {})", self.title, self.y_label, self.x_label);
+        let mut header: Vec<String> = vec![self.x_label.clone()];
+        header.extend(self.series.iter().map(|(n, _)| n.clone()));
+        let mut table = crate::bench::table::Table::new(
+            &header.iter().map(|h| h.as_str()).collect::<Vec<_>>(),
+        );
+        for (i, &xv) in self.x.iter().enumerate() {
+            let mut row = vec![crate::util::format::si(xv)];
+            for (_, ys) in &self.series {
+                row.push(fmt(ys[i]));
+            }
+            table.row(&row);
+        }
+        s.push_str(&table.render());
+        // CSV block for downstream tooling.
+        let _ = writeln!(s, "csv,{},{}", self.x_label, self.series.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>().join(","));
+        for (i, &xv) in self.x.iter().enumerate() {
+            let ys: Vec<String> = self.series.iter().map(|(_, ys)| format!("{:.6e}", ys[i])).collect();
+            let _ = writeln!(s, "csv,{},{}", xv, ys.join(","));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_points_and_csv() {
+        let mut s = Series::new("fig4a", "stream_len", "ns_per_word", vec![1.0, 1024.0]);
+        s.push("philox", vec![5.0, 1.2]);
+        s.push("mt19937", vec![2000.0, 1.8]);
+        let text = s.render(|y| format!("{y:.1}"));
+        assert!(text.contains("fig4a"));
+        assert!(text.contains("philox"));
+        assert!(text.contains("csv,1,"));
+        assert!(text.lines().filter(|l| l.starts_with("csv,")).count() == 3);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_series_panics() {
+        let mut s = Series::new("t", "x", "y", vec![1.0]);
+        s.push("bad", vec![1.0, 2.0]);
+    }
+}

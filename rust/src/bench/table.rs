@@ -1,0 +1,78 @@
+//! Aligned text tables for bench output.
+
+/// Simple column-aligned table builder.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    s.push_str("  ");
+                }
+                // Right-align numbers-ish, left-align first column.
+                if c == 0 {
+                    s.push_str(&format!("{:<width$}", cell, width = widths[c]));
+                } else {
+                    s.push_str(&format!("{:>width$}", cell, width = widths[c]));
+                }
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = fmt_row(&self.header);
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["gen", "ns/word", "ratio"]);
+        t.row(&["philox".into(), "1.25".into(), "1.0x".into()]);
+        t.row(&["mt19937_long_name".into(), "3.5".into(), "2.8x".into()]);
+        let s = t.render();
+        assert!(s.contains("philox"));
+        assert!(s.contains("mt19937_long_name"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // All data lines same width.
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic]
+    fn width_mismatch_panics() {
+        Table::new(&["a", "b"]).row(&["only one".into()]);
+    }
+}

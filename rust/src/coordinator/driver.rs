@@ -1,0 +1,310 @@
+//! Simulation driver: orchestrates the Brownian benchmark over either
+//! execution backend with identical semantics.
+//!
+//! * [`Backend::Host`] — multithreaded Rust: the coordinator partitions
+//!   the particle range deterministically and steps each stripe on the
+//!   scoped pool. Bitwise identical for any thread count.
+//! * [`Backend::Device`] — PJRT: the whole step is one AOT-compiled XLA
+//!   call (`brownian_step_<N>` lowered from the Pallas/JAX stack); the
+//!   coordinator owns the step loop, the counter (= step index) and the
+//!   buffers. This is the paper's GPU path with the CPU PJRT client
+//!   standing in for the V100/A100.
+//!
+//! Both paths draw from the same (seed = pid ^ global, ctr = step)
+//! streams, so RNG words agree bitwise across backends; trajectories
+//! agree to float associativity (pinned by rust/tests/cross_layer.rs).
+
+use anyhow::{bail, Result};
+
+use super::metrics::{RunMetrics, Timer};
+use super::pool::ThreadPool;
+use crate::runtime::exec::{Arg, DeviceGraph};
+use crate::runtime::ArtifactStore;
+use crate::sim::brownian::{BrownianParams, BrownianSim, RngStyle};
+
+/// Execution backend for a simulation run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Multithreaded Rust host path.
+    Host { threads: usize },
+    /// AOT device path via PJRT.
+    Device,
+}
+
+/// Drives a [`BrownianSim`] to completion on a chosen backend.
+pub struct SimDriver {
+    pub backend: Backend,
+}
+
+impl SimDriver {
+    pub fn new(backend: Backend) -> SimDriver {
+        SimDriver { backend }
+    }
+
+    /// Run the simulation described by `params`; returns the final system
+    /// and metrics.
+    pub fn run(&self, params: BrownianParams) -> Result<(BrownianSim, RunMetrics)> {
+        match self.backend {
+            Backend::Host { threads } => self.run_host(params, threads),
+            Backend::Device => self.run_device(params),
+        }
+    }
+
+    fn run_host(&self, params: BrownianParams, threads: usize) -> Result<(BrownianSim, RunMetrics)> {
+        let pool = ThreadPool::new(threads);
+        let mut sim = BrownianSim::new(params);
+        let n = params.n_particles;
+        let wall = Timer::start();
+        let mut kernel = std::time::Duration::ZERO;
+        for _ in 0..params.steps {
+            let t = Timer::start();
+            if threads == 1 {
+                sim.step_all();
+            } else {
+                step_parallel(&mut sim, &pool, n);
+            }
+            kernel += t.elapsed();
+        }
+        let metrics = RunMetrics {
+            steps: params.steps as u64,
+            particles: n as u64,
+            wall: wall.elapsed(),
+            kernel,
+            rng_state_bytes: sim.rng_state_bytes(),
+        };
+        Ok((sim, metrics))
+    }
+
+    fn run_device(&self, params: BrownianParams) -> Result<(BrownianSim, RunMetrics)> {
+        let store = ArtifactStore::open_default()?;
+        let n = params.n_particles;
+        let (step_graph, init_needed) = match params.style {
+            RngStyle::OpenRand => (format!("brownian_step_{n}"), false),
+            RngStyle::CurandStyle => (format!("brownian_step_stateful_{n}"), true),
+            RngStyle::Raw123 => bail!(
+                "device path has no separate raw123 variant (identical streams to openrand)"
+            ),
+        };
+        let mut sim = BrownianSim::new(BrownianParams {
+            // Host-side state array not used on device; build without it.
+            style: RngStyle::OpenRand,
+            ..params
+        });
+        let wall = Timer::start();
+        let mut kernel = std::time::Duration::ZERO;
+        let (lo, hi) = ((params.global_seed & 0xFFFF_FFFF) as u32, (params.global_seed >> 32) as u32);
+        let mut rng_state_bytes = 0;
+        // §Perf device path: the particle tensor lives on the device for
+        // the whole run (execute_b buffer chaining); only the 16 B params
+        // block is uploaded per step, and rows come back once at the end.
+        let rows;
+        if init_needed {
+            // Split stateful graphs (both single-output => chainable):
+            // positions half + the 64 B/particle state store-back half.
+            let pos_graph = DeviceGraph::load(&store, &format!("brownian_step_stateful_pos_{n}"))?;
+            let upd_graph = DeviceGraph::load(&store, &format!("curand_state_update_{n}"))?;
+            let init = DeviceGraph::load(&store, &format!("curand_state_init_{n}"))?;
+            if !pos_graph.chainable() || !upd_graph.chainable() {
+                bail!("stateful split graphs must be chainable — re-run `make artifacts`");
+            }
+            let t = Timer::start();
+            let state_host = init.call_u32(&[Arg::U32(&[lo, hi, 0, 0])])?;
+            rng_state_bytes = state_host.len() * 4;
+            // State buffer shaped per the update graph's input signature.
+            let mut state_buf = upd_graph.buffer_from_u32(&state_host, 0)?;
+            let mut rows_buf = pos_graph.buffer_from_f64(&sim.to_rows(), 0)?;
+            kernel += t.elapsed();
+            for _ in 0..params.steps {
+                let t = Timer::start();
+                let new_rows = pos_graph.call_b(&[&rows_buf, &state_buf])?;
+                let new_state = upd_graph.call_b(&[&state_buf])?;
+                rows_buf = new_rows;
+                state_buf = new_state;
+                kernel += t.elapsed();
+            }
+            rows = pos_graph.buffer_to_f64(&rows_buf)?;
+        } else {
+            let graph = DeviceGraph::load(&store, &step_graph)?;
+            if !graph.chainable() {
+                bail!("brownian_step must be chainable — re-run `make artifacts`");
+            }
+            let mut rows_buf = graph.buffer_from_f64(&sim.to_rows(), 0)?;
+            for step in 0..params.steps {
+                let params4 = [lo, hi, step, 0];
+                let t = Timer::start();
+                let params_buf = graph.buffer_from_u32(&params4, 1)?;
+                rows_buf = graph.call_b(&[&rows_buf, &params_buf])?;
+                kernel += t.elapsed();
+            }
+            rows = graph.buffer_to_f64(&rows_buf)?;
+        }
+        sim.from_rows(&rows);
+        sim.step = params.steps;
+        let metrics = RunMetrics {
+            steps: params.steps as u64,
+            particles: n as u64,
+            wall: wall.elapsed(),
+            kernel,
+            rng_state_bytes,
+        };
+        Ok((sim, metrics))
+    }
+}
+
+/// One parallel step: deterministic stripes via raw-pointer range split
+/// (each worker touches a disjoint pid range of every field array).
+fn step_parallel(sim: &mut BrownianSim, pool: &ThreadPool, n: usize) {
+    // SAFETY-free formulation: temporarily move the field vectors into
+    // stripes using split_at_mut chains through the pool's run_chunks on
+    // an index array would obscure the physics; instead we use the
+    // documented invariant that step_range(lo, hi) only touches indices
+    // in [lo, hi) of each field. We split all four field slices into the
+    // same deterministic ranges and reassemble a view-struct per worker.
+    let ranges = super::partition::partition_ranges(n, pool.threads);
+    let step = sim.step;
+    let seed = sim.params.global_seed;
+    let style = sim.params.style;
+    let sqrt_dt = crate::sim::brownian::DT.sqrt();
+    let drag_g = crate::sim::brownian::GAMMA / crate::sim::brownian::MASS;
+    let dt = crate::sim::brownian::DT;
+
+    // Split every field into per-range stripes.
+    let mut stripes: Vec<(
+        &mut [f64],
+        &mut [f64],
+        &mut [f64],
+        &mut [f64],
+        &mut [crate::baseline::stateful_philox::CurandPhiloxState],
+        usize,
+    )> = Vec::with_capacity(ranges.len());
+    {
+        let mut x = sim.x.as_mut_slice();
+        let mut y = sim.y.as_mut_slice();
+        let mut vx = sim.vx.as_mut_slice();
+        let mut vy = sim.vy.as_mut_slice();
+        let mut st = sim.states.as_mut_slice();
+        let mut offset = 0usize;
+        for r in &ranges {
+            let len = r.len();
+            let (xh, xt) = x.split_at_mut(len);
+            let (yh, yt) = y.split_at_mut(len);
+            let (vxh, vxt) = vx.split_at_mut(len);
+            let (vyh, vyt) = vy.split_at_mut(len);
+            let (sth, stt) = if st.is_empty() {
+                (&mut [][..], st)
+            } else {
+                st.split_at_mut(len)
+            };
+            stripes.push((xh, yh, vxh, vyh, sth, offset));
+            x = xt;
+            y = yt;
+            vx = vxt;
+            vy = vyt;
+            st = stt;
+            offset += len;
+        }
+    }
+
+    std::thread::scope(|scope| {
+        for (x, y, vx, vy, st, offset) in stripes {
+            scope.spawn(move || {
+                use crate::baseline::raw123;
+                use crate::baseline::stateful_philox::StatefulPhilox;
+                use crate::core::philox::philox4x32;
+                use crate::core::{CounterRng, Philox, Rng};
+                for j in 0..x.len() {
+                    let pid = offset + j;
+                    let (r1, r2) = match style {
+                        RngStyle::OpenRand => {
+                            let mut rng = Philox::new(pid as u64 ^ seed, step);
+                            rng.draw_double2()
+                        }
+                        RngStyle::CurandStyle => {
+                            let mut rng = StatefulPhilox::load(st, j);
+                            let d = rng.draw_double2();
+                            rng.store(st, j);
+                            d
+                        }
+                        RngStyle::Raw123 => {
+                            let pid_seed = pid as u64 ^ seed;
+                            let block = philox4x32(
+                                [0, step, 0, 0],
+                                [pid_seed as u32, (pid_seed >> 32) as u32],
+                            );
+                            let xu = ((block[0] as u64) << 32) | block[1] as u64;
+                            let yu = ((block[2] as u64) << 32) | block[3] as u64;
+                            (raw123::u01_u64(xu), raw123::u01_u64(yu))
+                        }
+                    };
+                    // Same expression order as BrownianSim::kick.
+                    let mut v_x = vx[j];
+                    let mut v_y = vy[j];
+                    v_x = v_x - drag_g * v_x * dt;
+                    v_y = v_y - drag_g * v_y * dt;
+                    v_x += (r1 * 2.0 - 1.0) * sqrt_dt;
+                    v_y += (r2 * 2.0 - 1.0) * sqrt_dt;
+                    x[j] += v_x * dt;
+                    y[j] += v_y * dt;
+                    vx[j] = v_x;
+                    vy[j] = v_y;
+                }
+            });
+        }
+    });
+    sim.step += 1;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(n: usize, steps: u32) -> BrownianParams {
+        BrownianParams { n_particles: n, steps, global_seed: 11, style: RngStyle::OpenRand }
+    }
+
+    #[test]
+    fn host_thread_count_invariance() {
+        // THE reproducibility claim: bitwise-identical trajectories on
+        // 1, 2, 3, 8 threads.
+        let h1 = {
+            let (sim, _) = SimDriver::new(Backend::Host { threads: 1 })
+                .run(params(2048, 10))
+                .unwrap();
+            sim.state_hash()
+        };
+        for t in [2, 3, 8] {
+            let (sim, _) = SimDriver::new(Backend::Host { threads: t })
+                .run(params(2048, 10))
+                .unwrap();
+            assert_eq!(sim.state_hash(), h1, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn host_styles_all_run_parallel() {
+        for style in RngStyle::ALL {
+            let p = BrownianParams {
+                n_particles: 512,
+                steps: 5,
+                global_seed: 0,
+                style,
+            };
+            let (sim, m) = SimDriver::new(Backend::Host { threads: 4 }).run(p).unwrap();
+            assert_eq!(sim.step, 5, "{style:?}");
+            assert!(m.throughput() > 0.0);
+            // Parallel result == sequential result per style.
+            let (seq, _) = SimDriver::new(Backend::Host { threads: 1 }).run(p).unwrap();
+            assert_eq!(sim.state_hash(), seq.state_hash(), "{style:?}");
+        }
+    }
+
+    #[test]
+    fn metrics_account_steps() {
+        let (_, m) = SimDriver::new(Backend::Host { threads: 2 })
+            .run(params(256, 7))
+            .unwrap();
+        assert_eq!(m.steps, 7);
+        assert_eq!(m.particles, 256);
+        assert!(m.kernel <= m.wall + std::time::Duration::from_millis(5));
+    }
+}

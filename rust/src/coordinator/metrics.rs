@@ -1,0 +1,78 @@
+//! Run metrics: wall time, throughput, memory — what the benches and the
+//! CLI report (and what EXPERIMENTS.md records).
+
+use std::time::{Duration, Instant};
+
+/// Accumulated metrics for a simulation run.
+#[derive(Debug, Clone, Default)]
+pub struct RunMetrics {
+    pub steps: u64,
+    pub particles: u64,
+    pub wall: Duration,
+    /// Time spent inside step kernels (host) or device calls.
+    pub kernel: Duration,
+    /// Extra bytes allocated for RNG state (0 for counter-based styles).
+    pub rng_state_bytes: usize,
+}
+
+impl RunMetrics {
+    /// Particle-steps per second — the Fig. 4b figure of merit.
+    pub fn throughput(&self) -> f64 {
+        let ps = self.steps as f64 * self.particles as f64;
+        ps / self.wall.as_secs_f64().max(1e-12)
+    }
+
+    /// Random numbers per second (2 doubles = 4 words per particle-step).
+    pub fn draws_per_sec(&self) -> f64 {
+        self.throughput() * 4.0
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "steps={} particles={} wall={:.3}s kernel={:.3}s throughput={}/s rng_state={}",
+            self.steps,
+            self.particles,
+            self.wall.as_secs_f64(),
+            self.kernel.as_secs_f64(),
+            crate::util::format::si(self.throughput()),
+            crate::util::format::bytes(self.rng_state_bytes),
+        )
+    }
+}
+
+/// Simple scope timer.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_math() {
+        let m = RunMetrics {
+            steps: 10,
+            particles: 1000,
+            wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((m.throughput() - 5_000.0).abs() < 1e-9);
+        assert!((m.draws_per_sec() - 20_000.0).abs() < 1e-9);
+        assert!(m.summary().contains("particles=1000"));
+    }
+
+    #[test]
+    fn zero_wall_is_safe() {
+        let m = RunMetrics::default();
+        assert!(m.throughput().is_finite());
+    }
+}

@@ -1,0 +1,21 @@
+//! L3 coordination: parallel execution that preserves the paper's
+//! reproducibility guarantee.
+//!
+//! The guarantee comes from the *stream identity* design (streams derive
+//! from logical ids, never from thread ids), but the coordinator must
+//! not squander it: [`partition`] produces deterministic, thread-count-
+//! independent work ranges; [`pool`] executes them on scoped threads;
+//! [`repro`] verifies bitwise equality across thread counts and across
+//! host/device paths; [`driver`] orchestrates whole simulations over
+//! either the host (multithreaded Rust) or device (PJRT) execution path;
+//! [`metrics`] collects per-run counters for the benches and the CLI.
+
+pub mod driver;
+pub mod metrics;
+pub mod partition;
+pub mod pool;
+pub mod repro;
+
+pub use driver::{Backend, SimDriver};
+pub use partition::partition_ranges;
+pub use pool::ThreadPool;

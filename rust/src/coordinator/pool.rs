@@ -1,0 +1,149 @@
+//! Scoped worker pool on std::thread (no rayon in this environment).
+//!
+//! `ThreadPool::run_partitioned` maps a closure over deterministic
+//! partitions of an index space. Work assignment is static (partition i →
+//! worker i); there is no stealing, because stealing introduces
+//! scheduling-dependent execution orders that make performance runs
+//! noisy — and the whole point of the library is that *correctness*
+//! never depends on scheduling anyway.
+
+use super::partition::partition_ranges;
+use std::ops::Range;
+
+/// A lightweight fork-join pool: threads are spawned per call via
+/// `std::thread::scope` (spawn cost ≈ µs, negligible against the ≥ ms
+/// step granularity the coordinator dispatches; measured in the perf
+/// pass).
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadPool {
+    pub threads: usize,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        assert!(threads > 0);
+        ThreadPool { threads }
+    }
+
+    /// Pool sized to the machine.
+    pub fn default_parallel() -> Self {
+        let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        ThreadPool { threads: t }
+    }
+
+    /// Apply `f` to `k = threads` deterministic ranges of `[0, n)` in
+    /// parallel and collect the results in partition order (not
+    /// completion order — ordering is part of reproducibility).
+    pub fn run_partitioned<T: Send>(
+        &self,
+        n: usize,
+        f: impl Fn(usize, Range<usize>) -> T + Sync,
+    ) -> Vec<T> {
+        let ranges = partition_ranges(n, self.threads);
+        if self.threads == 1 {
+            return ranges.into_iter().enumerate().map(|(i, r)| f(i, r)).collect();
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(ranges.len());
+        slots.resize_with(ranges.len(), || None);
+        std::thread::scope(|scope| {
+            let f = &f;
+            let mut handles = Vec::with_capacity(ranges.len());
+            for (i, (range, slot)) in ranges.into_iter().zip(slots.iter_mut()).enumerate() {
+                handles.push(scope.spawn(move || {
+                    *slot = Some(f(i, range));
+                }));
+            }
+            for h in handles {
+                h.join().expect("worker panicked");
+            }
+        });
+        slots.into_iter().map(|s| s.expect("worker filled slot")).collect()
+    }
+
+    /// Map over mutable disjoint chunks of a slice, one per worker, with
+    /// per-chunk results. Used for particle arrays: each worker owns its
+    /// contiguous stripe.
+    pub fn run_chunks<T: Send, E: Send>(
+        &self,
+        data: &mut [E],
+        f: impl Fn(usize, usize, &mut [E]) -> T + Sync,
+    ) -> Vec<T> {
+        let n = data.len();
+        let ranges = partition_ranges(n, self.threads);
+        let mut pieces: Vec<(usize, usize, &mut [E])> = Vec::with_capacity(ranges.len());
+        let mut rest = data;
+        let mut offset = 0usize;
+        for (i, r) in ranges.iter().enumerate() {
+            let (head, tail) = rest.split_at_mut(r.len());
+            pieces.push((i, offset, head));
+            offset += r.len();
+            rest = tail;
+        }
+        if self.threads == 1 {
+            return pieces.into_iter().map(|(i, off, chunk)| f(i, off, chunk)).collect();
+        }
+        let mut slots: Vec<Option<T>> = Vec::with_capacity(self.threads);
+        slots.resize_with(self.threads, || None);
+        std::thread::scope(|scope| {
+            let f = &f;
+            for ((i, off, chunk), slot) in pieces.into_iter().zip(slots.iter_mut()) {
+                scope.spawn(move || {
+                    *slot = Some(f(i, off, chunk));
+                });
+            }
+        });
+        slots.into_iter().map(|s| s.expect("worker filled slot")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_partition_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.run_partitioned(100, |i, r| (i, r.start, r.end));
+        assert_eq!(out.len(), 4);
+        for (i, w) in out.iter().enumerate() {
+            assert_eq!(w.0, i);
+        }
+        assert_eq!(out[0].1, 0);
+        assert_eq!(out[3].2, 100);
+    }
+
+    #[test]
+    fn same_sum_any_thread_count() {
+        let total = |threads: usize| -> u64 {
+            ThreadPool::new(threads)
+                .run_partitioned(10_000, |_, r| r.map(|i| i as u64 * 7).sum::<u64>())
+                .into_iter()
+                .sum()
+        };
+        let t1 = total(1);
+        for t in [2, 3, 8, 16] {
+            assert_eq!(total(t), t1);
+        }
+    }
+
+    #[test]
+    fn chunks_cover_slice_disjointly() {
+        let mut data = vec![0u32; 1000];
+        let pool = ThreadPool::new(7);
+        pool.run_chunks(&mut data, |_, off, chunk| {
+            for (j, v) in chunk.iter_mut().enumerate() {
+                *v += (off + j) as u32 + 1;
+            }
+        });
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u32 + 1, "i={i}");
+        }
+    }
+
+    #[test]
+    fn single_thread_no_spawn_path() {
+        let pool = ThreadPool::new(1);
+        let out = pool.run_partitioned(10, |i, r| (i, r.len()));
+        assert_eq!(out, vec![(0, 10)]);
+    }
+}

@@ -1,0 +1,140 @@
+//! The OpenRAND core: counter-based random number generators (CBRNGs).
+//!
+//! This is the paper's primary contribution, reproduced in Rust: a single
+//! family of counter-based generators behind one tiny API. A generator is
+//! constructed from `(seed: u64, ctr: u32)` — the seed identifies a
+//! logical processing element (a particle, a pixel, a cell), the counter
+//! identifies a sub-stream for that element (a timestep, a kernel launch)
+//! — and yields a statistically independent stream of `2^32` 32-bit words.
+//! Construction costs a few dozen integer ops and **no state** has to be
+//! stored, initialized, or synchronized anywhere.
+//!
+//! ```
+//! use openrand::core::{Philox, Rng, CounterRng};
+//! let (pid, step) = (1234u64, 7u32);
+//! let mut rng = Philox::new(pid, step);           // paper Fig. 1, line 15
+//! let (r1, r2) = rng.draw_double2();              // paper Fig. 1, line 16
+//! assert!(r1 < 1.0 && r2 < 1.0);
+//! ```
+//!
+//! Engines: [`Philox`] (default, Philox4x32-10), [`Philox2x32`],
+//! [`Threefry`] (Threefry4x32-20), [`Threefry2x32`], [`Squares`],
+//! [`Tyche`], [`TycheI`]. All implement [`Rng`] (the draw API) and
+//! [`CounterRng`] (the `(seed, ctr)` constructor); the Philox/Threefry
+//! family additionally exposes its raw block function (Random123-style
+//! low-level API) which the parallel-stream statistical tests and the
+//! cross-layer bitwise tests consume.
+//!
+//! The `(seed, ctr)` → raw-counter mapping is the normative contract in
+//! [`counter`], kept bit-identical with `python/compile/kernels/common.py`.
+
+pub mod counter;
+pub mod philox;
+pub mod squares;
+pub mod threefry;
+pub mod traits;
+pub mod tyche;
+
+pub use philox::{Philox, Philox2x32};
+pub use squares::Squares;
+pub use threefry::{Threefry, Threefry2x32};
+pub use traits::{CounterRng, Rng};
+pub use tyche::{Tyche, TycheI};
+
+/// The generator family, as a runtime tag (CLI / bench selection).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Generator {
+    Philox,
+    Philox2x32,
+    Threefry,
+    Threefry2x32,
+    Squares,
+    Tyche,
+    TycheI,
+}
+
+impl Generator {
+    pub const ALL: [Generator; 7] = [
+        Generator::Philox,
+        Generator::Philox2x32,
+        Generator::Threefry,
+        Generator::Threefry2x32,
+        Generator::Squares,
+        Generator::Tyche,
+        Generator::TycheI,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Generator::Philox => "philox",
+            Generator::Philox2x32 => "philox2x32",
+            Generator::Threefry => "threefry",
+            Generator::Threefry2x32 => "threefry2x32",
+            Generator::Squares => "squares",
+            Generator::Tyche => "tyche",
+            Generator::TycheI => "tyche_i",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Generator> {
+        Generator::ALL.iter().copied().find(|g| g.name() == s)
+    }
+
+    /// Internal state size in bytes (the paper's register-pressure story).
+    pub fn state_bytes(self) -> usize {
+        match self {
+            Generator::Philox => Philox::STATE_BYTES,
+            Generator::Philox2x32 => Philox2x32::STATE_BYTES,
+            Generator::Threefry => Threefry::STATE_BYTES,
+            Generator::Threefry2x32 => Threefry2x32::STATE_BYTES,
+            Generator::Squares => Squares::STATE_BYTES,
+            Generator::Tyche => Tyche::STATE_BYTES,
+            Generator::TycheI => TycheI::STATE_BYTES,
+        }
+    }
+
+    /// Run `f` with a monomorphized instance of the selected engine.
+    pub fn with_rng<T>(self, seed: u64, ctr: u32, f: impl FnOnce(&mut dyn Rng) -> T) -> T {
+        match self {
+            Generator::Philox => f(&mut Philox::new(seed, ctr)),
+            Generator::Philox2x32 => f(&mut Philox2x32::new(seed, ctr)),
+            Generator::Threefry => f(&mut Threefry::new(seed, ctr)),
+            Generator::Threefry2x32 => f(&mut Threefry2x32::new(seed, ctr)),
+            Generator::Squares => f(&mut Squares::new(seed, ctr)),
+            Generator::Tyche => f(&mut Tyche::new(seed, ctr)),
+            Generator::TycheI => f(&mut TycheI::new(seed, ctr)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_roundtrip_names() {
+        for g in Generator::ALL {
+            assert_eq!(Generator::parse(g.name()), Some(g));
+        }
+        assert_eq!(Generator::parse("mt19937"), None);
+    }
+
+    #[test]
+    fn state_sizes_fit_gpu_registers() {
+        // The paper's claim: every member fits comfortably in per-thread
+        // registers (cuRAND's Philox state by contrast is 64 B in global
+        // memory). Bookkeeping included, every engine stays <= 48 B (12
+        // u32 registers); mt19937 for comparison is ~2.5 kB.
+        for g in Generator::ALL {
+            assert!(g.state_bytes() <= 48, "{:?} = {}", g, g.state_bytes());
+        }
+    }
+
+    #[test]
+    fn with_rng_dispatches_all() {
+        for g in Generator::ALL {
+            let v = g.with_rng(42, 0, |r| r.draw_double());
+            assert!((0.0..1.0).contains(&v), "{:?} -> {v}", g);
+        }
+    }
+}

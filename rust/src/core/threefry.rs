@@ -1,0 +1,268 @@
+//! Threefry4x32-20 and Threefry2x32-20 (Salmon et al., SC'11) — the
+//! add-rotate-xor member of the family. No multiplies at all, which makes
+//! it the preferred engine on hardware without a fast 32x32→64 multiplier
+//! (the paper's portability argument); the ablation bench quantifies the
+//! trade against Philox on this host.
+
+use super::counter::split_seed;
+use super::traits::{CounterRng, Rng};
+
+/// Skein key-schedule parity constant.
+pub const SKEIN_PARITY: u32 = 0x1BD1_1BDA;
+
+/// Rotation schedule for Threefry4x32 (pairs per round mod 8).
+const R4: [(u32, u32); 8] =
+    [(10, 26), (11, 21), (13, 27), (23, 5), (6, 20), (17, 11), (25, 10), (18, 20)];
+/// Rotation schedule for Threefry2x32.
+const R2: [u32; 8] = [13, 15, 26, 6, 17, 29, 16, 24];
+
+/// Threefry4x32-R raw block function (R rounds; standard strength R = 20).
+#[inline]
+pub fn threefry4x32_r(ctr: [u32; 4], key: [u32; 4], rounds: u32) -> [u32; 4] {
+    let ks = [
+        key[0],
+        key[1],
+        key[2],
+        key[3],
+        SKEIN_PARITY ^ key[0] ^ key[1] ^ key[2] ^ key[3],
+    ];
+    let mut x = [
+        ctr[0].wrapping_add(ks[0]),
+        ctr[1].wrapping_add(ks[1]),
+        ctr[2].wrapping_add(ks[2]),
+        ctr[3].wrapping_add(ks[3]),
+    ];
+    for r in 0..rounds as usize {
+        let (r0, r1) = R4[r % 8];
+        if r % 2 == 0 {
+            x[0] = x[0].wrapping_add(x[1]);
+            x[1] = x[1].rotate_left(r0) ^ x[0];
+            x[2] = x[2].wrapping_add(x[3]);
+            x[3] = x[3].rotate_left(r1) ^ x[2];
+        } else {
+            x[0] = x[0].wrapping_add(x[3]);
+            x[3] = x[3].rotate_left(r0) ^ x[0];
+            x[2] = x[2].wrapping_add(x[1]);
+            x[1] = x[1].rotate_left(r1) ^ x[2];
+        }
+        if (r + 1) % 4 == 0 {
+            let q = (r + 1) / 4;
+            for i in 0..4 {
+                x[i] = x[i].wrapping_add(ks[(q + i) % 5]);
+            }
+            x[3] = x[3].wrapping_add(q as u32);
+        }
+    }
+    x
+}
+
+/// Threefry4x32-20.
+#[inline]
+pub fn threefry4x32(ctr: [u32; 4], key: [u32; 4]) -> [u32; 4] {
+    threefry4x32_r(ctr, key, 20)
+}
+
+/// Threefry2x32-R raw block function.
+#[inline]
+pub fn threefry2x32_r(ctr: [u32; 2], key: [u32; 2], rounds: u32) -> [u32; 2] {
+    let ks = [key[0], key[1], SKEIN_PARITY ^ key[0] ^ key[1]];
+    let mut x0 = ctr[0].wrapping_add(ks[0]);
+    let mut x1 = ctr[1].wrapping_add(ks[1]);
+    for r in 0..rounds as usize {
+        x0 = x0.wrapping_add(x1);
+        x1 = x1.rotate_left(R2[r % 8]) ^ x0;
+        if (r + 1) % 4 == 0 {
+            let q = (r + 1) / 4;
+            x0 = x0.wrapping_add(ks[q % 3]);
+            x1 = x1.wrapping_add(ks[(q + 1) % 3]).wrapping_add(q as u32);
+        }
+    }
+    [x0, x1]
+}
+
+/// Threefry2x32-20.
+#[inline]
+pub fn threefry2x32(ctr: [u32; 2], key: [u32; 2]) -> [u32; 2] {
+    threefry2x32_r(ctr, key, 20)
+}
+
+/// Threefry4x32-20 engine in counter mode.
+#[derive(Debug, Clone)]
+pub struct Threefry {
+    key: [u32; 4],
+    ctr: u32,
+    blk: u32,
+    buf: [u32; 4],
+    pos: u8,
+}
+
+impl Threefry {
+    /// Counter block `j` of this stream.
+    #[inline]
+    pub fn block(&self, j: u32) -> [u32; 4] {
+        threefry4x32([j, self.ctr, 0, 0], self.key)
+    }
+}
+
+impl Rng for Threefry {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.pos >= 4 {
+            self.buf = self.block(self.blk);
+            self.blk = self.blk.wrapping_add(1);
+            self.pos = 0;
+        }
+        let w = self.buf[self.pos as usize];
+        self.pos += 1;
+        w
+    }
+
+    #[inline]
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        let mut i = 0;
+        while self.pos < 4 && i < out.len() {
+            out[i] = self.buf[self.pos as usize];
+            self.pos += 1;
+            i += 1;
+        }
+        while i + 4 <= out.len() {
+            let b = self.block(self.blk);
+            out[i..i + 4].copy_from_slice(&b);
+            self.blk = self.blk.wrapping_add(1);
+            i += 4;
+        }
+        while i < out.len() {
+            out[i] = self.next_u32();
+            i += 1;
+        }
+    }
+}
+
+impl CounterRng for Threefry {
+    const NAME: &'static str = "threefry";
+
+    #[inline]
+    fn new(seed: u64, ctr: u32) -> Self {
+        let (lo, hi) = split_seed(seed);
+        Threefry { key: [lo, hi, 0, 0], ctr, blk: 0, buf: [0; 4], pos: 4 }
+    }
+
+    #[inline]
+    fn set_position(&mut self, pos: u32) {
+        self.blk = pos / 4;
+        self.buf = self.block(self.blk);
+        self.blk = self.blk.wrapping_add(1);
+        self.pos = (pos % 4) as u8;
+    }
+}
+
+/// Threefry2x32-20 engine.
+#[derive(Debug, Clone)]
+pub struct Threefry2x32 {
+    key: [u32; 2],
+    ctr: u32,
+    blk: u32,
+    buf: [u32; 2],
+    pos: u8,
+}
+
+impl Rng for Threefry2x32 {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.pos >= 2 {
+            self.buf = threefry2x32([self.blk, self.ctr], self.key);
+            self.blk = self.blk.wrapping_add(1);
+            self.pos = 0;
+        }
+        let w = self.buf[self.pos as usize];
+        self.pos += 1;
+        w
+    }
+}
+
+impl CounterRng for Threefry2x32 {
+    const NAME: &'static str = "threefry2x32";
+
+    #[inline]
+    fn new(seed: u64, ctr: u32) -> Self {
+        let (lo, hi) = split_seed(seed);
+        Threefry2x32 { key: [lo, hi], ctr, blk: 0, buf: [0; 2], pos: 2 }
+    }
+
+    #[inline]
+    fn set_position(&mut self, pos: u32) {
+        self.blk = pos / 2;
+        self.buf = threefry2x32([self.blk, self.ctr], self.key);
+        self.blk = self.blk.wrapping_add(1);
+        self.pos = (pos % 2) as u8;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: u32 = u32::MAX;
+
+    #[test]
+    fn threefry4x32_known_answers() {
+        // Random123 kat_vectors.
+        assert_eq!(
+            threefry4x32([0, 0, 0, 0], [0, 0, 0, 0]),
+            [0x9C6C_A96A, 0xE17E_AE66, 0xFC10_ECD4, 0x5256_A7D8]
+        );
+        assert_eq!(
+            threefry4x32([M, M, M, M], [M, M, M, M]),
+            [0x2A88_1696, 0x5701_2287, 0xF6C7_446E, 0xA16A_6732]
+        );
+    }
+
+    #[test]
+    fn threefry2x32_known_answers() {
+        assert_eq!(threefry2x32([0, 0], [0, 0]), [0x6B20_0159, 0x99BA_4EFE]);
+        assert_eq!(threefry2x32([M, M], [M, M]), [0x1CB9_96FC, 0xBB00_2BE7]);
+    }
+
+    #[test]
+    fn engine_stream_matches_blocks() {
+        let mut rng = Threefry::new(0xFEED_FACE_CAFE_BEEF, 3);
+        let w: Vec<u32> = (0..8).map(|_| rng.next_u32()).collect();
+        assert_eq!(&w[..4], &rng.block(0));
+        assert_eq!(&w[4..], &rng.block(1));
+    }
+
+    #[test]
+    fn fill_matches_sequential() {
+        let mut a = Threefry::new(7, 0);
+        let mut b = Threefry::new(7, 0);
+        a.next_u32();
+        b.next_u32();
+        let mut buf = [0u32; 13];
+        a.fill_u32(&mut buf);
+        for w in buf {
+            assert_eq!(w, b.next_u32());
+        }
+    }
+
+    #[test]
+    fn set_position_all_engines() {
+        let mut seq4 = Threefry::new(1, 1);
+        let w4: Vec<u32> = (0..20).map(|_| seq4.next_u32()).collect();
+        let mut r4 = Threefry::new(1, 1);
+        r4.set_position(9);
+        assert_eq!(r4.next_u32(), w4[9]);
+
+        let mut seq2 = Threefry2x32::new(1, 1);
+        let w2: Vec<u32> = (0..20).map(|_| seq2.next_u32()).collect();
+        let mut r2 = Threefry2x32::new(1, 1);
+        r2.set_position(9);
+        assert_eq!(r2.next_u32(), w2[9]);
+    }
+
+    #[test]
+    fn rounds_ablation_distinct() {
+        let c = [9, 8, 7, 6];
+        let k = [1, 2, 3, 4];
+        assert_ne!(threefry4x32_r(c, k, 12), threefry4x32_r(c, k, 20));
+    }
+}

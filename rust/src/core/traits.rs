@@ -1,0 +1,175 @@
+//! The OpenRAND draw API — the C++-random-engine-shaped interface.
+//!
+//! [`Rng`] mirrors the paper's generator interface (and the C++17 uniform
+//! random bit generator requirements): `next_u32`/`next_u64` are the raw
+//! engine calls (`operator()`, `min`, `max`), the `draw_*` helpers are the
+//! OpenRAND conveniences used throughout the paper's examples.
+//!
+//! Conversions are **normative** and shared bit-exactly with
+//! `python/compile/kernels/common.py`:
+//!
+//! * `f32 in [0,1)`: top 24 bits of one u32 word,
+//! * `f64 in [0,1)`: top 53 bits of `(word_2m << 32) | word_2m+1`.
+
+/// Uniform random bit generator + OpenRAND draw helpers.
+///
+/// Object-safe: the CLI and battery dispatch over `&mut dyn Rng`; the hot
+/// paths monomorphize via generics instead.
+pub trait Rng {
+    /// Next 32-bit word of the stream (the raw engine output).
+    fn next_u32(&mut self) -> u32;
+
+    /// Next 64 bits: two consecutive 32-bit words, first word high.
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        let hi = self.next_u32() as u64;
+        let lo = self.next_u32() as u64;
+        (hi << 32) | lo
+    }
+
+    /// Uniform `f32` in `[0, 1)` — top 24 bits of one word.
+    #[inline]
+    fn draw_float(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform `f64` in `[0, 1)` — top 53 bits of two words.
+    #[inline]
+    fn draw_double(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Two uniform `f64`s — the paper's `draw_double2` (Fig. 1 line 16),
+    /// one Philox block's worth of bits.
+    #[inline]
+    fn draw_double2(&mut self) -> (f64, f64) {
+        (self.draw_double(), self.draw_double())
+    }
+
+    /// Two uniform `f32`s.
+    #[inline]
+    fn draw_float2(&mut self) -> (f32, f32) {
+        (self.draw_float(), self.draw_float())
+    }
+
+    /// Unbiased uniform integer in `[0, bound)` — Lemire's multiply-shift
+    /// rejection method (no modulo on the happy path).
+    #[inline]
+    fn range_u32(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64) * (bound as u64);
+        let mut l = m as u32;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u32();
+                m = (x as u64) * (bound as u64);
+                l = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.draw_double()
+    }
+
+    /// Fill a slice with raw stream words. Engines with block structure
+    /// override this with an unbuffered bulk path (the fill loop is the
+    /// Fig. 4a hot loop).
+    #[inline]
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        for w in out.iter_mut() {
+            *w = self.next_u32();
+        }
+    }
+}
+
+/// A counter-based engine: constructible from `(seed, ctr)` in O(1) with
+/// no global state — the property the whole paper is about.
+pub trait CounterRng: Rng + Sized {
+    /// Engine name as used by the CLI, benches, and artifact files.
+    const NAME: &'static str;
+
+    /// In-register state footprint in bytes (key + counter + buffer +
+    /// bookkeeping) — the GPU register-pressure metric from the paper.
+    const STATE_BYTES: usize = core::mem::size_of::<Self>();
+
+    /// Create the stream identified by `(seed, ctr)`. `seed` names the
+    /// processing element (particle id, pixel index, ...); `ctr` names
+    /// the sub-stream (timestep, kernel launch, ...).
+    fn new(seed: u64, ctr: u32) -> Self;
+
+    /// Skip the stream position forward to the `pos`-th 32-bit word in
+    /// O(1) (counter arithmetic; Tyche documents its O(pos) exception).
+    fn set_position(&mut self, pos: u32);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fake engine emitting a known word sequence, to pin the trait's
+    /// default conversions independently of any real generator.
+    struct Seq(Vec<u32>, usize);
+    impl Rng for Seq {
+        fn next_u32(&mut self) -> u32 {
+            let v = self.0[self.1 % self.0.len()];
+            self.1 += 1;
+            v
+        }
+    }
+
+    #[test]
+    fn u64_packs_first_word_high() {
+        let mut s = Seq(vec![0xDEADBEEF, 0x01234567], 0);
+        assert_eq!(s.next_u64(), 0xDEADBEEF_01234567);
+    }
+
+    #[test]
+    fn draw_float_uses_top_24_bits() {
+        assert_eq!(Seq(vec![0], 0).draw_float(), 0.0);
+        let almost = Seq(vec![u32::MAX], 0).draw_float();
+        assert!(almost < 1.0 && almost > 0.9999);
+        // Exactly (2^24 - 1) / 2^24:
+        assert_eq!(almost, (0xFFFFFF as f32) / (1 << 24) as f32);
+    }
+
+    #[test]
+    fn draw_double_uses_top_53_bits() {
+        assert_eq!(Seq(vec![0, 0], 0).draw_double(), 0.0);
+        let almost = Seq(vec![u32::MAX, u32::MAX], 0).draw_double();
+        assert!(almost < 1.0);
+        assert_eq!(almost, ((1u64 << 53) - 1) as f64 / (1u64 << 53) as f64);
+    }
+
+    #[test]
+    fn range_u32_is_in_bounds_and_hits_all_values() {
+        let mut s = Seq((0..1024u32).map(|i| i.wrapping_mul(0x9E37_79B9)).collect(), 0);
+        let mut seen = [false; 7];
+        for _ in 0..1024 {
+            seen[s.range_u32(7) as usize] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn range_u32_bound_one_is_zero() {
+        let mut s = Seq(vec![u32::MAX, 123], 0);
+        assert_eq!(s.range_u32(1), 0);
+    }
+
+    #[test]
+    fn fill_matches_repeated_next() {
+        let mut a = Seq((0..64).collect(), 0);
+        let mut b = Seq((0..64).collect(), 0);
+        let mut buf = [0u32; 64];
+        a.fill_u32(&mut buf);
+        for w in buf {
+            assert_eq!(w, b.next_u32());
+        }
+    }
+}

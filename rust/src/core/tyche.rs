@@ -1,0 +1,197 @@
+//! Tyche and Tyche-i (Neves & Araujo, PPAM'11) — ChaCha-quarter-round
+//! based small-state generators. Not strictly counter-based: a stream is
+//! seeded from `(seed, ctr)` with 20 warm-up rounds and then advances
+//! sequentially. The paper includes them for their CPU speed (Fig. 4a)
+//! and runs them through the first published parallel-stream correlation
+//! tests (§5.2) — reproduced here by `stats::parallel`.
+
+use super::counter::split_seed;
+use super::traits::{CounterRng, Rng};
+
+pub const TYCHE_C: u32 = 2_654_435_769;
+pub const TYCHE_D: u32 = 1_367_130_551;
+
+#[derive(Debug, Clone, Copy)]
+struct State {
+    a: u32,
+    b: u32,
+    c: u32,
+    d: u32,
+}
+
+#[inline(always)]
+fn mix(s: State) -> State {
+    let State { mut a, mut b, mut c, mut d } = s;
+    a = a.wrapping_add(b);
+    d = (d ^ a).rotate_left(16);
+    c = c.wrapping_add(d);
+    b = (b ^ c).rotate_left(12);
+    a = a.wrapping_add(b);
+    d = (d ^ a).rotate_left(8);
+    c = c.wrapping_add(d);
+    b = (b ^ c).rotate_left(7);
+    State { a, b, c, d }
+}
+
+#[inline(always)]
+fn mix_i(s: State) -> State {
+    let State { mut a, mut b, mut c, mut d } = s;
+    b = b.rotate_right(7) ^ c;
+    c = c.wrapping_sub(d);
+    d = d.rotate_right(8) ^ a;
+    a = a.wrapping_sub(b);
+    b = b.rotate_right(12) ^ c;
+    c = c.wrapping_sub(d);
+    d = d.rotate_right(16) ^ a;
+    a = a.wrapping_sub(b);
+    State { a, b, c, d }
+}
+
+#[inline]
+fn init(seed: u64, ctr: u32, inverse: bool) -> State {
+    let (lo, hi) = split_seed(seed);
+    let mut s = State { a: hi, b: lo, c: TYCHE_C, d: TYCHE_D ^ ctr };
+    for _ in 0..20 {
+        s = if inverse { mix_i(s) } else { mix(s) };
+    }
+    s
+}
+
+/// Tyche: one MIX per output, returns `b`.
+#[derive(Debug, Clone)]
+pub struct Tyche {
+    s: State,
+}
+
+impl Rng for Tyche {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.s = mix(self.s);
+        self.s.b
+    }
+}
+
+impl CounterRng for Tyche {
+    const NAME: &'static str = "tyche";
+
+    #[inline]
+    fn new(seed: u64, ctr: u32) -> Self {
+        Tyche { s: init(seed, ctr, false) }
+    }
+
+    /// O(pos): Tyche has no counter to jump — documented exception.
+    fn set_position(&mut self, pos: u32) {
+        for _ in 0..pos {
+            self.s = mix(self.s);
+        }
+    }
+}
+
+/// Tyche-i: the inverse quarter-round, ~20% faster on superscalar CPUs
+/// (shorter dependency chain), returns `a`.
+#[derive(Debug, Clone)]
+pub struct TycheI {
+    s: State,
+}
+
+impl Rng for TycheI {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.s = mix_i(self.s);
+        self.s.a
+    }
+}
+
+impl CounterRng for TycheI {
+    const NAME: &'static str = "tyche_i";
+
+    #[inline]
+    fn new(seed: u64, ctr: u32) -> Self {
+        TycheI { s: init(seed, ctr, true) }
+    }
+
+    /// O(pos) — same exception as [`Tyche`].
+    fn set_position(&mut self, pos: u32) {
+        for _ in 0..pos {
+            self.s = mix_i(self.s);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Plain-u64-arithmetic transcription of the Tyche paper's MIX, as an
+    /// independent implementation check (mirrors the python test).
+    fn mix_reference(v: [u32; 4]) -> [u32; 4] {
+        let rotl = |x: u32, n: u32| x.rotate_left(n);
+        let (mut a, mut b, mut c, mut d) = (v[0], v[1], v[2], v[3]);
+        a = a.wrapping_add(b);
+        d = rotl(d ^ a, 16);
+        c = c.wrapping_add(d);
+        b = rotl(b ^ c, 12);
+        a = a.wrapping_add(b);
+        d = rotl(d ^ a, 8);
+        c = c.wrapping_add(d);
+        b = rotl(b ^ c, 7);
+        [a, b, c, d]
+    }
+
+    #[test]
+    fn mix_matches_reference() {
+        let s = mix(State { a: 1, b: 2, c: 3, d: 4 });
+        assert_eq!([s.a, s.b, s.c, s.d], mix_reference([1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn mix_i_inverts_mix() {
+        // MIX-i is the algebraic inverse of MIX (that's its derivation).
+        let s0 = State { a: 0xDEAD_BEEF, b: 0x0123_4567, c: 0x89AB_CDEF, d: 0x5555_AAAA };
+        let s1 = mix_i(mix(s0));
+        assert_eq!(
+            [s1.a, s1.b, s1.c, s1.d],
+            [s0.a, s0.b, s0.c, s0.d],
+            "mix_i(mix(s)) != s"
+        );
+    }
+
+    #[test]
+    fn deterministic_streams() {
+        let w = |seed, ctr| -> Vec<u32> {
+            let mut r = Tyche::new(seed, ctr);
+            (0..16).map(|_| r.next_u32()).collect()
+        };
+        assert_eq!(w(1, 0), w(1, 0));
+        assert_ne!(w(1, 0), w(1, 1));
+        assert_ne!(w(1, 0), w(2, 0));
+    }
+
+    #[test]
+    fn tyche_and_tyche_i_are_distinct_generators() {
+        let mut t = Tyche::new(5, 0);
+        let mut ti = TycheI::new(5, 0);
+        let a: Vec<u32> = (0..8).map(|_| t.next_u32()).collect();
+        let b: Vec<u32> = (0..8).map(|_| ti.next_u32()).collect();
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn set_position_sequential_equivalence() {
+        let mut seq = Tyche::new(3, 3);
+        let w: Vec<u32> = (0..24).map(|_| seq.next_u32()).collect();
+        let mut r = Tyche::new(3, 3);
+        r.set_position(10);
+        assert_eq!(r.next_u32(), w[10]);
+    }
+
+    #[test]
+    fn warmup_gives_avalanche_on_ctr() {
+        // Even though ctr only lands in word d, 20 warm-up rounds spread
+        // it: first outputs of adjacent ctrs should differ in ~16 bits.
+        let mut x = Tyche::new(42, 0);
+        let mut y = Tyche::new(42, 1);
+        let d = (x.next_u32() ^ y.next_u32()).count_ones();
+        assert!((8..=24).contains(&d), "{d}");
+    }
+}

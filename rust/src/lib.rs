@@ -1,0 +1,36 @@
+//! # OpenRAND (reproduction) — performance-portable, reproducible RNG for parallel computations
+//!
+//! Three-layer reproduction of *OpenRAND* (Khan et al., 2023):
+//!
+//! * **L3 (this crate)** — the counter-based RNG library itself
+//!   ([`core`]), baselines ([`baseline`]), distributions ([`dist`]), a
+//!   TestU01/PractRand-substitute statistical battery ([`stats`]), the
+//!   Brownian-dynamics macro-benchmark substrate ([`sim`]), a
+//!   reproducibility-preserving parallel coordinator ([`coordinator`]),
+//!   and a PJRT runtime ([`runtime`]) that executes the AOT-compiled
+//!   device kernels.
+//! * **L2/L1 (build time)** — JAX graphs + Pallas kernels in
+//!   `python/compile/`, lowered once to `artifacts/*.hlo.txt`. Python is
+//!   never on the request path.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use openrand::core::{CounterRng, Philox, Rng};
+//! // One unique, reproducible stream per (seed, counter) pair — no state
+//! // management, no init kernel:
+//! let mut rng = Philox::new(/*seed=*/ 42, /*ctr=*/ 0);
+//! let u = rng.draw_float();
+//! assert!((0.0..1.0).contains(&u));
+//! ```
+
+pub mod baseline;
+pub mod bench;
+pub mod coordinator;
+pub mod core;
+pub mod dist;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod testing;
+pub mod util;

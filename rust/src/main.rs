@@ -1,0 +1,237 @@
+//! `openrand` — the launcher.
+//!
+//! Subcommands:
+//!
+//! * `generate`  — stream random numbers from any engine to stdout.
+//! * `brownian`  — run the Brownian-dynamics macro-benchmark on the host
+//!   (multithreaded) or device (PJRT AOT artifact) backend.
+//! * `stats`     — run the Crush-lite statistical battery (E3) or the
+//!   HOOMD-style parallel-stream suite (E4).
+//! * `repro`     — reproducibility verification ladder (E6).
+//! * `artifacts` — list the AOT artifacts the runtime can execute.
+//!
+//! `openrand --help` for options. Benchmarks that regenerate the paper's
+//! figures live under `cargo bench` (see DESIGN.md experiment index).
+
+use openrand::baseline::{Mt19937, Pcg32, Xoshiro256pp};
+use openrand::coordinator::repro;
+use openrand::coordinator::{Backend, SimDriver};
+use openrand::core::{Generator, Rng};
+use openrand::runtime::ArtifactStore;
+use openrand::sim::brownian::{BrownianParams, RngStyle};
+use openrand::stats::parallel;
+use openrand::stats::{run_battery, Verdict};
+use openrand::util::cli::{Args, OptSpec};
+
+const COMMANDS: [&str; 5] = ["generate", "brownian", "stats", "repro", "artifacts"];
+
+fn specs() -> Vec<OptSpec> {
+    vec![
+        OptSpec { name: "help", help: "show this help", default: None, is_flag: true },
+        OptSpec { name: "generator", help: "philox|philox2x32|threefry|threefry2x32|squares|tyche|tyche_i", default: Some("philox"), is_flag: false },
+        OptSpec { name: "seed", help: "64-bit seed (hex ok)", default: Some("0"), is_flag: false },
+        OptSpec { name: "ctr", help: "32-bit stream counter", default: Some("0"), is_flag: false },
+        OptSpec { name: "n", help: "count (supports k/M/G suffix)", default: Some("16"), is_flag: false },
+        OptSpec { name: "format", help: "generate output: u32|u64|f32|f64", default: Some("u32"), is_flag: false },
+        OptSpec { name: "steps", help: "brownian: simulation steps", default: Some("100"), is_flag: false },
+        OptSpec { name: "threads", help: "brownian: host threads", default: Some("1"), is_flag: false },
+        OptSpec { name: "backend", help: "brownian: host|device", default: Some("host"), is_flag: false },
+        OptSpec { name: "style", help: "brownian: openrand|curand_style|random123", default: Some("openrand"), is_flag: false },
+        OptSpec { name: "words", help: "stats: words per test", default: Some("4M"), is_flag: false },
+        OptSpec { name: "parallel", help: "stats: run the HOOMD parallel-stream suite", default: None, is_flag: true },
+        OptSpec { name: "baselines", help: "stats: also run mt19937/pcg32/xoshiro baselines", default: None, is_flag: true },
+        OptSpec { name: "max-threads", help: "repro: thread ladder upper bound", default: Some("8"), is_flag: false },
+    ]
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let wants_help = raw.iter().any(|a| a == "--help" || a == "-h") || raw.is_empty();
+    if wants_help {
+        print!(
+            "{}",
+            Args::help(
+                "openrand",
+                "reproducible counter-based RNG for parallel computations (paper reproduction)",
+                &COMMANDS,
+                &specs()
+            )
+        );
+        return;
+    }
+    let args = match Args::parse(raw, &COMMANDS, &specs()) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_deref() {
+        Some("generate") => cmd_generate(&args),
+        Some("brownian") => cmd_brownian(&args),
+        Some("stats") => cmd_stats(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            eprintln!("error: missing command (try --help)");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_generator(args: &Args) -> Result<Generator, anyhow::Error> {
+    let name = args.get_or("generator", "philox");
+    Generator::parse(name).ok_or_else(|| anyhow::anyhow!("unknown generator '{name}'"))
+}
+
+fn cmd_generate(args: &Args) -> anyhow::Result<()> {
+    let gen = parse_generator(args)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let ctr = args.get_u64("ctr", 0).map_err(anyhow::Error::msg)? as u32;
+    let n = args.get_usize("n", 16).map_err(anyhow::Error::msg)?;
+    let format = args.get_or("format", "u32").to_string();
+    gen.with_rng(seed, ctr, |rng| {
+        for _ in 0..n {
+            match format.as_str() {
+                "u32" => println!("{}", rng.next_u32()),
+                "u64" => println!("{}", rng.next_u64()),
+                "f32" => println!("{}", rng.draw_float()),
+                "f64" => println!("{}", rng.draw_double()),
+                other => {
+                    eprintln!("unknown format '{other}'");
+                    std::process::exit(2);
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+fn cmd_brownian(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 16_384).map_err(anyhow::Error::msg)?;
+    let steps = args.get_usize("steps", 100).map_err(anyhow::Error::msg)? as u32;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
+    let style = match args.get_or("style", "openrand") {
+        "openrand" => RngStyle::OpenRand,
+        "curand_style" => RngStyle::CurandStyle,
+        "random123" => RngStyle::Raw123,
+        other => anyhow::bail!("unknown style '{other}'"),
+    };
+    let backend = match args.get_or("backend", "host") {
+        "host" => Backend::Host { threads },
+        "device" => Backend::Device,
+        other => anyhow::bail!("unknown backend '{other}'"),
+    };
+    let params = BrownianParams { n_particles: n, steps, global_seed: seed, style };
+    let (sim, metrics) = SimDriver::new(backend).run(params)?;
+    println!("brownian {:?} style={}", backend, style.name());
+    println!("  {}", metrics.summary());
+    println!("  trajectory hash: {:016x}", sim.state_hash());
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> anyhow::Result<()> {
+    let words = args.get_usize("words", 4 << 20).map_err(anyhow::Error::msg)?;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let gen = parse_generator(args)?;
+    if args.flag("parallel") {
+        println!("parallel-stream suite (HOOMD procedure): {}", gen.name());
+        let results = match gen {
+            Generator::Philox => parallel::run_parallel_suite::<openrand::core::Philox>(seed, words),
+            Generator::Philox2x32 => parallel::run_parallel_suite::<openrand::core::Philox2x32>(seed, words),
+            Generator::Threefry => parallel::run_parallel_suite::<openrand::core::Threefry>(seed, words),
+            Generator::Threefry2x32 => parallel::run_parallel_suite::<openrand::core::Threefry2x32>(seed, words),
+            Generator::Squares => parallel::run_parallel_suite::<openrand::core::Squares>(seed, words),
+            Generator::Tyche => parallel::run_parallel_suite::<openrand::core::Tyche>(seed, words),
+            Generator::TycheI => parallel::run_parallel_suite::<openrand::core::TycheI>(seed, words),
+        };
+        let mut fails = 0;
+        for r in &results {
+            let v = match r.verdict() {
+                Verdict::Pass => "pass",
+                Verdict::Suspicious => "SUSPICIOUS",
+                Verdict::Fail => {
+                    fails += 1;
+                    "FAIL"
+                }
+            };
+            println!("  {:<22} p={:<12.3e} {v}", r.name, r.p);
+        }
+        println!("{} failures", fails);
+        return Ok(());
+    }
+    let report = run_battery(gen.name(), words, |i| {
+        let s = seed ^ ((i as u64) << 32);
+        boxed_rng(gen, s)
+    });
+    print!("{}", report.render());
+    if args.flag("baselines") {
+        for name in ["mt19937", "pcg32", "xoshiro256pp"] {
+            let report = run_battery(name, words, |i| -> Box<dyn Rng> {
+                let s = seed ^ ((i as u64) << 32);
+                match name {
+                    "mt19937" => Box::new(Mt19937::new(s as u32)),
+                    "pcg32" => Box::new(Pcg32::new(s, 54)),
+                    _ => Box::new(Xoshiro256pp::new(s)),
+                }
+            });
+            print!("{}", report.render());
+        }
+    }
+    Ok(())
+}
+
+fn boxed_rng(gen: Generator, seed: u64) -> Box<dyn Rng> {
+    use openrand::core::*;
+    match gen {
+        Generator::Philox => Box::new(Philox::new(seed, 0)),
+        Generator::Philox2x32 => Box::new(Philox2x32::new(seed, 0)),
+        Generator::Threefry => Box::new(Threefry::new(seed, 0)),
+        Generator::Threefry2x32 => Box::new(Threefry2x32::new(seed, 0)),
+        Generator::Squares => Box::new(Squares::new(seed, 0)),
+        Generator::Tyche => Box::new(Tyche::new(seed, 0)),
+        Generator::TycheI => Box::new(TycheI::new(seed, 0)),
+    }
+}
+
+fn cmd_repro(args: &Args) -> anyhow::Result<()> {
+    let n = args.get_usize("n", 16_384).map_err(anyhow::Error::msg)?;
+    let steps = args.get_usize("steps", 50).map_err(anyhow::Error::msg)? as u32;
+    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let max_threads = args.get_usize("max-threads", 8).map_err(anyhow::Error::msg)?;
+    let params = BrownianParams {
+        n_particles: n,
+        steps,
+        global_seed: seed,
+        style: RngStyle::OpenRand,
+    };
+    let r1 = repro::verify_thread_invariance(params, max_threads)?;
+    print!("{}", r1.render());
+    let r2 = repro::verify_rerun(params, max_threads.max(2))?;
+    print!("{}", r2.render());
+    let r3 = repro::verify_backends(params, 1e-9)?;
+    print!("{}", r3.render());
+    if r1.consistent && r2.consistent && r3.consistent {
+        println!("ALL REPRODUCIBILITY CHECKS PASSED");
+        Ok(())
+    } else {
+        anyhow::bail!("reproducibility violated");
+    }
+}
+
+fn cmd_artifacts() -> anyhow::Result<()> {
+    let store = ArtifactStore::open_default()?;
+    println!("artifact dir: {:?}", store.dir());
+    for e in &store.manifest.entries {
+        let ins: Vec<String> = e.inputs.iter().map(|t| format!("{}{:?}", t.dtype, t.shape)).collect();
+        let outs: Vec<String> = e.outputs.iter().map(|t| format!("{}{:?}", t.dtype, t.shape)).collect();
+        println!("  {:<34} {} -> {}", e.name, ins.join(", "), outs.join(", "));
+    }
+    println!("{} artifacts", store.manifest.entries.len());
+    Ok(())
+}

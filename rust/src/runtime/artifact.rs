@@ -1,0 +1,213 @@
+//! Artifact discovery and compilation cache.
+//!
+//! `aot.py` writes a line-oriented manifest next to the HLO files:
+//!
+//! ```text
+//! name|file|in=uint32[4];float64[16384,4]|out=float64[16384,4]
+//! ```
+//!
+//! parsed here without any JSON dependency. [`ArtifactStore`] resolves
+//! names to compiled executables, compiling each HLO at most once.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::client::device_client;
+
+/// One tensor signature: dtype + shape.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSig {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSig {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(s: &str) -> Result<TensorSig> {
+        // "float64[16384,4]" or "uint32[4]" or scalar "uint32[]".
+        let (dtype, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow!("bad tensor sig '{s}'"))?;
+        let dims = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow!("bad tensor sig '{s}'"))?;
+        let shape = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().context("bad dim"))
+                .collect::<Result<_>>()?
+        };
+        Ok(TensorSig { dtype: dtype.to_string(), shape })
+    }
+}
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+    /// Whether the graph returns a tuple (multi-output) or a bare array
+    /// (single-output, buffer-chainable via execute_b).
+    pub tuple: bool,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut entries = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let parts: Vec<&str> = line.split('|').collect();
+            if parts.len() != 4 && parts.len() != 5 {
+                bail!("manifest line {}: expected 4-5 fields, got {}", lineno + 1, parts.len());
+            }
+            let sigs = |field: &str, prefix: &str| -> Result<Vec<TensorSig>> {
+                let body = field
+                    .strip_prefix(prefix)
+                    .ok_or_else(|| anyhow!("manifest line {}: missing {prefix}", lineno + 1))?;
+                if body.is_empty() {
+                    return Ok(Vec::new());
+                }
+                body.split(';').map(TensorSig::parse).collect()
+            };
+            // Older manifests lack the tuple field; default to tuple=1
+            // (the conservative wrapper).
+            let tuple = parts.get(4).map(|t| *t != "tuple=0").unwrap_or(true);
+            entries.push(ManifestEntry {
+                name: parts[0].to_string(),
+                file: parts[1].to_string(),
+                inputs: sigs(parts[2], "in=")?,
+                outputs: sigs(parts[3], "out=")?,
+                tuple,
+            });
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+/// Default artifact directory: $OPENRAND_ARTIFACTS or ./artifacts
+/// (searched upward so tests work from target dirs).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("OPENRAND_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    let mut cur = std::env::current_dir().unwrap_or_else(|_| PathBuf::from("."));
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.join("manifest.txt").exists() {
+            return cand;
+        }
+        if !cur.pop() {
+            return PathBuf::from("artifacts");
+        }
+    }
+}
+
+/// Name → compiled executable store with a compile-once cache.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: PathBuf) -> Result<ArtifactStore> {
+        let manifest = Manifest::load(&dir)?;
+        Ok(ArtifactStore { dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn open_default() -> Result<ArtifactStore> {
+        Self::open(default_artifact_dir())
+    }
+
+    /// Compile (or fetch cached) the named graph.
+    pub fn executable(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest ({:?})", self.dir))?;
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = device_client()?
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_sig_parse() {
+        let t = TensorSig::parse("float64[16384,4]").unwrap();
+        assert_eq!(t.dtype, "float64");
+        assert_eq!(t.shape, vec![16384, 4]);
+        assert_eq!(t.elements(), 65536);
+        let s = TensorSig::parse("uint32[]").unwrap();
+        assert_eq!(s.shape, Vec::<usize>::new());
+        assert!(TensorSig::parse("garbage").is_err());
+    }
+
+    #[test]
+    fn manifest_parse_roundtrip() {
+        let m = Manifest::parse(
+            "a|a.hlo.txt|in=uint32[4]|out=uint32[65536]|tuple=0\n\
+             # comment\n\
+             b|b.hlo.txt|in=float64[8,4];uint32[4]|out=float64[8,4]\n",
+        )
+        .unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert_eq!(m.get("b").unwrap().inputs.len(), 2);
+        assert!(!m.get("a").unwrap().tuple);
+        assert!(m.get("b").unwrap().tuple); // legacy default
+        assert!(m.get("zzz").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_malformed() {
+        assert!(Manifest::parse("too|few|fields").is_err());
+        assert!(Manifest::parse("x|f|inputs=a[1]|out=b[1]").is_err());
+    }
+}

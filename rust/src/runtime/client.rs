@@ -1,0 +1,45 @@
+//! Per-thread PJRT client.
+//!
+//! The `xla` crate's `PjRtClient` is `Rc`-based (not `Send`/`Sync`), so
+//! the client — and everything compiled from it — is **thread-confined**.
+//! The coordinator's design already matches this: the device path runs
+//! its step loop on the driver thread while host parallelism happens in
+//! the Rust kernels, so one lazily-created client per driver thread is
+//! exactly what's needed. Clients are cheap to clone (`Rc` handle) but
+//! expensive to create; `device_client()` creates at most one per thread.
+
+use anyhow::Result;
+use std::cell::RefCell;
+use xla::PjRtClient;
+
+thread_local! {
+    static CLIENT: RefCell<Option<PjRtClient>> = const { RefCell::new(None) };
+}
+
+/// The calling thread's PJRT CPU client (stands in for the paper's
+/// V100/A100 device — see DESIGN.md substitutions).
+pub fn device_client() -> Result<PjRtClient> {
+    CLIENT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            let client =
+                PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e}"))?;
+            *slot = Some(client);
+        }
+        Ok(slot.as_ref().expect("client initialized").clone())
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_reused_within_thread() {
+        let a = device_client().unwrap();
+        let b = device_client().unwrap();
+        assert!(a.device_count() >= 1);
+        assert_eq!(a.platform_name(), "cpu");
+        assert_eq!(b.platform_name(), "cpu");
+    }
+}

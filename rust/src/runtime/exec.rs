@@ -1,0 +1,240 @@
+//! Typed execution of a compiled device graph.
+//!
+//! [`DeviceGraph`] wraps an executable with its manifest signature and
+//! marshals Rust slices ↔ XLA literals. All graphs are lowered with
+//! `return_tuple=True`, so outputs always arrive as a tuple literal.
+
+use anyhow::{anyhow, bail, Result};
+use std::sync::Arc;
+
+use super::artifact::{ArtifactStore, ManifestEntry, TensorSig};
+
+/// Input argument for a device call.
+pub enum Arg<'a> {
+    U32(&'a [u32]),
+    F64(&'a [f64]),
+}
+
+impl Arg<'_> {
+    fn len(&self) -> usize {
+        match self {
+            Arg::U32(s) => s.len(),
+            Arg::F64(s) => s.len(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            Arg::U32(_) => "uint32",
+            Arg::F64(_) => "float64",
+        }
+    }
+
+    fn to_literal(&self, sig: &TensorSig) -> Result<xla::Literal> {
+        let lit = match self {
+            Arg::U32(s) => xla::Literal::vec1(s),
+            Arg::F64(s) => xla::Literal::vec1(s),
+        };
+        if sig.shape.len() <= 1 {
+            Ok(lit)
+        } else {
+            let dims: Vec<i64> = sig.shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}"))
+        }
+    }
+}
+
+/// Output tensor from a device call.
+#[derive(Debug, Clone)]
+pub enum Out {
+    U32(Vec<u32>),
+    F64(Vec<f64>),
+}
+
+impl Out {
+    pub fn as_u32(&self) -> &[u32] {
+        match self {
+            Out::U32(v) => v,
+            _ => panic!("expected u32 output"),
+        }
+    }
+
+    pub fn as_f64(&self) -> &[f64] {
+        match self {
+            Out::F64(v) => v,
+            _ => panic!("expected f64 output"),
+        }
+    }
+}
+
+/// A compiled graph plus its signature.
+pub struct DeviceGraph {
+    pub entry: ManifestEntry,
+    exe: Arc<xla::PjRtLoadedExecutable>,
+}
+
+impl DeviceGraph {
+    pub fn load(store: &ArtifactStore, name: &str) -> Result<DeviceGraph> {
+        let entry = store
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown graph '{name}'"))?
+            .clone();
+        let exe = store.executable(name)?;
+        Ok(DeviceGraph { entry, exe })
+    }
+
+    /// Execute with signature checking; returns all outputs.
+    pub fn call(&self, args: &[Arg]) -> Result<Vec<Out>> {
+        if args.len() != self.entry.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.entry.name,
+                self.entry.inputs.len(),
+                args.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(args.len());
+        for (i, (arg, sig)) in args.iter().zip(self.entry.inputs.iter()).enumerate() {
+            if arg.len() != sig.elements() {
+                bail!(
+                    "{} input {i}: expected {} elements ({:?}), got {}",
+                    self.entry.name,
+                    sig.elements(),
+                    sig.shape,
+                    arg.len()
+                );
+            }
+            if arg.dtype() != sig.dtype {
+                bail!(
+                    "{} input {i}: expected dtype {}, got {}",
+                    self.entry.name,
+                    sig.dtype,
+                    arg.dtype()
+                );
+            }
+            lits.push(arg.to_literal(sig)?);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("{}: execute: {e}", self.entry.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: to_literal: {e}", self.entry.name))?;
+        // Single-output graphs are lowered without the tuple wrapper
+        // (buffer-chainable); multi-output graphs keep it.
+        let parts = if self.entry.tuple {
+            root.to_tuple().map_err(|e| anyhow!("{}: untuple: {e}", self.entry.name))?
+        } else {
+            vec![root]
+        };
+        if parts.len() != self.entry.outputs.len() {
+            bail!(
+                "{}: manifest says {} outputs, device returned {}",
+                self.entry.name,
+                self.entry.outputs.len(),
+                parts.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (lit, sig) in parts.into_iter().zip(self.entry.outputs.iter()) {
+            let out = match sig.dtype.as_str() {
+                "uint32" => Out::U32(lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e}"))?),
+                "float64" => Out::F64(lit.to_vec::<f64>().map_err(|e| anyhow!("to_vec f64: {e}"))?),
+                other => bail!("{}: unsupported output dtype {other}", self.entry.name),
+            };
+            outs.push(out);
+        }
+        Ok(outs)
+    }
+
+    /// Whether this graph's output can be chained as a device buffer
+    /// (single-output, lowered without the tuple wrapper).
+    pub fn chainable(&self) -> bool {
+        !self.entry.tuple && self.entry.outputs.len() == 1
+    }
+
+    /// Execute with device-resident buffers (no host round-trip). The
+    /// §Perf device path: feed the previous step's output buffer back as
+    /// the next step's input. Caller is responsible for buffer/signature
+    /// agreement (the compiled executable still validates shapes).
+    pub fn call_b(&self, args: &[&xla::PjRtBuffer]) -> Result<xla::PjRtBuffer> {
+        if self.entry.tuple {
+            bail!("{}: tuple-output graph is not buffer-chainable", self.entry.name);
+        }
+        let mut result = self
+            .exe
+            .execute_b(args)
+            .map_err(|e| anyhow!("{}: execute_b: {e}", self.entry.name))?;
+        Ok(result.remove(0).remove(0))
+    }
+
+    /// Upload a host slice as a device buffer shaped like input `idx`
+    /// (input staging for call_b).
+    pub fn buffer_from_f64(&self, data: &[f64], idx: usize) -> Result<xla::PjRtBuffer> {
+        let client = super::client::device_client()?;
+        client
+            .buffer_from_host_buffer(data, &self.entry.inputs[idx].shape, None)
+            .map_err(|e| anyhow!("buffer_from_host f64: {e}"))
+    }
+
+    /// Upload a u32 slice as a device buffer shaped like input `idx`.
+    pub fn buffer_from_u32(&self, data: &[u32], idx: usize) -> Result<xla::PjRtBuffer> {
+        let client = super::client::device_client()?;
+        client
+            .buffer_from_host_buffer(data, &self.entry.inputs[idx].shape, None)
+            .map_err(|e| anyhow!("buffer_from_host u32: {e}"))
+    }
+
+    /// Download a device buffer to host f64s.
+    pub fn buffer_to_f64(&self, buf: &xla::PjRtBuffer) -> Result<Vec<f64>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_vec::<f64>().map_err(|e| anyhow!("to_vec f64: {e}"))
+    }
+
+    /// Convenience: single-output u32 graph.
+    pub fn call_u32(&self, args: &[Arg]) -> Result<Vec<u32>> {
+        match self.call(args)?.remove(0) {
+            Out::U32(v) => Ok(v),
+            Out::F64(_) => bail!("{}: expected u32 output", self.entry.name),
+        }
+    }
+
+    /// Convenience: single-output f64 graph.
+    pub fn call_f64(&self, args: &[Arg]) -> Result<Vec<f64>> {
+        match self.call(args)?.remove(0) {
+            Out::F64(v) => Ok(v),
+            Out::U32(_) => bail!("{}: expected f64 output", self.entry.name),
+        }
+    }
+}
+
+// Integration tests against real artifacts live in rust/tests/; unit
+// tests here only cover pure marshalling logic.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arg_metadata() {
+        let xs = [1u32, 2, 3];
+        let a = Arg::U32(&xs);
+        assert_eq!(a.len(), 3);
+        assert_eq!(a.dtype(), "uint32");
+        let ys = [1.0f64];
+        assert_eq!(Arg::F64(&ys).dtype(), "float64");
+    }
+
+    #[test]
+    fn out_accessors() {
+        assert_eq!(Out::U32(vec![5]).as_u32(), &[5]);
+        assert_eq!(Out::F64(vec![2.5]).as_f64(), &[2.5]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_type_mismatch_panics() {
+        let _ = Out::U32(vec![5]).as_f64();
+    }
+}

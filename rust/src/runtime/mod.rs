@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`, produced
+//! once by `python/compile/aot.py`) and execute them from the Rust hot
+//! path. Python never runs here.
+//!
+//! The interchange format is HLO **text** — xla_extension 0.5.1 rejects
+//! serialized protos from jax >= 0.5 (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod client;
+pub mod exec;
+
+pub use artifact::{ArtifactStore, Manifest, ManifestEntry};
+pub use client::device_client;
+pub use exec::DeviceGraph;

@@ -1,0 +1,313 @@
+//! The paper's Brownian-dynamics macro-benchmark (Fig. 1/2/3, Fig. 4b).
+//!
+//! One million independent particles diffuse under a velocity-
+//! proportional drag force plus a uniform random kick; RNG cost dominates
+//! the kernel, which is exactly why the paper uses it to compare RNG
+//! APIs. Physics constants are the **normative pair** of
+//! `python/compile/model.py` — the host path here and the device path
+//! (AOT artifact `brownian_step_*`) must produce bitwise-identical RNG
+//! draws and numerically identical trajectories.
+//!
+//! The three RNG styles of Figs. 1–3:
+//! * [`RngStyle::OpenRand`] — `Philox::new(pid ^ seed, step)` per
+//!   particle per step; zero state.
+//! * [`RngStyle::CurandStyle`] — a 64 B heap state record per particle,
+//!   loaded + stored every step, initialized by a separate pass.
+//! * [`RngStyle::Raw123`] — counter-based like OpenRand but through the
+//!   raw block API with manual u64 packing (Fig. 3 boilerplate).
+
+use crate::baseline::stateful_philox::{init_states, CurandPhiloxState, StatefulPhilox};
+use crate::baseline::raw123;
+use crate::core::philox::philox4x32;
+use crate::core::{CounterRng, Philox, Rng};
+use crate::util::hash::Fnv1a;
+
+/// Physics constants — keep identical to python/compile/model.py.
+pub const GAMMA: f64 = 0.5;
+pub const MASS: f64 = 1.0;
+pub const DT: f64 = 0.01;
+
+/// Which RNG API style drives the kick (the Fig. 4b x-axis).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RngStyle {
+    /// Paper Fig. 1: stateless counter-based, seed = pid.
+    OpenRand,
+    /// Paper Fig. 2: cuRAND-style per-particle state array.
+    CurandStyle,
+    /// Paper Fig. 3: Random123 raw API (same streams as OpenRand).
+    Raw123,
+}
+
+impl RngStyle {
+    pub const ALL: [RngStyle; 3] = [RngStyle::OpenRand, RngStyle::CurandStyle, RngStyle::Raw123];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RngStyle::OpenRand => "openrand",
+            RngStyle::CurandStyle => "curand_style",
+            RngStyle::Raw123 => "random123",
+        }
+    }
+}
+
+/// Simulation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BrownianParams {
+    pub n_particles: usize,
+    pub steps: u32,
+    pub global_seed: u64,
+    pub style: RngStyle,
+}
+
+impl Default for BrownianParams {
+    fn default() -> Self {
+        BrownianParams { n_particles: 16_384, steps: 100, global_seed: 0, style: RngStyle::OpenRand }
+    }
+}
+
+/// Particle system in structure-of-arrays layout (one cache-friendly
+/// stripe per field; the device path uses the same logical layout).
+pub struct BrownianSim {
+    pub params: BrownianParams,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub vx: Vec<f64>,
+    pub vy: Vec<f64>,
+    /// cuRAND-style state array (allocated only for CurandStyle — the
+    /// memory-cost line item of Fig. 4b).
+    pub states: Vec<CurandPhiloxState>,
+    pub step: u32,
+}
+
+impl BrownianSim {
+    /// Deterministic grid init — normative pair of `model.brownian_init`.
+    pub fn new(params: BrownianParams) -> Self {
+        let n = params.n_particles;
+        let side = (n as f64).sqrt().ceil() as usize;
+        let mut x = vec![0.0; n];
+        let mut y = vec![0.0; n];
+        for pid in 0..n {
+            x[pid] = (pid / side) as f64;
+            y[pid] = (pid % side) as f64;
+        }
+        let states = if params.style == RngStyle::CurandStyle {
+            // The separate init pass cuRAND requires (Fig. 2 rand_init).
+            init_states(params.global_seed, n)
+        } else {
+            Vec::new()
+        };
+        BrownianSim { params, x, y, vx: vec![0.0; n], vy: vec![0.0; n], states, step: 0 }
+    }
+
+    /// Extra memory the RNG style costs (bytes) — E7.
+    pub fn rng_state_bytes(&self) -> usize {
+        self.states.len() * std::mem::size_of::<CurandPhiloxState>()
+    }
+
+    /// Advance one step over particle range [lo, hi) — the kernel body.
+    /// Range-based so the coordinator can partition it across threads
+    /// while preserving bitwise reproducibility (streams derive from pid,
+    /// never from the executing thread).
+    pub fn step_range(&mut self, lo: usize, hi: usize) {
+        let sqrt_dt = DT.sqrt();
+        let drag = 1.0 - (GAMMA / MASS) * DT;
+        let step = self.step;
+        let seed = self.params.global_seed;
+        match self.params.style {
+            RngStyle::OpenRand => {
+                for pid in lo..hi {
+                    // Paper Fig. 1 lines 10-18, verbatim in Rust.
+                    let mut rng = Philox::new(pid as u64 ^ seed, step);
+                    let (r1, r2) = rng.draw_double2();
+                    self.kick(pid, drag, sqrt_dt, r1, r2);
+                }
+            }
+            RngStyle::CurandStyle => {
+                for pid in lo..hi {
+                    // Paper Fig. 2: load state, draw, store state.
+                    let mut rng = StatefulPhilox::load(&self.states, pid);
+                    let (r1, r2) = rng.draw_double2();
+                    rng.store(&mut self.states, pid);
+                    self.kick(pid, drag, sqrt_dt, r1, r2);
+                }
+            }
+            RngStyle::Raw123 => {
+                for pid in lo..hi {
+                    // Paper Fig. 3: raw counter/key plumbing by hand.
+                    // Same stream identity as OpenRand (counter layout
+                    // from core::counter), packed manually.
+                    let pid_seed = pid as u64 ^ seed;
+                    let block = philox4x32(
+                        [0, step, 0, 0],
+                        [pid_seed as u32, (pid_seed >> 32) as u32],
+                    );
+                    let xu = ((block[0] as u64) << 32) | block[1] as u64;
+                    let yu = ((block[2] as u64) << 32) | block[3] as u64;
+                    let (r1, r2) = (raw123::u01_u64(xu), raw123::u01_u64(yu));
+                    self.kick(pid, drag, sqrt_dt, r1, r2);
+                }
+            }
+        }
+    }
+
+    #[inline(always)]
+    fn kick(&mut self, pid: usize, _drag: f64, sqrt_dt: f64, r1: f64, r2: f64) {
+        // Expression order matches python/compile/model.py exactly so
+        // host and device trajectories agree to the last ulp (XLA
+        // permitting — the integration test pins this).
+        let mut vx = self.vx[pid];
+        let mut vy = self.vy[pid];
+        // Drag force.
+        vx = vx - (GAMMA / MASS) * vx * DT;
+        vy = vy - (GAMMA / MASS) * vy * DT;
+        // Random kick.
+        vx += (r1 * 2.0 - 1.0) * sqrt_dt;
+        vy += (r2 * 2.0 - 1.0) * sqrt_dt;
+        // Position update.
+        self.x[pid] += vx * DT;
+        self.y[pid] += vy * DT;
+        self.vx[pid] = vx;
+        self.vy[pid] = vy;
+    }
+
+    /// Single-threaded full step.
+    pub fn step_all(&mut self) {
+        self.step_range(0, self.params.n_particles);
+        self.step += 1;
+    }
+
+    /// Run `steps` single-threaded.
+    pub fn run(&mut self) {
+        for _ in 0..self.params.steps {
+            self.step_all();
+        }
+    }
+
+    /// Bitwise trajectory fingerprint (reproducibility checks).
+    pub fn state_hash(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_f64_slice(&self.x);
+        h.write_f64_slice(&self.y);
+        h.write_f64_slice(&self.vx);
+        h.write_f64_slice(&self.vy);
+        h.finish()
+    }
+
+    /// Flatten to the device layout (N,4) row-major — for PJRT handoff.
+    pub fn to_rows(&self) -> Vec<f64> {
+        let n = self.params.n_particles;
+        let mut out = Vec::with_capacity(4 * n);
+        for i in 0..n {
+            out.extend_from_slice(&[self.x[i], self.y[i], self.vx[i], self.vy[i]]);
+        }
+        out
+    }
+
+    /// Load from device layout.
+    pub fn from_rows(&mut self, rows: &[f64]) {
+        let n = self.params.n_particles;
+        assert_eq!(rows.len(), 4 * n);
+        for i in 0..n {
+            self.x[i] = rows[4 * i];
+            self.y[i] = rows[4 * i + 1];
+            self.vx[i] = rows[4 * i + 2];
+            self.vy[i] = rows[4 * i + 3];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params(style: RngStyle) -> BrownianParams {
+        BrownianParams { n_particles: 1024, steps: 20, global_seed: 42, style }
+    }
+
+    #[test]
+    fn deterministic_per_style() {
+        for style in RngStyle::ALL {
+            let mut a = BrownianSim::new(params(style));
+            let mut b = BrownianSim::new(params(style));
+            a.run();
+            b.run();
+            assert_eq!(a.state_hash(), b.state_hash(), "{style:?}");
+        }
+    }
+
+    #[test]
+    fn openrand_and_raw123_same_streams() {
+        // Fig. 1 and Fig. 3 draw from the same (pid, step) streams here
+        // (we align Raw123 to the OpenRAND counter layout), so the
+        // trajectories must coincide bitwise.
+        let mut a = BrownianSim::new(params(RngStyle::OpenRand));
+        let mut b = BrownianSim::new(params(RngStyle::Raw123));
+        a.run();
+        b.run();
+        assert_eq!(a.state_hash(), b.state_hash());
+    }
+
+    #[test]
+    fn curand_style_differs_but_is_valid() {
+        let mut a = BrownianSim::new(params(RngStyle::OpenRand));
+        let mut b = BrownianSim::new(params(RngStyle::CurandStyle));
+        a.run();
+        b.run();
+        assert_ne!(a.state_hash(), b.state_hash()); // different stream layout
+        // Same physics envelope though: bounded kicks.
+        for i in 0..1024 {
+            assert!(b.vx[i].abs() < 2.0 && b.vy[i].abs() < 2.0);
+        }
+    }
+
+    #[test]
+    fn state_memory_only_for_curand_style() {
+        let a = BrownianSim::new(params(RngStyle::OpenRand));
+        let b = BrownianSim::new(params(RngStyle::CurandStyle));
+        assert_eq!(a.rng_state_bytes(), 0);
+        assert_eq!(b.rng_state_bytes(), 1024 * 64); // paper's 64 B/particle
+    }
+
+    #[test]
+    fn range_split_equals_full_step() {
+        // Splitting the index range must not change anything — the
+        // invariant that makes multithreading reproducible.
+        let mut a = BrownianSim::new(params(RngStyle::OpenRand));
+        let mut b = BrownianSim::new(params(RngStyle::OpenRand));
+        a.step_range(0, 1024);
+        a.step += 1;
+        for chunk in [0..100, 100..777, 777..1024] {
+            b.step_range(chunk.start, chunk.end);
+        }
+        b.step += 1;
+        assert_eq!(a.state_hash(), b.state_hash());
+    }
+
+    #[test]
+    fn rows_roundtrip() {
+        let mut a = BrownianSim::new(params(RngStyle::OpenRand));
+        a.run();
+        let rows = a.to_rows();
+        let mut b = BrownianSim::new(params(RngStyle::OpenRand));
+        b.from_rows(&rows);
+        assert_eq!(a.state_hash(), b.state_hash());
+    }
+
+    #[test]
+    fn first_step_matches_hand_computation() {
+        let mut sim = BrownianSim::new(BrownianParams {
+            n_particles: 4,
+            steps: 1,
+            global_seed: 0,
+            style: RngStyle::OpenRand,
+        });
+        sim.run();
+        // Particle 2: stream (seed=2, ctr=0), block 0.
+        let block = philox4x32([0, 0, 0, 0], [2, 0]);
+        let xu = ((block[0] as u64) << 32) | block[1] as u64;
+        let r1 = (xu >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        let expected_vx = (r1 * 2.0 - 1.0) * DT.sqrt();
+        assert_eq!(sim.vx[2], expected_vx);
+        assert_eq!(sim.x[2], 1.0 + expected_vx * DT); // grid x + vx*dt (side=2)
+    }
+}

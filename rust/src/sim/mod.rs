@@ -1,0 +1,17 @@
+//! Simulation substrates — the workloads the paper's evaluation runs.
+//!
+//! [`brownian`] is the macro-benchmark (Fig. 4b): a 2-D Brownian dynamics
+//! system with drag + uniform random kicks, implemented in all three API
+//! styles (OpenRAND stateless / cuRAND-style stateful / Random123 raw)
+//! so the benchmark isolates RNG-API cost with the physics held constant.
+//! [`observables`] computes the physics checks (mean-squared displacement
+//! vs. the diffusion law). [`pi`] and [`volume`] are the extra Monte-Carlo
+//! example workloads.
+
+pub mod brownian;
+pub mod dpd;
+pub mod observables;
+pub mod pi;
+pub mod volume;
+
+pub use brownian::{BrownianParams, BrownianSim, RngStyle};

@@ -1,0 +1,102 @@
+//! Physics observables for the Brownian benchmark: mean-squared
+//! displacement and the diffusion-law check. These make the E2E example
+//! a *validated* simulation, not just a timing loop.
+
+use super::brownian::{BrownianSim, DT, GAMMA, MASS};
+
+/// Mean-squared displacement from the initial grid positions.
+pub fn msd(sim: &BrownianSim, x0: &[f64], y0: &[f64]) -> f64 {
+    let n = sim.params.n_particles;
+    let mut acc = 0.0;
+    for i in 0..n {
+        let dx = sim.x[i] - x0[i];
+        let dy = sim.y[i] - y0[i];
+        acc += dx * dx + dy * dy;
+    }
+    acc / n as f64
+}
+
+/// Theoretical long-time MSD slope for this integrator.
+///
+/// Kick variance per step per axis: Var[(2u-1)·√dt] = dt/3. With drag
+/// factor a = 1 − γ/m·dt, stationary velocity variance per axis is
+/// σ_v² = (dt/3)/(1−a²), and the long-time diffusion follows
+/// MSD(t) ≈ 4·D·t with D = σ_v²·dt·(1+a)/(2·(1−a)) (discrete-time
+/// Ornstein–Uhlenbeck position variance growth).
+pub fn theoretical_msd_slope() -> f64 {
+    let a = 1.0 - (GAMMA / MASS) * DT;
+    let sigma_v2 = (DT / 3.0) / (1.0 - a * a);
+    // Var[x_T] per axis ~ sigma_v2 * dt^2 * (1+a)/(1-a) * T  (T steps)
+    let dvar_per_step = sigma_v2 * DT * DT * (1.0 + a) / (1.0 - a);
+    2.0 * dvar_per_step // both axes
+}
+
+/// Mean velocity magnitude (kinetic sanity check).
+pub fn mean_speed(sim: &BrownianSim) -> f64 {
+    let n = sim.params.n_particles;
+    (0..n)
+        .map(|i| (sim.vx[i] * sim.vx[i] + sim.vy[i] * sim.vy[i]).sqrt())
+        .sum::<f64>()
+        / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::brownian::{BrownianParams, RngStyle};
+
+    #[test]
+    fn msd_grows_linearly_at_long_times() {
+        let mut sim = BrownianSim::new(BrownianParams {
+            n_particles: 8192,
+            steps: 0,
+            global_seed: 7,
+            style: RngStyle::OpenRand,
+        });
+        let x0 = sim.x.clone();
+        let y0 = sim.y.clone();
+        // Warm past the velocity relaxation time (1/(γ dt) = 200 steps).
+        for _ in 0..600 {
+            sim.step_all();
+        }
+        let m1 = msd(&sim, &x0, &y0);
+        for _ in 0..600 {
+            sim.step_all();
+        }
+        let m2 = msd(&sim, &x0, &y0);
+        let slope = (m2 - m1) / 600.0;
+        let theory = theoretical_msd_slope();
+        assert!(
+            (slope / theory - 1.0).abs() < 0.15,
+            "slope {slope:.3e} vs theory {theory:.3e}"
+        );
+    }
+
+    #[test]
+    fn velocities_reach_stationary_variance() {
+        let mut sim = BrownianSim::new(BrownianParams {
+            n_particles: 8192,
+            steps: 0,
+            global_seed: 3,
+            style: RngStyle::OpenRand,
+        });
+        for _ in 0..1500 {
+            sim.step_all();
+        }
+        let var_vx: f64 =
+            sim.vx.iter().map(|v| v * v).sum::<f64>() / sim.params.n_particles as f64;
+        let a = 1.0 - (GAMMA / MASS) * DT;
+        let sigma_v2 = (DT / 3.0) / (1.0 - a * a);
+        assert!(
+            (var_vx / sigma_v2 - 1.0).abs() < 0.1,
+            "var {var_vx:.3e} vs theory {sigma_v2:.3e}"
+        );
+    }
+
+    #[test]
+    fn msd_zero_at_start() {
+        let sim = BrownianSim::new(BrownianParams::default());
+        assert_eq!(msd(&sim, &sim.x, &sim.y), 0.0);
+        assert_eq!(mean_speed(&sim), 0.0);
+    }
+}

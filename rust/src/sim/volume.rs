@@ -1,0 +1,57 @@
+//! Monte-Carlo integration: volume of the d-dimensional unit ball —
+//! a second example workload exercising higher-dimensional equidistribution.
+
+use crate::core::CounterRng;
+
+/// Exact volume of the d-ball of radius 1.
+pub fn exact_ball_volume(d: u32) -> f64 {
+    // V_d = pi^{d/2} / Gamma(d/2 + 1)
+    let half = d as f64 / 2.0;
+    std::f64::consts::PI.powf(half) / crate::stats::pvalue::ln_gamma(half + 1.0).exp()
+}
+
+/// MC estimate with per-chunk streams.
+pub fn estimate_ball_volume<G: CounterRng>(
+    d: u32,
+    chunks: u64,
+    samples_per_chunk: usize,
+    global_seed: u64,
+) -> f64 {
+    let mut hits = 0u64;
+    for chunk in 0..chunks {
+        let mut rng = G::new(chunk ^ global_seed, d);
+        for _ in 0..samples_per_chunk {
+            let mut r2 = 0.0;
+            for _ in 0..d {
+                let x = rng.draw_double() * 2.0 - 1.0;
+                r2 += x * x;
+            }
+            if r2 <= 1.0 {
+                hits += 1;
+            }
+        }
+    }
+    let cube = 2f64.powi(d as i32);
+    cube * hits as f64 / (chunks as f64 * samples_per_chunk as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::Threefry;
+
+    #[test]
+    fn exact_volumes_known() {
+        assert!((exact_ball_volume(2) - std::f64::consts::PI).abs() < 1e-9);
+        assert!((exact_ball_volume(3) - 4.0 / 3.0 * std::f64::consts::PI).abs() < 1e-9);
+    }
+
+    #[test]
+    fn estimates_match_exact() {
+        for d in [2u32, 3, 5] {
+            let est = estimate_ball_volume::<Threefry>(d, 16, 20_000, 5);
+            let exact = exact_ball_volume(d);
+            assert!((est / exact - 1.0).abs() < 0.05, "d={d}: {est} vs {exact}");
+        }
+    }
+}

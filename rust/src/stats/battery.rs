@@ -1,0 +1,141 @@
+//! The battery: run the full suite against a generator and produce a
+//! TestU01-style report (E3 in the experiment index).
+
+use super::suite::{all_tests, TestResult, Verdict};
+use crate::core::traits::Rng;
+use std::fmt::Write as _;
+
+/// Report for one generator across the whole suite.
+#[derive(Debug, Clone)]
+pub struct BatteryReport {
+    pub generator: String,
+    pub results: Vec<TestResult>,
+    pub words_per_test: usize,
+}
+
+impl BatteryReport {
+    pub fn failures(&self) -> usize {
+        self.results.iter().filter(|r| r.verdict() == Verdict::Fail).count()
+    }
+
+    pub fn suspicious(&self) -> usize {
+        self.results.iter().filter(|r| r.verdict() == Verdict::Suspicious).count()
+    }
+
+    pub fn passed(&self) -> bool {
+        self.failures() == 0
+    }
+
+    /// TestU01-style summary table.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "=== battery: {} ({} words/test) ===",
+            self.generator, self.words_per_test
+        );
+        let _ = writeln!(s, "{:<22} {:>14} {:>12}  verdict", "test", "statistic", "p-value");
+        for r in &self.results {
+            let v = match r.verdict() {
+                Verdict::Pass => "pass",
+                Verdict::Suspicious => "SUSPICIOUS",
+                Verdict::Fail => "FAIL",
+            };
+            let _ = writeln!(s, "{:<22} {:>14.4} {:>12.3e}  {v}", r.name, r.statistic, r.p);
+        }
+        let _ = writeln!(
+            s,
+            "--- {}: {} tests, {} failures, {} suspicious ---",
+            self.generator,
+            self.results.len(),
+            self.failures(),
+            self.suspicious()
+        );
+        s
+    }
+}
+
+/// Run every suite test against fresh streams from `mk`. The factory
+/// receives the test index so each test gets an independent stream
+/// (TestU01 batteries equally re-seed between tests); `words` is the
+/// base per-test budget (scaled by each test's weight).
+pub fn run_battery(
+    generator: &str,
+    words: usize,
+    mut mk: impl FnMut(usize) -> Box<dyn Rng>,
+) -> BatteryReport {
+    let mut results = Vec::new();
+    for (idx, (_, test, weight)) in all_tests().into_iter().enumerate() {
+        let mut rng = mk(idx);
+        let budget = ((words as f64 * weight) as usize).max(1 << 14);
+        results.push(test(rng.as_mut(), budget));
+    }
+    BatteryReport { generator: generator.to_string(), results, words_per_test: words }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{Lcg64, WeakCounter};
+    use crate::core::Generator;
+
+    const WORDS: usize = 1 << 18;
+
+    #[test]
+    fn all_family_members_pass() {
+        // The paper's core QA claim, at laptop scale: every OpenRAND
+        // generator passes the whole battery.
+        for g in Generator::ALL {
+            let report = run_battery(g.name(), WORDS, |i| boxed(g, 0xBA77_0000 + i as u64));
+            assert!(
+                report.passed(),
+                "{} failed battery:\n{}",
+                g.name(),
+                report.render()
+            );
+        }
+    }
+
+    fn boxed(g: Generator, seed: u64) -> Box<dyn crate::core::traits::Rng> {
+        use crate::core::*;
+        match g {
+            Generator::Philox => Box::new(Philox::new(seed, 0)),
+            Generator::Philox2x32 => Box::new(Philox2x32::new(seed, 0)),
+            Generator::Threefry => Box::new(Threefry::new(seed, 0)),
+            Generator::Threefry2x32 => Box::new(Threefry2x32::new(seed, 0)),
+            Generator::Squares => Box::new(Squares::new(seed, 0)),
+            Generator::Tyche => Box::new(Tyche::new(seed, 0)),
+            Generator::TycheI => Box::new(TycheI::new(seed, 0)),
+        }
+    }
+
+    #[test]
+    fn battery_has_power_weak_counter() {
+        // DESIGN.md test plan: the battery must reject a raw counter.
+        let report = run_battery("weak_counter", WORDS, |_| Box::new(WeakCounter::new(0)));
+        assert!(
+            report.failures() >= 5,
+            "battery lacks power against counters:\n{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn battery_has_power_lcg_low_bits() {
+        let report = run_battery("lcg64_low", WORDS, |_| Box::new(Lcg64::new(123)));
+        assert!(
+            report.failures() >= 1,
+            "battery lacks power against LCG low bits:\n{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn report_renders_all_tests() {
+        let report = run_battery("philox", 1 << 15, |i| boxed(Generator::Philox, i as u64));
+        let text = report.render();
+        for (name, _, _) in crate::stats::suite::all_tests() {
+            assert!(text.contains(name), "missing {name}");
+        }
+    }
+}

@@ -1,0 +1,30 @@
+//! Statistical quality assurance — the TestU01/PractRand substitute.
+//!
+//! The paper validates every generator with TestU01's BigCrush and >= 1 TB
+//! of PractRand (§5.2); neither tool exists in this offline environment,
+//! so this module implements the same test *families* from scratch and
+//! runs them at laptop scale (10^7–10^9 samples; see DESIGN.md
+//! substitutions table):
+//!
+//! * bit-level: monobit frequency, Hamming-weight distribution, bit-serial
+//!   autocorrelation, runs;
+//! * value-level chi-square: byte equidistribution, serial pairs, gap,
+//!   poker, permutation (order statistics);
+//! * spacing/collision: birthday spacings (the TestU01 example the paper
+//!   cites), collision counting;
+//! * linear-algebra: GF(2) 32x32 matrix rank;
+//! * continuous: Kolmogorov–Smirnov uniformity, maximum-of-t.
+//!
+//! [`battery`] orchestrates them into a Crush-style report; its own
+//! *power* is tested by feeding known-bad generators (a raw counter, LCG
+//! low bits) that MUST fail. [`parallel`] reproduces the HOOMD-blue
+//! interleaved multi-stream correlation procedure the paper describes,
+//! which is the part that actually exercises the counter-based design.
+
+pub mod battery;
+pub mod parallel;
+pub mod pvalue;
+pub mod suite;
+
+pub use battery::{run_battery, BatteryReport};
+pub use suite::{TestResult, Verdict};

@@ -1,0 +1,210 @@
+//! Parallel-stream correlation test — the HOOMD-blue procedure the paper
+//! follows in §5.2 (E4 in the experiment index).
+//!
+//! "We simulated a scenario with 16,000 particles, generating
+//! micro-streams comprising three random numbers for each particle. These
+//! individual micro-streams for each particle were first combined into a
+//! single concatenated stream. This unified stream was then lengthened
+//! over successive iterations to examine correlations across the entire
+//! system."
+//!
+//! Concretely: iteration `it` produces, for each particle `pid`, the
+//! 3-word micro-stream of `G(seed = pid ^ global, ctr = it)`; all
+//! micro-streams are concatenated in pid order and appended to the
+//! unified stream, which is then subjected to the single-stream suite.
+//! Any cross-stream correlation (e.g. a counter layout that makes
+//! adjacent pids share blocks) shows up as serial structure here. This is
+//! the test that actually validates the *counter-based* design, and per
+//! the paper it is the first time Tyche and Squares get this treatment.
+
+use super::suite::{TestResult, StatTest};
+use crate::core::traits::{CounterRng, Rng};
+use std::marker::PhantomData;
+
+/// Streams the interleaved parallel construction as an `Rng`, so every
+/// single-stream test can run on it without materializing gigabytes.
+pub struct InterleavedStream<G: CounterRng> {
+    n_particles: u64,
+    words_per_micro: u32,
+    global_seed: u64,
+    // Cursor.
+    iteration: u32,
+    pid: u64,
+    word: u32,
+    cur: Option<G>,
+    _g: PhantomData<G>,
+}
+
+impl<G: CounterRng> InterleavedStream<G> {
+    pub fn new(n_particles: u64, words_per_micro: u32, global_seed: u64) -> Self {
+        InterleavedStream {
+            n_particles,
+            words_per_micro,
+            global_seed,
+            iteration: 0,
+            pid: 0,
+            word: 0,
+            cur: None,
+            _g: PhantomData,
+        }
+    }
+}
+
+impl<G: CounterRng> Rng for InterleavedStream<G> {
+    fn next_u32(&mut self) -> u32 {
+        if self.cur.is_none() {
+            self.cur = Some(G::new(self.pid ^ self.global_seed, self.iteration));
+        }
+        let w = self.cur.as_mut().unwrap().next_u32();
+        self.word += 1;
+        if self.word >= self.words_per_micro {
+            self.word = 0;
+            self.pid += 1;
+            if self.pid >= self.n_particles {
+                self.pid = 0;
+                self.iteration += 1;
+            }
+            self.cur = None;
+        }
+        w
+    }
+}
+
+/// The paper's parameters: 16,000 particles x 3-word micro-streams.
+pub const HOOMD_PARTICLES: u64 = 16_000;
+pub const HOOMD_WORDS: u32 = 3;
+
+/// Run a set of single-stream tests over the interleaved construction.
+pub fn run_parallel_suite<G: CounterRng>(
+    global_seed: u64,
+    words: usize,
+) -> Vec<TestResult> {
+    let tests: Vec<(&'static str, StatTest, f64)> = super::suite::all_tests();
+    let mut out = Vec::new();
+    for (_, test, weight) in tests {
+        let mut stream: InterleavedStream<G> =
+            InterleavedStream::new(HOOMD_PARTICLES, HOOMD_WORDS, global_seed);
+        let budget = ((words as f64 * weight) as usize).max(1 << 14);
+        out.push(test(&mut stream, budget));
+    }
+    out
+}
+
+/// Direct cross-stream check: Pearson correlation between the micro-
+/// streams of adjacent pids over many iterations. Catches layouts where
+/// neighboring seeds share raw counter blocks.
+pub fn adjacent_stream_correlation<G: CounterRng>(global_seed: u64, iters: u32) -> TestResult {
+    let mut sx = 0.0;
+    let mut sy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    let mut sxy = 0.0;
+    let mut n = 0.0;
+    for it in 0..iters {
+        for pid in 0..256u64 {
+            let mut a = G::new(pid ^ global_seed, it);
+            let mut b = G::new((pid + 1) ^ global_seed, it);
+            for _ in 0..HOOMD_WORDS {
+                let x = a.next_u32() as f64 / 2f64.powi(32);
+                let y = b.next_u32() as f64 / 2f64.powi(32);
+                sx += x;
+                sy += y;
+                sxx += x * x;
+                syy += y * y;
+                sxy += x * y;
+                n += 1.0;
+            }
+        }
+    }
+    let mx = sx / n;
+    let my = sy / n;
+    let cov = sxy / n - mx * my;
+    let vx = sxx / n - mx * mx;
+    let vy = syy / n - my * my;
+    let rho = cov / (vx * vy).sqrt();
+    let z = rho * n.sqrt();
+    TestResult {
+        name: "adjacent_stream_corr",
+        statistic: z,
+        p: super::pvalue::normal_two_sided(z),
+        words_used: n as usize * 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Philox, Squares, Threefry, Tyche};
+    use crate::stats::suite::Verdict;
+
+    #[test]
+    fn interleaved_stream_layout() {
+        // First 3 words belong to pid 0 ctr 0; next 3 to pid 1 ctr 0...
+        let mut s: InterleavedStream<Philox> = InterleavedStream::new(4, 3, 0);
+        let mut direct = Philox::new(0, 0);
+        for _ in 0..3 {
+            assert_eq!(s.next_u32(), direct.next_u32());
+        }
+        let mut direct1 = Philox::new(1, 0);
+        for _ in 0..3 {
+            assert_eq!(s.next_u32(), direct1.next_u32());
+        }
+        // After all 4 particles, iteration bumps.
+        for _ in 0..6 {
+            s.next_u32();
+        }
+        let mut direct_it1 = Philox::new(0, 1);
+        assert_eq!(s.next_u32(), direct_it1.next_u32());
+    }
+
+    #[test]
+    fn philox_parallel_streams_pass() {
+        for r in run_parallel_suite::<Philox>(0, 1 << 17) {
+            assert_ne!(r.verdict(), Verdict::Fail, "{}: p={}", r.name, r.p);
+        }
+    }
+
+    #[test]
+    fn squares_and_tyche_parallel_pass() {
+        // The paper: first parallel-stream correlation tests for these.
+        for r in run_parallel_suite::<Squares>(42, 1 << 16) {
+            assert_ne!(r.verdict(), Verdict::Fail, "squares {}: p={}", r.name, r.p);
+        }
+        for r in run_parallel_suite::<Tyche>(42, 1 << 16) {
+            assert_ne!(r.verdict(), Verdict::Fail, "tyche {}: p={}", r.name, r.p);
+        }
+    }
+
+    #[test]
+    fn adjacent_streams_uncorrelated() {
+        let r = adjacent_stream_correlation::<Philox>(7, 40);
+        assert!(r.p > 1e-4, "p={}", r.p);
+        let r = adjacent_stream_correlation::<Threefry>(7, 40);
+        assert!(r.p > 1e-4, "p={}", r.p);
+    }
+
+    #[test]
+    fn parallel_test_catches_shared_streams() {
+        // A broken "CBRNG" that ignores the seed: every particle emits
+        // the SAME micro-stream. The interleaved stream then has period
+        // 3 and must fail hard.
+        struct SharedStream(Philox);
+        impl crate::core::traits::Rng for SharedStream {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32()
+            }
+        }
+        impl crate::core::traits::CounterRng for SharedStream {
+            const NAME: &'static str = "shared";
+            fn new(_seed: u64, ctr: u32) -> Self {
+                SharedStream(crate::core::CounterRng::new(0, ctr)) // seed ignored!
+            }
+            fn set_position(&mut self, p: u32) {
+                self.0.set_position(p)
+            }
+        }
+        let results = run_parallel_suite::<SharedStream>(0, 1 << 16);
+        let fails = results.iter().filter(|r| r.verdict() == Verdict::Fail).count();
+        assert!(fails >= 3, "parallel suite lacks power: {fails} failures");
+    }
+}

@@ -1,0 +1,255 @@
+//! Special functions for p-values: log-gamma, regularized incomplete
+//! gamma (chi-square CDF), erfc (normal CDF), and the Kolmogorov
+//! distribution. Implementations follow Numerical Recipes' forms; unit
+//! tests pin them against known values.
+
+use std::f64::consts::PI;
+
+/// ln Γ(x) — Lanczos approximation (g = 5, 6 coefficients).
+pub fn ln_gamma(x: f64) -> f64 {
+    assert!(x > 0.0, "ln_gamma domain: {x}");
+    const COF: [f64; 6] = [
+        76.180_091_729_471_46,
+        -86.505_320_329_416_77,
+        24.014_098_240_830_91,
+        -1.231_739_572_450_155,
+        0.120_865_097_386_617_9e-2,
+        -0.539_523_938_495_3e-5,
+    ];
+    let mut y = x;
+    let tmp = x + 5.5;
+    let tmp = tmp - (x + 0.5) * tmp.ln();
+    let mut ser = 1.000_000_000_190_015;
+    for c in COF {
+        y += 1.0;
+        ser += c / y;
+    }
+    -tmp + (2.506_628_274_631_000_5 * ser / x).ln()
+}
+
+/// Regularized lower incomplete gamma P(a, x).
+pub fn gamma_p(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 0.0;
+    }
+    if x < a + 1.0 {
+        // Series representation.
+        let mut ap = a;
+        let mut sum = 1.0 / a;
+        let mut del = sum;
+        for _ in 0..500 {
+            ap += 1.0;
+            del *= x / ap;
+            sum += del;
+            if del.abs() < sum.abs() * 1e-15 {
+                break;
+            }
+        }
+        sum * (-x + a * x.ln() - ln_gamma(a)).exp()
+    } else {
+        1.0 - gamma_q_cf(a, x)
+    }
+}
+
+/// Regularized upper incomplete gamma Q(a, x) = 1 - P(a, x).
+pub fn gamma_q(a: f64, x: f64) -> f64 {
+    assert!(a > 0.0 && x >= 0.0);
+    if x == 0.0 {
+        return 1.0;
+    }
+    if x < a + 1.0 {
+        1.0 - gamma_p(a, x)
+    } else {
+        gamma_q_cf(a, x)
+    }
+}
+
+/// Q(a, x) by Lentz continued fraction (valid for x >= a + 1).
+fn gamma_q_cf(a: f64, x: f64) -> f64 {
+    let fpmin = 1e-300;
+    let mut b = x + 1.0 - a;
+    let mut c = 1.0 / fpmin;
+    let mut d = 1.0 / b;
+    let mut h = d;
+    for i in 1..500 {
+        let an = -(i as f64) * (i as f64 - a);
+        b += 2.0;
+        d = an * d + b;
+        if d.abs() < fpmin {
+            d = fpmin;
+        }
+        c = b + an / c;
+        if c.abs() < fpmin {
+            c = fpmin;
+        }
+        d = 1.0 / d;
+        let del = d * c;
+        h *= del;
+        if (del - 1.0).abs() < 1e-15 {
+            break;
+        }
+    }
+    (-x + a * x.ln() - ln_gamma(a)).exp() * h
+}
+
+/// Chi-square survival function: P(X >= chi2) with k degrees of freedom.
+/// Degenerate binning (k <= 0, e.g. a stream so broken that everything
+/// pooled into one bin) is reported as a hard failure (p = 0).
+pub fn chi2_sf(chi2: f64, k: f64) -> f64 {
+    if k <= 0.0 {
+        return 0.0;
+    }
+    gamma_q(k / 2.0, chi2 / 2.0)
+}
+
+/// erfc via the Chebyshev-fitted rational approximation (NR `erfcc`),
+/// |error| < 1.2e-7 everywhere — adequate for 6-sigma-ish p-values; the
+/// battery's FAIL threshold is 1e-6 on p, not on erfc's last digit.
+pub fn erfc(x: f64) -> f64 {
+    let z = x.abs();
+    let t = 1.0 / (1.0 + 0.5 * z);
+    let ans = t
+        * (-z * z - 1.265_512_23
+            + t * (1.000_023_68
+                + t * (0.374_091_96
+                    + t * (0.096_784_18
+                        + t * (-0.186_288_06
+                            + t * (0.278_868_07
+                                + t * (-1.135_203_98
+                                    + t * (1.488_515_87
+                                        + t * (-0.822_152_23 + t * 0.170_872_77)))))))))
+        .exp();
+    if x >= 0.0 {
+        ans
+    } else {
+        2.0 - ans
+    }
+}
+
+/// Standard normal survival function P(Z >= z).
+pub fn normal_sf(z: f64) -> f64 {
+    0.5 * erfc(z / std::f64::consts::SQRT_2)
+}
+
+/// Two-sided p-value for an asymptotically standard-normal statistic.
+pub fn normal_two_sided(z: f64) -> f64 {
+    erfc(z.abs() / std::f64::consts::SQRT_2)
+}
+
+/// Kolmogorov distribution survival function
+/// `Q_KS(λ) = 2 Σ_{j≥1} (-1)^{j-1} exp(-2 j² λ²)`.
+///
+/// The alternating series converges too slowly for small λ, so below
+/// λ = 1.18 we use the Jacobi-theta-transformed CDF series instead
+/// (Marsaglia, Tsang & Wang 2003).
+pub fn kolmogorov_sf(lambda: f64) -> f64 {
+    if lambda < 1e-8 {
+        return 1.0;
+    }
+    if lambda < 1.18 {
+        // CDF = sqrt(2π)/λ Σ_{j≥1} exp(-(2j-1)² π² / (8 λ²)).
+        let mut cdf = 0.0;
+        for j in 1..=20 {
+            let t = (2 * j - 1) as f64;
+            cdf += (-(t * t) * PI * PI / (8.0 * lambda * lambda)).exp();
+        }
+        cdf *= (2.0 * PI).sqrt() / lambda;
+        return (1.0 - cdf).clamp(0.0, 1.0);
+    }
+    let mut sum = 0.0;
+    let mut sign = 1.0;
+    for j in 1..=100 {
+        let term = (-2.0 * (j as f64) * (j as f64) * lambda * lambda).exp();
+        sum += sign * term;
+        sign = -sign;
+        if term < 1e-16 {
+            break;
+        }
+    }
+    (2.0 * sum).clamp(0.0, 1.0)
+}
+
+/// Two-sided p-value for an observed Poisson(mu) count k (used by
+/// birthday spacings: collision counts are asymptotically Poisson).
+///
+/// Uses `P(X <= k) + P(X >= k) - P(X = k)` rather than naive doubling:
+/// the doubled form saturates at exactly 1.0 whenever k is the mode,
+/// which the battery's "p suspiciously close to 1" rule would misread
+/// as a failure (found by the CLI integration test — observing the mode
+/// is the *most* ordinary outcome, not a defect).
+pub fn poisson_two_sided(k: u64, mu: f64) -> f64 {
+    let cdf = poisson_cdf(k, mu); // P(X <= k)
+    let sf = if k == 0 { 1.0 } else { 1.0 - poisson_cdf(k - 1, mu) }; // P(X >= k)
+    let pk = if k == 0 { cdf } else { cdf - poisson_cdf(k - 1, mu) }; // P(X = k)
+    (2.0 * cdf.min(sf) - pk).clamp(0.0, 1.0)
+}
+
+/// Poisson CDF P(X <= k) = Q(k+1, mu).
+pub fn poisson_cdf(k: u64, mu: f64) -> f64 {
+    gamma_q((k + 1) as f64, mu)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn ln_gamma_known() {
+        close(ln_gamma(1.0), 0.0, 1e-10);
+        close(ln_gamma(2.0), 0.0, 1e-10);
+        close(ln_gamma(5.0), 24.0f64.ln(), 1e-10); // Γ(5)=24
+        close(ln_gamma(0.5), (PI.sqrt()).ln(), 1e-10);
+    }
+
+    #[test]
+    fn chi2_sf_known_values() {
+        // chi2 = k: sf around 0.44 for k=10 (textbook: P(X>=10|k=10)=0.4405)
+        close(chi2_sf(10.0, 10.0), 0.440_5, 5e-4);
+        // 95th percentile of chi2(1) is 3.841.
+        close(chi2_sf(3.841, 1.0), 0.05, 5e-4);
+        // 99th percentile of chi2(5) is 15.086.
+        close(chi2_sf(15.086, 5.0), 0.01, 5e-4);
+    }
+
+    #[test]
+    fn gamma_p_q_complementary() {
+        for (a, x) in [(0.5, 0.3), (3.0, 2.0), (10.0, 14.0), (100.0, 80.0)] {
+            close(gamma_p(a, x) + gamma_q(a, x), 1.0, 1e-12);
+        }
+    }
+
+    #[test]
+    fn erfc_known_values() {
+        close(erfc(0.0), 1.0, 1e-7);
+        close(erfc(1.0), 0.157_299_2, 2e-7);
+        close(erfc(2.0), 0.004_677_73, 2e-7);
+        close(erfc(-1.0), 2.0 - 0.157_299_2, 2e-7);
+    }
+
+    #[test]
+    fn normal_sf_tails() {
+        close(normal_sf(0.0), 0.5, 1e-7);
+        close(normal_sf(1.96), 0.025, 2e-4);
+        close(normal_sf(3.0), 0.001_35, 5e-5);
+    }
+
+    #[test]
+    fn kolmogorov_known() {
+        // Q_KS(1.36) ≈ 0.049 (the classic 5% critical value).
+        close(kolmogorov_sf(1.36), 0.049, 2e-3);
+        close(kolmogorov_sf(0.0), 1.0, 1e-12);
+        assert!(kolmogorov_sf(3.0) < 1e-6);
+    }
+
+    #[test]
+    fn poisson_cdf_known() {
+        // P(X <= 2 | mu=1) = e^-1 (1 + 1 + 0.5) = 0.9197.
+        close(poisson_cdf(2, 1.0), 0.919_7, 5e-4);
+        close(poisson_cdf(0, 2.0), (-2.0f64).exp(), 1e-10);
+    }
+}

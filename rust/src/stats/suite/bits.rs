@@ -1,0 +1,169 @@
+//! Bit-level tests: monobit frequency, Hamming weight, bit-serial
+//! autocorrelation, and runs. These are the cheap, high-power tests that
+//! catch gross structure (counters, alternating LCG low bits) instantly.
+
+use super::TestResult;
+use crate::core::traits::Rng;
+use crate::stats::pvalue::{chi2_sf, normal_two_sided};
+
+/// NIST monobit: total ones vs zeros across all bits of n words.
+pub fn monobit(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let mut ones: u64 = 0;
+    for _ in 0..n {
+        ones += rng.next_u32().count_ones() as u64;
+    }
+    let bits = 32.0 * n as f64;
+    let z = (2.0 * ones as f64 - bits) / bits.sqrt();
+    TestResult { name: "monobit", statistic: z, p: normal_two_sided(z), words_used: n }
+}
+
+/// Hamming-weight distribution: popcount of each word vs Binomial(32, ½),
+/// chi² over weight classes 0..=32 (tails pooled to keep expected ≥ 10).
+pub fn hamming_weight(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let mut counts = [0u64; 33];
+    for _ in 0..n {
+        counts[rng.next_u32().count_ones() as usize] += 1;
+    }
+    // Binomial(32, 0.5) pmf.
+    let mut pmf = [0f64; 33];
+    let mut c = 1.0f64; // C(32, k)
+    for (k, p) in pmf.iter_mut().enumerate() {
+        *p = c / 2f64.powi(32);
+        c = c * (32 - k) as f64 / (k + 1) as f64;
+    }
+    // Pool classes until expected >= 10.
+    let (mut chi2, mut dof) = (0.0, 0usize);
+    let (mut obs_acc, mut exp_acc) = (0.0, 0.0);
+    for k in 0..=32 {
+        obs_acc += counts[k] as f64;
+        exp_acc += pmf[k] * n as f64;
+        if exp_acc >= 10.0 || k == 32 {
+            if exp_acc > 0.0 {
+                chi2 += (obs_acc - exp_acc) * (obs_acc - exp_acc) / exp_acc;
+                dof += 1;
+            }
+            obs_acc = 0.0;
+            exp_acc = 0.0;
+        }
+    }
+    let p = chi2_sf(chi2, (dof - 1) as f64);
+    TestResult { name: "hamming_weight", statistic: chi2, p, words_used: n }
+}
+
+/// Bit-serial autocorrelation at lag `LAG` (in bits, over the
+/// concatenated bit stream). Catches periodic structure: a raw counter
+/// fails at small lags, an LCG's alternating low bit fails at lag 32.
+pub fn autocorr_lag<const LAG: usize>(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // Work word-wise: matches between bit i and bit i+LAG.
+    // For LAG < 32 we compare within/between adjacent words; for LAG=32
+    // it is simply word[i] vs word[i+1].
+    let mut matches: u64 = 0;
+    let mut total: u64 = 0;
+    let mut prev = rng.next_u32();
+    for _ in 1..n {
+        let cur = rng.next_u32();
+        let (a, b) = if LAG == 32 {
+            (prev, cur)
+        } else {
+            // bits of prev vs bits LAG later (spanning into cur).
+            (prev, (prev >> LAG) | (cur << (32 - LAG)))
+        };
+        matches += (!(a ^ b)).count_ones() as u64;
+        total += 32;
+        prev = cur;
+    }
+    let z = (2.0 * matches as f64 - total as f64) / (total as f64).sqrt();
+    let name: &'static str = match LAG {
+        1 => "bit_autocorr_lag1",
+        2 => "bit_autocorr_lag2",
+        32 => "bit_autocorr_lag32",
+        _ => "bit_autocorr",
+    };
+    TestResult { name, statistic: z, p: normal_two_sided(z), words_used: n }
+}
+
+/// Wald–Wolfowitz runs test on the bit stream (NIST runs): number of
+/// 01/10 transitions vs expectation given the observed ones-fraction.
+pub fn runs(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // Bit order: LSB-first within each word. Transitions inside a word
+    // are popcount((w ^ (w >> 1)) & 0x7FFF_FFFF); across a word boundary
+    // it is (MSB of prev) ^ (LSB of cur).
+    let mut ones: u64 = 0;
+    let mut transitions: u64 = 0;
+    let mut prev_msb: Option<u32> = None;
+    for _ in 0..n {
+        let w = rng.next_u32();
+        ones += w.count_ones() as u64;
+        transitions += ((w ^ (w >> 1)) & 0x7FFF_FFFF).count_ones() as u64;
+        if let Some(msb) = prev_msb {
+            transitions += (msb ^ (w & 1)) as u64;
+        }
+        prev_msb = Some(w >> 31);
+    }
+    let bits = 32.0 * n as f64;
+    let pi = ones as f64 / bits;
+    // NIST: V_n ~ Normal(2 n pi (1-pi), 2 sqrt(n) pi (1-pi)) where V
+    // counts runs = transitions + 1.
+    let v = transitions as f64 + 1.0;
+    let mean = 2.0 * bits * pi * (1.0 - pi);
+    let sd = 2.0 * bits.sqrt() * pi * (1.0 - pi);
+    let z = (v - mean) / sd;
+    TestResult { name: "runs", statistic: z, p: normal_two_sided(z), words_used: n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{Lcg64, WeakCounter};
+    use crate::core::{CounterRng, Philox};
+
+    const N: usize = 200_000;
+
+    #[test]
+    fn good_generator_passes_all() {
+        for (i, t) in [monobit, hamming_weight, autocorr_lag::<1>, autocorr_lag::<32>, runs]
+            .iter()
+            .enumerate()
+        {
+            let mut rng = Philox::new(1000 + i as u64, 0);
+            let r = t(&mut rng, N);
+            assert!(r.p > 1e-4, "{}: p={} stat={}", r.name, r.p, r.statistic);
+        }
+    }
+
+    #[test]
+    fn counter_fails_autocorrelation() {
+        let mut rng = WeakCounter::new(0);
+        let r = autocorr_lag::<32>(&mut rng, N);
+        assert!(r.p < 1e-10, "counter must fail lag32: p={}", r.p);
+    }
+
+    #[test]
+    fn counter_fails_hamming() {
+        // Counter words have very non-binomial popcount dynamics.
+        let mut rng = WeakCounter::new(0);
+        let r = hamming_weight(&mut rng, N);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+
+    #[test]
+    fn lcg_low_bits_fail_lag32() {
+        // The alternating low bit shows up at bit-lag 32 (same position,
+        // consecutive words).
+        let mut rng = Lcg64::new(12345);
+        let r = autocorr_lag::<32>(&mut rng, N);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+
+    #[test]
+    fn all_ones_fails_monobit_and_runs() {
+        struct Ones;
+        impl crate::core::traits::Rng for Ones {
+            fn next_u32(&mut self) -> u32 {
+                u32::MAX
+            }
+        }
+        assert!(monobit(&mut Ones, 1000).p < 1e-10);
+        assert!(runs(&mut Ones, 1000).p < 1e-10);
+    }
+}

@@ -1,0 +1,276 @@
+//! Value-level chi-square tests: equidistribution, serial pairs, serial
+//! correlation, gap, poker, and permutation (Knuth TAOCP vol. 2 §3.3.2).
+
+use super::TestResult;
+use crate::core::traits::Rng;
+use crate::stats::pvalue::{chi2_sf, normal_two_sided};
+
+fn chi2_uniform_bins(counts: &[u64], n: f64) -> (f64, f64) {
+    let k = counts.len() as f64;
+    let expect = n / k;
+    let chi2: f64 = counts
+        .iter()
+        .map(|&c| {
+            let d = c as f64 - expect;
+            d * d / expect
+        })
+        .sum();
+    (chi2, chi2_sf(chi2, k - 1.0))
+}
+
+/// Byte equidistribution: all 4n bytes over 256 bins.
+pub fn byte_equidist(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let mut counts = [0u64; 256];
+    for _ in 0..n {
+        let w = rng.next_u32();
+        counts[(w & 0xFF) as usize] += 1;
+        counts[((w >> 8) & 0xFF) as usize] += 1;
+        counts[((w >> 16) & 0xFF) as usize] += 1;
+        counts[(w >> 24) as usize] += 1;
+    }
+    let (chi2, p) = chi2_uniform_bins(&counts, 4.0 * n as f64);
+    TestResult { name: "byte_equidist", statistic: chi2, p, words_used: n }
+}
+
+/// Top-10-bit equidistribution over 1024 bins.
+pub fn equidist_10bit(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let mut counts = vec![0u64; 1024];
+    for _ in 0..n {
+        counts[(rng.next_u32() >> 22) as usize] += 1;
+    }
+    let (chi2, p) = chi2_uniform_bins(&counts, n as f64);
+    TestResult { name: "equidist_10bit", statistic: chi2, p, words_used: n }
+}
+
+/// Serial pairs: consecutive (overlapping disabled) top-byte pairs over
+/// 65536 bins — the workhorse that kills counters and short-period
+/// structure.
+pub fn serial_pairs_8bit(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let mut counts = vec![0u64; 65536];
+    let pairs = n / 2;
+    for _ in 0..pairs {
+        let a = rng.next_u32() >> 24;
+        let b = rng.next_u32() >> 24;
+        counts[((a << 8) | b) as usize] += 1;
+    }
+    let (chi2, p) = chi2_uniform_bins(&counts, pairs as f64);
+    TestResult { name: "serial_pairs_8bit", statistic: chi2, p, words_used: n }
+}
+
+/// First-order serial correlation of consecutive uniforms.
+pub fn serial_correlation(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let mut prev = rng.next_u32() as f64 / 2f64.powi(32);
+    let (mut sx, mut sxx, mut sxy) = (prev, prev * prev, 0.0);
+    for _ in 1..n {
+        let x = rng.next_u32() as f64 / 2f64.powi(32);
+        sxy += prev * x;
+        sx += x;
+        sxx += x * x;
+        prev = x;
+    }
+    let nf = n as f64;
+    let mean = sx / nf;
+    let var = sxx / nf - mean * mean;
+    let cov = sxy / (nf - 1.0) - mean * mean;
+    let rho = cov / var;
+    let z = rho * (nf).sqrt();
+    TestResult { name: "serial_correlation", statistic: z, p: normal_two_sided(z), words_used: n }
+}
+
+/// Gap test (Knuth): lengths of gaps between visits to [0, alpha) with
+/// alpha = 1/8, chi² vs the geometric law, tail pooled.
+pub fn gap(rng: &mut dyn Rng, n: usize) -> TestResult {
+    const ALPHA_BITS: u32 = 3; // P(hit) = 2^-3 = 1/8
+    const MAXGAP: usize = 64;
+    let mut counts = [0u64; MAXGAP + 1];
+    let mut gap_len = 0usize;
+    let mut ngaps = 0u64;
+    for _ in 0..n {
+        let hit = (rng.next_u32() >> (32 - ALPHA_BITS)) == 0;
+        if hit {
+            counts[gap_len.min(MAXGAP)] += 1;
+            ngaps += 1;
+            gap_len = 0;
+        } else {
+            gap_len += 1;
+        }
+    }
+    let p_hit: f64 = 1.0 / 8.0;
+    let mut chi2 = 0.0;
+    let mut dof = 0;
+    let mut acc_obs = 0.0;
+    let mut acc_exp = 0.0;
+    for g in 0..=MAXGAP {
+        // P(gap = g) geometric; the last bin pools P(gap >= MAXGAP).
+        let pg = if g == MAXGAP {
+            (1.0 - p_hit).powi(MAXGAP as i32)
+        } else {
+            p_hit * (1.0 - p_hit).powi(g as i32)
+        };
+        acc_obs += counts[g] as f64;
+        acc_exp += pg * ngaps as f64;
+        if acc_exp >= 10.0 || g == MAXGAP {
+            if acc_exp > 0.0 {
+                chi2 += (acc_obs - acc_exp) * (acc_obs - acc_exp) / acc_exp;
+                dof += 1;
+            }
+            acc_obs = 0.0;
+            acc_exp = 0.0;
+        }
+    }
+    let p = chi2_sf(chi2, (dof - 1) as f64);
+    TestResult { name: "gap", statistic: chi2, p, words_used: n }
+}
+
+/// Poker test (4-bit): classify non-overlapping groups of five 4-bit
+/// "cards" by number of distinct values, chi² vs exact probabilities.
+pub fn poker_4bit(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // Exact distinct-count distribution for 5 draws from 16 values:
+    // P(r distinct) = S(5, r) * 16!/(16-r)! / 16^5, Stirling numbers
+    // S(5,1..5) = 1, 15, 25, 10, 1.
+    let stirling = [1.0, 15.0, 25.0, 10.0, 1.0];
+    let mut probs = [0f64; 5];
+    for (r, p) in probs.iter_mut().enumerate() {
+        let r1 = r + 1;
+        let mut falling = 1.0;
+        for i in 0..r1 {
+            falling *= (16 - i) as f64;
+        }
+        *p = stirling[r] * falling / 16f64.powi(5);
+    }
+    let hands = n * 8 / 5; // 8 cards per word
+    let mut counts = [0u64; 5];
+    let mut card_buf: u32 = 0;
+    let mut cards_left = 0;
+    for _ in 0..hands {
+        let mut mask: u16 = 0;
+        for _ in 0..5 {
+            if cards_left == 0 {
+                card_buf = rng.next_u32();
+                cards_left = 8;
+            }
+            mask |= 1 << (card_buf & 0xF);
+            card_buf >>= 4;
+            cards_left -= 1;
+        }
+        counts[mask.count_ones() as usize - 1] += 1;
+    }
+    let mut chi2 = 0.0;
+    for r in 0..5 {
+        let e = probs[r] * hands as f64;
+        let d = counts[r] as f64 - e;
+        chi2 += d * d / e;
+    }
+    let p = chi2_sf(chi2, 4.0);
+    TestResult { name: "poker_4bit", statistic: chi2, p, words_used: hands * 5 / 8 }
+}
+
+/// Permutation test: order pattern of non-overlapping 5-tuples of
+/// uniforms, chi² over the 120 possible orderings.
+pub fn permutation_5(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let tuples = n / 5;
+    let mut counts = vec![0u64; 120];
+    for _ in 0..tuples {
+        let mut v = [0u32; 5];
+        for x in v.iter_mut() {
+            *x = rng.next_u32();
+        }
+        // Lehmer code -> permutation index.
+        let mut idx = 0usize;
+        for i in 0..5 {
+            let mut smaller = 0usize;
+            for j in (i + 1)..5 {
+                if v[j] < v[i] {
+                    smaller += 1;
+                }
+            }
+            idx = idx * (5 - i) + smaller;
+        }
+        counts[idx] += 1;
+    }
+    let (chi2, p) = chi2_uniform_bins(&counts, tuples as f64);
+    TestResult { name: "permutation_5", statistic: chi2, p, words_used: tuples * 5 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::{Lcg64, WeakCounter};
+    use crate::core::{CounterRng, Philox, Squares, Threefry, Tyche};
+
+    const N: usize = 200_000;
+
+    #[test]
+    fn good_generators_pass() {
+        let tests: [(&str, super::super::StatTest); 6] = [
+            ("byte_equidist", byte_equidist),
+            ("equidist_10bit", equidist_10bit),
+            ("serial_pairs_8bit", serial_pairs_8bit),
+            ("serial_correlation", serial_correlation),
+            ("gap", gap),
+            ("permutation_5", permutation_5),
+        ];
+        for (name, t) in tests {
+            let mut rng = Philox::new(0xA5A5, 0);
+            let r = t(&mut rng, N);
+            assert!(r.p > 1e-4, "{name}: p={} stat={}", r.p, r.statistic);
+        }
+    }
+
+    #[test]
+    fn poker_passes_on_good() {
+        for seed in 0..3u64 {
+            let mut rng = Squares::new(seed, 0);
+            let r = poker_4bit(&mut rng, N);
+            assert!(r.p > 1e-4, "seed {seed}: p={}", r.p);
+        }
+        let mut t = Threefry::new(7, 0);
+        assert!(poker_4bit(&mut t, N).p > 1e-4);
+        let mut ty = Tyche::new(7, 0);
+        assert!(poker_4bit(&mut ty, N).p > 1e-4);
+    }
+
+    #[test]
+    fn counter_fails_serial_pairs() {
+        let mut rng = WeakCounter::new(0);
+        let r = serial_pairs_8bit(&mut rng, N);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+
+    #[test]
+    fn counter_fails_equidist_at_scale() {
+        // 200k consecutive counter values hit only a sliver of the
+        // top-10-bit range.
+        let mut rng = WeakCounter::new(0);
+        let r = equidist_10bit(&mut rng, N);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+
+    #[test]
+    fn counter_fails_serial_correlation() {
+        let mut rng = WeakCounter::new(0);
+        let r = serial_correlation(&mut rng, N);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+
+    #[test]
+    fn counter_fails_poker() {
+        // Consecutive integers share 7 of 8 nibbles between neighbors;
+        // the distinct-count distribution is far from random.
+        let mut rng = WeakCounter::new(0);
+        let r = poker_4bit(&mut rng, N);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+
+    #[test]
+    fn lcg_top_bits_pass_value_tests() {
+        // Negative control: the LCG's *top* bits are decent, so the
+        // value-level tests here (which use top bits) should NOT flag it
+        // — its defect lives in the low bits and is caught by
+        // bit_autocorr_lag32 and matrix_rank (see bits.rs / battery.rs).
+        let mut rng = Lcg64::new(99);
+        assert!(serial_pairs_8bit(&mut rng, N).p > 1e-6);
+        let mut rng = Lcg64::new(99);
+        assert!(equidist_10bit(&mut rng, N).p > 1e-6);
+    }
+}

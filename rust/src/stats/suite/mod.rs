@@ -1,0 +1,78 @@
+//! The individual statistical tests and their shared result type.
+
+pub mod bits;
+pub mod chi2tests;
+pub mod entropy;
+pub mod ks;
+pub mod rank;
+pub mod spacings;
+
+use crate::core::traits::Rng;
+
+/// Outcome of one statistical test.
+#[derive(Debug, Clone)]
+pub struct TestResult {
+    pub name: &'static str,
+    /// The test statistic (chi², z, KS D, count — test-specific).
+    pub statistic: f64,
+    /// Two-sided p-value under the null "stream is uniform random".
+    pub p: f64,
+    /// Number of 32-bit words consumed.
+    pub words_used: usize,
+}
+
+/// TestU01-style verdict thresholds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    Pass,
+    /// p outside [1e-4, 1 - 1e-4] — rerun-worthy, as the paper notes
+    /// happens occasionally even for cuRAND.
+    Suspicious,
+    /// p outside [1e-10, 1 - 1e-10] — clear failure.
+    Fail,
+}
+
+impl TestResult {
+    pub fn verdict(&self) -> Verdict {
+        let edge = self.p.min(1.0 - self.p);
+        if edge < 1e-10 {
+            Verdict::Fail
+        } else if edge < 1e-4 {
+            Verdict::Suspicious
+        } else {
+            Verdict::Pass
+        }
+    }
+}
+
+/// A statistical test: consumes `n` words from the stream.
+pub type StatTest = fn(&mut dyn Rng, usize) -> TestResult;
+
+/// The full suite, in execution order. Each entry is (test, weight):
+/// weight scales the word budget (cheap tests get more data).
+pub fn all_tests() -> Vec<(&'static str, StatTest, f64)> {
+    vec![
+        ("monobit", bits::monobit as StatTest, 1.0),
+        ("hamming_weight", bits::hamming_weight, 1.0),
+        ("bit_autocorr_lag1", bits::autocorr_lag::<1>, 1.0),
+        ("bit_autocorr_lag2", bits::autocorr_lag::<2>, 1.0),
+        ("bit_autocorr_lag32", bits::autocorr_lag::<32>, 1.0),
+        ("runs", bits::runs, 1.0),
+        ("byte_equidist", chi2tests::byte_equidist, 1.0),
+        ("equidist_10bit", chi2tests::equidist_10bit, 1.0),
+        ("serial_pairs_8bit", chi2tests::serial_pairs_8bit, 1.0),
+        ("serial_correlation", chi2tests::serial_correlation, 1.0),
+        ("gap", chi2tests::gap, 1.0),
+        ("poker_4bit", chi2tests::poker_4bit, 1.0),
+        ("permutation_5", chi2tests::permutation_5, 1.0),
+        ("birthday_spacings", spacings::birthday_spacings, 0.25),
+        ("collision_20bit", spacings::collision_20bit, 0.5),
+        ("matrix_rank_32", rank::matrix_rank_32, 0.5),
+        ("ks_uniform", ks::ks_uniform, 0.25),
+        ("max_of_8", ks::max_of_8, 0.5),
+        ("approx_entropy", entropy::approximate_entropy, 0.5),
+        ("longest_run", entropy::longest_run, 0.5),
+        ("maurer_universal", entropy::maurer_universal, 0.5),
+        ("opso", entropy::opso, 0.5),
+    ]
+}

@@ -1,0 +1,139 @@
+//! Binary matrix rank test (Marsaglia / NIST): rank distribution of
+//! random 32×32 GF(2) matrices built from 32 consecutive words. Linear
+//! generators (LFSRs, LCG low bits) produce rank-deficient matrices.
+
+use super::TestResult;
+use crate::core::traits::Rng;
+use crate::stats::pvalue::chi2_sf;
+
+/// GF(2) rank by Gaussian elimination over u32 rows.
+pub fn gf2_rank(rows: &mut [u32; 32]) -> u32 {
+    let mut rank = 0u32;
+    for bit in (0..32).rev() {
+        let mask = 1u32 << bit;
+        // Find a pivot row at or below `rank`.
+        let mut pivot = None;
+        for r in rank as usize..32 {
+            if rows[r] & mask != 0 {
+                pivot = Some(r);
+                break;
+            }
+        }
+        if let Some(p) = pivot {
+            rows.swap(rank as usize, p);
+            let prow = rows[rank as usize];
+            for (r, row) in rows.iter_mut().enumerate() {
+                if r != rank as usize && *row & mask != 0 {
+                    *row ^= prow;
+                }
+            }
+            rank += 1;
+            if rank == 32 {
+                break;
+            }
+        }
+    }
+    rank
+}
+
+/// Probability that a random 32×32 GF(2) matrix has rank 32-k:
+/// classes {32, 31, 30, ≤29}.
+fn rank_probs() -> [f64; 4] {
+    // Exact: P(rank = n - k) for a random n x n GF(2) matrix is
+    // 2^{-k^2} * prod_{i=k+1..n} (1 - 2^-i)^2 / prod_{i=1..n-k} (1 - 2^-i)
+    // — computed directly for n = 32, k = 0, 1, 2; the rest pooled.
+    fn p_rank(n: i32, k: i32) -> f64 {
+        // Marsaglia's product form:
+        // P(rank = r) = 2^{r(2n-r) - n^2} * prod_{i=0..r-1} (1-2^{i-n})^2 / (1-2^{i-r})
+        let r = n - k;
+        let mut p = 2f64.powi(r * (2 * n - r) - n * n);
+        for i in 0..r {
+            let num = 1.0 - 2f64.powi(i - n);
+            let den = 1.0 - 2f64.powi(i - r);
+            p *= num * num / den;
+        }
+        p
+    }
+    let p32 = p_rank(32, 0);
+    let p31 = p_rank(32, 1);
+    let p30 = p_rank(32, 2);
+    [p32, p31, p30, (1.0 - p32 - p31 - p30).max(0.0)]
+}
+
+/// The rank test proper.
+pub fn matrix_rank_32(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let mats = (n / 32).max(100);
+    let mut counts = [0u64; 4];
+    let mut rows = [0u32; 32];
+    for _ in 0..mats {
+        for r in rows.iter_mut() {
+            *r = rng.next_u32();
+        }
+        let rank = gf2_rank(&mut rows);
+        let class = match rank {
+            32 => 0,
+            31 => 1,
+            30 => 2,
+            _ => 3,
+        };
+        counts[class] += 1;
+    }
+    let probs = rank_probs();
+    let mut chi2 = 0.0;
+    for i in 0..4 {
+        let e = probs[i] * mats as f64;
+        let d = counts[i] as f64 - e;
+        chi2 += d * d / e.max(1e-9);
+    }
+    let p = chi2_sf(chi2, 3.0);
+    TestResult { name: "matrix_rank_32", statistic: chi2, p, words_used: mats * 32 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::WeakCounter;
+    use crate::core::{CounterRng, Philox};
+
+    #[test]
+    fn rank_of_identity_is_32() {
+        let mut rows = [0u32; 32];
+        for (i, r) in rows.iter_mut().enumerate() {
+            *r = 1 << i;
+        }
+        assert_eq!(gf2_rank(&mut rows), 32);
+    }
+
+    #[test]
+    fn rank_of_zero_is_0_and_rank_one_matrix_is_1() {
+        let mut z = [0u32; 32];
+        assert_eq!(gf2_rank(&mut z), 0);
+        let mut one = [0xDEAD_BEEFu32; 32];
+        assert_eq!(gf2_rank(&mut one), 1);
+    }
+
+    #[test]
+    fn rank_of_dependent_rows() {
+        let mut rows = [0u32; 32];
+        for (i, r) in rows.iter_mut().enumerate() {
+            *r = 1 << (i / 2); // each column pair repeated -> rank 16
+        }
+        assert_eq!(gf2_rank(&mut rows), 16);
+    }
+
+    #[test]
+    fn philox_passes_rank() {
+        let mut rng = Philox::new(0x5A5A, 0);
+        let r = matrix_rank_32(&mut rng, 320_000);
+        assert!(r.p > 1e-4, "p={} chi2={}", r.p, r.statistic);
+    }
+
+    #[test]
+    fn counter_fails_rank() {
+        // Consecutive integers differ in few low bits -> wildly
+        // rank-deficient matrices.
+        let mut rng = WeakCounter::new(0);
+        let r = matrix_rank_32(&mut rng, 320_000);
+        assert!(r.p < 1e-10, "p={}", r.p);
+    }
+}

@@ -1,0 +1,117 @@
+//! Spacing/collision tests: birthday spacings (Marsaglia; the TestU01
+//! example the paper calls out) and collision counting.
+
+use super::TestResult;
+use crate::core::traits::Rng;
+use crate::stats::pvalue::poisson_two_sided;
+
+/// Birthday spacings: throw m = 2^12 birthdays into d = 2^32 days (one
+/// word each), sort, count duplicate spacings. Under the null the count
+/// is Poisson(λ = m³/(4d) = 4). Repeated `n / m` times, summing counts
+/// (sum of Poissons is Poisson). This test is devastating for counters
+/// and lattice structure.
+pub fn birthday_spacings(rng: &mut dyn Rng, n: usize) -> TestResult {
+    const M: usize = 1 << 12;
+    let reps = (n / M).max(1);
+    let lambda_per_rep = (M as f64).powi(3) / (4.0 * 2f64.powi(32));
+    let mut total_dups = 0u64;
+    let mut bdays = vec![0u32; M];
+    let mut spacings = vec![0u32; M - 1];
+    for _ in 0..reps {
+        for b in bdays.iter_mut() {
+            *b = rng.next_u32();
+        }
+        bdays.sort_unstable();
+        for i in 1..M {
+            spacings[i - 1] = bdays[i].wrapping_sub(bdays[i - 1]);
+        }
+        spacings.sort_unstable();
+        for i in 1..spacings.len() {
+            if spacings[i] == spacings[i - 1] {
+                total_dups += 1;
+            }
+        }
+    }
+    let mu = lambda_per_rep * reps as f64;
+    let p = poisson_two_sided(total_dups, mu);
+    TestResult {
+        name: "birthday_spacings",
+        statistic: total_dups as f64,
+        p,
+        words_used: reps * M,
+    }
+}
+
+/// Collision test: throw n balls into 2^20 urns (top 20 bits); the
+/// number of collisions is asymptotically Poisson(n²/2m) for n ≪ m.
+pub fn collision_20bit(rng: &mut dyn Rng, n: usize) -> TestResult {
+    const URNS: usize = 1 << 20;
+    // Keep n well below m for the Poisson regime; chunk if necessary.
+    let chunk = 1 << 14; // λ per chunk = 2^28/2^21 = 128
+    let reps = (n / chunk).max(1);
+    let mut seen = vec![false; URNS];
+    let mut collisions = 0u64;
+    for _ in 0..reps {
+        for s in seen.iter_mut() {
+            *s = false;
+        }
+        for _ in 0..chunk {
+            let u = (rng.next_u32() >> 12) as usize;
+            if seen[u] {
+                collisions += 1;
+            } else {
+                seen[u] = true;
+            }
+        }
+    }
+    // Exact expectation per chunk: chunk - m(1 - (1-1/m)^chunk); Poisson
+    // approximation with that mean.
+    let m = URNS as f64;
+    let c = chunk as f64;
+    let mu_per = c - m * (1.0 - (1.0 - 1.0 / m).powf(c));
+    let mu = mu_per * reps as f64;
+    let p = poisson_two_sided(collisions, mu);
+    TestResult { name: "collision_20bit", statistic: collisions as f64, p, words_used: reps * chunk }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::WeakCounter;
+    use crate::core::{CounterRng, Philox, Squares, Threefry, Tyche, TycheI};
+
+    #[test]
+    fn good_generators_pass_birthday() {
+        let mut p = Philox::new(0xB1D, 0);
+        assert!(birthday_spacings(&mut p, 1 << 16).p > 1e-4);
+        let mut s = Squares::new(0xB1D, 0);
+        assert!(birthday_spacings(&mut s, 1 << 16).p > 1e-4);
+        let mut t = Threefry::new(0xB1D, 0);
+        assert!(birthday_spacings(&mut t, 1 << 16).p > 1e-4);
+    }
+
+    #[test]
+    fn good_generators_pass_collision() {
+        let mut t = Tyche::new(3, 0);
+        assert!(collision_20bit(&mut t, 1 << 16).p > 1e-4);
+        let mut ti = TycheI::new(3, 0);
+        assert!(collision_20bit(&mut ti, 1 << 16).p > 1e-4);
+    }
+
+    #[test]
+    fn counter_fails_birthday_catastrophically() {
+        // Consecutive integers: all spacings equal -> every spacing a
+        // duplicate -> p ~ 0.
+        let mut rng = WeakCounter::new(0);
+        let r = birthday_spacings(&mut rng, 1 << 14);
+        assert!(r.p < 1e-10, "p={} dups={}", r.p, r.statistic);
+    }
+
+    #[test]
+    fn counter_fails_collision() {
+        // A counter never collides: observed 0 vs expected ~128/chunk.
+        let mut rng = WeakCounter::new(0);
+        let r = collision_20bit(&mut rng, 1 << 15);
+        assert!(r.p < 1e-10, "p={} collisions={}", r.p, r.statistic);
+    }
+}

@@ -1,0 +1,6 @@
+//! In-house property-based testing mini-framework (proptest substitute —
+//! the offline environment has no proptest/quickcheck).
+
+pub mod prop;
+
+pub use prop::{Gen, Prop};

@@ -1,0 +1,236 @@
+//! Minimal declarative CLI argument parser (clap substitute).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! subcommands, typed accessors with defaults, and generated `--help`
+//! text. Unknown options are hard errors — a launcher that silently
+//! ignores a typoed `--steps` would invalidate benchmark runs.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A parsed argument set.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Subcommand (first bare word), if any.
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Declarative option spec used for validation + help.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]) against a spec. `specs` lists the
+    /// accepted `--options`; the first bare word becomes the subcommand
+    /// when `subcommands` is non-empty.
+    pub fn parse(
+        raw: impl IntoIterator<Item = String>,
+        subcommands: &[&str],
+        specs: &[OptSpec],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let (key, inline_val) = match name.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (name.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key} (try --help)"))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    out.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} requires a value"))?,
+                    };
+                    out.opts.insert(key, val);
+                }
+            } else if out.command.is_none() && !subcommands.is_empty() {
+                if !subcommands.contains(&tok.as_str()) {
+                    return Err(format!(
+                        "unknown command '{tok}' (expected one of: {})",
+                        subcommands.join(", ")
+                    ));
+                }
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Generated help text.
+    pub fn help(program: &str, about: &str, subcommands: &[&str], specs: &[OptSpec]) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{program} — {about}\n");
+        if !subcommands.is_empty() {
+            let _ = writeln!(s, "USAGE: {program} <command> [options]\n");
+            let _ = writeln!(s, "COMMANDS: {}\n", subcommands.join(", "));
+        } else {
+            let _ = writeln!(s, "USAGE: {program} [options]\n");
+        }
+        let _ = writeln!(s, "OPTIONS:");
+        for spec in specs {
+            let arg = if spec.is_flag {
+                format!("--{}", spec.name)
+            } else {
+                format!("--{} <v>", spec.name)
+            };
+            let def = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            let _ = writeln!(s, "  {arg:24} {}{def}", spec.help);
+        }
+        s
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_with_suffix(v)
+                .ok_or_else(|| format!("--{name}: '{v}' is not a valid count")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        Ok(self.get_usize_as_u64(name, default)?)
+    }
+
+    fn get_usize_as_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                // Allow hex seeds.
+                if let Some(h) = v.strip_prefix("0x") {
+                    return u64::from_str_radix(h, 16)
+                        .map_err(|_| format!("--{name}: bad hex '{v}'"));
+                }
+                parse_with_suffix(v)
+                    .map(|x| x as u64)
+                    .ok_or_else(|| format!("--{name}: '{v}' is not a valid integer"))
+            }
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: bad float '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Parse `123`, `64k`, `16M`, `2g` (binary suffixes).
+pub fn parse_with_suffix(s: &str) -> Option<usize> {
+    let s = s.trim();
+    let (num, mult) = match s.chars().last()? {
+        'k' | 'K' => (&s[..s.len() - 1], 1usize << 10),
+        'm' | 'M' => (&s[..s.len() - 1], 1 << 20),
+        'g' | 'G' => (&s[..s.len() - 1], 1 << 30),
+        _ => (s, 1),
+    };
+    num.parse::<usize>().ok().map(|n| n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<OptSpec> {
+        vec![
+            OptSpec { name: "n", help: "count", default: Some("100"), is_flag: false },
+            OptSpec { name: "seed", help: "seed", default: Some("0"), is_flag: false },
+            OptSpec { name: "verbose", help: "chatty", default: None, is_flag: true },
+        ]
+    }
+
+    fn parse(toks: &[&str]) -> Result<Args, String> {
+        Args::parse(toks.iter().map(|s| s.to_string()), &["run", "bench"], &specs())
+    }
+
+    #[test]
+    fn subcommand_options_flags() {
+        let a = parse(&["run", "--n", "64k", "--verbose"]).unwrap();
+        assert_eq!(a.command.as_deref(), Some("run"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 65536);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_syntax_and_hex() {
+        let a = parse(&["bench", "--n=12", "--seed=0xDEAD"]).unwrap();
+        assert_eq!(a.get_usize("n", 0).unwrap(), 12);
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 0xDEAD);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(parse(&["run", "--bogus", "1"]).is_err());
+        assert!(parse(&["teleport"]).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(parse(&["run", "--n"]).is_err());
+        assert!(parse(&["run", "--verbose=yes"]).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["run"]).unwrap();
+        assert_eq!(a.get_usize("n", 100).unwrap(), 100);
+        assert_eq!(a.get_or("seed", "0"), "0");
+    }
+
+    #[test]
+    fn suffixes() {
+        assert_eq!(parse_with_suffix("2k"), Some(2048));
+        assert_eq!(parse_with_suffix("3M"), Some(3 << 20));
+        assert_eq!(parse_with_suffix("1g"), Some(1 << 30));
+        assert_eq!(parse_with_suffix("zap"), None);
+    }
+
+    #[test]
+    fn help_mentions_everything() {
+        let h = Args::help("openrand", "rng", &["run"], &specs());
+        for needle in ["openrand", "run", "--n", "--verbose", "default: 100"] {
+            assert!(h.contains(needle), "missing {needle} in:\n{h}");
+        }
+    }
+}

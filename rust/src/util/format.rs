@@ -1,0 +1,66 @@
+//! Number and duration formatting for bench tables and reports.
+
+/// `1234567` -> `"1.23M"`, decimal engineering suffixes.
+pub fn si(v: f64) -> String {
+    let (div, suf) = match v.abs() {
+        x if x >= 1e9 => (1e9, "G"),
+        x if x >= 1e6 => (1e6, "M"),
+        x if x >= 1e3 => (1e3, "k"),
+        _ => (1.0, ""),
+    };
+    let scaled = v / div;
+    if scaled >= 100.0 || suf.is_empty() && scaled.fract() == 0.0 {
+        format!("{scaled:.0}{suf}")
+    } else if scaled >= 10.0 {
+        format!("{scaled:.1}{suf}")
+    } else {
+        format!("{scaled:.2}{suf}")
+    }
+}
+
+/// Nanoseconds -> human time string.
+pub fn ns(v: f64) -> String {
+    match v.abs() {
+        x if x >= 1e9 => format!("{:.2}s", v / 1e9),
+        x if x >= 1e6 => format!("{:.2}ms", v / 1e6),
+        x if x >= 1e3 => format!("{:.2}us", v / 1e3),
+        _ => format!("{v:.1}ns"),
+    }
+}
+
+/// Bytes -> human string (binary).
+pub fn bytes(v: usize) -> String {
+    match v {
+        x if x >= 1 << 30 => format!("{:.2}GiB", v as f64 / (1u64 << 30) as f64),
+        x if x >= 1 << 20 => format!("{:.2}MiB", v as f64 / (1 << 20) as f64),
+        x if x >= 1 << 10 => format!("{:.2}KiB", v as f64 / (1 << 10) as f64),
+        _ => format!("{v}B"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_suffixes() {
+        assert_eq!(si(1_234_567.0), "1.23M");
+        assert_eq!(si(999.0), "999");
+        assert_eq!(si(45_600.0), "45.6k");
+        assert_eq!(si(3.5e9), "3.50G");
+    }
+
+    #[test]
+    fn time_suffixes() {
+        assert_eq!(ns(1.4), "1.4ns");
+        assert_eq!(ns(2_500.0), "2.50us");
+        assert_eq!(ns(7.3e6), "7.30ms");
+        assert_eq!(ns(1.2e9), "1.20s");
+    }
+
+    #[test]
+    fn byte_suffixes() {
+        assert_eq!(bytes(512), "512B");
+        assert_eq!(bytes(64 << 20), "64.00MiB");
+    }
+}

@@ -1,0 +1,101 @@
+//! FNV-1a streaming hash — the reproducibility fingerprint.
+//!
+//! The coordinator's repro checks hash entire particle arrays (bitwise,
+//! via `to_bits`) and compare across thread counts / runs / host-vs-device
+//! paths. FNV-1a is not cryptographic; it is deterministic, fast, and
+//! order-sensitive, which is exactly what a trajectory fingerprint needs.
+
+/// 64-bit FNV-1a.
+#[derive(Debug, Clone, Copy)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a(0xCBF2_9CE4_8422_2325)
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn write_u8(&mut self, b: u8) {
+        self.0 ^= b as u64;
+        self.0 = self.0.wrapping_mul(0x100_0000_01B3);
+    }
+
+    #[inline]
+    pub fn write_u32(&mut self, v: u32) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.write_u8(b);
+        }
+    }
+
+    /// Bitwise hash of an f64 (NaN-safe: hashes the payload bits).
+    #[inline]
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn write_f64_slice(&mut self, vs: &[f64]) {
+        for &v in vs {
+            self.write_f64(v);
+        }
+    }
+
+    pub fn write_u32_slice(&mut self, vs: &[u32]) {
+        for &v in vs {
+            self.write_u32(v);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+
+    /// One-shot helper.
+    pub fn hash_f64s(vs: &[f64]) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_f64_slice(vs);
+        h.finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_reference_vectors() {
+        // Published FNV-1a 64 test vectors.
+        let h = |s: &str| {
+            let mut f = Fnv1a::new();
+            for b in s.bytes() {
+                f.write_u8(b);
+            }
+            f.finish()
+        };
+        assert_eq!(h(""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(h("a"), 0xAF63_DC4C_8601_EC8C);
+        assert_eq!(h("foobar"), 0x85944171F73967E8);
+    }
+
+    #[test]
+    fn order_sensitive() {
+        assert_ne!(Fnv1a::hash_f64s(&[1.0, 2.0]), Fnv1a::hash_f64s(&[2.0, 1.0]));
+    }
+
+    #[test]
+    fn bitwise_distinguishes_negative_zero() {
+        assert_ne!(Fnv1a::hash_f64s(&[0.0]), Fnv1a::hash_f64s(&[-0.0]));
+    }
+}

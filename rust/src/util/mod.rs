@@ -1,0 +1,14 @@
+//! Dependency-free utility substrates.
+//!
+//! The build environment is fully offline (no clap / serde / criterion /
+//! proptest), so the pieces a production launcher normally pulls from
+//! crates.io are implemented here: a declarative CLI argument parser
+//! ([`cli`]), FNV state hashing for reproducibility checks ([`hash`]),
+//! and table/number formatting ([`format`]).
+
+pub mod cli;
+pub mod format;
+pub mod hash;
+
+pub use cli::Args;
+pub use hash::Fnv1a;

@@ -1,0 +1,92 @@
+//! CLI integration tests: drive the real `openrand` binary end to end
+//! (cargo exposes the path via CARGO_BIN_EXE_openrand).
+
+use std::process::Command;
+
+fn openrand(args: &[&str]) -> (String, String, bool) {
+    let out = Command::new(env!("CARGO_BIN_EXE_openrand"))
+        .args(args)
+        .current_dir(env!("CARGO_MANIFEST_DIR"))
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.success(),
+    )
+}
+
+#[test]
+fn help_lists_commands_and_options() {
+    let (stdout, _, ok) = openrand(&["--help"]);
+    assert!(ok);
+    for needle in ["generate", "brownian", "stats", "repro", "artifacts", "--generator", "--seed"] {
+        assert!(stdout.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn generate_is_deterministic_and_formatted() {
+    let (a, _, ok) = openrand(&["generate", "--generator", "squares", "--seed", "42", "--n", "5"]);
+    assert!(ok);
+    let (b, _, _) = openrand(&["generate", "--generator", "squares", "--seed", "42", "--n", "5"]);
+    assert_eq!(a, b);
+    assert_eq!(a.lines().count(), 5);
+    for line in a.lines() {
+        line.parse::<u32>().expect("u32 output");
+    }
+    // f64 format stays in [0, 1).
+    let (f, _, _) = openrand(&["generate", "--format", "f64", "--n", "3", "--seed", "0x1F"]);
+    for line in f.lines() {
+        let v: f64 = line.parse().unwrap();
+        assert!((0.0..1.0).contains(&v));
+    }
+}
+
+#[test]
+fn generate_differs_across_generators_and_ctrs() {
+    let run = |g: &str, c: &str| openrand(&["generate", "--generator", g, "--ctr", c, "--n", "4"]).0;
+    assert_ne!(run("philox", "0"), run("threefry", "0"));
+    assert_ne!(run("philox", "0"), run("philox", "1"));
+}
+
+#[test]
+fn unknown_arguments_rejected() {
+    let (_, err, ok) = openrand(&["generate", "--bogus", "1"]);
+    assert!(!ok);
+    assert!(err.contains("unknown option"));
+    let (_, err, ok) = openrand(&["teleport"]);
+    assert!(!ok);
+    assert!(err.contains("unknown command"));
+    let (_, err, ok) = openrand(&["generate", "--generator", "mt19937x"]);
+    assert!(!ok);
+    assert!(err.contains("unknown generator"));
+}
+
+#[test]
+fn brownian_host_reports_metrics_and_hash() {
+    let (out, err, ok) = openrand(&["brownian", "--n", "1k", "--steps", "5", "--threads", "2"]);
+    assert!(ok, "{err}");
+    assert!(out.contains("throughput="));
+    assert!(out.contains("trajectory hash:"));
+    // Hash is thread-count invariant.
+    let (out1, _, _) = openrand(&["brownian", "--n", "1k", "--steps", "5", "--threads", "1"]);
+    let hash = |s: &str| s.lines().find(|l| l.contains("hash")).unwrap().to_string();
+    assert_eq!(hash(&out), hash(&out1));
+}
+
+#[test]
+fn artifacts_lists_manifest() {
+    let (out, err, ok) = openrand(&["artifacts"]);
+    assert!(ok, "{err}");
+    assert!(out.contains("brownian_step_16384"));
+    assert!(out.contains("philox_u32_65536"));
+}
+
+#[test]
+fn stats_quick_battery_passes() {
+    let (out, err, ok) = openrand(&["stats", "--generator", "squares", "--words", "64k"]);
+    assert!(ok, "{err}");
+    assert!(out.contains("battery: squares"));
+    assert!(out.contains("0 failures"), "{out}");
+}
