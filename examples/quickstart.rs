@@ -9,7 +9,9 @@
 //! §3.1 walk-through as runnable code.
 
 use openrand::core::{CounterRng, Philox, Rng, Squares, Tyche};
-use openrand::dist::{BoxMuller, Distribution, Exponential, Poisson, Uniform};
+use openrand::dist::{
+    BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform, ZigguratNormal,
+};
 
 fn main() {
     // 1. A generator is just (seed, counter). No global state, no init
@@ -20,7 +22,11 @@ fn main() {
     let (a, b) = rng.draw_double2(); // the paper's draw_double2
     println!("double2  : ({a:.6}, {b:.6})");
 
-    // 2. Distributions compose with any engine.
+    // 2. Distributions compose with any engine. Each sampler consumes a
+    //    documented word pattern from the stream (the contract table in
+    //    `dist`), so distribution draws replay bitwise too. BoxMuller is
+    //    the normative normal: exactly one draw_double2 pair (= one
+    //    Philox counter block) per sample, shared with the device graphs.
     let normal = BoxMuller::standard();
     let expo = Exponential::new(2.0);
     let pois = Poisson::new(4.5);
@@ -29,6 +35,20 @@ fn main() {
     println!("exp(2)   : {:.6}", expo.sample(&mut rng));
     println!("poisson  : {}", pois.sample(&mut rng));
     println!("uniform  : {:.6}", uni.sample(&mut rng));
+
+    // 2b. The ziggurat is the host fast path for normals: ~1 stream word
+    //     per sample against Box-Muller's 4 + ln/sqrt/cos/sin (see
+    //     `cargo bench --bench fig_dist`). Deterministic per stream, but
+    //     variable word consumption — use BoxMuller where host/device
+    //     streams must stay aligned.
+    let zig = ZigguratNormal::standard();
+    println!("ziggurat : {:.6}", zig.sample(&mut rng));
+
+    // 2c. Weighted categorical draws in O(1) per sample via Walker's
+    //     alias method (table built once in O(n)).
+    let loot = DiscreteAlias::new(&[60.0, 30.0, 9.0, 1.0]);
+    let names = ["common", "uncommon", "rare", "legendary"];
+    println!("alias    : {}", names[loot.sample(&mut rng)]);
 
     // 3. The parallel pattern (paper Fig. 1): one stream per logical
     //    entity, derived from the entity's OWN id — reproducible no

@@ -1,0 +1,72 @@
+"""L1 Pallas kernel: standard normals via Box-Muller over Philox words.
+
+The normative normal of the stack (the device side of
+``rust/src/dist/normal.rs::BoxMuller``). Stream discipline, shared with
+`common.py`'s conversion contract and pinned by KATs on both layers:
+
+* normal ``i`` consumes **exactly Philox4x32-10 counter block i** —
+  stream words ``4i..4i+4`` of the stream ``(seed, ctr)``;
+* ``u1 = f64(w0, w1)``, ``u2 = f64(w2, w3)`` (the `draw_double2` pair);
+* ``z_i = sqrt(-2 ln max(u1, 2^-53)) * cos(2π u2)`` — the cosine branch,
+  matching what ``BoxMuller::sample`` returns on the host. The sine
+  branch is intentionally not emitted: keeping one output per counter
+  block is what lets the host re-derive any block independently.
+
+Like the other kernels, the arithmetic is written out inside the
+pallas_call (sharing only the raw Philox rounds with `philox.py`), so
+the pytest parity check against the `ref.py` oracle is a real
+double-implementation test. `interpret=True` for the same reason as the
+rest of L1: the CPU PJRT plugin cannot execute Mosaic custom-calls.
+
+TPU mapping: BLOCK normals per grid step = BLOCK counter blocks; the
+tile is VPU-bound (40 u32 multiplies + one ln/cos pair per 8 output
+bytes), f64 tile footprint BLOCK*8 B = 8 KiB for BLOCK=1024 — far under
+VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import common as cm
+from .philox import BLOCK, _philox4_rounds
+
+U32 = cm.U32
+
+
+def _normal_block_kernel(params_ref, o_ref, *, rounds):
+    # params: (4,) u32 = [seed_lo, seed_hi, ctr, unused]
+    pid = pl.program_id(0).astype(U32)
+    j = pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    k0 = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    k1 = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    c1 = jnp.broadcast_to(params_ref[2], (BLOCK,))
+    z = jnp.zeros((BLOCK,), U32)
+    w0, w1, w2, w3 = _philox4_rounds(j, c1, z, z, k0, k1, rounds)
+    u1 = jnp.maximum(cm.u32x2_to_f64(w0, w1), jnp.float64(2.0**-53))
+    u2 = cm.u32x2_to_f64(w2, w3)
+    r = jnp.sqrt(jnp.float64(-2.0) * jnp.log(u1))
+    o_ref[...] = r * jnp.cos(jnp.float64(2.0 * np.pi) * u2)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "rounds"))
+def normal_block(params, n: int, rounds: int = 10):
+    """First `n` standard normals of the stream described by `params`.
+
+    params: (4,) u32 `[seed_lo, seed_hi, ctr, 0]`; `n` must be a
+    multiple of BLOCK. Consumes stream words 0..4n (one counter block
+    per normal).
+    """
+    assert n % BLOCK == 0, n
+    grid = n // BLOCK
+    return pl.pallas_call(
+        functools.partial(_normal_block_kernel, rounds=rounds),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float64),
+        interpret=True,
+    )(params)

@@ -214,6 +214,38 @@ def tyche_stream_api(seed: int, ctr: int, n: int, inverse: bool = False):
     return out.reshape(-1)[:n]
 
 
+# ---------------------------------------------------------------------------
+# Distribution references (normative conversions; see rust/src/dist/)
+# ---------------------------------------------------------------------------
+
+def box_muller_pair(u1, u2):
+    """Box-Muller on a `draw_double2` pair: (..., ) f64 uniforms ->
+    ((...,) f64, (...,) f64) standard-normal cos/sin branches.
+
+    The exact arithmetic of ``rust/src/dist/normal.rs::BoxMuller`` (and
+    the device graphs): ``u1`` is clamped to 2^-53 before the log, the
+    same guard the Rust side applies.
+    """
+    u1 = jnp.maximum(u1, jnp.float64(2.0**-53))
+    r = jnp.sqrt(jnp.float64(-2.0) * jnp.log(u1))
+    theta = jnp.float64(2.0 * np.pi) * u2
+    return r * jnp.cos(theta), r * jnp.sin(theta)
+
+
+def normal_f64_stream(seed: int, ctr: int, n: int):
+    """First n standard normals of the OpenRAND stream (seed, ctr).
+
+    Normal i consumes exactly Philox counter block i (words 4i..4i+4):
+    u1 = f64(w0, w1), u2 = f64(w2, w3), output = the cosine branch —
+    what ``BoxMuller::sample`` returns on the host and the
+    ``normal_f64_*`` artifacts return on the device.
+    """
+    w = philox4x32_stream(seed, ctr, 4 * n).reshape(n, 4)
+    u1 = cm.u32x2_to_f64(w[:, 0], w[:, 1])
+    u2 = cm.u32x2_to_f64(w[:, 2], w[:, 3])
+    return box_muller_pair(u1, u2)[0]
+
+
 STREAMS = {
     "philox": philox4x32_stream,
     "philox2x32": philox2x32_stream,

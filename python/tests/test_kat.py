@@ -141,3 +141,72 @@ def test_streams_distinct_across_ctr():
     a = np.asarray(ref.philox4x32_stream(1, 0, 64))
     b = np.asarray(ref.philox4x32_stream(1, 1, 64))
     assert (a != b).mean() > 0.9
+
+
+# ---------------------------------------------------------------------------
+# Normal (Box-Muller) KATs — shared verbatim with the Rust side
+# (rust/src/dist/normal.rs::tests::box_muller_kat_*). Values computed by
+# a plain-python transcription of the normative pipeline: Philox block i
+# -> (u1, u2) f64 pair -> sqrt(-2 ln max(u1, 2^-53)) * {cos, sin}(2π u2).
+# ---------------------------------------------------------------------------
+
+# Stream (seed=7, ctr=1): the pair the normal_f64_32768 device graph and
+# cross_layer.rs::normal_graph_matches_box_muller_shape exercise.
+NORMAL_KAT_SEED7_CTR1 = [
+    1.7940642507332762,
+    -1.3802003915778076,
+    0.8571078589741805,
+    0.16486889524918932,
+]
+# Stream (seed=42, ctr=0), cos branch.
+NORMAL_KAT_SEED42_CTR0 = [0.8864975059014412, -0.15660962291201797]
+
+
+def test_normal_stream_kat_seed7_ctr1():
+    got = np.asarray(ref.normal_f64_stream(7, 1, 4))
+    np.testing.assert_allclose(got, NORMAL_KAT_SEED7_CTR1, rtol=1e-12, atol=0)
+
+
+def test_normal_stream_kat_seed42_ctr0():
+    got = np.asarray(ref.normal_f64_stream(42, 0, 2))
+    np.testing.assert_allclose(got, NORMAL_KAT_SEED42_CTR0, rtol=1e-12, atol=0)
+
+
+def test_box_muller_kat_plain_python():
+    """Independent check: the jnp box_muller_pair vs a from-scratch
+    python-float transcription driven off the pinned Philox words."""
+    import math
+
+    words = [int(w) for w in np.asarray(ref.philox4x32_stream(7, 1, 16))]
+    want_cos, want_sin = [], []
+    for i in range(4):
+        w0, w1, w2, w3 = words[4 * i : 4 * i + 4]
+        u1 = (((w0 << 32) | w1) >> 11) * 2.0**-53
+        u2 = (((w2 << 32) | w3) >> 11) * 2.0**-53
+        u1 = max(u1, 2.0**-53)
+        r = math.sqrt(-2.0 * math.log(u1))
+        want_cos.append(r * math.cos(2.0 * math.pi * u2))
+        want_sin.append(r * math.sin(2.0 * math.pi * u2))
+    w = np.asarray(ref.philox4x32_stream(7, 1, 16)).reshape(4, 4)
+    u1 = cm.u32x2_to_f64(jnp.asarray(w[:, 0], U32), jnp.asarray(w[:, 1], U32))
+    u2 = cm.u32x2_to_f64(jnp.asarray(w[:, 2], U32), jnp.asarray(w[:, 3], U32))
+    zc, zs = ref.box_muller_pair(u1, u2)
+    np.testing.assert_allclose(np.asarray(zc), want_cos, rtol=1e-12)
+    np.testing.assert_allclose(np.asarray(zs), want_sin, rtol=1e-12)
+
+
+def test_normal_stream_word_discipline():
+    """Normal i must consume exactly counter block i: recomputing any
+    single block's normal from its 4 words reproduces stream position i."""
+    n = 8
+    stream = np.asarray(ref.normal_f64_stream(0xDEADBEEF, 3, n))
+    words = np.asarray(ref.philox4x32_stream(0xDEADBEEF, 3, 4 * n)).reshape(n, 4)
+    for i in (0, 3, 7):
+        u1 = cm.u32x2_to_f64(
+            jnp.asarray(words[i : i + 1, 0], U32), jnp.asarray(words[i : i + 1, 1], U32)
+        )
+        u2 = cm.u32x2_to_f64(
+            jnp.asarray(words[i : i + 1, 2], U32), jnp.asarray(words[i : i + 1, 3], U32)
+        )
+        z = np.asarray(ref.box_muller_pair(u1, u2)[0])[0]
+        assert z == stream[i], (i, z, stream[i])

@@ -8,10 +8,30 @@ L1 correctness signal required before anything is lowered to artifacts.
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ModuleNotFoundError:
+    # Offline container without hypothesis: the @given sweeps become
+    # skips; the fixed-case tests below still run.
+    class _StrategyStub:
+        def __getattr__(self, _name):
+            return lambda *a, **kw: None
+
+    st = _StrategyStub()
+
+    def settings(**_kw):
+        return lambda fn: fn
+
+    def given(**_kw):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+
+        return deco
 
 from compile.kernels import common as cm
+from compile.kernels import normal as knormal
 from compile.kernels import philox as kphilox
 from compile.kernels import ref
 from compile.kernels import squares as ksquares
@@ -134,6 +154,38 @@ def test_hypothesis_determinism(seed):
     a = np.asarray(kphilox.philox4x32_block(params4(seed, 0), 4 * BLOCK))
     b = np.asarray(kphilox.philox4x32_block(params4(seed, 0), 4 * BLOCK))
     np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed,ctr", [(0, 0), (7, 1), (42, 0), (0xDEADBEEF12345678, 3)])
+def test_normal_kernel_matches_oracle(seed, ctr):
+    """The Pallas Box-Muller kernel vs the ref.py oracle — the same
+    double-implementation discipline as the u32 kernels. Both sides run
+    identical jnp ops in float64, so the comparison is bitwise."""
+    n = 2 * BLOCK  # two grid tiles -> exercises the BlockSpec index map
+    got = np.asarray(knormal.normal_block(params4(seed, ctr), n))
+    want = np.asarray(ref.normal_f64_stream(seed, ctr, n))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_normal_kernel_matches_model_graph():
+    """The L1 kernel and the L2 graph (model.normal_f64_block — what the
+    normal_f64_* artifacts are lowered from) must agree on the same
+    params: same stream discipline on both layers."""
+    from compile import model
+
+    n = BLOCK
+    p = params4(7, 1)
+    got = np.asarray(knormal.normal_block(p, n))
+    want = np.asarray(model.normal_f64_block(p, n))
+    np.testing.assert_allclose(got, want, rtol=1e-15, atol=0)
+
+
+def test_normal_kernel_finite_and_standard():
+    n = 4 * BLOCK
+    z = np.asarray(knormal.normal_block(params4(123, 5), n))
+    assert np.isfinite(z).all()
+    assert abs(z.mean()) < 6.0 / np.sqrt(n)
+    assert abs(z.var() - 1.0) < 6.0 * np.sqrt(2.0 / n)
 
 
 def test_uniform_conversion_bounds():

@@ -1,0 +1,153 @@
+//! E7 — distribution-sampling throughput: Box–Muller (normative,
+//! device-aligned) vs the ziggurat fast path vs the raw-uniform
+//! baseline, across engines.
+//!
+//! The claim under test: the ziggurat's ~1-word fast path beats
+//! Box–Muller's 4 words + `ln`/`sqrt`/`cos`/`sin` per sample, while the
+//! distribution layer as a whole stays within a small factor of raw
+//! `draw_double` throughput.
+//!
+//! ```bash
+//! cargo bench --bench fig_dist          # full
+//! OPENRAND_BENCH_QUICK=1 cargo bench --bench fig_dist
+//! ```
+
+use openrand::bench::harness::black_box;
+use openrand::bench::{Bencher, Series};
+use openrand::core::{CounterRng, Philox, Rng, Squares, Tyche};
+use openrand::dist::{
+    BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, ZigguratNormal,
+};
+
+const SAMPLES_PER_ITER: usize = 4096;
+
+/// ns per sample for `f` run over a fresh stream each iteration.
+/// `samples_per_call` is how many samples one `f` call yields (2 for
+/// the pair-amortized Box–Muller row).
+fn bench_sampler<R: Rng>(
+    b: &Bencher,
+    name: &str,
+    samples_per_call: u64,
+    mut make: impl FnMut(u64) -> R,
+    mut f: impl FnMut(&mut R) -> f64,
+) -> f64 {
+    let mut seed = 1u64;
+    let r = b.run(name, SAMPLES_PER_ITER as u64 * samples_per_call, || {
+        seed = seed.wrapping_add(1);
+        let mut rng = make(seed);
+        let mut acc = 0.0f64;
+        for _ in 0..SAMPLES_PER_ITER {
+            acc += f(&mut rng);
+        }
+        black_box(acc);
+    });
+    eprintln!("  {}", r.summary());
+    r.median_ns / (SAMPLES_PER_ITER as u64 * samples_per_call) as f64
+}
+
+fn engine_column<R: CounterRng>(b: &Bencher, engine: &str) -> Vec<f64> {
+    let bm = BoxMuller::standard();
+    let zig = ZigguratNormal::standard();
+    let expo = Exponential::new(1.7);
+    let pois_small = Poisson::new(4.5);
+    let pois_large = Poisson::new(40.0);
+    let alias = DiscreteAlias::new(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+    vec![
+        bench_sampler(b, &format!("{engine}/draw_double"), 1, |s| R::new(s, 0), |r| {
+            r.draw_double()
+        }),
+        bench_sampler(b, &format!("{engine}/box_muller"), 1, |s| R::new(s, 0), |r| bm.sample(r)),
+        bench_sampler(
+            b,
+            &format!("{engine}/box_muller_pair"),
+            2, // each call yields both branches of the pair
+            |s| R::new(s, 0),
+            |r| {
+                let (a, z) = bm.sample_pair(r);
+                (a + z) * 0.5
+            },
+        ),
+        bench_sampler(b, &format!("{engine}/ziggurat"), 1, |s| R::new(s, 0), |r| zig.sample(r)),
+        bench_sampler(b, &format!("{engine}/exponential"), 1, |s| R::new(s, 0), |r| {
+            expo.sample(r)
+        }),
+        bench_sampler(
+            b,
+            &format!("{engine}/poisson_knuth"),
+            1,
+            |s| R::new(s, 0),
+            |r| pois_small.sample(r) as f64,
+        ),
+        bench_sampler(
+            b,
+            &format!("{engine}/poisson_ptrs"),
+            1,
+            |s| R::new(s, 0),
+            |r| pois_large.sample(r) as f64,
+        ),
+        bench_sampler(
+            b,
+            &format!("{engine}/alias8"),
+            1,
+            |s| R::new(s, 0),
+            |r| alias.sample(r) as f64,
+        ),
+    ]
+}
+
+const ROWS: [&str; 8] = [
+    "draw_double",
+    "box_muller",
+    "box_muller_pair",
+    "ziggurat",
+    "exponential",
+    "poisson_knuth",
+    "poisson_ptrs",
+    "alias8",
+];
+
+fn main() {
+    let b = Bencher::from_env();
+    eprintln!("fig_dist: ns/sample for distribution draws (fresh stream per iteration)");
+
+    let mut fig = Series::new(
+        "Fig D — distribution sampling",
+        "sampler",
+        "ns_per_sample",
+        (0..ROWS.len()).map(|i| i as f64).collect(),
+    );
+    for (i, name) in ROWS.iter().enumerate() {
+        eprintln!("  row {i} = {name}");
+    }
+
+    let philox = engine_column::<Philox>(&b, "philox");
+    let squares = engine_column::<Squares>(&b, "squares");
+    let tyche = engine_column::<Tyche>(&b, "tyche");
+    fig.push("philox", philox.clone());
+    fig.push("squares", squares);
+    fig.push("tyche", tyche);
+    println!("{}", fig.render(|y| format!("{y:.2}")));
+
+    // The headline shape, asserted like fig4a does: the ziggurat must
+    // beat the normative Box–Muller per standard-normal sample.
+    let bm_ns = philox[1];
+    let zig_ns = philox[3];
+    let speedup = bm_ns / zig_ns;
+    println!(
+        "shape check: ziggurat vs box_muller on philox: {speedup:.2}x {}",
+        if speedup > 1.0 { "(fast path wins — OK)" } else { "(UNEXPECTED)" }
+    );
+    // And the pair-amortized Box–Muller must beat the single-branch
+    // form per sample (same work per call, two samples kept instead of
+    // one — expect ~2x).
+    let pair_ns = philox[2];
+    println!(
+        "shape check: box_muller pair-amortized {:.2}x single {}",
+        bm_ns / pair_ns,
+        if bm_ns / pair_ns > 1.5 { "(both branches kept — OK)" } else { "(UNEXPECTED)" }
+    );
+    assert!(
+        speedup > 1.0,
+        "ziggurat ({zig_ns:.1} ns) must outperform Box–Muller ({bm_ns:.1} ns)"
+    );
+}

@@ -1,0 +1,269 @@
+//! Discrete distributions: Bernoulli, Binomial, and Walker's alias
+//! method for arbitrary weighted categorical draws.
+
+use super::Distribution;
+use crate::core::traits::Rng;
+
+/// Bernoulli(p): `true` with probability `p`.
+///
+/// Words consumed per sample: 2 (one `draw_double` compared against p).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bernoulli {
+    p: f64,
+}
+
+impl Bernoulli {
+    /// Requires `0 ≤ p ≤ 1`.
+    pub fn new(p: f64) -> Bernoulli {
+        assert!((0.0..=1.0).contains(&p), "bad Bernoulli(p = {p})");
+        Bernoulli { p }
+    }
+
+    pub fn p(&self) -> f64 {
+        self.p
+    }
+}
+
+impl Distribution<bool> for Bernoulli {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> bool {
+        rng.draw_double() < self.p
+    }
+}
+
+/// Binomial(n, p) as n sequential Bernoulli trials.
+///
+/// Words consumed per sample: exactly `2·n` — fixed, which keeps this
+/// sampler stream-alignable (the contract table in [`super`]). The
+/// O(n) cost is the price; for large-n hot paths prefer a normal
+/// approximation at the call site.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Binomial {
+    n: u32,
+    bern: Bernoulli,
+}
+
+impl Binomial {
+    pub fn new(n: u32, p: f64) -> Binomial {
+        Binomial { n, bern: Bernoulli::new(p) }
+    }
+
+    pub fn trials(&self) -> u32 {
+        self.n
+    }
+
+    pub fn p(&self) -> f64 {
+        self.bern.p()
+    }
+}
+
+impl Distribution<u64> for Binomial {
+    fn sample(&self, rng: &mut dyn Rng) -> u64 {
+        let mut k = 0u64;
+        for _ in 0..self.n {
+            k += self.bern.sample(rng) as u64;
+        }
+        k
+    }
+}
+
+/// Weighted categorical sampling in O(1) per draw via Walker's alias
+/// method (Vose's stable construction).
+///
+/// `new` preprocesses arbitrary non-negative weights into a probability
+/// table + alias table in O(n); each sample then costs one bounded
+/// integer draw (`range_u32`, Lemire — 1 word plus rare rejections) and
+/// one `draw_double` (2 words), regardless of how many categories exist.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiscreteAlias {
+    /// Acceptance probability of column i's own index.
+    prob: Vec<f64>,
+    /// Donor index used when column i rejects.
+    alias: Vec<u32>,
+}
+
+impl DiscreteAlias {
+    /// Build the alias table. Requires at least one weight, all finite
+    /// and non-negative, with a positive sum.
+    pub fn new(weights: &[f64]) -> DiscreteAlias {
+        assert!(!weights.is_empty(), "alias table needs at least one weight");
+        assert!(
+            weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "weights must be finite and non-negative: {weights:?}"
+        );
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "weights must not all be zero");
+        let n = weights.len();
+        // Vose: split columns into under-full ("small") and over-full
+        // ("large"), then pair each small column with a large donor.
+        let mut scaled: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut prob = vec![0.0f64; n];
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<usize> = (0..n).filter(|&i| scaled[i] < 1.0).collect();
+        let mut large: Vec<usize> = (0..n).filter(|&i| scaled[i] >= 1.0).collect();
+        loop {
+            let (Some(s), Some(l)) = (small.last().copied(), large.last().copied()) else {
+                break;
+            };
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l as u32;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Whatever remains (numerically ~1.0) accepts its own index.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+        }
+        DiscreteAlias { prob, alias }
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+impl Distribution<usize> for DiscreteAlias {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> usize {
+        let i = rng.range_u32(self.prob.len() as u32) as usize;
+        if rng.draw_double() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Squares};
+
+    #[test]
+    fn bernoulli_frequency() {
+        for p in [0.0, 0.1, 0.5, 0.93, 1.0] {
+            let d = Bernoulli::new(p);
+            let mut rng = Philox::new(0xBE2, 0);
+            let n = 100_000;
+            let hits = (0..n).filter(|_| d.sample(&mut rng)).count();
+            let freq = hits as f64 / n as f64;
+            // 6σ band around p (degenerate p gives exact 0/1).
+            let tol = 6.0 * (p * (1.0 - p) / n as f64).sqrt() + 1e-12;
+            assert!((freq - p).abs() <= tol, "p={p}: freq {freq}");
+        }
+    }
+
+    #[test]
+    fn binomial_moments_and_range() {
+        let d = Binomial::new(20, 0.3);
+        let mut rng = Philox::new(0xB10, 1);
+        let n = 50_000;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for _ in 0..n {
+            let k = d.sample(&mut rng);
+            assert!(k <= 20);
+            sum += k as f64;
+            sumsq += (k * k) as f64;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        assert!((mean - 6.0).abs() < 0.06, "mean {mean}");
+        assert!((var - 4.2).abs() < 0.2, "var {var}");
+    }
+
+    #[test]
+    fn binomial_consumes_2n_words() {
+        let d = Binomial::new(13, 0.5);
+        let mut a = Philox::new(5, 5);
+        let mut b = Philox::new(5, 5);
+        let _ = d.sample(&mut a);
+        for _ in 0..13 {
+            let _ = b.draw_double();
+        }
+        assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn alias_matches_weights() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let d = DiscreteAlias::new(&weights);
+        let mut rng = Philox::new(0xA11A5, 0);
+        let n = 200_000usize;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[d.sample(&mut rng)] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let want = weights[i] / 10.0;
+            let got = c as f64 / n as f64;
+            let tol = 6.0 * (want * (1.0 - want) / n as f64).sqrt();
+            assert!((got - want).abs() < tol, "category {i}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn alias_handles_extreme_weights() {
+        // One dominant category plus near-zero ones must not lose mass.
+        let d = DiscreteAlias::new(&[1e-9, 1.0, 1e-9]);
+        let mut rng = Squares::new(1, 1);
+        let picks = (0..10_000).filter(|_| d.sample(&mut rng) == 1).count();
+        assert!(picks > 9_990, "{picks}");
+        // Zero-weight categories are never drawn.
+        let z = DiscreteAlias::new(&[0.0, 1.0]);
+        let mut rng = Squares::new(2, 2);
+        assert!((0..10_000).all(|_| z.sample(&mut rng) == 1));
+    }
+
+    #[test]
+    fn alias_single_category() {
+        let d = DiscreteAlias::new(&[42.0]);
+        let mut rng = Philox::new(0, 0);
+        for _ in 0..32 {
+            assert_eq!(d.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn alias_uniform_weights_accept_everywhere() {
+        // Equal weights scale to exactly 1.0 per column: every column
+        // accepts itself and the alias table is never consulted.
+        let d = DiscreteAlias::new(&[2.5; 8]);
+        assert!(d.prob.iter().all(|&p| p == 1.0));
+    }
+
+    #[test]
+    fn deterministic_per_stream() {
+        let d = DiscreteAlias::new(&[0.2, 0.5, 0.3]);
+        let a: Vec<usize> = {
+            let mut r = Philox::new(11, 4);
+            (0..256).map(|_| d.sample(&mut r)).collect()
+        };
+        let b: Vec<usize> = {
+            let mut r = Philox::new(11, 4);
+            (0..256).map(|_| d.sample(&mut r)).collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic]
+    fn alias_rejects_all_zero() {
+        let _ = DiscreteAlias::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn bernoulli_rejects_out_of_range() {
+        let _ = Bernoulli::new(1.5);
+    }
+}

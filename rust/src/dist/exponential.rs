@@ -1,0 +1,97 @@
+//! Exponential distribution by inversion.
+
+use super::Distribution;
+use crate::core::traits::Rng;
+
+/// Exponential with rate `lambda` (mean `1/lambda`), sampled by CDF
+/// inversion: `x = -ln(1 - u) / λ`.
+///
+/// Words consumed per sample: exactly 2 (one `draw_double`). Inversion
+/// is chosen over rejection so consumption is fixed — this sampler is
+/// safe to interleave with device-aligned streams (see the contract
+/// table in [`super`]). `1 - u` maps the `[0, 1)` draw onto `(0, 1]`,
+/// so the logarithm never sees zero.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Exponential {
+    lambda: f64,
+}
+
+impl Exponential {
+    /// Rate parameterization. Requires `lambda > 0` and finite.
+    pub fn new(lambda: f64) -> Exponential {
+        assert!(lambda.is_finite() && lambda > 0.0, "bad Exp(λ = {lambda})");
+        Exponential { lambda }
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+}
+
+impl Distribution<f64> for Exponential {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> f64 {
+        -(1.0 - rng.draw_double()).ln() / self.lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Threefry};
+
+    #[test]
+    fn nonnegative_and_finite() {
+        let d = Exponential::new(0.25);
+        let mut rng = Philox::new(8, 8);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!(x >= 0.0 && x.is_finite(), "{x}");
+        }
+    }
+
+    #[test]
+    fn consumes_exactly_one_double() {
+        let d = Exponential::new(3.0);
+        let mut a = Threefry::new(1, 1);
+        let mut b = Threefry::new(1, 1);
+        for _ in 0..16 {
+            let _ = d.sample(&mut a);
+            let _ = b.draw_double();
+        }
+        assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn mean_is_inverse_rate() {
+        for lambda in [0.5, 2.0, 10.0] {
+            let d = Exponential::new(lambda);
+            let mut rng = Philox::new(0xE4B, 1);
+            let n = 100_000;
+            let mean = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+            // sd of the sample mean is (1/λ)/sqrt(n); allow 6σ.
+            let tol = 6.0 / (lambda * (n as f64).sqrt());
+            assert!((mean - 1.0 / lambda).abs() < tol, "λ={lambda}: mean {mean}");
+        }
+    }
+
+    #[test]
+    fn rate_scales_samples_exactly() {
+        // Inversion makes Exp(λ) = Exp(1)/λ bitwise up to the division.
+        let e1 = Exponential::new(1.0);
+        let e4 = Exponential::new(4.0);
+        let mut a = Philox::new(2, 2);
+        let mut b = Philox::new(2, 2);
+        for _ in 0..32 {
+            let x1 = e1.sample(&mut a);
+            let x4 = e4.sample(&mut b);
+            assert_eq!((x1 / 4.0).to_bits(), x4.to_bits());
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_rate() {
+        let _ = Exponential::new(0.0);
+    }
+}

@@ -1,0 +1,141 @@
+//! Distribution sampling on top of the counter-based draw API.
+//!
+//! This is the layer where cross-platform reproducibility is usually
+//! lost (Randompack builds an entire library around exactly this
+//! problem; PRAND ships distribution layers atop its parallel engines).
+//! OpenRAND's answer is the same discipline the raw streams follow:
+//! every sampler consumes a **documented, fixed word pattern** from the
+//! underlying stream, so `(seed, ctr)` identifies the sample sequence
+//! bitwise — on any thread, any platform, and (for the normative
+//! Box–Muller path) on the device graphs too.
+//!
+//! ## The word-consumption contract (normative)
+//!
+//! Mirrors the conversion notes in `core/traits.rs`; the build-time
+//! layer (`python/compile/kernels/normal.py` and `model.py`) implements
+//! the same discipline for the device.
+//!
+//! | sampler                        | stream words consumed per sample |
+//! |--------------------------------|----------------------------------|
+//! | [`Uniform`]                    | 2 (one `draw_double`)            |
+//! | [`BoxMuller`] `sample`/`sample_pair` | 4 (one `draw_double2`; with Philox, exactly one counter block) |
+//! | [`ZigguratNormal`]             | 1 + variable (rejection; ~1.02 expected) |
+//! | [`Exponential`]                | 2 (one `draw_double`, inversion) |
+//! | [`Poisson`] (λ < 10, Knuth)    | 2·(k+1) for a sample of value k  |
+//! | [`Poisson`] (λ ≥ 10, PTRS)     | 4 per attempt, variable          |
+//! | [`Bernoulli`]                  | 2                                |
+//! | [`Binomial`]                   | 2·n (n Bernoulli trials)         |
+//! | [`DiscreteAlias`]              | 1 (+ rare Lemire rejection) + 2  |
+//!
+//! "Variable" samplers are still **counter-stream-deterministic**: the
+//! number of words consumed is a pure function of the stream contents,
+//! so the same `(seed, ctr)` always yields the same samples and leaves
+//! the stream at the same position. What variable consumption does cost
+//! is *cross-sampler* alignment: if device and host must agree bitwise,
+//! use the fixed-pattern samplers ([`BoxMuller`], [`Uniform`],
+//! [`Exponential`]) — that is why Box–Muller, not the ziggurat, is the
+//! normative normal shared with the AOT graphs
+//! (`normal_f64_*` artifacts, checked by `tests/cross_layer.rs`).
+//!
+//! ## Quick start
+//!
+//! ```
+//! use openrand::core::{CounterRng, Philox};
+//! use openrand::dist::{BoxMuller, Distribution, Poisson};
+//! let mut rng = Philox::new(42, 0);
+//! let z = BoxMuller::standard().sample(&mut rng);   // N(0,1)
+//! let k = Poisson::new(4.5).sample(&mut rng);       // counts
+//! assert!(z.is_finite());
+//! assert!(k < 100);
+//! ```
+
+pub mod discrete;
+pub mod exponential;
+pub mod normal;
+pub mod poisson;
+pub mod uniform;
+
+pub use discrete::{Bernoulli, Binomial, DiscreteAlias};
+pub use exponential::Exponential;
+pub use normal::{BoxMuller, ZigguratNormal};
+pub use poisson::Poisson;
+pub use uniform::Uniform;
+
+use crate::core::traits::Rng;
+
+/// A distribution that can be sampled from any OpenRAND engine.
+///
+/// Object-safe by design: the CLI streams continuous families through
+/// boxed `Distribution<f64>` trait objects, and the `&mut dyn Rng`
+/// parameter accepts any concrete engine by unsized coercion. Hot
+/// paths that need monomorphization use the samplers' inherent generic
+/// methods (e.g. [`BoxMuller::sample_pair`]) instead.
+pub trait Distribution<T> {
+    /// Draw one sample, advancing the stream per the module-level
+    /// word-consumption contract.
+    fn sample(&self, rng: &mut dyn Rng) -> T;
+
+    /// Fill a slice with samples (identical to repeated [`sample`]
+    /// calls — the contract makes this equivalence testable).
+    ///
+    /// [`sample`]: Distribution::sample
+    fn fill(&self, rng: &mut dyn Rng, out: &mut [T]) {
+        for slot in out.iter_mut() {
+            *slot = self.sample(rng);
+        }
+    }
+
+    /// Collect `n` samples.
+    fn sample_n(&self, rng: &mut dyn Rng, n: usize) -> Vec<T>
+    where
+        T: Default + Clone,
+    {
+        let mut out = vec![T::default(); n];
+        self.fill(rng, &mut out);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox};
+
+    #[test]
+    fn trait_is_object_safe_and_dispatches() {
+        let dists: Vec<Box<dyn Distribution<f64>>> = vec![
+            Box::new(Uniform::new(0.0, 1.0)),
+            Box::new(BoxMuller::standard()),
+            Box::new(ZigguratNormal::standard()),
+            Box::new(Exponential::new(1.0)),
+        ];
+        let mut rng = Philox::new(9, 9);
+        for d in &dists {
+            assert!(d.sample(&mut rng).is_finite());
+        }
+    }
+
+    #[test]
+    fn fill_matches_repeated_sample() {
+        let d = BoxMuller::standard();
+        let mut a = Philox::new(3, 1);
+        let mut b = Philox::new(3, 1);
+        let mut buf = [0.0f64; 17];
+        d.fill(&mut a, &mut buf);
+        for (i, &v) in buf.iter().enumerate() {
+            assert_eq!(v.to_bits(), d.sample(&mut b).to_bits(), "sample {i}");
+        }
+        // Streams left at the same position.
+        assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn sample_n_length_and_determinism() {
+        let d = Exponential::new(2.0);
+        let xs = d.sample_n(&mut Philox::new(1, 2), 64);
+        let ys = d.sample_n(&mut Philox::new(1, 2), 64);
+        assert_eq!(xs.len(), 64);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&xs), bits(&ys));
+    }
+}

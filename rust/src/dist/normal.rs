@@ -1,0 +1,364 @@
+//! Normal (Gaussian) sampling: the normative Box–Muller transform and
+//! the Marsaglia–Tsang ziggurat fast path.
+//!
+//! [`BoxMuller`] is the **normative** normal: it consumes exactly one
+//! `draw_double2` pair (with Philox, exactly one 4-word counter block)
+//! per sample, which keeps it bit-compatible with the AOT device graphs
+//! (`normal_f64_*`, lowered from `python/compile/kernels/normal.py` /
+//! `model.py::normal_f64_block` — `tests/cross_layer.rs` holds the two
+//! sides together). Pinned KAT vectors below are shared verbatim with
+//! `python/tests/test_kat.py`.
+//!
+//! [`ZigguratNormal`] is the host fast path: ~1 stream word per sample
+//! on the ~98% fast path versus Box–Muller's 4 words + `ln`/`sqrt`/
+//! `cos`/`sin` (`cargo bench --bench fig_dist` quantifies the gap). Its
+//! rejection loop makes word consumption data-dependent, so it is
+//! deterministic per `(seed, ctr)` but **not** device-graph-aligned —
+//! see the contract table in [`super`].
+
+use super::Distribution;
+use crate::core::traits::Rng;
+use std::sync::OnceLock;
+
+/// Smallest positive `draw_double` step; substituted for an exact 0.0
+/// draw before `ln` (same guard as the device graph).
+const MIN_POS: f64 = 1.0 / (1u64 << 53) as f64;
+
+/// Normal via the Box–Muller transform (polar-free, trig form).
+///
+/// Words consumed per `sample`/`sample_pair`: exactly 4 (one
+/// `draw_double2`). `sample` returns the cosine branch — the value the
+/// device graph emits; `sample_pair` returns (cos, sin) branches.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BoxMuller {
+    mean: f64,
+    sigma: f64,
+}
+
+impl BoxMuller {
+    /// Standard normal N(0, 1).
+    pub fn standard() -> BoxMuller {
+        BoxMuller { mean: 0.0, sigma: 1.0 }
+    }
+
+    /// N(mean, sigma²). Requires `sigma > 0`.
+    pub fn new(mean: f64, sigma: f64) -> BoxMuller {
+        assert!(mean.is_finite() && sigma.is_finite() && sigma > 0.0, "bad N({mean}, {sigma}²)");
+        BoxMuller { mean, sigma }
+    }
+
+    /// Two independent normals from one `draw_double2` pair:
+    /// `r = sqrt(-2 ln u1)`, `θ = 2π u2`, returning
+    /// `(mean + σ·r·cos θ, mean + σ·r·sin θ)`.
+    ///
+    /// Monomorphizing (`R: Rng`) hot-path form; the trait's `sample`
+    /// takes the cosine branch of one pair.
+    #[inline]
+    pub fn sample_pair<R: Rng + ?Sized>(&self, rng: &mut R) -> (f64, f64) {
+        let (u1, u2) = rng.draw_double2();
+        let u1 = u1.max(MIN_POS);
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = std::f64::consts::TAU * u2;
+        (
+            self.mean + self.sigma * (r * theta.cos()),
+            self.mean + self.sigma * (r * theta.sin()),
+        )
+    }
+}
+
+impl Distribution<f64> for BoxMuller {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> f64 {
+        self.sample_pair(rng).0
+    }
+}
+
+/// The ziggurat tables (Marsaglia & Tsang 2000, 128 strips).
+struct ZigTables {
+    /// Strip acceptance thresholds, scaled to i32 range.
+    kn: [u32; 128],
+    /// Strip widths, scaled so `hz as f64 * wn[iz]` is the candidate x.
+    wn: [f64; 128],
+    /// Density values at the strip boundaries.
+    fn_: [f64; 128],
+}
+
+/// Right edge of the base strip (the tail cutoff r).
+const ZIG_R: f64 = 3.442619855899;
+/// Area of each strip.
+const ZIG_V: f64 = 9.91256303526217e-3;
+
+fn tables() -> &'static ZigTables {
+    static TABLES: OnceLock<ZigTables> = OnceLock::new();
+    TABLES.get_or_init(|| {
+        let m1 = 2147483648.0f64; // 2^31: i32 draws map onto [-m1, m1)
+        let mut dn = ZIG_R;
+        let mut tn = dn;
+        let q = ZIG_V / (-0.5 * dn * dn).exp();
+        let mut kn = [0u32; 128];
+        let mut wn = [0.0f64; 128];
+        let mut fn_ = [0.0f64; 128];
+        kn[0] = ((dn / q) * m1) as u32;
+        kn[1] = 0;
+        wn[0] = q / m1;
+        wn[127] = dn / m1;
+        fn_[0] = 1.0;
+        fn_[127] = (-0.5 * dn * dn).exp();
+        for i in (1..=126usize).rev() {
+            dn = (-2.0 * (ZIG_V / dn + (-0.5 * dn * dn).exp()).ln()).sqrt();
+            kn[i + 1] = ((dn / tn) * m1) as u32;
+            tn = dn;
+            fn_[i] = (-0.5 * dn * dn).exp();
+            wn[i] = dn / m1;
+        }
+        ZigTables { kn, wn, fn_ }
+    })
+}
+
+/// Normal via the 128-strip ziggurat (Marsaglia & Tsang 2000).
+///
+/// Words consumed per sample: 1 on the fast path (~98% of draws); each
+/// rejection round costs 2 more (one `draw_double`) plus occasionally a
+/// fresh 1-word candidate; the base-strip tail costs 4 per tail round.
+/// Counter-stream-deterministic, not device-graph-aligned.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ZigguratNormal {
+    mean: f64,
+    sigma: f64,
+}
+
+impl ZigguratNormal {
+    /// Standard normal N(0, 1).
+    pub fn standard() -> ZigguratNormal {
+        ZigguratNormal { mean: 0.0, sigma: 1.0 }
+    }
+
+    /// N(mean, sigma²). Requires `sigma > 0`.
+    pub fn new(mean: f64, sigma: f64) -> ZigguratNormal {
+        assert!(mean.is_finite() && sigma.is_finite() && sigma > 0.0, "bad N({mean}, {sigma}²)");
+        ZigguratNormal { mean, sigma }
+    }
+
+    /// One standard-normal draw (monomorphizing hot path).
+    #[inline]
+    pub fn sample_std<R: Rng + ?Sized>(&self, rng: &mut R) -> f64 {
+        let t = tables();
+        let mut hz = rng.next_u32() as i32;
+        loop {
+            let iz = (hz & 127) as usize;
+            if (hz.unsigned_abs() as u64) < t.kn[iz] as u64 {
+                // Fast path: the candidate lies strictly inside strip iz.
+                return hz as f64 * t.wn[iz];
+            }
+            // Slow path (Marsaglia–Tsang "nfix").
+            let x = hz as f64 * t.wn[iz];
+            if iz == 0 {
+                // Base strip: sample the tail x > r by Marsaglia's
+                // exponential-majorant method.
+                loop {
+                    let xt = -(rng.draw_double().max(MIN_POS)).ln() * (1.0 / ZIG_R);
+                    let yt = -(rng.draw_double().max(MIN_POS)).ln();
+                    if yt + yt >= xt * xt {
+                        return if hz > 0 { ZIG_R + xt } else { -(ZIG_R + xt) };
+                    }
+                }
+            }
+            if t.fn_[iz] + rng.draw_double() * (t.fn_[iz - 1] - t.fn_[iz]) < (-0.5 * x * x).exp() {
+                return x;
+            }
+            hz = rng.next_u32() as i32;
+        }
+    }
+}
+
+impl Distribution<f64> for ZigguratNormal {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> f64 {
+        self.mean + self.sigma * self.sample_std(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Squares};
+
+    fn rel_close(a: f64, b: f64, tol: f64) {
+        assert!((a - b).abs() <= tol * b.abs().max(1.0), "{a} vs {b}");
+    }
+
+    /// KAT: pinned against the plain-python transcription in
+    /// `python/tests/test_kat.py::test_box_muller_kat` — identical
+    /// constants on both sides. Stream (seed=7, ctr=1), the pair used by
+    /// the `normal_f64_32768` device graph.
+    #[test]
+    fn box_muller_kat_seed7_ctr1() {
+        let bm = BoxMuller::standard();
+        let mut rng = Philox::new(7, 1);
+        let want = [
+            (1.7940642507332762, -0.42571280804811),
+            (-1.3802003915778076, 0.9859339489835747),
+            (0.8571078589741805, -0.6694835432076371),
+            (0.16486889524918932, -1.9207164773300667),
+        ];
+        for (z0, z1) in want {
+            let (a, b) = bm.sample_pair(&mut rng);
+            rel_close(a, z0, 1e-12);
+            rel_close(b, z1, 1e-12);
+        }
+    }
+
+    #[test]
+    fn box_muller_kat_seed42_ctr0() {
+        let bm = BoxMuller::standard();
+        let mut rng = Philox::new(42, 0);
+        let want = [
+            (0.8864975059014412, 0.43935606943792666),
+            (-0.15660962291201797, -0.01371867883021048),
+        ];
+        for (z0, z1) in want {
+            let (a, b) = bm.sample_pair(&mut rng);
+            rel_close(a, z0, 1e-12);
+            rel_close(b, z1, 1e-12);
+        }
+    }
+
+    #[test]
+    fn box_muller_consumes_exactly_one_block() {
+        // sample == first f64-pair transform of the next counter block:
+        // 4 words per call, no internal caching.
+        let bm = BoxMuller::standard();
+        let mut a = Philox::new(123, 9);
+        let mut b = Philox::new(123, 9);
+        for _ in 0..8 {
+            let _ = bm.sample(&mut a);
+            b.draw_double2();
+        }
+        assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn box_muller_mean_sigma_affine() {
+        let std = BoxMuller::standard();
+        let scaled = BoxMuller::new(10.0, 2.0);
+        let mut a = Philox::new(4, 4);
+        let mut b = Philox::new(4, 4);
+        for _ in 0..32 {
+            let z = std.sample(&mut a);
+            let x = scaled.sample(&mut b);
+            rel_close(x, 10.0 + 2.0 * z, 1e-15);
+        }
+    }
+
+    /// KAT pinning the ziggurat table itself (the satellite requirement):
+    /// spot values computed independently from the Marsaglia–Tsang
+    /// recurrence (plain-python transcription). kn are integer truncations
+    /// of transcendental expressions, so allow ±1 count for libm ulps.
+    #[test]
+    fn ziggurat_table_kat() {
+        let t = tables();
+        for (i, want) in
+            [(0usize, 1991057938u32), (2, 1611602771), (64, 2128463758), (127, 2010539237)]
+        {
+            assert!(
+                (t.kn[i] as i64 - want as i64).abs() <= 1,
+                "kn[{i}] = {} want {want}",
+                t.kn[i]
+            );
+        }
+        assert_eq!(t.kn[1], 0);
+        rel_close(t.wn[0], 1.729040521542798e-09, 1e-12);
+        rel_close(t.wn[64], 7.138996746735849e-10, 1e-12);
+        rel_close(t.wn[127], 1.6030947938091123e-09, 1e-12);
+        assert_eq!(t.fn_[0], 1.0);
+        rel_close(t.fn_[1], 0.9635996931270862, 1e-12);
+        rel_close(t.fn_[64], 0.3087636380061811, 1e-12);
+        rel_close(t.fn_[127], 0.002669629083880923, 1e-12);
+        // Structural invariants: densities strictly decreasing, widths
+        // positive.
+        for i in 1..128 {
+            assert!(t.fn_[i] < t.fn_[i - 1], "fn_ not decreasing at {i}");
+            assert!(t.wn[i] > 0.0);
+        }
+    }
+
+    #[test]
+    fn ziggurat_deterministic_per_stream() {
+        let z = ZigguratNormal::standard();
+        let a: Vec<u64> =
+            { let mut r = Philox::new(77, 5); (0..256).map(|_| z.sample(&mut r).to_bits()).collect() };
+        let b: Vec<u64> =
+            { let mut r = Philox::new(77, 5); (0..256).map(|_| z.sample(&mut r).to_bits()).collect() };
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ziggurat_moments_standard_normal() {
+        let z = ZigguratNormal::standard();
+        let mut rng = Philox::new(0x516, 0);
+        let n = 200_000usize;
+        let (mut s1, mut s2, mut s3, mut s4) = (0.0, 0.0, 0.0, 0.0);
+        for _ in 0..n {
+            let x = z.sample(&mut rng);
+            s1 += x;
+            s2 += x * x;
+            s3 += x * x * x;
+            s4 += x * x * x * x;
+        }
+        let nf = n as f64;
+        let mean = s1 / nf;
+        let var = s2 / nf - mean * mean;
+        let skew = s3 / nf;
+        let kurt = s4 / nf;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+        assert!(skew.abs() < 0.08, "skew {skew}");
+        assert!((kurt - 3.0).abs() < 0.2, "kurtosis {kurt}");
+    }
+
+    #[test]
+    fn ziggurat_tail_reachable() {
+        // The |x| > r tail must actually be sampled (base-strip branch).
+        let z = ZigguratNormal::standard();
+        let mut rng = Squares::new(0xF00D, 0);
+        let mut tail = 0usize;
+        for _ in 0..300_000 {
+            if z.sample(&mut rng).abs() > ZIG_R {
+                tail += 1;
+            }
+        }
+        // P(|Z| > 3.4426) ≈ 5.76e-4 -> expect ~173 of 300k.
+        assert!(tail > 60 && tail < 400, "tail count {tail}");
+    }
+
+    #[test]
+    fn ziggurat_agrees_with_box_muller_distribution() {
+        // Same distribution, different transforms: compare empirical CDFs
+        // (two-sample KS at a loose threshold — this is a smoke test; the
+        // calibrated version lives in stats::distcheck).
+        let n = 40_000usize;
+        let mut a: Vec<f64> = {
+            let z = ZigguratNormal::standard();
+            let mut r = Philox::new(1, 0);
+            (0..n).map(|_| z.sample(&mut r)).collect()
+        };
+        let mut b: Vec<f64> = {
+            let bm = BoxMuller::standard();
+            let mut r = Philox::new(2, 0);
+            (0..n).map(|_| bm.sample(&mut r)).collect()
+        };
+        a.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        b.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let (mut i, mut j, mut d) = (0usize, 0usize, 0.0f64);
+        while i < n && j < n {
+            if a[i] <= b[j] {
+                i += 1;
+            } else {
+                j += 1;
+            }
+            d = d.max((i as f64 / n as f64 - j as f64 / n as f64).abs());
+        }
+        // KS 1e-6 critical value for two samples of 40k is ~0.0246.
+        assert!(d < 0.025, "two-sample KS D = {d}");
+    }
+}

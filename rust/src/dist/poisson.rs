@@ -1,0 +1,203 @@
+//! Poisson distribution: Knuth's product method for small rates, the
+//! PTRS transformed-rejection sampler (Hörmann 1993) for large ones.
+//!
+//! Both branches draw only through the `Rng` trait, so results are a
+//! pure function of the `(seed, ctr)` stream — deterministic across
+//! threads and platforms even though the number of words consumed is
+//! data-dependent (see the contract table in [`super`]).
+
+use super::Distribution;
+use crate::core::traits::Rng;
+use crate::stats::pvalue::ln_gamma;
+
+/// Rate threshold between the two samplers. Knuth's method costs
+/// O(λ) uniforms per sample; PTRS costs ~1.1 attempts of 2 uniforms
+/// regardless of λ but needs λ large enough for its constants.
+const PTRS_CUTOFF: f64 = 10.0;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Method {
+    /// Multiply uniforms until the product drops below e^-λ.
+    Knuth { exp_neg_lambda: f64 },
+    /// Transformed rejection with squeeze (PTRS).
+    Ptrs { b: f64, a: f64, inv_alpha: f64, v_r: f64, ln_lambda: f64 },
+}
+
+/// Poisson(λ) over the natural numbers.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Poisson {
+    lambda: f64,
+    method: Method,
+}
+
+impl Poisson {
+    /// Requires `lambda > 0` and finite. The sampling method is chosen
+    /// once here (λ < 10: Knuth; λ ≥ 10: PTRS).
+    pub fn new(lambda: f64) -> Poisson {
+        assert!(lambda.is_finite() && lambda > 0.0, "bad Poisson(λ = {lambda})");
+        let method = if lambda < PTRS_CUTOFF {
+            Method::Knuth { exp_neg_lambda: (-lambda).exp() }
+        } else {
+            let b = 0.931 + 2.53 * lambda.sqrt();
+            let a = -0.059 + 0.02483 * b;
+            Method::Ptrs {
+                b,
+                a,
+                inv_alpha: 1.1239 + 1.1328 / (b - 3.4),
+                v_r: 0.9277 - 3.6224 / (b - 2.0),
+                ln_lambda: lambda.ln(),
+            }
+        };
+        Poisson { lambda, method }
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn sample_knuth(&self, exp_neg_lambda: f64, rng: &mut dyn Rng) -> u64 {
+        // Knuth: count how many uniforms multiply before the product
+        // drops below e^-λ. Expected λ+1 draws of 2 words each.
+        let mut k = 0u64;
+        let mut prod = rng.draw_double();
+        while prod > exp_neg_lambda {
+            k += 1;
+            prod *= rng.draw_double();
+        }
+        k
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn sample_ptrs(
+        &self,
+        b: f64,
+        a: f64,
+        inv_alpha: f64,
+        v_r: f64,
+        ln_lambda: f64,
+        rng: &mut dyn Rng,
+    ) -> u64 {
+        // Hörmann's PTRS (the sampler numpy uses for λ ≥ 10): 4 words
+        // per attempt, acceptance ≳ 0.9 for all λ above the cutoff.
+        loop {
+            let u = rng.draw_double() - 0.5;
+            let v = rng.draw_double();
+            let us = 0.5 - u.abs();
+            let k = ((2.0 * a / us + b) * u + self.lambda + 0.43).floor();
+            if us >= 0.07 && v <= v_r {
+                return k as u64;
+            }
+            if k < 0.0 || (us < 0.013 && v > us) {
+                continue;
+            }
+            if v.ln() + inv_alpha.ln() - (a / (us * us) + b).ln()
+                <= -self.lambda + k * ln_lambda - ln_gamma(k + 1.0)
+            {
+                return k as u64;
+            }
+        }
+    }
+}
+
+impl Distribution<u64> for Poisson {
+    fn sample(&self, rng: &mut dyn Rng) -> u64 {
+        match self.method {
+            Method::Knuth { exp_neg_lambda } => self.sample_knuth(exp_neg_lambda, rng),
+            Method::Ptrs { b, a, inv_alpha, v_r, ln_lambda } => {
+                self.sample_ptrs(b, a, inv_alpha, v_r, ln_lambda, rng)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Tyche};
+
+    fn moments(lambda: f64, seed: u64, n: usize) -> (f64, f64) {
+        let d = Poisson::new(lambda);
+        let mut rng = Philox::new(seed, 0);
+        let (mut s1, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let k = d.sample(&mut rng) as f64;
+            s1 += k;
+            s2 += k * k;
+        }
+        let mean = s1 / n as f64;
+        (mean, s2 / n as f64 - mean * mean)
+    }
+
+    #[test]
+    fn knuth_branch_mean_and_variance() {
+        // λ < 10 exercises Knuth. Mean and variance are both λ.
+        for lambda in [0.3, 1.0, 4.5] {
+            let n = 100_000;
+            let (mean, var) = moments(lambda, 0xA0A0, n);
+            let tol = 6.0 * (lambda / n as f64).sqrt();
+            assert!((mean - lambda).abs() < tol, "λ={lambda}: mean {mean}");
+            assert!((var - lambda).abs() < 12.0 * tol.max(0.02), "λ={lambda}: var {var}");
+        }
+    }
+
+    #[test]
+    fn ptrs_branch_mean_and_variance() {
+        for lambda in [10.0, 42.0, 500.0] {
+            let n = 100_000;
+            let (mean, var) = moments(lambda, 0xB1B1, n);
+            let tol = 6.0 * (lambda / n as f64).sqrt();
+            assert!((mean - lambda).abs() < tol, "λ={lambda}: mean {mean}");
+            assert!((var - lambda).abs() < 20.0 * tol, "λ={lambda}: var {var}");
+        }
+    }
+
+    #[test]
+    fn small_lambda_pmf_head() {
+        // For λ = 1: P(0) = P(1) = e^-1 ≈ 0.3679.
+        let d = Poisson::new(1.0);
+        let mut rng = Philox::new(7, 3);
+        let n = 200_000;
+        let mut zeros = 0usize;
+        let mut ones = 0usize;
+        for _ in 0..n {
+            match d.sample(&mut rng) {
+                0 => zeros += 1,
+                1 => ones += 1,
+                _ => {}
+            }
+        }
+        let e1 = (-1.0f64).exp();
+        for (count, name) in [(zeros, "P(0)"), (ones, "P(1)")] {
+            let p = count as f64 / n as f64;
+            assert!((p - e1).abs() < 0.006, "{name} = {p}, want {e1}");
+        }
+    }
+
+    #[test]
+    fn deterministic_both_branches() {
+        for lambda in [4.5, 40.0] {
+            let d = Poisson::new(lambda);
+            let a: Vec<u64> = {
+                let mut r = Tyche::new(3, 9);
+                (0..128).map(|_| d.sample(&mut r)).collect()
+            };
+            let b: Vec<u64> = {
+                let mut r = Tyche::new(3, 9);
+                (0..128).map(|_| d.sample(&mut r)).collect()
+            };
+            assert_eq!(a, b, "λ={lambda}");
+        }
+    }
+
+    #[test]
+    fn branch_selection_at_cutoff() {
+        assert!(matches!(Poisson::new(9.99).method, Method::Knuth { .. }));
+        assert!(matches!(Poisson::new(10.0).method, Method::Ptrs { .. }));
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nonpositive_lambda() {
+        let _ = Poisson::new(-1.0);
+    }
+}

@@ -1,0 +1,94 @@
+//! Uniform distribution over an `[lo, hi)` interval.
+
+use super::Distribution;
+use crate::core::traits::Rng;
+
+/// Uniform `f64` on `[lo, hi)`.
+///
+/// Words consumed per sample: 2 (one `draw_double`). The affine map is
+/// evaluated as `lo + (hi - lo) * u`, the same expression as
+/// `Rng::range_f64`, so the two paths agree bitwise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Uniform {
+    lo: f64,
+    hi: f64,
+}
+
+impl Uniform {
+    /// Uniform on `[lo, hi)`. Requires `lo < hi` and both finite.
+    pub fn new(lo: f64, hi: f64) -> Uniform {
+        assert!(lo.is_finite() && hi.is_finite() && lo < hi, "bad interval [{lo}, {hi})");
+        Uniform { lo, hi }
+    }
+
+    /// The canonical `[0, 1)` uniform.
+    pub fn standard() -> Uniform {
+        Uniform { lo: 0.0, hi: 1.0 }
+    }
+
+    pub fn lo(&self) -> f64 {
+        self.lo
+    }
+
+    pub fn hi(&self) -> f64 {
+        self.hi
+    }
+}
+
+impl Distribution<f64> for Uniform {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.draw_double()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Tyche};
+
+    #[test]
+    fn standard_matches_draw_double() {
+        let d = Uniform::standard();
+        let mut a = Philox::new(5, 0);
+        let mut b = Philox::new(5, 0);
+        for _ in 0..64 {
+            assert_eq!(d.sample(&mut a).to_bits(), b.draw_double().to_bits());
+        }
+    }
+
+    #[test]
+    fn matches_range_f64() {
+        let d = Uniform::new(-3.0, 11.5);
+        let mut a = Tyche::new(7, 7);
+        let mut b = Tyche::new(7, 7);
+        for _ in 0..64 {
+            assert_eq!(d.sample(&mut a).to_bits(), b.range_f64(-3.0, 11.5).to_bits());
+        }
+    }
+
+    #[test]
+    fn stays_in_bounds() {
+        let d = Uniform::new(-1.0, 1.0);
+        let mut rng = Philox::new(0, 0);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((-1.0..1.0).contains(&x), "{x}");
+        }
+    }
+
+    #[test]
+    fn mean_is_midpoint() {
+        let d = Uniform::new(10.0, 20.0);
+        let mut rng = Philox::new(0xABCD, 3);
+        let n = 50_000;
+        let mean: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 15.0).abs() < 0.05, "{mean}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_empty_interval() {
+        let _ = Uniform::new(2.0, 2.0);
+    }
+}

@@ -23,6 +23,23 @@
 //! let u = rng.draw_float();
 //! assert!((0.0..1.0).contains(&u));
 //! ```
+//!
+//! Distribution draws compose with any engine and inherit the stream's
+//! reproducibility (every sampler's word consumption is documented in
+//! [`dist`]'s contract table):
+//!
+//! ```
+//! use openrand::core::{CounterRng, Philox};
+//! use openrand::dist::{BoxMuller, DiscreteAlias, Distribution, ZigguratNormal};
+//! let mut rng = Philox::new(42, 0);
+//! // Normative normal: bit-compatible with the device graphs.
+//! let z = BoxMuller::standard().sample(&mut rng);
+//! // Host fast path: ~1 word/sample instead of 4 + trig.
+//! let z2 = ZigguratNormal::standard().sample(&mut rng);
+//! // O(1) weighted categorical via Walker's alias method.
+//! let idx = DiscreteAlias::new(&[0.6, 0.3, 0.1]).sample(&mut rng);
+//! assert!(z.is_finite() && z2.is_finite() && idx < 3);
+//! ```
 
 pub mod baseline;
 pub mod bench;

@@ -2,11 +2,14 @@
 //!
 //! Subcommands:
 //!
-//! * `generate`  — stream random numbers from any engine to stdout.
+//! * `generate`  — stream random numbers from any engine to stdout;
+//!   `--dist normal|ziggurat|exp|poisson|uniform|bernoulli|binomial|alias`
+//!   streams distribution samples instead of raw words.
 //! * `brownian`  — run the Brownian-dynamics macro-benchmark on the host
 //!   (multithreaded) or device (PJRT AOT artifact) backend.
-//! * `stats`     — run the Crush-lite statistical battery (E3) or the
-//!   HOOMD-style parallel-stream suite (E4).
+//! * `stats`     — run the Crush-lite statistical battery (E3), the
+//!   HOOMD-style parallel-stream suite (E4), or with `--dist-battery`
+//!   the KS/χ²/moment checks on distribution outputs.
 //! * `repro`     — reproducibility verification ladder (E6).
 //! * `artifacts` — list the AOT artifacts the runtime can execute.
 //!
@@ -17,10 +20,14 @@ use openrand::baseline::{Mt19937, Pcg32, Xoshiro256pp};
 use openrand::coordinator::repro;
 use openrand::coordinator::{Backend, SimDriver};
 use openrand::core::{Generator, Rng};
+use openrand::dist::{
+    Bernoulli, Binomial, BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform,
+    ZigguratNormal,
+};
 use openrand::runtime::ArtifactStore;
 use openrand::sim::brownian::{BrownianParams, RngStyle};
 use openrand::stats::parallel;
-use openrand::stats::{run_battery, Verdict};
+use openrand::stats::{run_battery, run_dist_battery, Verdict};
 use openrand::util::cli::{Args, OptSpec};
 
 const COMMANDS: [&str; 5] = ["generate", "brownian", "stats", "repro", "artifacts"];
@@ -33,12 +40,20 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "ctr", help: "32-bit stream counter", default: Some("0"), is_flag: false },
         OptSpec { name: "n", help: "count (supports k/M/G suffix)", default: Some("16"), is_flag: false },
         OptSpec { name: "format", help: "generate output: u32|u64|f32|f64", default: Some("u32"), is_flag: false },
+        OptSpec { name: "dist", help: "generate: sample a distribution instead of raw words: none|uniform|normal|ziggurat|exp|poisson|bernoulli|binomial|alias", default: Some("none"), is_flag: false },
+        OptSpec { name: "lambda", help: "dist: rate for exp/poisson", default: Some("1.0"), is_flag: false },
+        OptSpec { name: "lo", help: "dist: uniform lower bound", default: Some("0"), is_flag: false },
+        OptSpec { name: "hi", help: "dist: uniform upper bound", default: Some("1"), is_flag: false },
+        OptSpec { name: "p", help: "dist: success probability for bernoulli/binomial", default: Some("0.5"), is_flag: false },
+        OptSpec { name: "trials", help: "dist: binomial trial count", default: Some("10"), is_flag: false },
+        OptSpec { name: "weights", help: "dist: comma-separated alias-table weights", default: Some("1,2,3,4"), is_flag: false },
         OptSpec { name: "steps", help: "brownian: simulation steps", default: Some("100"), is_flag: false },
         OptSpec { name: "threads", help: "brownian: host threads", default: Some("1"), is_flag: false },
         OptSpec { name: "backend", help: "brownian: host|device", default: Some("host"), is_flag: false },
         OptSpec { name: "style", help: "brownian: openrand|curand_style|random123", default: Some("openrand"), is_flag: false },
         OptSpec { name: "words", help: "stats: words per test", default: Some("4M"), is_flag: false },
         OptSpec { name: "parallel", help: "stats: run the HOOMD parallel-stream suite", default: None, is_flag: true },
+        OptSpec { name: "dist-battery", help: "stats: run KS/chi2/moment checks on distribution outputs", default: None, is_flag: true },
         OptSpec { name: "baselines", help: "stats: also run mt19937/pcg32/xoshiro baselines", default: None, is_flag: true },
         OptSpec { name: "max-threads", help: "repro: thread ladder upper bound", default: Some("8"), is_flag: false },
     ]
@@ -93,6 +108,10 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
     let ctr = args.get_u64("ctr", 0).map_err(anyhow::Error::msg)? as u32;
     let n = args.get_usize("n", 16).map_err(anyhow::Error::msg)?;
+    let dist = args.get_or("dist", "none").to_string();
+    if dist != "none" {
+        return generate_dist(args, gen, seed, ctr, n, &dist);
+    }
     let format = args.get_or("format", "u32").to_string();
     gen.with_rng(seed, ctr, |rng| {
         for _ in 0..n {
@@ -107,6 +126,89 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
                 }
             }
         }
+    });
+    Ok(())
+}
+
+/// `generate --dist <name>`: stream distribution samples instead of raw
+/// words (same engine/stream selection as the raw path).
+fn generate_dist(
+    args: &Args,
+    gen: Generator,
+    seed: u64,
+    ctr: u32,
+    n: usize,
+    dist: &str,
+) -> anyhow::Result<()> {
+    let lambda = args.get_f64("lambda", 1.0).map_err(anyhow::Error::msg)?;
+    let lo = args.get_f64("lo", 0.0).map_err(anyhow::Error::msg)?;
+    let hi = args.get_f64("hi", 1.0).map_err(anyhow::Error::msg)?;
+    let p = args.get_f64("p", 0.5).map_err(anyhow::Error::msg)?;
+    let trials = args.get_u64("trials", 10).map_err(anyhow::Error::msg)?;
+    // Parameter validation happens in the constructors; turn their
+    // panics into CLI errors up front.
+    match dist {
+        "exp" | "poisson" if !(lambda.is_finite() && lambda > 0.0) => {
+            anyhow::bail!("--lambda must be positive, got {lambda}")
+        }
+        "uniform" if !(lo.is_finite() && hi.is_finite() && lo < hi) => {
+            anyhow::bail!("--lo/--hi must be finite with lo < hi (got {lo}, {hi})")
+        }
+        "bernoulli" | "binomial" if !(0.0..=1.0).contains(&p) => {
+            anyhow::bail!("--p must be in [0, 1], got {p}")
+        }
+        // The O(n)-per-sample Bernoulli loop makes huge trial counts a
+        // hang, and a silent u32 cast would truncate them to garbage.
+        "binomial" if trials > 1_000_000 => {
+            anyhow::bail!("--trials too large ({trials}; max 1000000)")
+        }
+        _ => {}
+    }
+    // Build the sampler up front (parameter errors surface before any
+    // output), then stream through one shared loop: continuous
+    // families as boxed `Distribution<f64>` trait objects, discrete
+    // families widened to u64.
+    enum Sampler {
+        F(Box<dyn Distribution<f64>>),
+        I(Box<dyn Fn(&mut dyn Rng) -> u64>),
+    }
+    let sampler = match dist {
+        "uniform" => Sampler::F(Box::new(Uniform::new(lo, hi))),
+        "normal" => Sampler::F(Box::new(BoxMuller::standard())),
+        "ziggurat" => Sampler::F(Box::new(ZigguratNormal::standard())),
+        "exp" => Sampler::F(Box::new(Exponential::new(lambda))),
+        "poisson" => {
+            let d = Poisson::new(lambda);
+            Sampler::I(Box::new(move |r: &mut dyn Rng| d.sample(r)))
+        }
+        "bernoulli" => {
+            let d = Bernoulli::new(p);
+            Sampler::I(Box::new(move |r: &mut dyn Rng| d.sample(r) as u64))
+        }
+        "binomial" => {
+            let d = Binomial::new(trials as u32, p);
+            Sampler::I(Box::new(move |r: &mut dyn Rng| d.sample(r)))
+        }
+        "alias" => {
+            let weights = args
+                .get_or("weights", "1,2,3,4")
+                .split(',')
+                .map(|w| w.trim().parse::<f64>())
+                .collect::<Result<Vec<f64>, _>>()
+                .map_err(|e| anyhow::anyhow!("--weights: {e}"))?;
+            if weights.iter().any(|w| !w.is_finite() || *w < 0.0)
+                || weights.iter().sum::<f64>() <= 0.0
+            {
+                anyhow::bail!("--weights must be non-negative with a positive sum");
+            }
+            let d = DiscreteAlias::new(&weights);
+            Sampler::I(Box::new(move |r: &mut dyn Rng| d.sample(r) as u64))
+        }
+        other => anyhow::bail!("unknown dist '{other}' (try --help)"),
+    };
+    gen.with_rng(seed, ctr, |rng| match &sampler {
+        Sampler::F(d) => (0..n).for_each(|_| println!("{}", d.sample(rng))),
+        Sampler::I(f) => (0..n).for_each(|_| println!("{}", f(rng))),
     });
     Ok(())
 }
@@ -139,6 +241,17 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
     let words = args.get_usize("words", 4 << 20).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
     let gen = parse_generator(args)?;
+    if args.flag("dist-battery") {
+        let report = run_dist_battery(gen.name(), words, |i| {
+            let s = seed ^ ((i as u64) << 32);
+            boxed_rng(gen, s)
+        });
+        print!("{}", report.render());
+        if !report.passed() {
+            anyhow::bail!("distribution battery reported failures");
+        }
+        return Ok(());
+    }
     if args.flag("parallel") {
         println!("parallel-stream suite (HOOMD procedure): {}", gen.name());
         let results = match gen {

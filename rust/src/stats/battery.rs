@@ -1,7 +1,7 @@
 //! The battery: run the full suite against a generator and produce a
 //! TestU01-style report (E3 in the experiment index).
 
-use super::suite::{all_tests, TestResult, Verdict};
+use super::suite::{all_tests, StatTest, TestResult, Verdict};
 use crate::core::traits::Rng;
 use std::fmt::Write as _;
 
@@ -55,22 +55,35 @@ impl BatteryReport {
     }
 }
 
-/// Run every suite test against fresh streams from `mk`. The factory
-/// receives the test index so each test gets an independent stream
-/// (TestU01 batteries equally re-seed between tests); `words` is the
-/// base per-test budget (scaled by each test's weight).
-pub fn run_battery(
+/// Run an arbitrary `(name, test, weight)` suite against fresh streams
+/// from `mk` — the one runner shared by the word-level battery and the
+/// distribution battery ([`super::distcheck`]), so the budget policy
+/// and re-seeding discipline cannot drift apart. The factory receives
+/// the test index so each test gets an independent stream (TestU01
+/// batteries equally re-seed between tests); `words` is the base
+/// per-test budget (scaled by each test's weight).
+pub fn run_suite(
     generator: &str,
     words: usize,
+    tests: Vec<(&'static str, StatTest, f64)>,
     mut mk: impl FnMut(usize) -> Box<dyn Rng>,
 ) -> BatteryReport {
     let mut results = Vec::new();
-    for (idx, (_, test, weight)) in all_tests().into_iter().enumerate() {
+    for (idx, (_, test, weight)) in tests.into_iter().enumerate() {
         let mut rng = mk(idx);
         let budget = ((words as f64 * weight) as usize).max(1 << 14);
         results.push(test(rng.as_mut(), budget));
     }
     BatteryReport { generator: generator.to_string(), results, words_per_test: words }
+}
+
+/// The full word-level suite through [`run_suite`].
+pub fn run_battery(
+    generator: &str,
+    words: usize,
+    mk: impl FnMut(usize) -> Box<dyn Rng>,
+) -> BatteryReport {
+    run_suite(generator, words, all_tests(), mk)
 }
 
 #[cfg(test)]

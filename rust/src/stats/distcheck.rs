@@ -1,0 +1,338 @@
+//! Distribution-output battery: KS / χ² / moment checks on the `dist`
+//! samplers, not on raw stream words.
+//!
+//! The word-level battery ([`super::battery`]) certifies the engines;
+//! this module certifies the layer where reproducibility and quality
+//! are usually lost — the transforms. Each test draws through the same
+//! `&mut dyn Rng` interface as production code, constructs the sampler
+//! under test internally, and reports the shared [`TestResult`] /
+//! [`Verdict`] format so `BatteryReport::render` and the CLI verdict
+//! logic apply unchanged (`openrand stats --dist-battery`).
+//!
+//! [`Verdict`]: super::suite::Verdict
+
+use super::battery::BatteryReport;
+use super::pvalue::{chi2_sf, erfc, kolmogorov_sf, ln_gamma, normal_two_sided};
+use super::suite::TestResult;
+use crate::core::traits::Rng;
+use crate::dist::{
+    Bernoulli, Binomial, BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform,
+    ZigguratNormal,
+};
+
+/// Standard normal CDF via the battery's erfc.
+fn normal_cdf(x: f64) -> f64 {
+    0.5 * erfc(-x / std::f64::consts::SQRT_2)
+}
+
+/// One-sample KS test of `xs` against a CDF; returns (D, p).
+fn ks_against(xs: &mut [f64], cdf: impl Fn(f64) -> f64) -> (f64, f64) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in xs.iter().enumerate() {
+        let f = cdf(x);
+        d = d.max((f - i as f64 / n).abs()).max(((i + 1) as f64 / n - f).abs());
+    }
+    let lambda = (n.sqrt() + 0.12 + 0.11 / n.sqrt()) * d;
+    (d, kolmogorov_sf(lambda))
+}
+
+/// χ² of observed counts against expected counts, merging every bin
+/// whose expectation is below 5 into its right neighbour (Cochran). A
+/// sparse trailing remainder merges back into the last full group —
+/// left standalone its tiny expectation would dominate the statistic
+/// on a single unlucky tail event.
+fn chi2_counts(observed: &[u64], expected: &[f64]) -> (f64, f64) {
+    assert_eq!(observed.len(), expected.len());
+    let mut groups: Vec<(f64, f64)> = Vec::new();
+    let (mut o_acc, mut e_acc) = (0.0f64, 0.0f64);
+    for (o, e) in observed.iter().zip(expected.iter()) {
+        o_acc += *o as f64;
+        e_acc += *e;
+        if e_acc >= 5.0 {
+            groups.push((o_acc, e_acc));
+            o_acc = 0.0;
+            e_acc = 0.0;
+        }
+    }
+    if o_acc > 0.0 || e_acc > 0.0 {
+        match groups.last_mut() {
+            Some(last) => {
+                last.0 += o_acc;
+                last.1 += e_acc;
+            }
+            None => groups.push((o_acc, e_acc)),
+        }
+    }
+    let chi2: f64 = groups.iter().map(|(o, e)| (o - e) * (o - e) / e.max(1e-300)).sum();
+    let dof = (groups.len() as i64 - 1).max(1);
+    (chi2, chi2_sf(chi2, dof as f64))
+}
+
+/// Poisson pmf bins 0..=hi plus a pooled tail.
+fn poisson_expected(lambda: f64, hi: u64, n: usize) -> Vec<f64> {
+    let mut exp: Vec<f64> = (0..=hi)
+        .map(|k| {
+            let lp = -lambda + k as f64 * lambda.ln() - ln_gamma(k as f64 + 1.0);
+            lp.exp() * n as f64
+        })
+        .collect();
+    let tail = n as f64 - exp.iter().sum::<f64>();
+    exp.push(tail.max(0.0));
+    exp
+}
+
+// ---------------------------------------------------------------------------
+// The tests. Each takes (rng, n) where n is the 32-bit-word budget, to
+// match the word-level battery's `StatTest` shape.
+// ---------------------------------------------------------------------------
+
+pub fn normal_box_muller_ks(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let m = (n / 4).clamp(100, 1 << 19);
+    let d = BoxMuller::standard();
+    let mut xs: Vec<f64> = (0..m).map(|_| d.sample(rng)).collect();
+    let (stat, p) = ks_against(&mut xs, normal_cdf);
+    TestResult { name: "normal_box_muller_ks", statistic: stat, p, words_used: 4 * m }
+}
+
+pub fn normal_ziggurat_ks(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let m = (n / 2).clamp(100, 1 << 19);
+    let d = ZigguratNormal::standard();
+    let mut xs: Vec<f64> = (0..m).map(|_| d.sample(rng)).collect();
+    let (stat, p) = ks_against(&mut xs, normal_cdf);
+    TestResult { name: "normal_ziggurat_ks", statistic: stat, p, words_used: m }
+}
+
+pub fn normal_moments_z(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // z-statistics for the first two moments of Box–Muller output;
+    // reported statistic is the worse of the two.
+    let m = (n / 4).clamp(1000, 1 << 20);
+    let d = BoxMuller::standard();
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    for _ in 0..m {
+        let x = d.sample(rng);
+        s1 += x;
+        s2 += x * x;
+    }
+    let nf = m as f64;
+    let mean = s1 / nf;
+    let var = s2 / nf - mean * mean;
+    let z_mean = mean * nf.sqrt(); // sd of mean = 1/sqrt(n)
+    let z_var = (var - 1.0) * (nf / 2.0).sqrt(); // sd of var ≈ sqrt(2/n)
+    let z = if z_mean.abs() >= z_var.abs() { z_mean } else { z_var };
+    // Šidák-combine the two p-values (min over 2 independent tests).
+    // Clamped Bonferroni (2p capped at 1) would sit at exactly p = 1 for
+    // half of all healthy runs, which the verdict rule reads as failure.
+    let p_min = normal_two_sided(z_mean).min(normal_two_sided(z_var));
+    let p = 1.0 - (1.0 - p_min) * (1.0 - p_min);
+    TestResult { name: "normal_moments_z", statistic: z, p, words_used: 4 * m }
+}
+
+pub fn exponential_ks(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let m = (n / 2).clamp(100, 1 << 19);
+    let lambda = 1.7;
+    let d = Exponential::new(lambda);
+    let mut xs: Vec<f64> = (0..m).map(|_| d.sample(rng)).collect();
+    let (stat, p) = ks_against(&mut xs, |x| 1.0 - (-lambda * x).exp());
+    TestResult { name: "exponential_ks", statistic: stat, p, words_used: 2 * m }
+}
+
+pub fn uniform_interval_ks(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let m = (n / 2).clamp(100, 1 << 19);
+    let d = Uniform::new(-1.0, 1.0);
+    let mut xs: Vec<f64> = (0..m).map(|_| d.sample(rng)).collect();
+    let (stat, p) = ks_against(&mut xs, |x| (x + 1.0) / 2.0);
+    TestResult { name: "uniform_interval_ks", statistic: stat, p, words_used: 2 * m }
+}
+
+pub fn poisson_knuth_chi2(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // λ = 4.5 exercises the Knuth branch; ~11 words per sample.
+    let m = (n / 11).clamp(1000, 1 << 17);
+    let lambda = 4.5;
+    let d = Poisson::new(lambda);
+    let hi = 15u64;
+    let mut counts = vec![0u64; hi as usize + 2];
+    for _ in 0..m {
+        let k = d.sample(rng).min(hi + 1);
+        counts[k as usize] += 1;
+    }
+    let (stat, p) = chi2_counts(&counts, &poisson_expected(lambda, hi, m));
+    TestResult { name: "poisson_knuth_chi2", statistic: stat, p, words_used: 11 * m }
+}
+
+pub fn poisson_ptrs_chi2(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // λ = 40 exercises the PTRS branch; ~4.4 words per sample.
+    let m = (n / 5).clamp(1000, 1 << 17);
+    let lambda = 40.0;
+    let d = Poisson::new(lambda);
+    let hi = 80u64;
+    let mut counts = vec![0u64; hi as usize + 2];
+    for _ in 0..m {
+        let k = d.sample(rng).min(hi + 1);
+        counts[k as usize] += 1;
+    }
+    let (stat, p) = chi2_counts(&counts, &poisson_expected(lambda, hi, m));
+    TestResult { name: "poisson_ptrs_chi2", statistic: stat, p, words_used: 5 * m }
+}
+
+pub fn bernoulli_freq_z(rng: &mut dyn Rng, n: usize) -> TestResult {
+    let m = (n / 2).clamp(1000, 1 << 20);
+    let p_true = 0.3;
+    let d = Bernoulli::new(p_true);
+    let hits = (0..m).filter(|_| d.sample(rng)).count();
+    let z = (hits as f64 - m as f64 * p_true) / (m as f64 * p_true * (1.0 - p_true)).sqrt();
+    TestResult { name: "bernoulli_freq_z", statistic: z, p: normal_two_sided(z), words_used: 2 * m }
+}
+
+pub fn binomial_chi2(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // Binomial(12, 0.4): 24 words per sample.
+    let m = (n / 24).clamp(1000, 1 << 16);
+    let (trials, p_true) = (12u32, 0.4f64);
+    let d = Binomial::new(trials, p_true);
+    let mut counts = vec![0u64; trials as usize + 1];
+    for _ in 0..m {
+        counts[d.sample(rng) as usize] += 1;
+    }
+    let expected: Vec<f64> = (0..=trials as u64)
+        .map(|k| {
+            let lp = ln_gamma(trials as f64 + 1.0)
+                - ln_gamma(k as f64 + 1.0)
+                - ln_gamma((trials as u64 - k) as f64 + 1.0)
+                + k as f64 * p_true.ln()
+                + (trials as u64 - k) as f64 * (1.0 - p_true).ln();
+            lp.exp() * m as f64
+        })
+        .collect();
+    let (stat, p) = chi2_counts(&counts, &expected);
+    TestResult { name: "binomial_chi2", statistic: stat, p, words_used: 24 * m }
+}
+
+pub fn alias_weights_chi2(rng: &mut dyn Rng, n: usize) -> TestResult {
+    // 8 categories with a 1..8 ramp; ~3 words per sample.
+    let weights: Vec<f64> = (1..=8).map(|w| w as f64).collect();
+    let total: f64 = weights.iter().sum();
+    let m = (n / 3).clamp(1000, 1 << 18);
+    let d = DiscreteAlias::new(&weights);
+    let mut counts = vec![0u64; weights.len()];
+    for _ in 0..m {
+        counts[d.sample(rng)] += 1;
+    }
+    let expected: Vec<f64> = weights.iter().map(|w| w / total * m as f64).collect();
+    let (stat, p) = chi2_counts(&counts, &expected);
+    TestResult { name: "alias_weights_chi2", statistic: stat, p, words_used: 3 * m }
+}
+
+/// A distribution-output statistical test (the same shape as the
+/// word-level suite's tests, so both batteries share one runner).
+pub type DistTest = super::suite::StatTest;
+
+/// The distribution battery, in execution order, with word-budget
+/// weights (mirrors `suite::all_tests`).
+pub fn all_dist_tests() -> Vec<(&'static str, DistTest, f64)> {
+    vec![
+        ("normal_box_muller_ks", normal_box_muller_ks as DistTest, 1.0),
+        ("normal_ziggurat_ks", normal_ziggurat_ks, 1.0),
+        ("normal_moments_z", normal_moments_z, 1.0),
+        ("exponential_ks", exponential_ks, 1.0),
+        ("uniform_interval_ks", uniform_interval_ks, 1.0),
+        ("poisson_knuth_chi2", poisson_knuth_chi2, 1.0),
+        ("poisson_ptrs_chi2", poisson_ptrs_chi2, 1.0),
+        ("bernoulli_freq_z", bernoulli_freq_z, 0.5),
+        ("binomial_chi2", binomial_chi2, 1.0),
+        ("alias_weights_chi2", alias_weights_chi2, 0.5),
+    ]
+}
+
+/// Run the distribution battery against fresh streams from `mk` (one
+/// per test) through the shared [`super::battery::run_suite`] runner.
+pub fn run_dist_battery(
+    generator: &str,
+    words: usize,
+    mk: impl FnMut(usize) -> Box<dyn Rng>,
+) -> BatteryReport {
+    super::battery::run_suite(&format!("{generator} [distributions]"), words, all_dist_tests(), mk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Squares, Tyche};
+    use crate::stats::Verdict;
+
+    const WORDS: usize = 1 << 18;
+
+    #[test]
+    fn dist_battery_passes_on_good_engines() {
+        for (name, mk) in [
+            ("philox", Box::new(|i: usize| -> Box<dyn Rng> {
+                Box::new(Philox::new(0xD157_0000 + i as u64, 0))
+            }) as Box<dyn Fn(usize) -> Box<dyn Rng>>),
+            ("squares", Box::new(|i| Box::new(Squares::new(0xD157_1000 + i as u64, 0)))),
+            ("tyche", Box::new(|i| Box::new(Tyche::new(0xD157_2000 + i as u64, 0)))),
+        ] {
+            let report = run_dist_battery(name, WORDS, |i| mk(i));
+            assert!(report.passed(), "{name} failed:\n{}", report.render());
+        }
+    }
+
+    #[test]
+    fn dist_battery_has_power_against_biased_uniforms() {
+        // An engine whose doubles live in [0, 0.5) must be caught by the
+        // continuous tests (the transforms inherit the bias).
+        struct Half(Philox);
+        impl Rng for Half {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32() >> 1
+            }
+        }
+        let report =
+            run_dist_battery("half_philox", WORDS, |i| Box::new(Half(Philox::new(i as u64, 0))));
+        assert!(
+            report.failures() >= 4,
+            "distribution battery lacks power:\n{}",
+            report.render()
+        );
+    }
+
+    #[test]
+    fn report_renders_all_dist_tests() {
+        let report = run_dist_battery("philox", 1 << 15, |i| Box::new(Philox::new(i as u64, 1)));
+        let text = report.render();
+        for (name, _, _) in all_dist_tests() {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+        assert!(text.contains("[distributions]"));
+    }
+
+    #[test]
+    fn every_dist_test_reports_verdict_fields() {
+        let mut rng = Philox::new(42, 0);
+        for (name, test, _) in all_dist_tests() {
+            let r = test(&mut rng, 1 << 15);
+            assert_eq!(r.name, name);
+            assert!((0.0..=1.0).contains(&r.p), "{name}: p = {}", r.p);
+            assert!(r.words_used > 0);
+            // Smoke the verdict path too.
+            let _ = matches!(r.verdict(), Verdict::Pass | Verdict::Suspicious | Verdict::Fail);
+        }
+    }
+
+    #[test]
+    fn chi2_counts_merges_sparse_bins() {
+        // 3 well-filled bins + a sparse tail that must be pooled.
+        let observed = [50u64, 52, 48, 1, 0, 1];
+        let expected = [50.0, 50.0, 50.0, 0.7, 0.2, 0.1];
+        let (chi2, p) = chi2_counts(&observed, &expected);
+        assert!(chi2.is_finite() && (0.0..=1.0).contains(&p));
+    }
+
+    #[test]
+    fn ks_against_detects_wrong_cdf() {
+        // Uniform data tested against a normal CDF must fail hard.
+        let mut rng = Philox::new(3, 3);
+        let mut xs: Vec<f64> = (0..20_000).map(|_| rng.draw_double()).collect();
+        let (_, p) = ks_against(&mut xs, normal_cdf);
+        assert!(p < 1e-10, "p = {p}");
+    }
+}

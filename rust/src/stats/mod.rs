@@ -20,11 +20,16 @@
 //! low bits) that MUST fail. [`parallel`] reproduces the HOOMD-blue
 //! interleaved multi-stream correlation procedure the paper describes,
 //! which is the part that actually exercises the counter-based design.
+//! [`distcheck`] extends the battery past raw words: KS / χ² / moment
+//! checks on the `dist` samplers' outputs (`openrand stats
+//! --dist-battery`).
 
 pub mod battery;
+pub mod distcheck;
 pub mod parallel;
 pub mod pvalue;
 pub mod suite;
 
 pub use battery::{run_battery, BatteryReport};
+pub use distcheck::run_dist_battery;
 pub use suite::{TestResult, Verdict};

@@ -2,6 +2,10 @@
 //! `testing::prop` framework (the proptest substitute).
 
 use openrand::core::{CounterRng, Philox, Rng, Squares, Threefry, Tyche, TycheI};
+use openrand::dist::{
+    Bernoulli, Binomial, BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform,
+    ZigguratNormal,
+};
 use openrand::testing::prop::{Gen, Prop};
 
 fn stream<G: CounterRng>(seed: u64, ctr: u32, n: usize) -> Vec<u32> {
@@ -125,6 +129,101 @@ fn prop_range_u32_bounds() {
             let bound = bound.max(1);
             let mut r = Philox::new(seed, ctr);
             (0..16).all(|_| r.range_u32(bound) < bound)
+        },
+    );
+}
+
+#[test]
+fn prop_range_u32_edge_bounds() {
+    // The Lemire rejection path at its extremes: bound = 1 (always 0),
+    // bound = u32::MAX, and exact powers of two (where the rejection
+    // threshold `(-bound) % bound` is 0 and no retry can occur).
+    let edges: Vec<u32> =
+        std::iter::once(1).chain((0..32).map(|e| 1u32 << e)).chain([u32::MAX, u32::MAX - 1]).collect();
+    Prop::new("range_u32 edge bounds").cases(60).check2(Gen::u64(), Gen::u32(), |seed, ctr| {
+        let mut r = Philox::new(seed, ctr);
+        edges.iter().all(|&bound| {
+            let v = r.range_u32(bound);
+            v < bound && (bound != 1 || v == 0)
+        })
+    });
+}
+
+#[test]
+fn prop_range_u32_powers_of_two_consume_one_word() {
+    // Power-of-two bounds never reject, so each call consumes exactly
+    // one stream word and stays in lockstep with raw next_u32 draws.
+    Prop::new("pow2 range_u32 word-lockstep").cases(60).check2(
+        Gen::u64(),
+        Gen::u32_below(32),
+        |seed, shift| {
+            let bound = 1u32 << shift;
+            let mut a = Philox::new(seed, 3);
+            let mut b = Philox::new(seed, 3);
+            for _ in 0..8 {
+                let _ = a.range_u32(bound);
+                let _ = b.next_u32();
+            }
+            a.next_u32() == b.next_u32()
+        },
+    );
+}
+
+/// Bitwise sample fingerprints from a fresh engine for every
+/// distribution the `dist` subsystem ships (f64 bits, or the integer
+/// sample widened), in a fixed interleaved order.
+fn dist_fingerprint<G: CounterRng>(seed: u64, ctr: u32, n: usize) -> Vec<u64> {
+    let mut rng = G::new(seed, ctr);
+    let uni = Uniform::new(-2.0, 5.0);
+    let bm = BoxMuller::standard();
+    let zig = ZigguratNormal::standard();
+    let expo = Exponential::new(0.8);
+    let pois_small = Poisson::new(3.5);
+    let pois_large = Poisson::new(30.0);
+    let bern = Bernoulli::new(0.25);
+    let bino = Binomial::new(9, 0.6);
+    let alias = DiscreteAlias::new(&[0.1, 0.2, 0.3, 0.4]);
+    let mut out = Vec::with_capacity(9 * n);
+    for _ in 0..n {
+        out.push(uni.sample(&mut rng).to_bits());
+        out.push(bm.sample(&mut rng).to_bits());
+        out.push(zig.sample(&mut rng).to_bits());
+        out.push(expo.sample(&mut rng).to_bits());
+        out.push(pois_small.sample(&mut rng));
+        out.push(pois_large.sample(&mut rng));
+        out.push(bern.sample(&mut rng) as u64);
+        out.push(bino.sample(&mut rng));
+        out.push(alias.sample(&mut rng) as u64);
+    }
+    out
+}
+
+#[test]
+fn prop_distribution_determinism_all_engines() {
+    // The tentpole reproducibility property: same (seed, ctr) =>
+    // bitwise-identical samples across two fresh engines, for every
+    // distribution, even the variable-word-consumption ones.
+    Prop::new("dist samples replay bitwise").cases(25).check2(
+        Gen::u64(),
+        Gen::u32(),
+        |seed, ctr| {
+            dist_fingerprint::<Philox>(seed, ctr, 8) == dist_fingerprint::<Philox>(seed, ctr, 8)
+                && dist_fingerprint::<Squares>(seed, ctr, 8)
+                    == dist_fingerprint::<Squares>(seed, ctr, 8)
+                && dist_fingerprint::<Tyche>(seed, ctr, 8)
+                    == dist_fingerprint::<Tyche>(seed, ctr, 8)
+        },
+    );
+}
+
+#[test]
+fn prop_distribution_seed_sensitivity() {
+    // Different seeds must decorrelate the sampled sequences too.
+    Prop::new("dist samples differ across seeds").cases(25).check2(
+        Gen::u64(),
+        Gen::u64(),
+        |a, b| {
+            a == b || dist_fingerprint::<Philox>(a, 0, 4) != dist_fingerprint::<Philox>(b, 0, 4)
         },
     );
 }

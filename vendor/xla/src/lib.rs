@@ -1,0 +1,246 @@
+//! Compile-time stub of the `xla` (xla_extension / PJRT) bindings.
+//!
+//! The build container has no crates.io registry and no PJRT shared
+//! library, so this crate mirrors exactly the API surface that
+//! `rust/src/runtime/` consumes. Host-side marshalling (literal
+//! construction, reshape, dtype-checked readback) is fully functional;
+//! anything that would require a real PJRT backend — compiling an HLO
+//! module or executing a loaded executable — returns a clean
+//! [`Error`] that the runtime converts into "run with a real
+//! xla_extension build" diagnostics. All artifact-dependent tests in the
+//! workspace already skip when artifacts/executables are unavailable, so
+//! the crate builds and the host-only test suite runs green offline.
+
+use std::fmt;
+use std::rc::Rc;
+
+/// Stub error type; `Display` matches how the runtime reports it.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what} requires a real PJRT backend (xla_extension); this build uses the vendored stub"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types a [`Literal`] can hold (the two the runtime marshals).
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for u32 {}
+    impl Sealed for f64 {}
+}
+
+/// Native element types supported by the stub (`u32`, `f64`).
+pub trait NativeType: sealed::Sealed + Copy {
+    fn from_repr(repr: &Repr) -> Option<Vec<Self>>
+    where
+        Self: Sized;
+    fn into_repr(data: Vec<Self>) -> Repr
+    where
+        Self: Sized;
+}
+
+/// Untyped literal storage.
+#[derive(Debug, Clone)]
+pub enum Repr {
+    U32(Vec<u32>),
+    F64(Vec<f64>),
+}
+
+impl NativeType for u32 {
+    fn from_repr(repr: &Repr) -> Option<Vec<u32>> {
+        match repr {
+            Repr::U32(v) => Some(v.clone()),
+            Repr::F64(_) => None,
+        }
+    }
+
+    fn into_repr(data: Vec<u32>) -> Repr {
+        Repr::U32(data)
+    }
+}
+
+impl NativeType for f64 {
+    fn from_repr(repr: &Repr) -> Option<Vec<f64>> {
+        match repr {
+            Repr::F64(v) => Some(v.clone()),
+            Repr::U32(_) => None,
+        }
+    }
+
+    fn into_repr(data: Vec<f64>) -> Repr {
+        Repr::F64(data)
+    }
+}
+
+/// A host-side tensor literal: typed storage + dims.
+#[derive(Debug, Clone)]
+pub struct Literal {
+    repr: Repr,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        let dims = vec![data.len() as i64];
+        Literal { repr: T::into_repr(data.to_vec()), dims }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let have: i64 = self.dims.iter().product();
+        let want: i64 = dims.iter().product();
+        if have != want {
+            return Err(Error(format!("reshape: {have} elements into shape {dims:?}")));
+        }
+        Ok(Literal { repr: self.repr.clone(), dims: dims.to_vec() })
+    }
+
+    /// Read back as a host vector; dtype-checked.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_repr(&self.repr).ok_or_else(|| Error("to_vec: dtype mismatch".to_string()))
+    }
+
+    /// Unpack a tuple literal. The stub never produces tuples (execution
+    /// is unavailable), so this always errors.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("tuple literal readback"))
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module handle. The stub only checks the file is readable;
+/// the text is retained so a future real backend swap stays drop-in.
+pub struct HloModuleProto {
+    #[allow(dead_code)]
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("reading HLO text {path}: {e}")))?;
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Computation handle built from a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device-resident buffer handle. Never constructible through the stub
+/// (uploads require a backend), which keeps the chaining API honest.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("buffer readback"))
+    }
+}
+
+/// Loaded executable handle; `execute*` always reports the stub.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("execute_b"))
+    }
+}
+
+struct ClientInner;
+
+/// PJRT client handle. `Rc`-based (not `Send`/`Sync`), matching the real
+/// crate's thread-confinement that `runtime::client` documents.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _inner: Rc<ClientInner>,
+}
+
+impl PjRtClient {
+    /// The CPU client constructs fine (cheap handle); only compilation
+    /// and execution need the real backend.
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _inner: Rc::new(ClientInner) })
+    }
+
+    pub fn device_count(&self) -> usize {
+        1
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _shape: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::unavailable("buffer_from_host_buffer"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1u32, 2, 3, 4]);
+        assert_eq!(l.to_vec::<u32>().unwrap(), vec![1, 2, 3, 4]);
+        assert!(l.to_vec::<f64>().is_err());
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn client_constructs_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu");
+        assert_eq!(c.device_count(), 1);
+        let comp = XlaComputation { _private: () };
+        let e = c.compile(&comp).unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+}
