@@ -14,7 +14,7 @@ use openrand::core::{Philox, Squares};
 use openrand::sim::pi::chunk_hits;
 use openrand::util::format;
 
-fn parallel_hits<G: openrand::core::CounterRng>(
+fn parallel_hits<G: openrand::core::BlockRng>(
     threads: usize,
     chunks: u64,
     samples_per_chunk: usize,

@@ -127,6 +127,27 @@ def test_tyche_matches_plain_python():
     check(got, want)
 
 
+def test_next_u64_word_order_kat():
+    """Pin the u64/f64 word composition: two consecutive stream words,
+    FIRST WORD HIGH — the contract of Rust's ``Rng::next_u64`` (see the
+    doctest in rust/src/core/traits.rs, which asserts these exact
+    literals) and of ``common.u32x2_to_f64``. If either side reorders
+    the words, the f64 path silently diverges; this KAT makes that a
+    test failure instead."""
+    words = [int(w) for w in np.asarray(ref.philox4x32_stream(7, 1, 4))]
+    assert words[:2] == [0x2EC4F55D, 0x249EF5F4]
+    composed = (words[0] << 32) | words[1]
+    assert composed == 0x2EC4F55D249EF5F4
+    assert composed != ((words[1] << 32) | words[0])  # not low-word-first
+    # f64 in [0,1): top 53 bits of the composition.
+    want_f64 = (composed >> 11) * 2.0**-53
+    assert want_f64 == 0.1826928474807763
+    got = cm.u32x2_to_f64(
+        jnp.asarray([words[0]], U32), jnp.asarray([words[1]], U32)
+    )
+    assert float(np.asarray(got)[0]) == want_f64
+
+
 def test_avalanche_single_bit_seed_flip():
     """CBRNG avalanche: flipping one seed bit flips ~half the output bits."""
     n = 256

@@ -11,7 +11,10 @@
 use anyhow::Result;
 
 use super::driver::{Backend, SimDriver};
+use crate::core::fill;
+use crate::core::{BlockRng, CounterRng, Rng};
 use crate::sim::brownian::BrownianParams;
+use crate::util::hash::Fnv1a;
 
 /// Result of one reproducibility probe.
 #[derive(Debug, Clone)]
@@ -68,6 +71,47 @@ pub fn verify_rerun(params: BrownianParams, threads: usize) -> Result<ReproRepor
     })
 }
 
+/// The block-fill engine across a thread ladder: `par_fill_u32` and
+/// `par_fill_f64` output must be bitwise identical for every thread
+/// count — and identical to a plain word-at-a-time `next_u32` /
+/// `draw_double` loop (the gold contract the fill engine promises, see
+/// `docs/stream-contracts.md` §4).
+pub fn verify_fill_invariance<G: BlockRng>(n: usize, max_threads: usize, seed: u64) -> ReproReport {
+    let ctr = 0u32;
+    // Reference: the draw API, one word / one double at a time.
+    let serial_hash = {
+        let mut h = Fnv1a::new();
+        let mut g = G::new(seed, ctr);
+        for _ in 0..n {
+            h.write_u32(g.next_u32());
+        }
+        let mut g = G::new(seed, ctr);
+        for _ in 0..n / 2 {
+            h.write_f64(g.draw_double());
+        }
+        h.finish()
+    };
+    let mut hashes = vec![("word-at-a-time".to_string(), serial_hash)];
+    let mut t = 1;
+    while t <= max_threads {
+        let mut words = vec![0u32; n];
+        fill::par_fill_u32::<G>(seed, ctr, &mut words, t);
+        let mut doubles = vec![0.0f64; n / 2];
+        fill::par_fill_f64::<G>(seed, ctr, &mut doubles, t);
+        let mut h = Fnv1a::new();
+        h.write_u32_slice(&words);
+        h.write_f64_slice(&doubles);
+        hashes.push((format!("threads={t}"), h.finish()));
+        t *= 2;
+    }
+    let consistent = hashes.windows(2).all(|w| w[0].1 == w[1].1);
+    ReproReport {
+        description: format!("block-fill u32+f64 x thread count ({}, n={n})", G::NAME),
+        hashes,
+        consistent,
+    }
+}
+
 /// Host vs device: positions agree within `tol` relative error per
 /// coordinate (XLA may re-associate float ops; the RNG words themselves
 /// are pinned bitwise by the cross-layer integration test).
@@ -115,6 +159,18 @@ mod tests {
     #[test]
     fn rerun_holds() {
         let r = verify_rerun(params(), 4).unwrap();
+        assert!(r.consistent, "{}", r.render());
+    }
+
+    #[test]
+    fn fill_invariance_holds() {
+        use crate::core::{Philox, Squares, Tyche};
+        let r = verify_fill_invariance::<Philox>(10_000, 8, 0xF17);
+        assert!(r.consistent, "{}", r.render());
+        assert_eq!(r.hashes.len(), 5); // word-at-a-time + threads 1,2,4,8
+        let r = verify_fill_invariance::<Squares>(10_000, 4, 0xF17);
+        assert!(r.consistent, "{}", r.render());
+        let r = verify_fill_invariance::<Tyche>(2_000, 4, 0xF17);
         assert!(r.consistent, "{}", r.render());
     }
 

@@ -1,0 +1,244 @@
+//! Block-granular stream access — the engine-side contract behind the
+//! buffer-oriented fill architecture.
+//!
+//! Every counter-based engine in the family produces output in fixed-size
+//! *counter blocks* (4 words for Philox4x32/Threefry4x32, 2 for the 2x32
+//! variants, 1 for Squares and the Tyche pair). The word-at-a-time
+//! [`Rng`] API hides that structure behind a per-engine buffer; the
+//! [`BlockRng`] trait exposes it, so bulk consumers (`core::fill`, the
+//! simulation kernels, future SIMD/device backends) can generate a whole
+//! block per call with no per-word bookkeeping.
+//!
+//! ## Contract (normative — see `docs/stream-contracts.md` §3)
+//!
+//! `generate_block(&mut self, out)` writes the **next
+//! `WORDS_PER_BLOCK` words of the stream** into `out` — bit-identical to
+//! `WORDS_PER_BLOCK` consecutive [`Rng::next_u32`] calls from the same
+//! state — and leaves the stream positioned immediately after them. The
+//! equivalence holds at *any* stream phase; engines take the raw
+//! block-function fast path when the position is block-aligned and fall
+//! back to the buffered path otherwise. `rust/tests/properties.rs`
+//! (`prop_generate_block_equals_serial_draws`) pins this for every
+//! engine.
+//!
+//! [`BlockBuffered`] closes the loop in the other direction: it adapts
+//! any [`BlockRng`] back into a word-at-a-time [`Rng`] by buffering one
+//! block, and its stream is bit-identical to the wrapped engine's.
+
+use super::traits::{CounterRng, Rng};
+
+/// A counter-based engine with fixed block structure.
+///
+/// Implementors produce `WORDS_PER_BLOCK` words per raw block-function
+/// invocation; `Block` is always `[u32; WORDS_PER_BLOCK]`. The trait is
+/// deliberately **not** object-safe (associated const + type): bulk
+/// paths monomorphize, and dynamic dispatch keeps using `&mut dyn Rng`.
+pub trait BlockRng: CounterRng {
+    /// Words produced per counter block (4, 2, or 1 in this family).
+    const WORDS_PER_BLOCK: usize;
+
+    /// The block storage type — concretely `[u32; WORDS_PER_BLOCK]`.
+    type Block: Copy + Default + AsRef<[u32]> + AsMut<[u32]> + std::fmt::Debug;
+
+    /// Write the next `WORDS_PER_BLOCK` stream words into `out`,
+    /// advancing the stream past them.
+    ///
+    /// Bit-identical to `WORDS_PER_BLOCK` consecutive
+    /// [`Rng::next_u32`] calls at any stream phase (the normative
+    /// block contract; see `docs/stream-contracts.md`).
+    fn generate_block(&mut self, out: &mut Self::Block);
+}
+
+/// Word-at-a-time adapter over any [`BlockRng`]: buffers one block and
+/// serves it word by word. The observable stream is bit-identical to
+/// driving the wrapped engine directly through [`Rng`] — this is the
+/// "safe buffered adapter" that lets bulk-oriented engine code keep the
+/// existing draw semantics.
+#[derive(Debug, Clone)]
+pub struct BlockBuffered<G: BlockRng> {
+    inner: G,
+    buf: G::Block,
+    /// Consumed words within `buf`; `WORDS_PER_BLOCK` means empty.
+    pos: usize,
+}
+
+impl<G: BlockRng> BlockBuffered<G> {
+    /// Wrap an engine at its current stream position.
+    pub fn from_engine(inner: G) -> BlockBuffered<G> {
+        BlockBuffered { inner, buf: G::Block::default(), pos: G::WORDS_PER_BLOCK }
+    }
+
+    /// Unwrap. The inner engine's position includes every word the
+    /// adapter buffered, consumed or not (whole blocks are pulled at
+    /// once) — callers that need word-exact positions should track them
+    /// via [`CounterRng::set_position`].
+    pub fn into_inner(self) -> G {
+        self.inner
+    }
+}
+
+impl<G: BlockRng> Rng for BlockBuffered<G> {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.pos >= G::WORDS_PER_BLOCK {
+            self.inner.generate_block(&mut self.buf);
+            self.pos = 0;
+        }
+        let word = self.buf.as_ref()[self.pos];
+        self.pos += 1;
+        word
+    }
+
+    #[inline]
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        let w = G::WORDS_PER_BLOCK;
+        let mut i = 0;
+        // Drain buffered words first so fill == repeated next_u32.
+        while self.pos < w && i < out.len() {
+            out[i] = self.buf.as_ref()[self.pos];
+            self.pos += 1;
+            i += 1;
+        }
+        // Whole blocks straight into the output slice.
+        let mut blk = G::Block::default();
+        while i + w <= out.len() {
+            self.inner.generate_block(&mut blk);
+            out[i..i + w].copy_from_slice(blk.as_ref());
+            i += w;
+        }
+        while i < out.len() {
+            out[i] = self.next_u32();
+            i += 1;
+        }
+    }
+}
+
+impl<G: BlockRng> CounterRng for BlockBuffered<G> {
+    /// Same stream family as the wrapped engine (the adapter changes
+    /// access granularity, not stream identity).
+    const NAME: &'static str = G::NAME;
+
+    #[inline]
+    fn new(seed: u64, ctr: u32) -> Self {
+        BlockBuffered::from_engine(G::new(seed, ctr))
+    }
+
+    #[inline]
+    fn set_position(&mut self, pos: u32) {
+        let w = G::WORDS_PER_BLOCK as u32;
+        self.inner.set_position(pos - pos % w);
+        self.inner.generate_block(&mut self.buf);
+        self.pos = (pos % w) as usize;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Philox, Philox2x32, Squares, Threefry, Threefry2x32, Tyche, TycheI};
+
+    fn block_equals_serial<G: BlockRng>(seed: u64, ctr: u32, pre: usize) {
+        let mut a = G::new(seed, ctr);
+        let mut b = G::new(seed, ctr);
+        for _ in 0..pre {
+            a.next_u32();
+            b.next_u32();
+        }
+        for round in 0..5 {
+            let mut blk = G::Block::default();
+            a.generate_block(&mut blk);
+            for (i, &w) in blk.as_ref().iter().enumerate() {
+                assert_eq!(
+                    w,
+                    b.next_u32(),
+                    "{} pre={pre} round={round} word={i}",
+                    G::NAME
+                );
+            }
+        }
+        // Streams stay in lockstep afterwards.
+        assert_eq!(a.next_u32(), b.next_u32(), "{} post", G::NAME);
+    }
+
+    #[test]
+    fn generate_block_equals_serial_all_engines_all_phases() {
+        for pre in 0..5 {
+            block_equals_serial::<Philox>(0xAB, 3, pre);
+            block_equals_serial::<Philox2x32>(0xAB, 3, pre);
+            block_equals_serial::<Threefry>(0xAB, 3, pre);
+            block_equals_serial::<Threefry2x32>(0xAB, 3, pre);
+            block_equals_serial::<Squares>(0xAB, 3, pre);
+            block_equals_serial::<Tyche>(0xAB, 3, pre);
+            block_equals_serial::<TycheI>(0xAB, 3, pre);
+        }
+    }
+
+    #[test]
+    fn words_per_block_matches_block_type() {
+        fn check<G: BlockRng>() {
+            assert_eq!(G::Block::default().as_ref().len(), G::WORDS_PER_BLOCK);
+        }
+        check::<Philox>();
+        check::<Philox2x32>();
+        check::<Threefry>();
+        check::<Threefry2x32>();
+        check::<Squares>();
+        check::<Tyche>();
+        check::<TycheI>();
+    }
+
+    #[test]
+    fn buffered_adapter_matches_raw_stream() {
+        let mut raw = Philox::new(77, 9);
+        let mut adapted = BlockBuffered::<Philox>::new(77, 9);
+        for i in 0..40 {
+            assert_eq!(raw.next_u32(), adapted.next_u32(), "word {i}");
+        }
+    }
+
+    #[test]
+    fn buffered_adapter_fill_matches_serial_any_phase() {
+        for pre in 0..5 {
+            for len in [0usize, 1, 3, 4, 5, 17] {
+                let mut a = BlockBuffered::<Threefry>::new(5, 2);
+                let mut b = Threefry::new(5, 2);
+                for _ in 0..pre {
+                    a.next_u32();
+                    b.next_u32();
+                }
+                let mut buf = vec![0u32; len];
+                a.fill_u32(&mut buf);
+                for (i, &w) in buf.iter().enumerate() {
+                    assert_eq!(w, b.next_u32(), "pre={pre} len={len} i={i}");
+                }
+                assert_eq!(a.next_u32(), b.next_u32());
+            }
+        }
+    }
+
+    #[test]
+    fn buffered_adapter_set_position() {
+        let mut seq = BlockBuffered::<Philox>::new(1, 2);
+        let words: Vec<u32> = (0..24).map(|_| seq.next_u32()).collect();
+        for pos in [0u32, 1, 4, 7, 13, 23] {
+            let mut r = BlockBuffered::<Philox>::new(1, 2);
+            r.set_position(pos);
+            assert_eq!(r.next_u32(), words[pos as usize], "pos={pos}");
+        }
+        // Single-word-block engines too.
+        let mut sseq = BlockBuffered::<Squares>::new(1, 2);
+        let swords: Vec<u32> = (0..24).map(|_| sseq.next_u32()).collect();
+        let mut s = BlockBuffered::<Squares>::new(1, 2);
+        s.set_position(11);
+        assert_eq!(s.next_u32(), swords[11]);
+        // And the sequential Tyche, including a repeated (non-compounding)
+        // jump after the adapter has already advanced.
+        let mut tseq = BlockBuffered::<Tyche>::new(1, 2);
+        let twords: Vec<u32> = (0..24).map(|_| tseq.next_u32()).collect();
+        let mut t = BlockBuffered::<Tyche>::new(1, 2);
+        t.set_position(19);
+        t.next_u32();
+        t.set_position(6);
+        assert_eq!(t.next_u32(), twords[6]);
+    }
+}

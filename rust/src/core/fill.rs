@@ -1,0 +1,342 @@
+//! The deterministic block-fill engine — bulk stream generation whose
+//! output is a pure function of `(seed, ctr, n)`, bitwise independent of
+//! thread count.
+//!
+//! This is the buffer-oriented counterpart of the draw API: instead of
+//! pulling words one at a time through [`Rng::next_u32`], consumers hand
+//! over a whole output buffer and the engine walks the counter space in
+//! `WORDS_PER_BLOCK` strides through [`BlockRng::generate_block`] — the
+//! Fig. 4a hot loop with the per-word buffer bookkeeping removed.
+//!
+//! ## Determinism (normative — see `docs/stream-contracts.md` §4)
+//!
+//! `fill_*::<G>(seed, ctr, out)` writes **stream words `0..len` of the
+//! `(seed, ctr)` stream** (elements of wider types consume consecutive
+//! word groups exactly as the draw API does: `u64`/`f64` element `i`
+//! uses words `2i, 2i+1` first-word-high; `f32` element `i` uses word
+//! `i`). The `par_fill_*` variants shard the **output index space** with
+//! [`coordinator::partition_ranges`](crate::coordinator::partition_ranges)
+//! and jump each worker to its shard's stream position via
+//! [`CounterRng::set_position`](crate::core::CounterRng::set_position) —
+//! so every output element is the same
+//! stream word(s) no matter how many threads ran, and the result is
+//! bitwise identical to the serial fill and to a word-at-a-time loop.
+//! `coordinator::repro::verify_fill_invariance` and
+//! `rust/tests/properties.rs` hold this invariant.
+//!
+//! A fill of `n` words occupies stream positions `0..n` and therefore
+//! requires `n < 2^32` (the per-`(seed, ctr)` stream period); the
+//! parallel entry points assert this.
+//!
+//! For Tyche/Tyche-i, `set_position` is O(pos) (documented engine
+//! exception), so parallel fills pay an O(start) warm-up per shard;
+//! the counter engines jump in O(1).
+
+use super::block::BlockRng;
+use super::traits::Rng;
+use crate::coordinator::partition_ranges;
+
+// The normative word → value conversions live next to the draw API in
+// `traits.rs` (single source of truth); re-exported here because the
+// fill paths and their consumers are where the free-function forms are
+// used.
+pub use super::traits::{u01_f32, u01_f64, u01_f64_from_bits, u64_from_words};
+
+/// Words converted per tile in the typed fill paths (stack scratch).
+const TILE_WORDS: usize = 1024;
+
+/// Fill `out` with the next `out.len()` words of `g`, whose current
+/// stream position is `pos` (phase information — needed to locate block
+/// boundaries so the bulk of the work runs on the aligned fast path).
+/// Bit-identical to `out.len()` consecutive `next_u32` calls.
+pub fn fill_from<G: BlockRng>(g: &mut G, pos: u32, out: &mut [u32]) {
+    let w = G::WORDS_PER_BLOCK;
+    let mut i = 0usize;
+    // Up-align to a block boundary word-at-a-time.
+    while i < out.len() && (pos as usize + i) % w != 0 {
+        out[i] = g.next_u32();
+        i += 1;
+    }
+    // Whole blocks through the raw block path.
+    let mut blk = G::Block::default();
+    while i + w <= out.len() {
+        g.generate_block(&mut blk);
+        out[i..i + w].copy_from_slice(blk.as_ref());
+        i += w;
+    }
+    // Tail.
+    while i < out.len() {
+        out[i] = g.next_u32();
+        i += 1;
+    }
+}
+
+/// Fresh engine for stream `(seed, ctr)` positioned at word `word`.
+#[inline]
+fn start_engine<G: BlockRng>(seed: u64, ctr: u32, word: u32) -> G {
+    let mut g = G::new(seed, ctr);
+    if word != 0 {
+        g.set_position(word);
+    }
+    g
+}
+
+/// Fill one shard: stream words `start..start + out.len()`.
+fn shard_u32<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [u32]) {
+    let mut g = start_engine::<G>(seed, ctr, start);
+    fill_from(&mut g, start, out);
+}
+
+/// Fill one shard of u64s: elements `start..start + out.len()`, element
+/// `i` composed from words `2i, 2i+1` (first word high).
+fn shard_u64<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [u64]) {
+    let word0 = start.wrapping_mul(2);
+    let mut g = start_engine::<G>(seed, ctr, word0);
+    let mut words = [0u32; TILE_WORDS];
+    let mut done = 0usize;
+    while done < out.len() {
+        let n = (out.len() - done).min(TILE_WORDS / 2);
+        let tile = &mut words[..2 * n];
+        fill_from(&mut g, word0.wrapping_add((2 * done) as u32), tile);
+        for k in 0..n {
+            out[done + k] = u64_from_words(tile[2 * k], tile[2 * k + 1]);
+        }
+        done += n;
+    }
+}
+
+/// Fill one shard of f32s: element `i` from word `i`.
+fn shard_f32<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [f32]) {
+    let mut g = start_engine::<G>(seed, ctr, start);
+    let mut words = [0u32; TILE_WORDS];
+    let mut done = 0usize;
+    while done < out.len() {
+        let n = (out.len() - done).min(TILE_WORDS);
+        let tile = &mut words[..n];
+        fill_from(&mut g, start.wrapping_add(done as u32), tile);
+        for k in 0..n {
+            out[done + k] = u01_f32(tile[k]);
+        }
+        done += n;
+    }
+}
+
+/// Fill one shard of f64s: element `i` from words `2i, 2i+1`.
+fn shard_f64<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [f64]) {
+    let word0 = start.wrapping_mul(2);
+    let mut g = start_engine::<G>(seed, ctr, word0);
+    let mut words = [0u32; TILE_WORDS];
+    let mut done = 0usize;
+    while done < out.len() {
+        let n = (out.len() - done).min(TILE_WORDS / 2);
+        let tile = &mut words[..2 * n];
+        fill_from(&mut g, word0.wrapping_add((2 * done) as u32), tile);
+        for k in 0..n {
+            out[done + k] = u01_f64(tile[2 * k], tile[2 * k + 1]);
+        }
+        done += n;
+    }
+}
+
+/// Serial block fill: stream words `0..out.len()` of `(seed, ctr)`.
+/// Bit-identical to a `next_u32` loop over a fresh engine.
+pub fn fill_u32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u32]) {
+    shard_u32::<G>(seed, ctr, 0, out);
+}
+
+/// Serial block fill of u64s — element `i` == the `i`-th [`Rng::next_u64`]
+/// of a fresh engine.
+pub fn fill_u64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u64]) {
+    shard_u64::<G>(seed, ctr, 0, out);
+}
+
+/// Serial block fill of `[0, 1)` f32s — element `i` == the `i`-th
+/// [`Rng::draw_float`] of a fresh engine.
+pub fn fill_f32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f32]) {
+    shard_f32::<G>(seed, ctr, 0, out);
+}
+
+/// Serial block fill of `[0, 1)` f64s — element `i` == the `i`-th
+/// [`Rng::draw_double`] of a fresh engine.
+pub fn fill_f64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f64]) {
+    shard_f64::<G>(seed, ctr, 0, out);
+}
+
+/// Shard `out` into `threads` deterministic contiguous ranges (the
+/// coordinator partition) and run `shard(range_start, chunk)` on scoped
+/// threads. Output depends only on what each shard writes at its
+/// absolute positions — never on scheduling.
+fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u32, &mut [T]) + Sync) {
+    assert!(threads > 0, "threads must be positive");
+    if threads == 1 || out.len() <= 1 {
+        shard(0, out);
+        return;
+    }
+    let ranges = partition_ranges(out.len(), threads);
+    std::thread::scope(|scope| {
+        let shard = &shard;
+        let mut rest = out;
+        for r in ranges {
+            let (head, tail) = rest.split_at_mut(r.len());
+            rest = tail;
+            if head.is_empty() {
+                continue;
+            }
+            let start = r.start as u32;
+            scope.spawn(move || shard(start, head));
+        }
+    });
+}
+
+/// Parallel block fill: same output as [`fill_u32`] for every `threads`.
+pub fn par_fill_u32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u32], threads: usize) {
+    assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word stream period");
+    par_shards(out, threads, move |start, chunk| shard_u32::<G>(seed, ctr, start, chunk));
+}
+
+/// Parallel block fill: same output as [`fill_u64`] for every `threads`.
+pub fn par_fill_u64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u64], threads: usize) {
+    assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word stream period");
+    par_shards(out, threads, move |start, chunk| shard_u64::<G>(seed, ctr, start, chunk));
+}
+
+/// Parallel block fill: same output as [`fill_f32`] for every `threads`.
+pub fn par_fill_f32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f32], threads: usize) {
+    assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word stream period");
+    par_shards(out, threads, move |start, chunk| shard_f32::<G>(seed, ctr, start, chunk));
+}
+
+/// Parallel block fill: same output as [`fill_f64`] for every `threads`.
+pub fn par_fill_f64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f64], threads: usize) {
+    assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word stream period");
+    par_shards(out, threads, move |start, chunk| shard_f64::<G>(seed, ctr, start, chunk));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{CounterRng, Philox, Philox2x32, Squares, Threefry, Tyche};
+
+    fn serial_words<G: BlockRng>(seed: u64, ctr: u32, n: usize) -> Vec<u32> {
+        let mut g = G::new(seed, ctr);
+        (0..n).map(|_| g.next_u32()).collect()
+    }
+
+    #[test]
+    fn fill_u32_matches_word_at_a_time() {
+        fn check<G: BlockRng>() {
+            for n in [0usize, 1, 3, 4, 7, 64, 129] {
+                let mut out = vec![0u32; n];
+                fill_u32::<G>(0xFEED, 5, &mut out);
+                assert_eq!(out, serial_words::<G>(0xFEED, 5, n), "{} n={n}", G::NAME);
+            }
+        }
+        check::<Philox>();
+        check::<Philox2x32>();
+        check::<Threefry>();
+        check::<Squares>();
+        check::<Tyche>();
+    }
+
+    #[test]
+    fn fill_u64_matches_next_u64() {
+        let mut out = vec![0u64; 33];
+        fill_u64::<Philox>(9, 1, &mut out);
+        let mut g = Philox::new(9, 1);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, g.next_u64(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn fill_f32_matches_draw_float() {
+        let mut out = vec![0.0f32; 100];
+        fill_f32::<Squares>(0x51, 2, &mut out);
+        let mut g = Squares::new(0x51, 2);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v.to_bits(), g.draw_float().to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn fill_f64_matches_draw_double() {
+        let mut out = vec![0.0f64; 100];
+        fill_f64::<Philox>(0x52, 3, &mut out);
+        let mut g = Philox::new(0x52, 3);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v.to_bits(), g.draw_double().to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn fill_crosses_tile_boundaries_seamlessly() {
+        // Lengths straddling the TILE_WORDS scratch: the typed paths must
+        // keep the stream continuous across tiles.
+        let n = TILE_WORDS + TILE_WORDS / 2 + 3;
+        let mut out = vec![0.0f64; n];
+        fill_f64::<Philox>(1, 1, &mut out);
+        let mut g = Philox::new(1, 1);
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v.to_bits(), g.draw_double().to_bits(), "elem {i}");
+        }
+    }
+
+    #[test]
+    fn par_fill_bitwise_thread_invariant() {
+        fn check<G: BlockRng>(n: usize) {
+            let want = serial_words::<G>(0xC0FFEE, 7, n);
+            for threads in [1usize, 2, 3, 8, 16] {
+                let mut out = vec![0u32; n];
+                par_fill_u32::<G>(0xC0FFEE, 7, &mut out, threads);
+                assert_eq!(out, want, "{} n={n} threads={threads}", G::NAME);
+            }
+        }
+        for n in [0usize, 1, 5, 63, 1000] {
+            check::<Philox>(n);
+            check::<Squares>(n);
+            check::<Tyche>(n);
+        }
+    }
+
+    #[test]
+    fn par_fill_f64_thread_invariant_and_element_sharded() {
+        let n = 777usize;
+        let mut g = Philox::new(3, 3);
+        let want: Vec<u64> = (0..n).map(|_| g.draw_double().to_bits()).collect();
+        for threads in [1usize, 2, 8] {
+            let mut out = vec![0.0f64; n];
+            par_fill_f64::<Philox>(3, 3, &mut out, threads);
+            let got: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_fill_more_threads_than_elements() {
+        let mut out = vec![0u32; 3];
+        par_fill_u32::<Philox>(1, 0, &mut out, 16);
+        assert_eq!(out, serial_words::<Philox>(1, 0, 3));
+    }
+
+    #[test]
+    fn conversion_helpers_match_draw_api() {
+        let mut a = Threefry::new(11, 4);
+        let mut b = Threefry::new(11, 4);
+        for _ in 0..16 {
+            let (hi, lo) = (a.next_u32(), a.next_u32());
+            assert_eq!(u64_from_words(hi, lo), b.next_u64());
+        }
+        let mut c = Threefry::new(12, 4);
+        let mut d = Threefry::new(12, 4);
+        for _ in 0..16 {
+            let w = c.next_u32();
+            assert_eq!(u01_f32(w).to_bits(), d.draw_float().to_bits());
+        }
+        let mut e = Threefry::new(13, 4);
+        let mut f = Threefry::new(13, 4);
+        for _ in 0..16 {
+            let (hi, lo) = (e.next_u32(), e.next_u32());
+            assert_eq!(u01_f64(hi, lo).to_bits(), f.draw_double().to_bits());
+        }
+    }
+}

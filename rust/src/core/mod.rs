@@ -26,15 +26,24 @@
 //! cross-layer bitwise tests consume.
 //!
 //! The `(seed, ctr)` → raw-counter mapping is the normative contract in
-//! [`counter`], kept bit-identical with `python/compile/kernels/common.py`.
+//! [`counter`], kept bit-identical with `python/compile/kernels/common.py`;
+//! the full stream-consumption rules (word indexing, conversions, block
+//! structure, fill sharding) are consolidated in `docs/stream-contracts.md`.
+//!
+//! Beyond the word-at-a-time draw API, every engine exposes its counter
+//! blocks through [`BlockRng`], and [`fill`] builds the deterministic
+//! (thread-count-invariant) bulk generation engine on top of that.
 
+pub mod block;
 pub mod counter;
+pub mod fill;
 pub mod philox;
 pub mod squares;
 pub mod threefry;
 pub mod traits;
 pub mod tyche;
 
+pub use block::{BlockBuffered, BlockRng};
 pub use philox::{Philox, Philox2x32};
 pub use squares::Squares;
 pub use threefry::{Threefry, Threefry2x32};

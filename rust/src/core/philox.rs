@@ -7,6 +7,7 @@
 //! block of the cuRAND-analog baseline, and what the statistical battery's
 //! parallel-stream test drives directly.
 
+use super::block::BlockRng;
 use super::counter::{philox2_key, split_seed};
 use super::traits::{CounterRng, Rng};
 
@@ -142,6 +143,24 @@ impl Rng for Philox {
     }
 }
 
+impl BlockRng for Philox {
+    const WORDS_PER_BLOCK: usize = 4;
+    type Block = [u32; 4];
+
+    #[inline]
+    fn generate_block(&mut self, out: &mut [u32; 4]) {
+        if self.pos >= 4 {
+            // Block-aligned: one raw block function call, no buffer bounce.
+            *out = self.block(self.blk);
+            self.blk = self.blk.wrapping_add(1);
+        } else {
+            // Mid-block phase: route through fill so the output stays
+            // bit-identical to four sequential next_u32 draws.
+            self.fill_u32(&mut out[..]);
+        }
+    }
+}
+
 impl CounterRng for Philox {
     const NAME: &'static str = "philox";
 
@@ -180,6 +199,22 @@ impl Rng for Philox2x32 {
         let w = self.buf[self.pos as usize];
         self.pos += 1;
         w
+    }
+}
+
+impl BlockRng for Philox2x32 {
+    const WORDS_PER_BLOCK: usize = 2;
+    type Block = [u32; 2];
+
+    #[inline]
+    fn generate_block(&mut self, out: &mut [u32; 2]) {
+        if self.pos >= 2 {
+            *out = philox2x32([self.blk, self.ctr], self.key);
+            self.blk = self.blk.wrapping_add(1);
+        } else {
+            out[0] = self.next_u32();
+            out[1] = self.next_u32();
+        }
     }
 }
 

@@ -9,6 +9,7 @@
 //! arbitrary user seed with splitmix64 (forced odd) — documented in
 //! `core::counter` and mirrored in the python oracle.
 
+use super::block::BlockRng;
 use super::counter::squares_key;
 use super::traits::{CounterRng, Rng};
 
@@ -55,6 +56,18 @@ impl Rng for Squares {
         // (2^32-word stream period, like the rest of the family).
         self.ctr = (self.ctr & 0xFFFF_FFFF_0000_0000) | ((self.ctr as u32).wrapping_add(1) as u64);
         w
+    }
+}
+
+impl BlockRng for Squares {
+    // One output word per (ctr, key) invocation — the block IS the word,
+    // so there is no alignment phase to manage.
+    const WORDS_PER_BLOCK: usize = 1;
+    type Block = [u32; 1];
+
+    #[inline]
+    fn generate_block(&mut self, out: &mut [u32; 1]) {
+        out[0] = self.next_u32();
     }
 }
 

@@ -4,6 +4,7 @@
 //! (the paper's portability argument); the ablation bench quantifies the
 //! trade against Philox on this host.
 
+use super::block::BlockRng;
 use super::counter::split_seed;
 use super::traits::{CounterRng, Rng};
 
@@ -138,6 +139,21 @@ impl Rng for Threefry {
     }
 }
 
+impl BlockRng for Threefry {
+    const WORDS_PER_BLOCK: usize = 4;
+    type Block = [u32; 4];
+
+    #[inline]
+    fn generate_block(&mut self, out: &mut [u32; 4]) {
+        if self.pos >= 4 {
+            *out = self.block(self.blk);
+            self.blk = self.blk.wrapping_add(1);
+        } else {
+            self.fill_u32(&mut out[..]);
+        }
+    }
+}
+
 impl CounterRng for Threefry {
     const NAME: &'static str = "threefry";
 
@@ -177,6 +193,22 @@ impl Rng for Threefry2x32 {
         let w = self.buf[self.pos as usize];
         self.pos += 1;
         w
+    }
+}
+
+impl BlockRng for Threefry2x32 {
+    const WORDS_PER_BLOCK: usize = 2;
+    type Block = [u32; 2];
+
+    #[inline]
+    fn generate_block(&mut self, out: &mut [u32; 2]) {
+        if self.pos >= 2 {
+            *out = threefry2x32([self.blk, self.ctr], self.key);
+            self.blk = self.blk.wrapping_add(1);
+        } else {
+            out[0] = self.next_u32();
+            out[1] = self.next_u32();
+        }
     }
 }
 

@@ -11,32 +11,88 @@
 //! * `f32 in [0,1)`: top 24 bits of one u32 word,
 //! * `f64 in [0,1)`: top 53 bits of `(word_2m << 32) | word_2m+1`.
 
+/// One stream word to a uniform `f32` in `[0, 1)` — top 24 bits. The
+/// single normative definition; [`Rng::draw_float`] and the bulk fill
+/// paths both route through it.
+#[inline]
+pub fn u01_f32(word: u32) -> f32 {
+    (word >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+}
+
+/// Two consecutive stream words (first word high) to a `u64` — the
+/// single normative composition behind [`Rng::next_u64`].
+#[inline]
+pub fn u64_from_words(hi: u32, lo: u32) -> u64 {
+    ((hi as u64) << 32) | lo as u64
+}
+
+/// 64 stream bits to a uniform `f64` in `[0, 1)` — top 53 bits. The
+/// single normative definition; [`Rng::draw_double`] routes through it.
+#[inline]
+pub fn u01_f64_from_bits(bits: u64) -> f64 {
+    (bits >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Two consecutive stream words to a uniform `f64` in `[0, 1)` —
+/// [`u64_from_words`] composed with [`u01_f64_from_bits`].
+#[inline]
+pub fn u01_f64(hi: u32, lo: u32) -> f64 {
+    u01_f64_from_bits(u64_from_words(hi, lo))
+}
+
 /// Uniform random bit generator + OpenRAND draw helpers.
 ///
 /// Object-safe: the CLI and battery dispatch over `&mut dyn Rng`; the hot
 /// paths monomorphize via generics instead.
+///
+/// Every method consumes a fixed, documented number of stream words —
+/// the normative word-consumption rules (shared bit-exactly with the
+/// device layer) are consolidated in `docs/stream-contracts.md`.
 pub trait Rng {
     /// Next 32-bit word of the stream (the raw engine output).
     fn next_u32(&mut self) -> u32;
 
-    /// Next 64 bits: two consecutive 32-bit words, first word high.
+    /// Next 64 bits: two consecutive 32-bit words, **first word high**.
+    ///
+    /// This composition is normative (`docs/stream-contracts.md` §2): it
+    /// is what `python/compile/kernels/common.py::u32x2_to_f64` feeds the
+    /// f64 conversion, so reordering it would silently desynchronize the
+    /// host f64 path from the device graphs. The doctest below and
+    /// `python/tests/test_kat.py::test_next_u64_word_order_kat` pin the
+    /// same literal on both layers.
+    ///
+    /// ```
+    /// use openrand::core::{CounterRng, Philox, Rng};
+    /// // Stream (seed=7, ctr=1) opens with words 0x2EC4F55D, 0x249EF5F4.
+    /// let mut w = Philox::new(7, 1);
+    /// let (w0, w1) = (w.next_u32(), w.next_u32());
+    /// assert_eq!((w0, w1), (0x2EC4_F55D, 0x249E_F5F4));
+    /// // next_u64 packs them first-word-high:
+    /// assert_eq!(Philox::new(7, 1).next_u64(), 0x2EC4_F55D_249E_F5F4);
+    /// assert_eq!(((w0 as u64) << 32) | w1 as u64, 0x2EC4_F55D_249E_F5F4);
+    /// assert_ne!(((w1 as u64) << 32) | w0 as u64, 0x2EC4_F55D_249E_F5F4); // not low-word-first
+    /// // ... and the f64 path inherits the ordering (top 53 bits):
+    /// assert_eq!(Philox::new(7, 1).draw_double(), 0.1826928474807763);
+    /// ```
     #[inline]
     fn next_u64(&mut self) -> u64 {
-        let hi = self.next_u32() as u64;
-        let lo = self.next_u32() as u64;
-        (hi << 32) | lo
+        let hi = self.next_u32();
+        let lo = self.next_u32();
+        u64_from_words(hi, lo)
     }
 
-    /// Uniform `f32` in `[0, 1)` — top 24 bits of one word.
+    /// Uniform `f32` in `[0, 1)` — top 24 bits of one word
+    /// ([`u01_f32`]).
     #[inline]
     fn draw_float(&mut self) -> f32 {
-        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+        u01_f32(self.next_u32())
     }
 
-    /// Uniform `f64` in `[0, 1)` — top 53 bits of two words.
+    /// Uniform `f64` in `[0, 1)` — top 53 bits of two words
+    /// ([`u01_f64_from_bits`] of [`Rng::next_u64`]).
     #[inline]
     fn draw_double(&mut self) -> f64 {
-        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+        u01_f64_from_bits(self.next_u64())
     }
 
     /// Two uniform `f64`s — the paper's `draw_double2` (Fig. 1 line 16),
@@ -103,8 +159,10 @@ pub trait CounterRng: Rng + Sized {
     /// the sub-stream (timestep, kernel launch, ...).
     fn new(seed: u64, ctr: u32) -> Self;
 
-    /// Skip the stream position forward to the `pos`-th 32-bit word in
-    /// O(1) (counter arithmetic; Tyche documents its O(pos) exception).
+    /// Position the stream at the `pos`-th 32-bit word — an **absolute**
+    /// index, valid from any current state — in O(1) (counter
+    /// arithmetic; Tyche documents its O(pos) exception, replaying from
+    /// its warm-up origin).
     fn set_position(&mut self, pos: u32);
 }
 

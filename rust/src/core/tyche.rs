@@ -5,6 +5,7 @@
 //! and runs them through the first published parallel-stream correlation
 //! tests (§5.2) — reproduced here by `stats::parallel`.
 
+use super::block::BlockRng;
 use super::counter::split_seed;
 use super::traits::{CounterRng, Rng};
 
@@ -61,6 +62,10 @@ fn init(seed: u64, ctr: u32, inverse: bool) -> State {
 #[derive(Debug, Clone)]
 pub struct Tyche {
     s: State,
+    /// Post-warm-up stream origin: `set_position` replays from here, so
+    /// jumps are absolute from any current state (matching the trait
+    /// contract) at the documented O(pos) cost.
+    s0: State,
 }
 
 impl Rng for Tyche {
@@ -71,16 +76,31 @@ impl Rng for Tyche {
     }
 }
 
+impl BlockRng for Tyche {
+    // Sequential generator: one MIX per word, block size 1.
+    const WORDS_PER_BLOCK: usize = 1;
+    type Block = [u32; 1];
+
+    #[inline]
+    fn generate_block(&mut self, out: &mut [u32; 1]) {
+        out[0] = self.next_u32();
+    }
+}
+
 impl CounterRng for Tyche {
     const NAME: &'static str = "tyche";
 
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
-        Tyche { s: init(seed, ctr, false) }
+        let s0 = init(seed, ctr, false);
+        Tyche { s: s0, s0 }
     }
 
     /// O(pos): Tyche has no counter to jump — documented exception.
+    /// Absolute (replays from the warm-up origin), like the rest of the
+    /// family.
     fn set_position(&mut self, pos: u32) {
+        self.s = self.s0;
         for _ in 0..pos {
             self.s = mix(self.s);
         }
@@ -92,6 +112,8 @@ impl CounterRng for Tyche {
 #[derive(Debug, Clone)]
 pub struct TycheI {
     s: State,
+    /// Post-warm-up stream origin (see [`Tyche`]).
+    s0: State,
 }
 
 impl Rng for TycheI {
@@ -102,16 +124,29 @@ impl Rng for TycheI {
     }
 }
 
+impl BlockRng for TycheI {
+    const WORDS_PER_BLOCK: usize = 1;
+    type Block = [u32; 1];
+
+    #[inline]
+    fn generate_block(&mut self, out: &mut [u32; 1]) {
+        out[0] = self.next_u32();
+    }
+}
+
 impl CounterRng for TycheI {
     const NAME: &'static str = "tyche_i";
 
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
-        TycheI { s: init(seed, ctr, true) }
+        let s0 = init(seed, ctr, true);
+        TycheI { s: s0, s0 }
     }
 
-    /// O(pos) — same exception as [`Tyche`].
+    /// O(pos) — same exception (and same absolute semantics) as
+    /// [`Tyche`].
     fn set_position(&mut self, pos: u32) {
+        self.s = self.s0;
         for _ in 0..pos {
             self.s = mix_i(self.s);
         }
@@ -183,6 +218,25 @@ mod tests {
         let mut r = Tyche::new(3, 3);
         r.set_position(10);
         assert_eq!(r.next_u32(), w[10]);
+    }
+
+    #[test]
+    fn set_position_is_absolute_from_any_state() {
+        // The trait contract: set_position targets an absolute word
+        // index regardless of where the stream currently is. Tyche
+        // replays from the warm-up origin, so jumping "back" works too.
+        let mut seq = Tyche::new(3, 3);
+        let w: Vec<u32> = (0..24).map(|_| seq.next_u32()).collect();
+        let mut r = Tyche::new(3, 3);
+        r.set_position(20);
+        r.set_position(5); // second jump must not compound with the first
+        assert_eq!(r.next_u32(), w[5]);
+
+        let mut ri = TycheI::new(3, 3);
+        let first = ri.next_u32();
+        ri.next_u32();
+        ri.set_position(0);
+        assert_eq!(ri.next_u32(), first);
     }
 
     #[test]

@@ -27,6 +27,11 @@
 //! | [`Binomial`]                   | 2·n (n Bernoulli trials)         |
 //! | [`DiscreteAlias`]              | 1 (+ rare Lemire rejection) + 2  |
 //!
+//! [`Uniform`] and [`BoxMuller`] additionally expose `sample_fill` bulk
+//! fast paths that pull words through the engines' block-fill machinery;
+//! they consume the identical word pattern (bit-identical output to
+//! repeated `sample`), so the table above covers them unchanged.
+//!
 //! "Variable" samplers are still **counter-stream-deterministic**: the
 //! number of words consumed is a pure function of the stream contents,
 //! so the same `(seed, ctr)` always yields the same samples and leaves

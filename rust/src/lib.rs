@@ -3,7 +3,10 @@
 //! Three-layer reproduction of *OpenRAND* (Khan et al., 2023):
 //!
 //! * **L3 (this crate)** — the counter-based RNG library itself
-//!   ([`core`]), baselines ([`baseline`]), distributions ([`dist`]), a
+//!   ([`core`], including the block-granular [`core::BlockRng`] API and
+//!   the deterministic bulk [`core::fill`] engine whose output is
+//!   bitwise independent of thread count — contracts in
+//!   `docs/stream-contracts.md`), baselines ([`baseline`]), distributions ([`dist`]), a
 //!   TestU01/PractRand-substitute statistical battery ([`stats`]), the
 //!   Brownian-dynamics macro-benchmark substrate ([`sim`]), a
 //!   reproducibility-preserving parallel coordinator ([`coordinator`]),

@@ -19,7 +19,7 @@
 use openrand::baseline::{Mt19937, Pcg32, Xoshiro256pp};
 use openrand::coordinator::repro;
 use openrand::coordinator::{Backend, SimDriver};
-use openrand::core::{Generator, Rng};
+use openrand::core::{fill, BlockRng, Generator, Rng};
 use openrand::dist::{
     Bernoulli, Binomial, BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform,
     ZigguratNormal,
@@ -40,6 +40,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "ctr", help: "32-bit stream counter", default: Some("0"), is_flag: false },
         OptSpec { name: "n", help: "count (supports k/M/G suffix)", default: Some("16"), is_flag: false },
         OptSpec { name: "format", help: "generate output: u32|u64|f32|f64", default: Some("u32"), is_flag: false },
+        OptSpec { name: "block-fill", help: "generate: batch raw output through the deterministic block-fill engine (honors --threads; bitwise identical to the word-at-a-time path)", default: None, is_flag: true },
         OptSpec { name: "dist", help: "generate: sample a distribution instead of raw words: none|uniform|normal|ziggurat|exp|poisson|bernoulli|binomial|alias", default: Some("none"), is_flag: false },
         OptSpec { name: "lambda", help: "dist: rate for exp/poisson", default: Some("1.0"), is_flag: false },
         OptSpec { name: "lo", help: "dist: uniform lower bound", default: Some("0"), is_flag: false },
@@ -48,7 +49,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "trials", help: "dist: binomial trial count", default: Some("10"), is_flag: false },
         OptSpec { name: "weights", help: "dist: comma-separated alias-table weights", default: Some("1,2,3,4"), is_flag: false },
         OptSpec { name: "steps", help: "brownian: simulation steps", default: Some("100"), is_flag: false },
-        OptSpec { name: "threads", help: "brownian: host threads", default: Some("1"), is_flag: false },
+        OptSpec { name: "threads", help: "brownian/generate: host threads", default: Some("1"), is_flag: false },
         OptSpec { name: "backend", help: "brownian: host|device", default: Some("host"), is_flag: false },
         OptSpec { name: "style", help: "brownian: openrand|curand_style|random123", default: Some("openrand"), is_flag: false },
         OptSpec { name: "words", help: "stats: words per test", default: Some("4M"), is_flag: false },
@@ -109,10 +110,37 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let ctr = args.get_u64("ctr", 0).map_err(anyhow::Error::msg)? as u32;
     let n = args.get_usize("n", 16).map_err(anyhow::Error::msg)?;
     let dist = args.get_or("dist", "none").to_string();
+    // Validate --format once, up front, so both the word-at-a-time and
+    // block-fill paths report the identical error the identical way.
+    let format = args.get_or("format", "u32").to_string();
+    if dist == "none" && !matches!(format.as_str(), "u32" | "u64" | "f32" | "f64") {
+        anyhow::bail!("unknown format '{format}' (u32|u64|f32|f64)");
+    }
+    if args.flag("block-fill") {
+        if dist != "none" {
+            anyhow::bail!("--block-fill applies to raw formats (drop --dist)");
+        }
+        let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
+        if threads == 0 {
+            anyhow::bail!("--threads must be positive");
+        }
+        // The block-fill path materializes the whole buffer (that is the
+        // point — one deterministic parallel fill), so bound it: both by
+        // the 2^32-word stream period and by a memory-sane CLI ceiling.
+        // Larger runs stream through the plain path or split across
+        // --ctr values.
+        const CLI_FILL_CAP: usize = 1 << 26; // 64M elements (<= 512 MiB)
+        if n > CLI_FILL_CAP {
+            anyhow::bail!(
+                "--n {n} is above the --block-fill buffer cap ({CLI_FILL_CAP}); \
+                 use the word-at-a-time path or split across --ctr values"
+            );
+        }
+        return generate_block_fill(gen, seed, ctr, n, &format, threads);
+    }
     if dist != "none" {
         return generate_dist(args, gen, seed, ctr, n, &dist);
     }
-    let format = args.get_or("format", "u32").to_string();
     gen.with_rng(seed, ctr, |rng| {
         for _ in 0..n {
             match format.as_str() {
@@ -120,14 +148,78 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
                 "u64" => println!("{}", rng.next_u64()),
                 "f32" => println!("{}", rng.draw_float()),
                 "f64" => println!("{}", rng.draw_double()),
-                other => {
-                    eprintln!("unknown format '{other}'");
-                    std::process::exit(2);
-                }
+                other => unreachable!("format '{other}' validated above"),
             }
         }
     });
     Ok(())
+}
+
+/// `generate --block-fill [--threads N]`: batch-generate through the
+/// deterministic block-fill engine (`core::fill`). Output is bitwise
+/// identical to the word-at-a-time path for every format and every
+/// thread count — `rust/tests/cli.rs` pins this end to end.
+fn generate_block_fill(
+    gen: Generator,
+    seed: u64,
+    ctr: u32,
+    n: usize,
+    format: &str,
+    threads: usize,
+) -> anyhow::Result<()> {
+    fn run<G: BlockRng>(
+        seed: u64,
+        ctr: u32,
+        n: usize,
+        format: &str,
+        threads: usize,
+    ) -> anyhow::Result<()> {
+        use std::io::Write as _;
+        let stdout = std::io::stdout();
+        let mut out = std::io::BufWriter::new(stdout.lock());
+        match format {
+            "u32" => {
+                let mut buf = vec![0u32; n];
+                fill::par_fill_u32::<G>(seed, ctr, &mut buf, threads);
+                for v in &buf {
+                    writeln!(out, "{v}")?;
+                }
+            }
+            "u64" => {
+                let mut buf = vec![0u64; n];
+                fill::par_fill_u64::<G>(seed, ctr, &mut buf, threads);
+                for v in &buf {
+                    writeln!(out, "{v}")?;
+                }
+            }
+            "f32" => {
+                let mut buf = vec![0.0f32; n];
+                fill::par_fill_f32::<G>(seed, ctr, &mut buf, threads);
+                for v in &buf {
+                    writeln!(out, "{v}")?;
+                }
+            }
+            "f64" => {
+                let mut buf = vec![0.0f64; n];
+                fill::par_fill_f64::<G>(seed, ctr, &mut buf, threads);
+                for v in &buf {
+                    writeln!(out, "{v}")?;
+                }
+            }
+            other => unreachable!("format '{other}' validated in cmd_generate"),
+        }
+        Ok(())
+    }
+    use openrand::core::{Philox, Philox2x32, Squares, Threefry, Threefry2x32, Tyche, TycheI};
+    match gen {
+        Generator::Philox => run::<Philox>(seed, ctr, n, format, threads),
+        Generator::Philox2x32 => run::<Philox2x32>(seed, ctr, n, format, threads),
+        Generator::Threefry => run::<Threefry>(seed, ctr, n, format, threads),
+        Generator::Threefry2x32 => run::<Threefry2x32>(seed, ctr, n, format, threads),
+        Generator::Squares => run::<Squares>(seed, ctr, n, format, threads),
+        Generator::Tyche => run::<Tyche>(seed, ctr, n, format, threads),
+        Generator::TycheI => run::<TycheI>(seed, ctr, n, format, threads),
+    }
 }
 
 /// `generate --dist <name>`: stream distribution samples instead of raw
@@ -329,7 +421,9 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     print!("{}", r2.render());
     let r3 = repro::verify_backends(params, 1e-9)?;
     print!("{}", r3.render());
-    if r1.consistent && r2.consistent && r3.consistent {
+    let r4 = repro::verify_fill_invariance::<openrand::core::Philox>(1 << 20, max_threads, seed);
+    print!("{}", r4.render());
+    if r1.consistent && r2.consistent && r3.consistent && r4.consistent {
         println!("ALL REPRODUCIBILITY CHECKS PASSED");
         Ok(())
     } else {

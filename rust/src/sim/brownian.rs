@@ -18,8 +18,9 @@
 
 use crate::baseline::stateful_philox::{init_states, CurandPhiloxState, StatefulPhilox};
 use crate::baseline::raw123;
+use crate::core::fill::u01_f64;
 use crate::core::philox::philox4x32;
-use crate::core::{CounterRng, Philox, Rng};
+use crate::core::{BlockRng, CounterRng, Philox, Rng};
 use crate::util::hash::Fnv1a;
 
 /// Physics constants — keep identical to python/compile/model.py.
@@ -115,11 +116,30 @@ impl BrownianSim {
         let seed = self.params.global_seed;
         match self.params.style {
             RngStyle::OpenRand => {
-                for pid in lo..hi {
-                    // Paper Fig. 1 lines 10-18, verbatim in Rust.
-                    let mut rng = Philox::new(pid as u64 ^ seed, step);
-                    let (r1, r2) = rng.draw_double2();
-                    self.kick(pid, drag, sqrt_dt, r1, r2);
+                // Paper Fig. 1 semantics, batched per particle range:
+                // each particle's kick is exactly one Philox counter
+                // block, so a tile of kicks is generated through the
+                // BlockRng fast path (one raw block call per particle,
+                // no per-word buffer bookkeeping), then the physics loop
+                // runs over the tile. Bit-identical to the word-at-a-time
+                // form — pinned by `openrand_and_raw123_same_streams` and
+                // `first_step_matches_hand_computation` below.
+                const TILE: usize = 512;
+                let mut kicks = [(0.0f64, 0.0f64); TILE];
+                let mut base = lo;
+                while base < hi {
+                    let m = (hi - base).min(TILE);
+                    for (k, kick) in kicks[..m].iter_mut().enumerate() {
+                        let mut rng = Philox::new((base + k) as u64 ^ seed, step);
+                        let mut blk = [0u32; 4];
+                        rng.generate_block(&mut blk);
+                        *kick = (u01_f64(blk[0], blk[1]), u01_f64(blk[2], blk[3]));
+                    }
+                    for k in 0..m {
+                        let (r1, r2) = kicks[k];
+                        self.kick(base + k, drag, sqrt_dt, r1, r2);
+                    }
+                    base += m;
                 }
             }
             RngStyle::CurandStyle => {

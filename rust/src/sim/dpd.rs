@@ -24,7 +24,8 @@
 //! cell-list neighbor search, velocity-Verlet-style update (DPD-VV).
 
 use crate::core::counter::splitmix64;
-use crate::core::{CounterRng, Philox, Rng};
+use crate::core::fill::u01_f64;
+use crate::core::{BlockRng, CounterRng, Philox};
 
 /// Canonical pair seed: order-independent, well-mixed.
 #[inline]
@@ -40,7 +41,17 @@ pub fn pair_theta(i: u64, j: u64, global: u64, step: u32) -> f64 {
     let mut rng = Philox::new(pair_seed(i, j, global), step);
     // Sum of 3 uniforms, centered/scaled to unit variance (Groot-Warren
     // use a plain uniform; a 3-sum is smoother at identical cost class).
-    let s = rng.draw_double() + rng.draw_double() + rng.draw_double();
+    // The 3 uniforms are 6 stream words = 1.5 Philox blocks; drawing the
+    // two blocks through the BlockRng fast path costs the same two raw
+    // block calls as the buffered form but skips its per-word
+    // bookkeeping. The uniforms come from words 0..6 in order (pinned by
+    // `pair_theta_matches_word_at_a_time`); the second block's trailing
+    // two words are generated-but-unused, which is unobservable because
+    // the engine is local to this call.
+    let (mut b0, mut b1) = ([0u32; 4], [0u32; 4]);
+    rng.generate_block(&mut b0);
+    rng.generate_block(&mut b1);
+    let s = u01_f64(b0[0], b0[1]) + u01_f64(b0[2], b0[3]) + u01_f64(b1[0], b1[1]);
     (s - 1.5) * 2.0
 }
 
@@ -91,9 +102,13 @@ impl DpdSim {
         for i in 0..p.n {
             x[i] = (i % side) as f64 * spacing + 0.25 * spacing;
             y[i] = (i / side) as f64 * spacing + 0.25 * spacing;
+            // One counter block per particle (two f64s), via the block
+            // path — bit-identical to the draw_double pair it replaces.
             let mut rng = Philox::new(i as u64 ^ p.global_seed, u32::MAX);
-            vx[i] = (rng.draw_double() - 0.5) * 2.0 * p.kt.sqrt();
-            vy[i] = (rng.draw_double() - 0.5) * 2.0 * p.kt.sqrt();
+            let mut blk = [0u32; 4];
+            rng.generate_block(&mut blk);
+            vx[i] = (u01_f64(blk[0], blk[1]) - 0.5) * 2.0 * p.kt.sqrt();
+            vy[i] = (u01_f64(blk[2], blk[3]) - 0.5) * 2.0 * p.kt.sqrt();
         }
         // Zero net momentum exactly (pairwise cancellation trick:
         // subtract the mean, computed deterministically).
@@ -291,7 +306,7 @@ impl DpdSim {
         (self.vx.iter().sum(), self.vy.iter().sum())
     }
 
-    /// Instantaneous kinetic temperature (2-D: kT = <v²>/2 per particle).
+    /// Instantaneous kinetic temperature (2-D: `kT = <v²>/2` per particle).
     pub fn temperature(&self) -> f64 {
         let v2: f64 = (0..self.p.n)
             .map(|i| self.vx[i] * self.vx[i] + self.vy[i] * self.vy[i])
@@ -312,6 +327,7 @@ impl DpdSim {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::core::Rng;
 
     fn params(n: usize) -> DpdParams {
         DpdParams {
@@ -333,6 +349,18 @@ mod tests {
         // (i,j) vs (j,i) with swapped identity must differ: (1,2) != (2,1)
         // collapses to the same canonical pair — but (1,3) != (2,3):
         assert_ne!(pair_seed(1, 3, 0), pair_seed(2, 3, 0));
+    }
+
+    #[test]
+    fn pair_theta_matches_word_at_a_time() {
+        // The block-path rewrite consumes the same six stream words in
+        // the same order as three buffered draw_double calls.
+        for (i, j, g, s) in [(1u64, 2u64, 0u64, 0u32), (5, 9, 77, 3), (100, 7, 1, 12)] {
+            let mut rng = Philox::new(pair_seed(i, j, g), s);
+            let want =
+                (rng.draw_double() + rng.draw_double() + rng.draw_double() - 1.5) * 2.0;
+            assert_eq!(pair_theta(i, j, g, s).to_bits(), want.to_bits(), "({i},{j})");
+        }
     }
 
     #[test]

@@ -1,9 +1,66 @@
 //! The battery: run the full suite against a generator and produce a
 //! TestU01-style report (E3 in the experiment index).
+//!
+//! Stream words reach the tests through [`BufferedWords`]: bulk chunks
+//! pulled via the engines' block-fill path (`Rng::fill_u32`), served one
+//! word at a time. Bit-identical to drawing from the engine directly —
+//! the fill contract (`docs/stream-contracts.md` §4) guarantees it. The
+//! tests still pay one virtual `next_u32` per word either way; what the
+//! chunk buys is that engine-side generation runs on the bulk block
+//! path for engines that override `fill_u32` (the core family —
+//! baselines on the default word-loop `fill_u32` see only the copy),
+//! and it gives the battery a single knob (chunk size, see the ROADMAP
+//! sweep item) for tuning word delivery.
 
 use super::suite::{all_tests, StatTest, TestResult, Verdict};
 use crate::core::traits::Rng;
 use std::fmt::Write as _;
+
+/// Words pulled per bulk refill of the battery's word source.
+const FILL_CHUNK: usize = 4096;
+
+/// A word source that refills in bulk through `Rng::fill_u32` (the
+/// engines' block path) and serves `next_u32` from the chunk. The
+/// served stream is bit-identical to the inner engine's.
+pub struct BufferedWords {
+    inner: Box<dyn Rng>,
+    buf: Vec<u32>,
+    pos: usize,
+}
+
+impl BufferedWords {
+    pub fn new(inner: Box<dyn Rng>, chunk: usize) -> BufferedWords {
+        assert!(chunk > 0, "chunk must be positive");
+        BufferedWords { inner, buf: vec![0; chunk], pos: chunk }
+    }
+}
+
+impl Rng for BufferedWords {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.pos == self.buf.len() {
+            self.inner.fill_u32(&mut self.buf);
+            self.pos = 0;
+        }
+        let word = self.buf[self.pos];
+        self.pos += 1;
+        word
+    }
+
+    #[inline]
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        // Drain the chunk, then delegate the bulk to the engine directly.
+        let mut i = 0;
+        while self.pos < self.buf.len() && i < out.len() {
+            out[i] = self.buf[self.pos];
+            self.pos += 1;
+            i += 1;
+        }
+        if i < out.len() {
+            self.inner.fill_u32(&mut out[i..]);
+        }
+    }
+}
 
 /// Report for one generator across the whole suite.
 #[derive(Debug, Clone)]
@@ -70,9 +127,11 @@ pub fn run_suite(
 ) -> BatteryReport {
     let mut results = Vec::new();
     for (idx, (_, test, weight)) in tests.into_iter().enumerate() {
-        let mut rng = mk(idx);
+        // Words flow through the block-fill chunk buffer; same stream
+        // bit-for-bit, engine-side generation on the bulk path.
+        let mut rng = BufferedWords::new(mk(idx), FILL_CHUNK);
         let budget = ((words as f64 * weight) as usize).max(1 << 14);
-        results.push(test(rng.as_mut(), budget));
+        results.push(test(&mut rng, budget));
     }
     BatteryReport { generator: generator.to_string(), results, words_per_test: words }
 }
@@ -119,6 +178,26 @@ mod tests {
             Generator::Squares => Box::new(Squares::new(seed, 0)),
             Generator::Tyche => Box::new(Tyche::new(seed, 0)),
             Generator::TycheI => Box::new(TycheI::new(seed, 0)),
+        }
+    }
+
+    #[test]
+    fn buffered_words_bit_identical_to_engine() {
+        use crate::core::{CounterRng, Philox};
+        let mut direct = Philox::new(0xB0FF, 1);
+        let mut buffered = BufferedWords::new(Box::new(Philox::new(0xB0FF, 1)), 64);
+        for i in 0..1000 {
+            assert_eq!(direct.next_u32(), buffered.next_u32(), "word {i}");
+        }
+        // Bulk path too, at sizes straddling the chunk boundary.
+        let mut direct = Philox::new(0xB0FF, 2);
+        let mut buffered = BufferedWords::new(Box::new(Philox::new(0xB0FF, 2)), 64);
+        for len in [1usize, 7, 63, 64, 65, 200] {
+            let mut a = vec![0u32; len];
+            let mut b = vec![0u32; len];
+            direct.fill_u32(&mut a);
+            buffered.fill_u32(&mut b);
+            assert_eq!(a, b, "len={len}");
         }
     }
 

@@ -91,7 +91,10 @@ fn poisson_expected(lambda: f64, hi: u64, n: usize) -> Vec<f64> {
 pub fn normal_box_muller_ks(rng: &mut dyn Rng, n: usize) -> TestResult {
     let m = (n / 4).clamp(100, 1 << 19);
     let d = BoxMuller::standard();
-    let mut xs: Vec<f64> = (0..m).map(|_| d.sample(rng)).collect();
+    // Sample buffer filled through the block-fill fast path (bit-identical
+    // to repeated `sample`; `dist::normal` tests pin the equivalence).
+    let mut xs = vec![0.0f64; m];
+    d.sample_fill(rng, &mut xs);
     let (stat, p) = ks_against(&mut xs, normal_cdf);
     TestResult { name: "normal_box_muller_ks", statistic: stat, p, words_used: 4 * m }
 }
@@ -141,7 +144,9 @@ pub fn exponential_ks(rng: &mut dyn Rng, n: usize) -> TestResult {
 pub fn uniform_interval_ks(rng: &mut dyn Rng, n: usize) -> TestResult {
     let m = (n / 2).clamp(100, 1 << 19);
     let d = Uniform::new(-1.0, 1.0);
-    let mut xs: Vec<f64> = (0..m).map(|_| d.sample(rng)).collect();
+    // Sample buffer filled through the block-fill fast path.
+    let mut xs = vec![0.0f64; m];
+    d.sample_fill(rng, &mut xs);
     let (stat, p) = ks_against(&mut xs, |x| (x + 1.0) / 2.0);
     TestResult { name: "uniform_interval_ks", statistic: stat, p, words_used: 2 * m }
 }

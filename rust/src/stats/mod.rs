@@ -30,6 +30,6 @@ pub mod parallel;
 pub mod pvalue;
 pub mod suite;
 
-pub use battery::{run_battery, BatteryReport};
+pub use battery::{run_battery, BatteryReport, BufferedWords};
 pub use distcheck::run_dist_battery;
 pub use suite::{TestResult, Verdict};

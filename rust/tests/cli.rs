@@ -51,6 +51,42 @@ fn generate_differs_across_generators_and_ctrs() {
 }
 
 #[test]
+fn generate_block_fill_bitwise_matches_word_at_a_time() {
+    // The tentpole contract, end to end: --block-fill output is byte
+    // identical to the plain path for every format, and independent of
+    // --threads.
+    for format in ["u32", "u64", "f32", "f64"] {
+        let base_args = ["generate", "--seed", "9", "--ctr", "2", "--n", "33", "--format", format];
+        let (base, _, ok) = openrand(&base_args);
+        assert!(ok, "{format}");
+        let mut one_args = base_args.to_vec();
+        one_args.push("--block-fill");
+        let (one, _, ok1) = openrand(&one_args);
+        assert!(ok1, "{format}");
+        let mut par_args = one_args.clone();
+        par_args.extend_from_slice(&["--threads", "4"]);
+        let (par, _, ok2) = openrand(&par_args);
+        assert!(ok2, "{format}");
+        assert_eq!(base, one, "{format}: serial block fill diverged");
+        assert_eq!(base, par, "{format}: parallel block fill diverged");
+    }
+    // Non-default engines ride the same contract (tyche has the O(pos)
+    // set_position exception; it must still be bitwise identical).
+    for generator in ["threefry", "squares", "tyche"] {
+        let (plain, _, _) = openrand(&["generate", "--generator", generator, "--n", "17"]);
+        let (filled, _, ok) = openrand(&[
+            "generate", "--generator", generator, "--n", "17", "--block-fill", "--threads", "3",
+        ]);
+        assert!(ok, "{generator}");
+        assert_eq!(plain, filled, "{generator}");
+    }
+    // --block-fill is a raw-format path; combining it with --dist errors.
+    let (_, err, ok) = openrand(&["generate", "--dist", "normal", "--block-fill"]);
+    assert!(!ok);
+    assert!(err.contains("block-fill"), "{err}");
+}
+
+#[test]
 fn generate_dist_samples_deterministic() {
     let run = || openrand(&["generate", "--dist", "normal", "--seed", "7", "--ctr", "1", "--n", "6"]);
     let (a, _, ok) = run();

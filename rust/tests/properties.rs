@@ -1,7 +1,10 @@
 //! Property-based tests over the core invariants, driven by the in-house
 //! `testing::prop` framework (the proptest substitute).
 
-use openrand::core::{CounterRng, Philox, Rng, Squares, Threefry, Tyche, TycheI};
+use openrand::core::{
+    fill, BlockBuffered, BlockRng, CounterRng, Philox, Philox2x32, Rng, Squares, Threefry,
+    Threefry2x32, Tyche, TycheI,
+};
 use openrand::dist::{
     Bernoulli, Binomial, BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform,
     ZigguratNormal,
@@ -244,6 +247,99 @@ fn prop_fill_equals_sequential() {
             let mut buf = vec![0u32; len as usize];
             a.fill_u32(&mut buf);
             buf.iter().all(|&w| w == b.next_u32()) && a.next_u32() == b.next_u32()
+        },
+    );
+}
+
+#[test]
+fn prop_generate_block_equals_serial_draws() {
+    // The BlockRng contract (docs/stream-contracts.md §3): for every
+    // core generator and any stream phase, generate_block yields exactly
+    // the next WORDS_PER_BLOCK next_u32 draws, and leaves the stream in
+    // lockstep afterwards.
+    fn check<G: BlockRng>(seed: u64, ctr: u32, pre: u32) -> bool {
+        let mut a = G::new(seed, ctr);
+        let mut b = G::new(seed, ctr);
+        for _ in 0..pre {
+            a.next_u32();
+            b.next_u32();
+        }
+        for _ in 0..3 {
+            let mut blk = G::Block::default();
+            a.generate_block(&mut blk);
+            if blk.as_ref().iter().any(|&w| w != b.next_u32()) {
+                return false;
+            }
+        }
+        a.next_u32() == b.next_u32()
+    }
+    Prop::new("generate_block == W next_u32 draws").cases(40).check3(
+        Gen::u64(),
+        Gen::u32(),
+        Gen::u32_below(9),
+        |seed, ctr, pre| {
+            check::<Philox>(seed, ctr, pre)
+                && check::<Philox2x32>(seed, ctr, pre)
+                && check::<Threefry>(seed, ctr, pre)
+                && check::<Threefry2x32>(seed, ctr, pre)
+                && check::<Squares>(seed, ctr, pre)
+                && check::<Tyche>(seed, ctr, pre)
+                && check::<TycheI>(seed, ctr, pre)
+        },
+    );
+}
+
+#[test]
+fn prop_block_buffered_adapter_is_transparent() {
+    // The safe buffered adapter preserves word-at-a-time semantics
+    // bit-identically over any BlockRng.
+    Prop::new("BlockBuffered == raw engine stream").cases(40).check2(
+        Gen::u64(),
+        Gen::u32(),
+        |seed, ctr| {
+            let mut raw4 = Threefry::new(seed, ctr);
+            let mut ad4 = BlockBuffered::<Threefry>::new(seed, ctr);
+            let mut raw1 = Squares::new(seed, ctr);
+            let mut ad1 = BlockBuffered::<Squares>::new(seed, ctr);
+            (0..24).all(|_| raw4.next_u32() == ad4.next_u32() && raw1.next_u32() == ad1.next_u32())
+        },
+    );
+}
+
+#[test]
+fn prop_parallel_fill_bitwise_thread_invariant() {
+    // The fill-engine contract (docs/stream-contracts.md §4): par_fill
+    // output equals the serial word-at-a-time stream for 1, 2, and 8
+    // threads, for u32 and f64, on counter engines and the sequential
+    // Tyche alike.
+    fn check<G: BlockRng>(seed: u64, ctr: u32, n: usize) -> bool {
+        let words: Vec<u32> = {
+            let mut g = G::new(seed, ctr);
+            (0..n).map(|_| g.next_u32()).collect()
+        };
+        let doubles: Vec<u64> = {
+            let mut g = G::new(seed, ctr);
+            (0..n / 2).map(|_| g.draw_double().to_bits()).collect()
+        };
+        for threads in [1usize, 2, 8] {
+            let mut out = vec![0u32; n];
+            fill::par_fill_u32::<G>(seed, ctr, &mut out, threads);
+            if out != words {
+                return false;
+            }
+            let mut fout = vec![0.0f64; n / 2];
+            fill::par_fill_f64::<G>(seed, ctr, &mut fout, threads);
+            if fout.iter().map(|v| v.to_bits()).ne(doubles.iter().copied()) {
+                return false;
+            }
+        }
+        true
+    }
+    Prop::new("par fill bitwise thread-invariant").cases(12).check2(
+        Gen::u64(),
+        Gen::usize_in(1, 300),
+        |seed, n| {
+            check::<Philox>(seed, 1, n) && check::<Squares>(seed, 1, n) && check::<Tyche>(seed, 1, n)
         },
     );
 }
