@@ -1,0 +1,98 @@
+//! fig_backend — fill-backend throughput sweep and host/device
+//! crossover calibration.
+//!
+//! Sweeps buffer size across the backend arms (serial host, sharded
+//! parallel host, device when available) to plot where device dispatch
+//! amortizes — the number the `Auto` arm's [`CrossoverTable`] encodes.
+//! Every run also byte-checks the arms against the serial reference
+//! (a repro gate, like fig_fill's), so the bench can never publish
+//! throughput for wrong bytes.
+//!
+//! ```bash
+//! cargo bench --bench fig_backend
+//! OPENRAND_BENCH_QUICK=1 cargo bench --bench fig_backend   # CI smoke
+//! OPENRAND_PERSIST_CROSSOVER=1 cargo bench --bench fig_backend
+//! # ^ writes <artifacts>/backend_crossover.txt for the Auto arm
+//! ```
+
+use openrand::backend::{auto, Auto, CrossoverTable, DeviceFill, FillBackend, HostSerial};
+use openrand::coordinator::repro;
+use openrand::core::Generator;
+
+const SIZES: [usize; 4] = [1 << 12, 1 << 16, 1 << 18, 1 << 20];
+
+fn main() {
+    let quick = std::env::var("OPENRAND_BENCH_QUICK").is_ok();
+    let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8);
+    let sizes: &[usize] = if quick { &SIZES[..2] } else { &SIZES };
+    let reps = if quick { 3 } else { 15 };
+
+    // Repro gate first: all arms byte-identical before any timing.
+    let gate = repro::verify_backend_invariance(Generator::Philox, 65_536, 0xF16, 1, threads);
+    eprint!("{}", gate.render());
+    assert!(gate.consistent, "backend arms disagree — refusing to bench wrong bytes");
+
+    let device_note = match DeviceFill::try_new() {
+        Ok(_) => "device arm available".to_string(),
+        Err(e) => format!("device arm unavailable ({e:#}); host rows only"),
+    };
+    eprintln!("fig_backend: philox u32 fill, {threads} host threads; {device_note}\n");
+
+    println!(
+        "{:<12} {:>14} {:>14} {:>14} {:>10}",
+        "n (u32)", "host ns/w", "par ns/w", "device ns/w", "auto arm"
+    );
+    println!("{}", "-".repeat(68));
+
+    // Serial host baseline, measured the same way the calibration
+    // measures par/device (median of reps) so columns are comparable.
+    let serial_ns: Vec<f64> = sizes
+        .iter()
+        .map(|&n| {
+            let mut buf = vec![0u32; n];
+            let mut ns: Vec<f64> = (0..reps)
+                .map(|rep| {
+                    let t = std::time::Instant::now();
+                    HostSerial.fill_u32(Generator::Philox, 1, rep as u32, &mut buf).unwrap();
+                    t.elapsed().as_nanos() as f64
+                })
+                .collect();
+            ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            ns[ns.len() / 2]
+        })
+        .collect();
+
+    let samples = auto::measure_crossover(threads, sizes, reps).expect("host measurement");
+    let preview = Auto::new(threads);
+    for (i, s) in samples.iter().enumerate() {
+        let per = |ns: f64| ns / s.words as f64;
+        println!(
+            "{:<12} {:>14.3} {:>14.3} {:>14} {:>10}",
+            s.words,
+            per(serial_ns[i]),
+            per(s.host_ns),
+            s.device_ns.map(|d| format!("{:.3}", per(d))).unwrap_or_else(|| "-".into()),
+            preview.selection(Generator::Philox, s.words).name(),
+        );
+    }
+
+    match auto::recommend(&samples) {
+        Some(table) => {
+            println!("\nmeasured crossover: device from {} words", table.device_min_words);
+            if std::env::var("OPENRAND_PERSIST_CROSSOVER").as_deref() == Ok("1") {
+                let path = CrossoverTable::default_path();
+                table.persist(&path).expect("persist crossover table");
+                println!("persisted to {path:?} (Auto arms on this machine now use it)");
+            }
+        }
+        None => println!(
+            "\nno device win in this sweep (unavailable or host-dominant); \
+             Auto keeps its current table (default: {} words)",
+            CrossoverTable::DEFAULT_DEVICE_MIN_WORDS
+        ),
+    }
+    println!(
+        "\nreading: the device column only beats the host past the dispatch-\n\
+         amortization point (ablation A3); the Auto arm flips exactly there."
+    );
+}

@@ -1,0 +1,401 @@
+//! The `Auto` arm: size-based host/device selection from a persisted
+//! calibration table.
+//!
+//! Device block generation only pays off past a dispatch-amortization
+//! crossover (`benches/ablation_block.rs` measures it; PRAND and
+//! Shoverand report the same shape). [`CrossoverTable`] holds that
+//! crossover as "device from N words"; [`Auto`] consults it per fill and
+//! otherwise behaves exactly like the arm it selects — all arms are
+//! byte-identical, so selection is purely a performance decision and can
+//! never change output.
+//!
+//! Resolution order for the table: `OPENRAND_BACKEND_CROSSOVER` env var
+//! (a word count, `k/M/G` suffixes accepted; CLI `--crossover` sets the
+//! same knob) → the persisted file next to the artifacts
+//! (`<artifacts>/backend_crossover.txt`, written by
+//! `benches/fig_backend.rs` under `OPENRAND_PERSIST_CROSSOVER=1`) → the
+//! built-in default.
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use super::{convert, BackendKind, DeviceFill, FillBackend, HostParallel};
+use crate::core::Generator;
+
+/// Persisted host/device crossover calibration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CrossoverTable {
+    /// Fills of at least this many u32 words go to the device (when one
+    /// is available and supports the engine).
+    pub device_min_words: usize,
+}
+
+impl Default for CrossoverTable {
+    fn default() -> Self {
+        CrossoverTable { device_min_words: Self::DEFAULT_DEVICE_MIN_WORDS }
+    }
+}
+
+impl CrossoverTable {
+    /// Conservative default: the `ablation_block` sweep shape — per-call
+    /// dispatch overhead swamps device throughput below ~1 Mword on the
+    /// CPU PJRT stand-in, so only the largest lowered artifact size
+    /// defaults to the device. `fig_backend` re-measures and persists
+    /// the real value for the machine at hand.
+    pub const DEFAULT_DEVICE_MIN_WORDS: usize = 1 << 20;
+
+    /// Default persistence location: next to the artifacts the device
+    /// arm runs (the calibration is meaningless without them).
+    pub fn default_path() -> PathBuf {
+        crate::runtime::artifact::default_artifact_dir().join("backend_crossover.txt")
+    }
+
+    /// Env override → persisted file → default.
+    pub fn load() -> CrossoverTable {
+        if let Ok(v) = std::env::var("OPENRAND_BACKEND_CROSSOVER") {
+            if let Some(t) = Self::from_env_value(&v) {
+                return t;
+            }
+        }
+        Self::load_from(&Self::default_path()).unwrap_or_default()
+    }
+
+    /// Parse the env/CLI spelling: a word count with optional `k/M/G`.
+    pub fn from_env_value(v: &str) -> Option<CrossoverTable> {
+        crate::util::cli::parse_with_suffix(v)
+            .filter(|&n| n > 0)
+            .map(|n| CrossoverTable { device_min_words: n })
+    }
+
+    /// Read a persisted table; `None` when missing or malformed (a stale
+    /// or hand-mangled calibration must never poison selection).
+    pub fn load_from(path: &Path) -> Option<CrossoverTable> {
+        let text = std::fs::read_to_string(path).ok()?;
+        Self::parse(&text)
+    }
+
+    /// Line format: `device_min_words=N` (+ `#` comments).
+    pub fn parse(text: &str) -> Option<CrossoverTable> {
+        let mut table = None;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, val) = line.split_once('=')?;
+            if key.trim() == "device_min_words" {
+                let n: usize = val.trim().parse().ok()?;
+                if n == 0 {
+                    return None;
+                }
+                table = Some(CrossoverTable { device_min_words: n });
+            }
+        }
+        table
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "# openrand backend crossover calibration (see docs/backends.md)\n\
+             # measured by `cargo bench --bench fig_backend`\n\
+             device_min_words={}\n",
+            self.device_min_words
+        )
+    }
+
+    /// Persist for future `Auto` arms on this machine.
+    pub fn persist(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+/// One point of the calibration sweep (`fig_backend`).
+#[derive(Debug, Clone, Copy)]
+pub struct CrossoverSample {
+    pub words: usize,
+    pub host_ns: f64,
+    /// `None` when the device arm is unavailable or refused the size.
+    pub device_ns: Option<f64>,
+}
+
+/// Measure host-parallel vs device fill latency across `sizes` (median
+/// of `reps` timed calls each, ctr bumped per call so the device pool's
+/// upload cost is honestly included). This is the `ablation_block`
+/// dispatch-amortization measurement, packaged so the bench and tests
+/// share it.
+pub fn measure_crossover(
+    threads: usize,
+    sizes: &[usize],
+    reps: usize,
+) -> Result<Vec<CrossoverSample>> {
+    let mut host = HostParallel::new(threads);
+    let mut device = DeviceFill::try_new().ok();
+    let gen = Generator::Philox;
+    let median = |mut v: Vec<f64>| -> f64 {
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[v.len() / 2]
+    };
+    let mut out = Vec::with_capacity(sizes.len());
+    let mut ctr = 0u32;
+    for &words in sizes {
+        let mut buf = vec![0u32; words];
+        let mut host_ns = Vec::with_capacity(reps);
+        for _ in 0..reps.max(1) {
+            ctr = ctr.wrapping_add(1);
+            let t = Instant::now();
+            host.fill_u32(gen, 1, ctr, &mut buf)?;
+            host_ns.push(t.elapsed().as_nanos() as f64);
+        }
+        let device_ns = match device.as_mut() {
+            Some(d) if d.supports_fill(gen, words) => {
+                let mut ns = Vec::with_capacity(reps);
+                let mut failed = false;
+                for _ in 0..reps.max(1) {
+                    ctr = ctr.wrapping_add(1);
+                    let t = Instant::now();
+                    if d.fill_u32(gen, 1, ctr, &mut buf).is_err() {
+                        failed = true;
+                        break;
+                    }
+                    ns.push(t.elapsed().as_nanos() as f64);
+                }
+                if failed {
+                    None
+                } else {
+                    Some(median(ns))
+                }
+            }
+            _ => None,
+        };
+        out.push(CrossoverSample { words, host_ns: median(host_ns), device_ns });
+    }
+    Ok(out)
+}
+
+/// Smallest swept size where the device beat the host — the measured
+/// `device_min_words`. `None` when the device never won (or never ran):
+/// callers should then keep the previous/default table rather than
+/// persisting "never", so a flaky run can't disable the device forever.
+pub fn recommend(samples: &[CrossoverSample]) -> Option<CrossoverTable> {
+    samples
+        .iter()
+        .find(|s| s.device_ns.is_some_and(|d| d < s.host_ns))
+        .map(|s| CrossoverTable { device_min_words: s.words })
+}
+
+/// The size-based selector. Owns a host arm, an optional device arm
+/// (absent on stub/artifact-less builds), and the calibration table.
+pub struct Auto {
+    host: HostParallel,
+    device: Option<DeviceFill>,
+    table: CrossoverTable,
+}
+
+impl Auto {
+    /// Standard construction: probe the device, load the table through
+    /// the env → file → default chain.
+    pub fn new(threads: usize) -> Auto {
+        Auto::with_table(threads, CrossoverTable::load())
+    }
+
+    /// Injection point for tests / CLI `--crossover`.
+    pub fn with_table(threads: usize, table: CrossoverTable) -> Auto {
+        Auto { host: HostParallel::new(threads), device: DeviceFill::try_new().ok(), table }
+    }
+
+    pub fn table(&self) -> CrossoverTable {
+        self.table
+    }
+
+    pub fn device_available(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// Which arm a `words`-word fill of `gen` will run on. Pure function
+    /// of `(gen, words, table, availability)` — the repro ladder asserts
+    /// the output is byte-identical either way.
+    pub fn selection(&self, gen: Generator, words: usize) -> BackendKind {
+        match &self.device {
+            Some(d) if words >= self.table.device_min_words && d.supports_fill(gen, words) => {
+                BackendKind::Device
+            }
+            _ => BackendKind::HostParallel,
+        }
+    }
+
+    /// Route one u32 fill. A device-side execution error degrades to the
+    /// host arm (byte-identical by contract), it never aborts the fill.
+    fn route_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()> {
+        if self.selection(gen, out.len()) == BackendKind::Device {
+            if let Some(d) = self.device.as_mut() {
+                if d.fill_u32(gen, seed, ctr, out).is_ok() {
+                    return Ok(());
+                }
+            }
+        }
+        self.host.fill_u32(gen, seed, ctr, out)
+    }
+}
+
+impl FillBackend for Auto {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Auto
+    }
+
+    fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()> {
+        self.route_u32(gen, seed, ctr, out)
+    }
+
+    // Typed fills: selection is by *word* count (2 words per u64/f64
+    // element). The host arm keeps its native alloc-free paths; the
+    // device route fetches words via `route_u32` (which itself degrades
+    // to host on a device error, so it cannot fail) and applies the
+    // shared `convert` helpers — the same bytes by the conversion
+    // contract.
+
+    fn fill_u64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u64]) -> Result<()> {
+        if self.selection(gen, 2 * out.len()) == BackendKind::Device {
+            let mut words = vec![0u32; 2 * out.len()];
+            self.route_u32(gen, seed, ctr, &mut words)?;
+            convert::u64s(&words, out);
+            return Ok(());
+        }
+        self.host.fill_u64(gen, seed, ctr, out)
+    }
+
+    fn fill_f32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f32]) -> Result<()> {
+        if self.selection(gen, out.len()) == BackendKind::Device {
+            let mut words = vec![0u32; out.len()];
+            self.route_u32(gen, seed, ctr, &mut words)?;
+            convert::f32s(&words, out);
+            return Ok(());
+        }
+        self.host.fill_f32(gen, seed, ctr, out)
+    }
+
+    fn fill_f64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f64]) -> Result<()> {
+        if self.selection(gen, 2 * out.len()) == BackendKind::Device {
+            let mut words = vec![0u32; 2 * out.len()];
+            self.route_u32(gen, seed, ctr, &mut words)?;
+            convert::f64s(&words, out);
+            return Ok(());
+        }
+        self.host.fill_f64(gen, seed, ctr, out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostSerial;
+
+    #[test]
+    fn table_parse_roundtrip() {
+        let t = CrossoverTable { device_min_words: 123_456 };
+        assert_eq!(CrossoverTable::parse(&t.render()), Some(t));
+        assert_eq!(
+            CrossoverTable::parse("# only comments\n\n"),
+            None,
+            "no key -> no table"
+        );
+        assert_eq!(CrossoverTable::parse("device_min_words=0"), None);
+        assert_eq!(CrossoverTable::parse("garbage"), None);
+        assert_eq!(
+            CrossoverTable::parse("device_min_words=64\n"),
+            Some(CrossoverTable { device_min_words: 64 })
+        );
+    }
+
+    #[test]
+    fn env_value_spellings() {
+        assert_eq!(
+            CrossoverTable::from_env_value("64k"),
+            Some(CrossoverTable { device_min_words: 65_536 })
+        );
+        assert_eq!(
+            CrossoverTable::from_env_value("1M"),
+            Some(CrossoverTable { device_min_words: 1 << 20 })
+        );
+        assert_eq!(CrossoverTable::from_env_value("0"), None);
+        assert_eq!(CrossoverTable::from_env_value("nope"), None);
+    }
+
+    #[test]
+    fn persist_and_reload() {
+        let dir = std::env::temp_dir().join("openrand_crossover_test");
+        let path = dir.join("backend_crossover.txt");
+        let t = CrossoverTable { device_min_words: 4096 };
+        t.persist(&path).unwrap();
+        assert_eq!(CrossoverTable::load_from(&path), Some(t));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn auto_is_byte_identical_to_its_selection() {
+        // Below and above the crossover, with and without a device, the
+        // bytes must equal the serial reference.
+        let table = CrossoverTable { device_min_words: 512 };
+        let mut auto = Auto::with_table(3, table);
+        for gen in [Generator::Philox, Generator::Tyche] {
+            for n in [100usize, 511, 512, 4096] {
+                let sel = auto.selection(gen, n);
+                let mut got = vec![0u32; n];
+                auto.fill_u32(gen, 0xA0, 9, &mut got).unwrap();
+                let mut want = vec![0u32; n];
+                HostSerial.fill_u32(gen, 0xA0, 9, &mut want).unwrap();
+                assert_eq!(got, want, "{} n={n} sel={}", gen.name(), sel.name());
+            }
+        }
+    }
+
+    #[test]
+    fn selection_respects_support_and_size() {
+        let mut auto = Auto::with_table(2, CrossoverTable { device_min_words: 1000 });
+        // Tyche has no stream-ordered artifact: always host.
+        assert_eq!(auto.selection(Generator::Tyche, 1 << 20), BackendKind::HostParallel);
+        // Below the crossover: host, regardless of device availability.
+        assert_eq!(auto.selection(Generator::Philox, 999), BackendKind::HostParallel);
+        if auto.device_available() {
+            assert_eq!(auto.selection(Generator::Philox, 65_536), BackendKind::Device);
+        } else {
+            // Stub build: everything host; fills still work.
+            assert_eq!(auto.selection(Generator::Philox, 1 << 20), BackendKind::HostParallel);
+            let mut out = vec![0.0f64; 64];
+            auto.fill_f64(Generator::Philox, 1, 1, &mut out).unwrap();
+        }
+    }
+
+    #[test]
+    fn recommend_picks_first_device_win() {
+        let s = |w: usize, h: f64, d: Option<f64>| CrossoverSample {
+            words: w,
+            host_ns: h,
+            device_ns: d,
+        };
+        let samples = vec![
+            s(1 << 12, 10.0, Some(100.0)),
+            s(1 << 16, 100.0, Some(120.0)),
+            s(1 << 20, 1000.0, Some(800.0)),
+        ];
+        assert_eq!(
+            recommend(&samples),
+            Some(CrossoverTable { device_min_words: 1 << 20 })
+        );
+        assert_eq!(recommend(&[s(1 << 12, 10.0, None)]), None);
+    }
+
+    #[test]
+    fn measure_runs_host_side_everywhere() {
+        // Tiny smoke: the measurement harness itself must work without
+        // a device (device_ns = None on stub builds).
+        let samples = measure_crossover(2, &[1 << 10, 1 << 12], 3).unwrap();
+        assert_eq!(samples.len(), 2);
+        for s in &samples {
+            assert!(s.host_ns > 0.0, "host timing at {} words", s.words);
+        }
+    }
+}

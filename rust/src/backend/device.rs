@@ -1,0 +1,271 @@
+//! The device arm: AOT block artifacts through the PJRT runtime.
+//!
+//! ## Counter-layout mapping (why this is bitwise-safe)
+//!
+//! The `{gen}_u32_{n}` artifacts (lowered by `python/compile/aot.py`)
+//! emit **stream order**: grid block `j` of the Pallas kernel computes
+//! counter block `j` of the `(seed, ctr)` stream and writes it at output
+//! words `W·j .. W·j + W` — the same `position → word` mapping
+//! `core::fill` uses on the host, so `device_output[0..len]` is exactly
+//! `fill_u32(seed, ctr, out[0..len])`. The host sharding in
+//! `par_fill_*` shards that same index space, which is how all three
+//! arms land every output element in the same position.
+//!
+//! Supported engines: Philox, Threefry, Squares (their artifacts are
+//! stream-ordered). The Tyche artifact is **lane-major** (lane `i` holds
+//! the first word of stream `(seed, ctr ^ i)` — a breadth-first layout
+//! for per-lane micro-streams, see `kernels/tyche.py`), so it is *not* a
+//! serial-stream fill and Tyche reports unsupported here rather than
+//! returning reordered words. The 2x32 engines have no lowered block
+//! artifacts.
+//!
+//! ## Buffer pool
+//!
+//! PJRT dispatch cost is dominated by host↔device marshalling of inputs
+//! for small calls (`benches/ablation_block.rs`). The only input of a
+//! block artifact is the 16-byte `(seed, ctr)` params vector, so the
+//! pool caches the **uploaded device buffer per `(artifact, params)`**:
+//! repeated fills of the same stream (the common bench/sim shape —
+//! refill every step with a bumped ctr is one upload per distinct ctr,
+//! re-running the same stream is zero) skip the upload entirely and go
+//! straight to `execute_b`. Non-chainable (tuple-wrapped legacy)
+//! artifacts fall back to the literal path per call.
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+
+use super::{BackendKind, FillBackend};
+use crate::core::{counter, Generator};
+use crate::runtime::exec::{Arg, DeviceGraph};
+use crate::runtime::ArtifactStore;
+
+/// Block sizes `aot.py` lowers for every stream-ordered generator.
+pub const ARTIFACT_SIZES: [usize; 2] = [65_536, 1_048_576];
+
+/// Largest buffer a single device fill can serve (the biggest artifact).
+pub const MAX_DEVICE_WORDS: usize = ARTIFACT_SIZES[ARTIFACT_SIZES.len() - 1];
+
+/// Cap on pooled param buffers (16 B each on device; the cap only guards
+/// against pathological ctr churn).
+const POOL_CAP: usize = 256;
+
+/// Map a generator to its artifact name prefix and the 4-word params
+/// vector its kernel expects (`kernels/*.py` headers are normative).
+/// `None` = no stream-ordered artifact for this engine.
+fn artifact_params(gen: Generator, seed: u64, ctr: u32) -> Option<(&'static str, [u32; 4])> {
+    match gen {
+        // philox/threefry kernels take [seed_lo, seed_hi, ctr, 0].
+        Generator::Philox => Some(("philox", [seed as u32, (seed >> 32) as u32, ctr, 0])),
+        Generator::Threefry => Some(("threefry", [seed as u32, (seed >> 32) as u32, ctr, 0])),
+        // squares takes the derived key: [key_lo, key_hi, ctr, 0].
+        Generator::Squares => {
+            let key = counter::squares_key(seed);
+            Some(("squares", [key as u32, (key >> 32) as u32, ctr, 0]))
+        }
+        // tyche artifact is lane-major, not stream-ordered; 2x32 and
+        // tyche_i have no lowered artifacts.
+        _ => None,
+    }
+}
+
+/// The device fill backend. Thread-confined (wraps the per-thread PJRT
+/// client); construct one per driver thread.
+pub struct DeviceFill {
+    store: ArtifactStore,
+    /// Compiled graphs by artifact name (compile-once on top of the
+    /// store's own executable cache — this keeps the parsed signature).
+    graphs: HashMap<String, DeviceGraph>,
+    /// Uploaded params buffers by `(artifact, params)` — the pool.
+    params_pool: HashMap<(String, [u32; 4]), xla::PjRtBuffer>,
+    pool_hits: u64,
+    pool_uploads: u64,
+}
+
+impl DeviceFill {
+    /// Open the artifact store and prove a real PJRT backend exists by
+    /// compiling the first stream-ordered block graph the store holds.
+    /// Fails cleanly (so callers can degrade to host) when artifacts
+    /// are missing or the vendored `xla` stub is in use.
+    pub fn try_new() -> Result<DeviceFill> {
+        let store = ArtifactStore::open_default()?;
+        let mut dev = DeviceFill {
+            store,
+            graphs: HashMap::new(),
+            params_pool: HashMap::new(),
+            pool_hits: 0,
+            pool_uploads: 0,
+        };
+        // Availability probe: compiling requires a real backend; with
+        // the stub this is where "unavailable" surfaces. Probe whichever
+        // stream-ordered artifact the store actually has — a store
+        // missing one engine's blocks must not disable the others.
+        let probe = dev.probe_artifact().ok_or_else(|| {
+            anyhow!("no stream-ordered block artifacts in the store (run `make artifacts`)")
+        })?;
+        dev.graph(&probe)?;
+        Ok(dev)
+    }
+
+    /// First stream-ordered artifact present in the manifest.
+    fn probe_artifact(&self) -> Option<String> {
+        ["philox", "threefry", "squares"].iter().find_map(|prefix| {
+            ARTIFACT_SIZES.iter().find_map(|n| {
+                let name = format!("{prefix}_u32_{n}");
+                self.store.manifest.get(&name).map(|_| name)
+            })
+        })
+    }
+
+    /// Whether this arm can serve `gen` at all (artifact layout is
+    /// stream-ordered and lowered).
+    pub fn supports(&self, gen: Generator) -> bool {
+        artifact_params(gen, 0, 0)
+            .map(|(prefix, _)| {
+                ARTIFACT_SIZES
+                    .iter()
+                    .any(|n| self.store.manifest.get(&format!("{prefix}_u32_{n}")).is_some())
+            })
+            .unwrap_or(false)
+    }
+
+    /// Whether a `len`-word fill of `gen` fits a single lowered artifact.
+    pub fn supports_fill(&self, gen: Generator, len: usize) -> bool {
+        artifact_params(gen, 0, 0)
+            .map(|(prefix, _)| self.pick_artifact(prefix, len).is_some())
+            .unwrap_or(false)
+    }
+
+    /// `(pool hits, uploads)` — observability for the pool's claim that
+    /// repeated fills don't re-upload counters.
+    pub fn pool_stats(&self) -> (u64, u64) {
+        (self.pool_hits, self.pool_uploads)
+    }
+
+    /// Smallest lowered artifact (name, size) covering `len` words.
+    fn pick_artifact(&self, prefix: &str, len: usize) -> Option<(String, usize)> {
+        ARTIFACT_SIZES.iter().copied().filter(|&n| n >= len).find_map(|n| {
+            let name = format!("{prefix}_u32_{n}");
+            self.store.manifest.get(&name).map(|_| (name, n))
+        })
+    }
+
+    fn graph(&mut self, name: &str) -> Result<&DeviceGraph> {
+        if !self.graphs.contains_key(name) {
+            let g = DeviceGraph::load(&self.store, name)?;
+            self.graphs.insert(name.to_string(), g);
+        }
+        Ok(&self.graphs[name])
+    }
+
+    /// Run artifact `name` with `params`, pooling the uploaded params
+    /// buffer so repeated fills of the same stream skip the upload.
+    fn call_block(&mut self, name: &str, params: [u32; 4]) -> Result<Vec<u32>> {
+        // Populate the graph cache, then re-index: the field borrow of
+        // `graphs` stays disjoint from the pool mutations below.
+        self.graph(name)?;
+        let graph = &self.graphs[name];
+        if !graph.chainable() {
+            // Legacy tuple-wrapped artifact: literal path, no pooling.
+            return graph.call_u32(&[Arg::U32(&params)]);
+        }
+        let key = (name.to_string(), params);
+        if !self.params_pool.contains_key(&key) {
+            if self.params_pool.len() >= POOL_CAP {
+                self.params_pool.clear();
+            }
+            let buf = graph.buffer_from_u32(&params, 0)?;
+            self.params_pool.insert(key.clone(), buf);
+            self.pool_uploads += 1;
+        } else {
+            self.pool_hits += 1;
+        }
+        let params_buf = &self.params_pool[&key];
+        let out_buf = graph.call_b(&[params_buf])?;
+        graph.buffer_to_u32(&out_buf)
+    }
+}
+
+impl FillBackend for DeviceFill {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Device
+    }
+
+    fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()> {
+        if out.is_empty() {
+            return Ok(());
+        }
+        let (prefix, params) = artifact_params(gen, seed, ctr).ok_or_else(|| {
+            anyhow!(
+                "no stream-ordered device artifact for generator '{}' \
+                 (device arm serves philox|threefry|squares)",
+                gen.name()
+            )
+        })?;
+        let Some((name, n_art)) = self.pick_artifact(prefix, out.len()) else {
+            bail!(
+                "fill of {} words exceeds the largest '{prefix}' block artifact \
+                 ({MAX_DEVICE_WORDS}); use a host arm or split across ctr values",
+                out.len()
+            );
+        };
+        debug_assert!(n_art >= out.len());
+        let words = self.call_block(&name, params)?;
+        if words.len() < out.len() {
+            bail!("artifact '{name}' returned {} words, need {}", words.len(), out.len());
+        }
+        // The artifact computes the full block; a shorter request is the
+        // stream prefix (identical to the host fill from position 0).
+        out.copy_from_slice(&words[..out.len()]);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_params_layouts() {
+        let seed = 0x0123_4567_89AB_CDEFu64;
+        let (p, v) = artifact_params(Generator::Philox, seed, 7).unwrap();
+        assert_eq!((p, v), ("philox", [0x89AB_CDEF, 0x0123_4567, 7, 0]));
+        let (p, v) = artifact_params(Generator::Threefry, seed, 3).unwrap();
+        assert_eq!(p, "threefry");
+        assert_eq!(v[2], 3);
+        // Squares passes the derived key, not the raw seed.
+        let key = counter::squares_key(seed);
+        let (p, v) = artifact_params(Generator::Squares, seed, 5).unwrap();
+        assert_eq!(p, "squares");
+        assert_eq!(v, [key as u32, (key >> 32) as u32, 5, 0]);
+        // Lane-major / unlowered engines are refused.
+        for g in [
+            Generator::Tyche,
+            Generator::TycheI,
+            Generator::Philox2x32,
+            Generator::Threefry2x32,
+        ] {
+            assert!(artifact_params(g, seed, 0).is_none(), "{}", g.name());
+        }
+    }
+
+    #[test]
+    fn unavailable_device_fails_cleanly_or_matches_host() {
+        // On a fresh checkout (no artifacts / vendored stub) try_new
+        // must error with a diagnostic, not panic. With a real backend
+        // it must satisfy the byte contract. Both paths are exercised by
+        // rust/tests/backend.rs; here we only pin the no-panic half.
+        match DeviceFill::try_new() {
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(!msg.is_empty());
+            }
+            Ok(mut d) => {
+                let mut dev = vec![0u32; 1000];
+                d.fill_u32(Generator::Philox, 1, 2, &mut dev).unwrap();
+                let mut host = vec![0u32; 1000];
+                crate::core::fill::fill_u32_gen(Generator::Philox, 1, 2, &mut host);
+                assert_eq!(dev, host);
+            }
+        }
+    }
+}

@@ -1,0 +1,353 @@
+//! Pluggable fill backends with bitwise host/device reproducibility.
+//!
+//! The paper's core promise is performance-*portable* reproducibility:
+//! the same `(seed, ctr)` stream replays bitwise whether it is generated
+//! serially on one core, sharded across host threads, or produced in bulk
+//! on the device. This module makes that promise a first-class, swappable
+//! execution policy:
+//!
+//! * [`HostSerial`] — the gold arm: `core::fill::fill_*_gen`, one engine,
+//!   stream order.
+//! * [`HostParallel`] — `core::fill::par_fill_*_gen`: the output index
+//!   space is sharded deterministically and each worker jumps to its
+//!   shard's stream position, so output is bitwise independent of thread
+//!   count.
+//! * [`DeviceFill`] — the `{gen}_u32_{n}` AOT artifacts through
+//!   [`crate::runtime::exec::DeviceGraph`]. The Pallas block kernels emit
+//!   **stream order** (grid block `j` writes words `W·j .. W·j+W` of the
+//!   `(seed, ctr)` stream — see `python/compile/kernels/*.py`), which is
+//!   the same index→word mapping the host sharding produces, so a device
+//!   block fill is byte-identical to the host fills by construction.
+//! * [`Auto`] — picks host vs device per buffer size from a persisted
+//!   calibration table ([`CrossoverTable`], measured the way
+//!   `benches/ablation_block.rs` measures dispatch amortization,
+//!   re-measured by `benches/fig_backend.rs`).
+//!
+//! ## The backend contract (normative — `docs/backends.md`)
+//!
+//! For every arm, `fill_u32(gen, seed, ctr, out)` writes **stream words
+//! `0..out.len()` of the `(seed, ctr)` stream of `gen`** — bitwise
+//! identical to serial [`crate::core::fill::fill_u32`] for the same
+//! inputs. The typed variants consume the identical word groups the draw
+//! API consumes (`u64`/`f64` element `i` ← words `2i, 2i+1` first-word-
+//! high; `f32` element `i` ← word `i`). An arm that cannot satisfy the
+//! contract for a given `(gen, len)` must return an error, never an
+//! approximation — [`Auto`] turns such errors into a host fallback,
+//! everything else surfaces them.
+//!
+//! ## Degradation
+//!
+//! With the vendored `xla` stub (no real PJRT backend) or without AOT
+//! artifacts, [`DeviceFill::try_new`] fails with a diagnostic, `--backend
+//! device` reports unavailable, and [`Auto`] silently runs on the host —
+//! the same self-skip discipline the artifact-dependent test suite uses.
+
+pub mod auto;
+pub mod device;
+
+pub use auto::{Auto, CrossoverTable};
+pub use device::DeviceFill;
+
+use anyhow::Result;
+
+use crate::core::fill;
+use crate::core::Generator;
+
+/// Runtime tag for the backend arms (CLI `--backend`, reports).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    /// Serial host fill (the gold reference arm).
+    HostSerial,
+    /// Deterministically sharded multi-threaded host fill.
+    HostParallel,
+    /// AOT block artifacts through the PJRT runtime.
+    Device,
+    /// Size-based host/device selection from the calibration table.
+    Auto,
+}
+
+impl BackendKind {
+    pub const ALL: [BackendKind; 4] = [
+        BackendKind::HostSerial,
+        BackendKind::HostParallel,
+        BackendKind::Device,
+        BackendKind::Auto,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::HostSerial => "host",
+            BackendKind::HostParallel => "par",
+            BackendKind::Device => "device",
+            BackendKind::Auto => "auto",
+        }
+    }
+
+    /// Parse a CLI spelling (`host|par|device|auto`; `serial` and
+    /// `parallel` accepted as aliases).
+    pub fn parse(s: &str) -> Option<BackendKind> {
+        match s {
+            "host" | "serial" => Some(BackendKind::HostSerial),
+            "par" | "parallel" => Some(BackendKind::HostParallel),
+            "device" => Some(BackendKind::Device),
+            "auto" => Some(BackendKind::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// The normative word→element conversions (§2 of the stream contracts)
+/// applied to an already-fetched word buffer — the single definition the
+/// trait defaults and the `Auto` device route both use, so the two
+/// paths cannot silently diverge.
+pub(crate) mod convert {
+    use crate::core::fill;
+
+    /// `u64` element `i` ← words `2i, 2i+1` (first word high).
+    pub fn u64s(words: &[u32], out: &mut [u64]) {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = fill::u64_from_words(words[2 * i], words[2 * i + 1]);
+        }
+    }
+
+    /// `f32` element `i` ← word `i`.
+    pub fn f32s(words: &[u32], out: &mut [f32]) {
+        for (slot, &w) in out.iter_mut().zip(words.iter()) {
+            *slot = fill::u01_f32(w);
+        }
+    }
+
+    /// `f64` element `i` ← words `2i, 2i+1`.
+    pub fn f64s(words: &[u32], out: &mut [f64]) {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = fill::u01_f64(words[2 * i], words[2 * i + 1]);
+        }
+    }
+}
+
+/// A bulk-generation strategy whose output is bitwise identical to the
+/// serial `core::fill` reference for the same `(gen, seed, ctr, len)`.
+///
+/// Object-safe so consumers can hold `&mut dyn FillBackend` handles.
+/// Implementations may cache device state (`&mut self`); the device arm
+/// is thread-confined like the PJRT client it wraps, so the trait does
+/// not require `Send`.
+pub trait FillBackend {
+    /// Which arm this is (for reports and the invariance ladder).
+    fn kind(&self) -> BackendKind;
+
+    /// Stream words `0..out.len()` of the `(seed, ctr)` stream of `gen`.
+    fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()>;
+
+    /// `u64` element `i` ← words `2i, 2i+1` (first word high) — the
+    /// [`crate::core::Rng::next_u64`] pattern. Default: fetch words via
+    /// [`FillBackend::fill_u32`] and convert with the normative helpers.
+    fn fill_u64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u64]) -> Result<()> {
+        let mut words = vec![0u32; 2 * out.len()];
+        self.fill_u32(gen, seed, ctr, &mut words)?;
+        convert::u64s(&words, out);
+        Ok(())
+    }
+
+    /// `f32` element `i` ← word `i` (the `draw_float` pattern).
+    fn fill_f32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f32]) -> Result<()> {
+        let mut words = vec![0u32; out.len()];
+        self.fill_u32(gen, seed, ctr, &mut words)?;
+        convert::f32s(&words, out);
+        Ok(())
+    }
+
+    /// `f64` element `i` ← words `2i, 2i+1` (the `draw_double` pattern).
+    fn fill_f64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f64]) -> Result<()> {
+        let mut words = vec![0u32; 2 * out.len()];
+        self.fill_u32(gen, seed, ctr, &mut words)?;
+        convert::f64s(&words, out);
+        Ok(())
+    }
+}
+
+/// The gold arm: serial block fill on the calling thread.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HostSerial;
+
+impl FillBackend for HostSerial {
+    fn kind(&self) -> BackendKind {
+        BackendKind::HostSerial
+    }
+
+    fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()> {
+        fill::fill_u32_gen(gen, seed, ctr, out);
+        Ok(())
+    }
+
+    fn fill_u64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u64]) -> Result<()> {
+        fill::fill_u64_gen(gen, seed, ctr, out);
+        Ok(())
+    }
+
+    fn fill_f32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f32]) -> Result<()> {
+        fill::fill_f32_gen(gen, seed, ctr, out);
+        Ok(())
+    }
+
+    fn fill_f64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f64]) -> Result<()> {
+        fill::fill_f64_gen(gen, seed, ctr, out);
+        Ok(())
+    }
+}
+
+/// Deterministically sharded multi-threaded host fill (wraps the
+/// `par_fill_*` engine — same bytes as [`HostSerial`] for every thread
+/// count, per the §4 sharding contract).
+#[derive(Debug, Clone, Copy)]
+pub struct HostParallel {
+    threads: usize,
+}
+
+impl HostParallel {
+    /// A parallel arm using `threads` workers. `threads` must be > 0.
+    pub fn new(threads: usize) -> HostParallel {
+        assert!(threads > 0, "threads must be positive");
+        HostParallel { threads }
+    }
+
+    /// One worker per available core (capped at 16 — fill sharding gains
+    /// flatten out well before that on memory-bound buffers).
+    pub fn auto_threads() -> HostParallel {
+        let t = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        HostParallel::new(t.min(16))
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}
+
+impl FillBackend for HostParallel {
+    fn kind(&self) -> BackendKind {
+        BackendKind::HostParallel
+    }
+
+    fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()> {
+        fill::par_fill_u32_gen(gen, seed, ctr, out, self.threads);
+        Ok(())
+    }
+
+    fn fill_u64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u64]) -> Result<()> {
+        fill::par_fill_u64_gen(gen, seed, ctr, out, self.threads);
+        Ok(())
+    }
+
+    fn fill_f32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f32]) -> Result<()> {
+        fill::par_fill_f32_gen(gen, seed, ctr, out, self.threads);
+        Ok(())
+    }
+
+    fn fill_f64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [f64]) -> Result<()> {
+        fill::par_fill_f64_gen(gen, seed, ctr, out, self.threads);
+        Ok(())
+    }
+}
+
+/// Construct a backend by kind. `threads` feeds the parallel arm (and
+/// `Auto`'s host side); `Device` errors when no artifacts / no real PJRT
+/// backend exist, while `Auto` degrades to host in the same situation.
+pub fn make(kind: BackendKind, threads: usize) -> Result<Box<dyn FillBackend>> {
+    match kind {
+        BackendKind::HostSerial => Ok(Box::new(HostSerial)),
+        BackendKind::HostParallel => Ok(Box::new(HostParallel::new(threads))),
+        BackendKind::Device => Ok(Box::new(DeviceFill::try_new()?)),
+        BackendKind::Auto => Ok(Box::new(Auto::new(threads))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_parse_roundtrip() {
+        for k in BackendKind::ALL {
+            assert_eq!(BackendKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(BackendKind::parse("parallel"), Some(BackendKind::HostParallel));
+        assert_eq!(BackendKind::parse("serial"), Some(BackendKind::HostSerial));
+        assert_eq!(BackendKind::parse("gpu"), None);
+    }
+
+    #[test]
+    fn host_arms_bitwise_identical_all_generators() {
+        for gen in Generator::ALL {
+            let mut serial = vec![0u32; 2048];
+            HostSerial.fill_u32(gen, 0xBACC, 5, &mut serial).unwrap();
+            for t in [1usize, 2, 7] {
+                let mut par = vec![0u32; 2048];
+                HostParallel::new(t).fill_u32(gen, 0xBACC, 5, &mut par).unwrap();
+                assert_eq!(serial, par, "{} t={t}", gen.name());
+            }
+        }
+    }
+
+    #[test]
+    fn typed_defaults_match_host_specializations() {
+        // The trait's scratch-buffer defaults (what the device arm uses)
+        // must produce the same bytes as the host arms' native paths.
+        struct ViaWords;
+        impl FillBackend for ViaWords {
+            fn kind(&self) -> BackendKind {
+                BackendKind::HostSerial
+            }
+            fn fill_u32(
+                &mut self,
+                gen: Generator,
+                seed: u64,
+                ctr: u32,
+                out: &mut [u32],
+            ) -> Result<()> {
+                fill::fill_u32_gen(gen, seed, ctr, out);
+                Ok(())
+            }
+        }
+        let gen = Generator::Philox;
+        let (mut a64, mut b64) = (vec![0u64; 333], vec![0u64; 333]);
+        ViaWords.fill_u64(gen, 7, 1, &mut a64).unwrap();
+        HostSerial.fill_u64(gen, 7, 1, &mut b64).unwrap();
+        assert_eq!(a64, b64);
+        let (mut a32, mut b32) = (vec![0.0f32; 333], vec![0.0f32; 333]);
+        ViaWords.fill_f32(gen, 7, 1, &mut a32).unwrap();
+        HostSerial.fill_f32(gen, 7, 1, &mut b32).unwrap();
+        assert_eq!(
+            a32.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b32.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let (mut af, mut bf) = (vec![0.0f64; 333], vec![0.0f64; 333]);
+        ViaWords.fill_f64(gen, 7, 1, &mut af).unwrap();
+        HostParallel::new(3).fill_f64(gen, 7, 1, &mut bf).unwrap();
+        assert_eq!(
+            af.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            bf.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn make_constructs_host_arms() {
+        let mut b = make(BackendKind::HostSerial, 1).unwrap();
+        assert_eq!(b.kind(), BackendKind::HostSerial);
+        let mut out = vec![0u32; 16];
+        b.fill_u32(Generator::Squares, 1, 0, &mut out).unwrap();
+        let mut want = vec![0u32; 16];
+        fill::fill_u32_gen(Generator::Squares, 1, 0, &mut want);
+        assert_eq!(out, want);
+        let b = make(BackendKind::HostParallel, 4).unwrap();
+        assert_eq!(b.kind(), BackendKind::HostParallel);
+        // Auto always constructs (degrades to host without a device).
+        let b = make(BackendKind::Auto, 2).unwrap();
+        assert_eq!(b.kind(), BackendKind::Auto);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_threads_rejected() {
+        let _ = HostParallel::new(0);
+    }
+}

@@ -168,7 +168,10 @@ fn step_parallel(sim: &mut BrownianSim, pool: &ThreadPool, n: usize) {
     let drag_g = crate::sim::brownian::GAMMA / crate::sim::brownian::MASS;
     let dt = crate::sim::brownian::DT;
 
-    // Split every field into per-range stripes.
+    // Split every field into per-range stripes. (The explicit 6-tuple of
+    // stripe views is deliberate: one row per field keeps the disjoint-
+    // range invariant visible at the split site.)
+    #[allow(clippy::type_complexity)]
     let mut stripes: Vec<(
         &mut [f64],
         &mut [f64],

@@ -11,8 +11,9 @@
 use anyhow::Result;
 
 use super::driver::{Backend, SimDriver};
+use crate::backend::{Auto, DeviceFill, FillBackend, HostParallel, HostSerial};
 use crate::core::fill;
-use crate::core::{BlockRng, CounterRng, Rng};
+use crate::core::{BlockRng, CounterRng, Generator, Rng};
 use crate::sim::brownian::BrownianParams;
 use crate::util::hash::Fnv1a;
 
@@ -112,6 +113,89 @@ pub fn verify_fill_invariance<G: BlockRng>(n: usize, max_threads: usize, seed: u
     }
 }
 
+/// The backend-invariance ladder: every fill backend must produce the
+/// same **bytes** as the serial host arm for the same
+/// `(gen, seed, ctr, len)` — `host` (serial reference), `par` across a
+/// thread ladder capped at `max_threads` (the `repro --max-threads`
+/// contract), `device` when a real PJRT backend + artifacts exist
+/// (silently skipped otherwise, like the artifact-dependent tests), and
+/// `auto`, which must match whichever arm it selects. Output vectors
+/// are compared byte-for-byte (u32 words and f64 draws); the rendered
+/// hashes are fingerprints of those bytes.
+pub fn verify_backend_invariance(
+    gen: Generator,
+    n: usize,
+    seed: u64,
+    ctr: u32,
+    max_threads: usize,
+) -> ReproReport {
+    let max_threads = max_threads.max(1);
+    fn run(
+        b: &mut dyn FillBackend,
+        gen: Generator,
+        seed: u64,
+        ctr: u32,
+        n: usize,
+    ) -> Result<(Vec<u32>, Vec<f64>)> {
+        let mut words = vec![0u32; n];
+        b.fill_u32(gen, seed, ctr, &mut words)?;
+        let mut doubles = vec![0.0f64; n / 2];
+        b.fill_f64(gen, seed, ctr, &mut doubles)?;
+        Ok((words, doubles))
+    }
+    fn fingerprint(words: &[u32], doubles: &[f64]) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_u32_slice(words);
+        h.write_f64_slice(doubles);
+        h.finish()
+    }
+    let (ref_words, ref_doubles) =
+        run(&mut HostSerial, gen, seed, ctr, n).expect("host serial arm is infallible");
+    let mut hashes = vec![("host".to_string(), fingerprint(&ref_words, &ref_doubles))];
+    let mut consistent = true;
+    let mut compare = |label: String, words: &[u32], doubles: &[f64], consistent: &mut bool| {
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        if words != ref_words || bits(doubles) != bits(&ref_doubles) {
+            *consistent = false;
+        }
+        hashes.push((label, fingerprint(words, doubles)));
+    };
+    for t in [1usize, 2, 8].into_iter().filter(|&t| t <= max_threads) {
+        match run(&mut HostParallel::new(t), gen, seed, ctr, n) {
+            Ok((w, d)) => compare(format!("par t={t}"), &w, &d, &mut consistent),
+            Err(_) => consistent = false,
+        }
+    }
+    let device_note = match DeviceFill::try_new() {
+        Ok(mut dev) if dev.supports_fill(gen, n) => match run(&mut dev, gen, seed, ctr, n) {
+            Ok((w, d)) => {
+                compare("device".to_string(), &w, &d, &mut consistent);
+                "device ran"
+            }
+            Err(_) => {
+                consistent = false;
+                "device errored"
+            }
+        },
+        Ok(_) => "device skipped (no stream-ordered artifact for this engine/size)",
+        Err(_) => "device skipped (unavailable: no artifacts / PJRT stub)",
+    };
+    let mut auto = Auto::new(max_threads.min(8));
+    let sel = auto.selection(gen, n);
+    match run(&mut auto, gen, seed, ctr, n) {
+        Ok((w, d)) => compare(format!("auto->{}", sel.name()), &w, &d, &mut consistent),
+        Err(_) => consistent = false,
+    }
+    ReproReport {
+        description: format!(
+            "backend-invariance ladder ({}, n={n}; {device_note})",
+            gen.name()
+        ),
+        hashes,
+        consistent,
+    }
+}
+
 /// Host vs device: positions agree within `tol` relative error per
 /// coordinate (XLA may re-associate float ops; the RNG words themselves
 /// are pinned bitwise by the cross-layer integration test).
@@ -172,6 +256,27 @@ mod tests {
         assert!(r.consistent, "{}", r.render());
         let r = verify_fill_invariance::<Tyche>(2_000, 4, 0xF17);
         assert!(r.consistent, "{}", r.render());
+    }
+
+    #[test]
+    fn backend_invariance_holds() {
+        // Philox (device-eligible when artifacts exist) and Tyche
+        // (host-only; device row must self-skip without failing).
+        let r = verify_backend_invariance(Generator::Philox, 20_000, 0xBEEF, 3, 8);
+        assert!(r.consistent, "{}", r.render());
+        // host + par{1,2,8} + auto, plus device when available.
+        assert!(r.hashes.len() >= 5, "{}", r.render());
+        let r = verify_backend_invariance(Generator::Tyche, 4_000, 0xBEEF, 3, 8);
+        assert!(r.consistent, "{}", r.render());
+        assert!(r.description.contains("tyche"), "{}", r.description);
+        // --max-threads 1 keeps the par ladder to a single thread.
+        let r = verify_backend_invariance(Generator::Philox, 4_000, 0xBEEF, 3, 1);
+        assert!(r.consistent, "{}", r.render());
+        assert!(
+            !r.hashes.iter().any(|(label, _)| label.contains("t=2") || label.contains("t=8")),
+            "{}",
+            r.render()
+        );
     }
 
     #[test]

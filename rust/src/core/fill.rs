@@ -34,6 +34,7 @@
 
 use super::block::BlockRng;
 use super::traits::Rng;
+use super::Generator;
 use crate::coordinator::partition_ranges;
 
 // The normative word → value conversions live next to the draw API in
@@ -212,6 +213,72 @@ pub fn par_fill_f64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f64], threads: 
     par_shards(out, threads, move |start, chunk| shard_f64::<G>(seed, ctr, start, chunk));
 }
 
+/// Monomorphize a fill entry point over the runtime [`Generator`] tag.
+/// These are the dispatch points the [`crate::backend`] host arms call —
+/// the backend subsystem owns *which* strategy runs; this module owns
+/// *what* the strategy computes (the §4 stream contract).
+macro_rules! gen_dispatch {
+    ($(#[$doc:meta])* $name:ident, $target:ident, $t:ty) => {
+        $(#[$doc])*
+        pub fn $name(gen: Generator, seed: u64, ctr: u32, out: &mut [$t]) {
+            use super::{Philox, Philox2x32, Squares, Threefry, Threefry2x32, Tyche, TycheI};
+            match gen {
+                Generator::Philox => $target::<Philox>(seed, ctr, out),
+                Generator::Philox2x32 => $target::<Philox2x32>(seed, ctr, out),
+                Generator::Threefry => $target::<Threefry>(seed, ctr, out),
+                Generator::Threefry2x32 => $target::<Threefry2x32>(seed, ctr, out),
+                Generator::Squares => $target::<Squares>(seed, ctr, out),
+                Generator::Tyche => $target::<Tyche>(seed, ctr, out),
+                Generator::TycheI => $target::<TycheI>(seed, ctr, out),
+            }
+        }
+    };
+}
+
+/// Same, for the `par_fill_*` family (extra `threads` parameter).
+macro_rules! gen_dispatch_par {
+    ($(#[$doc:meta])* $name:ident, $target:ident, $t:ty) => {
+        $(#[$doc])*
+        pub fn $name(gen: Generator, seed: u64, ctr: u32, out: &mut [$t], threads: usize) {
+            use super::{Philox, Philox2x32, Squares, Threefry, Threefry2x32, Tyche, TycheI};
+            match gen {
+                Generator::Philox => $target::<Philox>(seed, ctr, out, threads),
+                Generator::Philox2x32 => $target::<Philox2x32>(seed, ctr, out, threads),
+                Generator::Threefry => $target::<Threefry>(seed, ctr, out, threads),
+                Generator::Threefry2x32 => $target::<Threefry2x32>(seed, ctr, out, threads),
+                Generator::Squares => $target::<Squares>(seed, ctr, out, threads),
+                Generator::Tyche => $target::<Tyche>(seed, ctr, out, threads),
+                Generator::TycheI => $target::<TycheI>(seed, ctr, out, threads),
+            }
+        }
+    };
+}
+
+gen_dispatch!(
+    /// [`fill_u32`] dispatched over the runtime [`Generator`] tag.
+    fill_u32_gen, fill_u32, u32);
+gen_dispatch!(
+    /// [`fill_u64`] dispatched over the runtime [`Generator`] tag.
+    fill_u64_gen, fill_u64, u64);
+gen_dispatch!(
+    /// [`fill_f32`] dispatched over the runtime [`Generator`] tag.
+    fill_f32_gen, fill_f32, f32);
+gen_dispatch!(
+    /// [`fill_f64`] dispatched over the runtime [`Generator`] tag.
+    fill_f64_gen, fill_f64, f64);
+gen_dispatch_par!(
+    /// [`par_fill_u32`] dispatched over the runtime [`Generator`] tag.
+    par_fill_u32_gen, par_fill_u32, u32);
+gen_dispatch_par!(
+    /// [`par_fill_u64`] dispatched over the runtime [`Generator`] tag.
+    par_fill_u64_gen, par_fill_u64, u64);
+gen_dispatch_par!(
+    /// [`par_fill_f32`] dispatched over the runtime [`Generator`] tag.
+    par_fill_f32_gen, par_fill_f32, f32);
+gen_dispatch_par!(
+    /// [`par_fill_f64`] dispatched over the runtime [`Generator`] tag.
+    par_fill_f64_gen, par_fill_f64, f64);
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -316,6 +383,26 @@ mod tests {
         let mut out = vec![0u32; 3];
         par_fill_u32::<Philox>(1, 0, &mut out, 16);
         assert_eq!(out, serial_words::<Philox>(1, 0, 3));
+    }
+
+    #[test]
+    fn gen_dispatch_matches_monomorphic() {
+        for g in Generator::ALL {
+            let mut a = vec![0u32; 300];
+            fill_u32_gen(g, 0xD15, 3, &mut a);
+            assert_eq!(a, serial_with(g, 0xD15, 3, 300), "{}", g.name());
+            let mut b = vec![0u32; 300];
+            par_fill_u32_gen(g, 0xD15, 3, &mut b, 4);
+            assert_eq!(a, b, "{}", g.name());
+            let mut d = vec![0.0f64; 100];
+            fill_f64_gen(g, 0xD15, 3, &mut d);
+            let first = g.with_rng(0xD15, 3, |r| r.draw_double());
+            assert_eq!(d[0].to_bits(), first.to_bits(), "{}", g.name());
+        }
+    }
+
+    fn serial_with(g: Generator, seed: u64, ctr: u32, n: usize) -> Vec<u32> {
+        g.with_rng(seed, ctr, |r| (0..n).map(|_| r.next_u32()).collect())
     }
 
     #[test]

@@ -30,7 +30,10 @@
 //! [`Uniform`] and [`BoxMuller`] additionally expose `sample_fill` bulk
 //! fast paths that pull words through the engines' block-fill machinery;
 //! they consume the identical word pattern (bit-identical output to
-//! repeated `sample`), so the table above covers them unchanged.
+//! repeated `sample`), so the table above covers them unchanged. Their
+//! `sample_fill_backend` variants route the same word pattern through a
+//! [`crate::backend::FillBackend`] handle (serial, sharded-parallel, or
+//! device) — still byte-identical on every arm, per `docs/backends.md`.
 //!
 //! "Variable" samplers are still **counter-stream-deterministic**: the
 //! number of words consumed is a pure function of the stream contents,

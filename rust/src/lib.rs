@@ -6,7 +6,10 @@
 //!   ([`core`], including the block-granular [`core::BlockRng`] API and
 //!   the deterministic bulk [`core::fill`] engine whose output is
 //!   bitwise independent of thread count — contracts in
-//!   `docs/stream-contracts.md`), baselines ([`baseline`]), distributions ([`dist`]), a
+//!   `docs/stream-contracts.md`), the pluggable fill-backend subsystem
+//!   ([`backend`]: serial / sharded-parallel / device arms plus a
+//!   calibrated `Auto` selector, all byte-identical — see
+//!   `docs/backends.md`), baselines ([`baseline`]), distributions ([`dist`]), a
 //!   TestU01/PractRand-substitute statistical battery ([`stats`]), the
 //!   Brownian-dynamics macro-benchmark substrate ([`sim`]), a
 //!   reproducibility-preserving parallel coordinator ([`coordinator`]),
@@ -44,6 +47,13 @@
 //! assert!(z.is_finite() && z2.is_finite() && idx < 3);
 //! ```
 
+// Style policy: explicit index loops are kept wherever the index
+// arithmetic *is* the stream contract (word offsets like `2i, 2i+1` —
+// see docs/stream-contracts.md §2); iterator rewrites would hide the
+// normative offsets clippy-cleanly but reviewer-opaquely.
+#![allow(clippy::needless_range_loop)]
+
+pub mod backend;
 pub mod baseline;
 pub mod bench;
 pub mod coordinator;

@@ -16,10 +16,11 @@
 //! `openrand --help` for options. Benchmarks that regenerate the paper's
 //! figures live under `cargo bench` (see DESIGN.md experiment index).
 
+use openrand::backend::{self, BackendKind, CrossoverTable};
 use openrand::baseline::{Mt19937, Pcg32, Xoshiro256pp};
 use openrand::coordinator::repro;
 use openrand::coordinator::{Backend, SimDriver};
-use openrand::core::{fill, BlockRng, Generator, Rng};
+use openrand::core::{Generator, Rng};
 use openrand::dist::{
     Bernoulli, Binomial, BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform,
     ZigguratNormal,
@@ -40,7 +41,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "ctr", help: "32-bit stream counter", default: Some("0"), is_flag: false },
         OptSpec { name: "n", help: "count (supports k/M/G suffix)", default: Some("16"), is_flag: false },
         OptSpec { name: "format", help: "generate output: u32|u64|f32|f64", default: Some("u32"), is_flag: false },
-        OptSpec { name: "block-fill", help: "generate: batch raw output through the deterministic block-fill engine (honors --threads; bitwise identical to the word-at-a-time path)", default: None, is_flag: true },
+        OptSpec { name: "block-fill", help: "generate: batch raw output through the deterministic block-fill engine (alias for --backend par; honors --threads; bitwise identical to the word-at-a-time path)", default: None, is_flag: true },
+        OptSpec { name: "crossover", help: "generate: auto-backend device crossover in words (k/M/G ok; overrides the persisted calibration; env OPENRAND_BACKEND_CROSSOVER elsewhere)", default: None, is_flag: false },
+        OptSpec { name: "chunk-sweep", help: "stats: sweep BufferedWords chunk sizes {1k,4k,16k,64k} and report battery throughput per size", default: None, is_flag: true },
         OptSpec { name: "dist", help: "generate: sample a distribution instead of raw words: none|uniform|normal|ziggurat|exp|poisson|bernoulli|binomial|alias", default: Some("none"), is_flag: false },
         OptSpec { name: "lambda", help: "dist: rate for exp/poisson", default: Some("1.0"), is_flag: false },
         OptSpec { name: "lo", help: "dist: uniform lower bound", default: Some("0"), is_flag: false },
@@ -50,7 +53,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "weights", help: "dist: comma-separated alias-table weights", default: Some("1,2,3,4"), is_flag: false },
         OptSpec { name: "steps", help: "brownian: simulation steps", default: Some("100"), is_flag: false },
         OptSpec { name: "threads", help: "brownian/generate: host threads", default: Some("1"), is_flag: false },
-        OptSpec { name: "backend", help: "brownian: host|device", default: Some("host"), is_flag: false },
+        OptSpec { name: "backend", help: "generate: host|par|device|auto (fill backend); brownian: host|device", default: None, is_flag: false },
         OptSpec { name: "style", help: "brownian: openrand|curand_style|random123", default: Some("openrand"), is_flag: false },
         OptSpec { name: "words", help: "stats: words per test", default: Some("4M"), is_flag: false },
         OptSpec { name: "parallel", help: "stats: run the HOOMD parallel-stream suite", default: None, is_flag: true },
@@ -116,27 +119,40 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     if dist == "none" && !matches!(format.as_str(), "u32" | "u64" | "f32" | "f64") {
         anyhow::bail!("unknown format '{format}' (u32|u64|f32|f64)");
     }
-    if args.flag("block-fill") {
+    // Backend selection: --backend names an arm explicitly; --block-fill
+    // stays as the PR-2 spelling for the parallel host arm.
+    let kind = match args.get("backend") {
+        Some(s) => Some(
+            BackendKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (host|par|device|auto)"))?,
+        ),
+        None if args.flag("block-fill") => Some(BackendKind::HostParallel),
+        None => None,
+    };
+    if args.get("crossover").is_some() && kind != Some(BackendKind::Auto) {
+        anyhow::bail!("--crossover only applies to --backend auto");
+    }
+    if let Some(kind) = kind {
         if dist != "none" {
-            anyhow::bail!("--block-fill applies to raw formats (drop --dist)");
+            anyhow::bail!("--backend/--block-fill apply to raw formats (drop --dist)");
         }
         let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
         if threads == 0 {
             anyhow::bail!("--threads must be positive");
         }
-        // The block-fill path materializes the whole buffer (that is the
-        // point — one deterministic parallel fill), so bound it: both by
+        // The backend path materializes the whole buffer (that is the
+        // point — one deterministic bulk fill), so bound it: both by
         // the 2^32-word stream period and by a memory-sane CLI ceiling.
         // Larger runs stream through the plain path or split across
         // --ctr values.
         const CLI_FILL_CAP: usize = 1 << 26; // 64M elements (<= 512 MiB)
         if n > CLI_FILL_CAP {
             anyhow::bail!(
-                "--n {n} is above the --block-fill buffer cap ({CLI_FILL_CAP}); \
+                "--n {n} is above the backend buffer cap ({CLI_FILL_CAP}); \
                  use the word-at-a-time path or split across --ctr values"
             );
         }
-        return generate_block_fill(gen, seed, ctr, n, &format, threads);
+        return generate_backend(args, gen, seed, ctr, n, &format, kind, threads);
     }
     if dist != "none" {
         return generate_dist(args, gen, seed, ctr, n, &dist);
@@ -155,71 +171,66 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `generate --block-fill [--threads N]`: batch-generate through the
-/// deterministic block-fill engine (`core::fill`). Output is bitwise
-/// identical to the word-at-a-time path for every format and every
-/// thread count — `rust/tests/cli.rs` pins this end to end.
-fn generate_block_fill(
+/// `generate --backend <arm>` (or legacy `--block-fill`): batch-generate
+/// through the selected fill backend (`openrand::backend`). Every arm is
+/// byte-identical to the word-at-a-time path for every format — the
+/// backend contract (`docs/backends.md`); `rust/tests/cli.rs` pins it
+/// end to end. `--crossover N` overrides the `auto` arm's calibrated
+/// host/device switch point.
+#[allow(clippy::too_many_arguments)]
+fn generate_backend(
+    args: &Args,
     gen: Generator,
     seed: u64,
     ctr: u32,
     n: usize,
     format: &str,
+    kind: BackendKind,
     threads: usize,
 ) -> anyhow::Result<()> {
-    fn run<G: BlockRng>(
-        seed: u64,
-        ctr: u32,
-        n: usize,
-        format: &str,
-        threads: usize,
-    ) -> anyhow::Result<()> {
-        use std::io::Write as _;
-        let stdout = std::io::stdout();
-        let mut out = std::io::BufWriter::new(stdout.lock());
-        match format {
-            "u32" => {
-                let mut buf = vec![0u32; n];
-                fill::par_fill_u32::<G>(seed, ctr, &mut buf, threads);
-                for v in &buf {
-                    writeln!(out, "{v}")?;
-                }
-            }
-            "u64" => {
-                let mut buf = vec![0u64; n];
-                fill::par_fill_u64::<G>(seed, ctr, &mut buf, threads);
-                for v in &buf {
-                    writeln!(out, "{v}")?;
-                }
-            }
-            "f32" => {
-                let mut buf = vec![0.0f32; n];
-                fill::par_fill_f32::<G>(seed, ctr, &mut buf, threads);
-                for v in &buf {
-                    writeln!(out, "{v}")?;
-                }
-            }
-            "f64" => {
-                let mut buf = vec![0.0f64; n];
-                fill::par_fill_f64::<G>(seed, ctr, &mut buf, threads);
-                for v in &buf {
-                    writeln!(out, "{v}")?;
-                }
-            }
-            other => unreachable!("format '{other}' validated in cmd_generate"),
+    use std::io::Write as _;
+    let mut b: Box<dyn backend::FillBackend> = match (kind, args.get("crossover")) {
+        (BackendKind::Auto, Some(v)) => {
+            let table = CrossoverTable::from_env_value(v)
+                .ok_or_else(|| anyhow::anyhow!("--crossover: '{v}' is not a word count"))?;
+            Box::new(backend::Auto::with_table(threads, table))
         }
-        Ok(())
+        _ => backend::make(kind, threads)?,
+    };
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    match format {
+        "u32" => {
+            let mut buf = vec![0u32; n];
+            b.fill_u32(gen, seed, ctr, &mut buf)?;
+            for v in &buf {
+                writeln!(out, "{v}")?;
+            }
+        }
+        "u64" => {
+            let mut buf = vec![0u64; n];
+            b.fill_u64(gen, seed, ctr, &mut buf)?;
+            for v in &buf {
+                writeln!(out, "{v}")?;
+            }
+        }
+        "f32" => {
+            let mut buf = vec![0.0f32; n];
+            b.fill_f32(gen, seed, ctr, &mut buf)?;
+            for v in &buf {
+                writeln!(out, "{v}")?;
+            }
+        }
+        "f64" => {
+            let mut buf = vec![0.0f64; n];
+            b.fill_f64(gen, seed, ctr, &mut buf)?;
+            for v in &buf {
+                writeln!(out, "{v}")?;
+            }
+        }
+        other => unreachable!("format '{other}' validated in cmd_generate"),
     }
-    use openrand::core::{Philox, Philox2x32, Squares, Threefry, Threefry2x32, Tyche, TycheI};
-    match gen {
-        Generator::Philox => run::<Philox>(seed, ctr, n, format, threads),
-        Generator::Philox2x32 => run::<Philox2x32>(seed, ctr, n, format, threads),
-        Generator::Threefry => run::<Threefry>(seed, ctr, n, format, threads),
-        Generator::Threefry2x32 => run::<Threefry2x32>(seed, ctr, n, format, threads),
-        Generator::Squares => run::<Squares>(seed, ctr, n, format, threads),
-        Generator::Tyche => run::<Tyche>(seed, ctr, n, format, threads),
-        Generator::TycheI => run::<TycheI>(seed, ctr, n, format, threads),
-    }
+    Ok(())
 }
 
 /// `generate --dist <name>`: stream distribution samples instead of raw
@@ -333,6 +344,35 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
     let words = args.get_usize("words", 4 << 20).map_err(anyhow::Error::msg)?;
     let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
     let gen = parse_generator(args)?;
+    if args.flag("chunk-sweep") {
+        println!("chunk-size sweep: {} ({} words/test budget)", gen.name(), words);
+        println!(
+            "{:<10} {:>14} {:>12} {:>10}",
+            "chunk", "battery wall", "words/s", "failures"
+        );
+        let rows = openrand::stats::battery::chunk_sweep(gen.name(), words, |i| {
+            let s = seed ^ ((i as u64) << 32);
+            boxed_rng(gen, s)
+        });
+        for r in &rows {
+            println!(
+                "{:<10} {:>14} {:>12} {:>10}",
+                r.chunk,
+                format!("{:.1} ms", r.wall.as_secs_f64() * 1e3),
+                openrand::util::format::si(r.words_per_s),
+                r.failures
+            );
+        }
+        println!(
+            "\nshipped default: {} words (stats::battery::DEFAULT_FILL_CHUNK);\n\
+             re-run this sweep after hardware changes — see docs/backends.md.",
+            openrand::stats::battery::DEFAULT_FILL_CHUNK
+        );
+        if rows.iter().any(|r| r.failures > 0) {
+            anyhow::bail!("battery reported failures during the sweep");
+        }
+        return Ok(());
+    }
     if args.flag("dist-battery") {
         let report = run_dist_battery(gen.name(), words, |i| {
             let s = seed ^ ((i as u64) << 32);
@@ -423,7 +463,12 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     print!("{}", r3.render());
     let r4 = repro::verify_fill_invariance::<openrand::core::Philox>(1 << 20, max_threads, seed);
     print!("{}", r4.render());
-    if r1.consistent && r2.consistent && r3.consistent && r4.consistent {
+    // The backend-invariance ladder: host / par{1,2,8} / device (when
+    // artifacts exist) / auto, byte-compared against the serial arm.
+    let gen = parse_generator(args)?;
+    let r5 = repro::verify_backend_invariance(gen, 1 << 20, seed, 0, max_threads);
+    print!("{}", r5.render());
+    if r1.consistent && r2.consistent && r3.consistent && r4.consistent && r5.consistent {
         println!("ALL REPRODUCIBILITY CHECKS PASSED");
         Ok(())
     } else {

@@ -193,6 +193,13 @@ impl DeviceGraph {
         lit.to_vec::<f64>().map_err(|e| anyhow!("to_vec f64: {e}"))
     }
 
+    /// Download a device buffer to host u32s (the block-artifact word
+    /// path used by `backend::DeviceFill`).
+    pub fn buffer_to_u32(&self, buf: &xla::PjRtBuffer) -> Result<Vec<u32>> {
+        let lit = buf.to_literal_sync().map_err(|e| anyhow!("to_literal: {e}"))?;
+        lit.to_vec::<u32>().map_err(|e| anyhow!("to_vec u32: {e}"))
+    }
+
     /// Convenience: single-output u32 graph.
     pub fn call_u32(&self, args: &[Arg]) -> Result<Vec<u32>> {
         match self.call(args)?.remove(0) {

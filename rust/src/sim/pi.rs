@@ -8,7 +8,8 @@
 //! stream words, same estimate, fewer per-word branches, no heap
 //! allocation in the hot loop.
 
-use crate::core::{fill, BlockRng};
+use crate::backend::FillBackend;
+use crate::core::{fill, BlockRng, Generator};
 
 /// Count hits inside the quarter circle for one chunk of samples.
 /// Sample `k` uses stream words `4k..4k + 4` (x from the first pair, y
@@ -47,6 +48,61 @@ pub fn estimate_pi<G: BlockRng>(chunks: u64, samples_per_chunk: usize, global_se
     4.0 * hits as f64 / (chunks as f64 * samples_per_chunk as f64)
 }
 
+/// [`chunk_hits`] through a fill backend: the chunk's whole word budget
+/// arrives as one `fill_f64` of `2·samples` doubles from stream
+/// `(chunk_id ^ seed, 0)` — element `2k` is sample `k`'s x (words
+/// `4k, 4k+1`), element `2k+1` its y (words `4k+2, 4k+3`), the exact
+/// consumption of the serial tile loop, so the hit count is identical on
+/// every backend arm by the backend contract.
+pub fn chunk_hits_backend(
+    backend: &mut dyn FillBackend,
+    gen: Generator,
+    chunk_id: u64,
+    global_seed: u64,
+    samples_per_chunk: usize,
+) -> anyhow::Result<u64> {
+    let mut xy = vec![0.0f64; 2 * samples_per_chunk];
+    backend.fill_f64(gen, chunk_id ^ global_seed, 0, &mut xy)?;
+    Ok(hits_in(&xy))
+}
+
+fn hits_in(xy: &[f64]) -> u64 {
+    let mut hits = 0u64;
+    for pair in xy.chunks_exact(2) {
+        if pair[0] * pair[0] + pair[1] * pair[1] <= 1.0 {
+            hits += 1;
+        }
+    }
+    hits
+}
+
+/// [`estimate_pi`] with an optional backend handle: `None` runs the
+/// serial reference, `Some(backend)` routes every chunk's draws through
+/// the backend (host-parallel or device) — the estimate is bitwise
+/// identical either way.
+pub fn estimate_pi_with(
+    backend: Option<&mut dyn FillBackend>,
+    gen: Generator,
+    chunks: u64,
+    samples_per_chunk: usize,
+    global_seed: u64,
+) -> anyhow::Result<f64> {
+    let mut serial = crate::backend::HostSerial;
+    let backend: &mut dyn FillBackend = match backend {
+        Some(b) => b,
+        None => &mut serial,
+    };
+    // One xy buffer for the whole run; per-chunk allocation would put a
+    // malloc/free pair in the hot loop this module promises is clean.
+    let mut xy = vec![0.0f64; 2 * samples_per_chunk];
+    let mut hits = 0u64;
+    for c in 0..chunks {
+        backend.fill_f64(gen, c ^ global_seed, 0, &mut xy)?;
+        hits += hits_in(&xy);
+    }
+    Ok(4.0 * hits as f64 / (chunks as f64 * samples_per_chunk as f64))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -75,6 +131,27 @@ mod tests {
             }
         }
         assert_eq!(chunk_hits::<Philox>(3, 9, 1000), hits);
+    }
+
+    #[test]
+    fn backend_chunks_match_serial_chunks() {
+        use crate::backend::{HostParallel, HostSerial};
+        let gen = Generator::Philox;
+        for chunk_id in [0u64, 3, 17] {
+            let want = chunk_hits::<Philox>(chunk_id, 9, 1000);
+            let got = chunk_hits_backend(&mut HostSerial, gen, chunk_id, 9, 1000).unwrap();
+            assert_eq!(got, want, "serial chunk {chunk_id}");
+            let got =
+                chunk_hits_backend(&mut HostParallel::new(4), gen, chunk_id, 9, 1000).unwrap();
+            assert_eq!(got, want, "parallel chunk {chunk_id}");
+        }
+        // Whole-estimate equivalence, with and without a handle.
+        let reference = estimate_pi::<Philox>(16, 500, 7);
+        let none = estimate_pi_with(None, gen, 16, 500, 7).unwrap();
+        assert_eq!(none.to_bits(), reference.to_bits());
+        let mut par = HostParallel::new(3);
+        let with = estimate_pi_with(Some(&mut par), gen, 16, 500, 7).unwrap();
+        assert_eq!(with.to_bits(), reference.to_bits());
     }
 
     #[test]

@@ -30,6 +30,8 @@ pub mod parallel;
 pub mod pvalue;
 pub mod suite;
 
-pub use battery::{run_battery, BatteryReport, BufferedWords};
+pub use battery::{
+    chunk_sweep, run_battery, BatteryReport, BufferedWords, ChunkSweepRow, DEFAULT_FILL_CHUNK,
+};
 pub use distcheck::run_dist_battery;
 pub use suite::{TestResult, Verdict};

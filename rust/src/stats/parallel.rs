@@ -17,13 +17,20 @@
 //! the test that actually validates the *counter-based* design, and per
 //! the paper it is the first time Tyche and Squares get this treatment.
 
-use super::suite::{TestResult, StatTest};
+use super::battery::BufferedWords;
+use super::suite::{StatTest, TestResult};
 use crate::core::traits::{CounterRng, Rng};
 use std::marker::PhantomData;
 
 /// Streams the interleaved parallel construction as an `Rng`, so every
 /// single-stream test can run on it without materializing gigabytes.
-pub struct InterleavedStream<G: CounterRng> {
+///
+/// Each micro-stream is read through a **per-stream [`BufferedWords`]**
+/// sized to the micro-stream length, so the suite exercises the buffered
+/// bulk path (`Rng::fill_u32` per micro-stream) rather than per-word
+/// draws — same words bit-for-bit by the `BufferedWords` contract, which
+/// `interleaved_stream_layout` below pins against direct engine draws.
+pub struct InterleavedStream<G: CounterRng + 'static> {
     n_particles: u64,
     words_per_micro: u32,
     global_seed: u64,
@@ -31,11 +38,11 @@ pub struct InterleavedStream<G: CounterRng> {
     iteration: u32,
     pid: u64,
     word: u32,
-    cur: Option<G>,
+    cur: Option<BufferedWords>,
     _g: PhantomData<G>,
 }
 
-impl<G: CounterRng> InterleavedStream<G> {
+impl<G: CounterRng + 'static> InterleavedStream<G> {
     pub fn new(n_particles: u64, words_per_micro: u32, global_seed: u64) -> Self {
         InterleavedStream {
             n_particles,
@@ -50,10 +57,13 @@ impl<G: CounterRng> InterleavedStream<G> {
     }
 }
 
-impl<G: CounterRng> Rng for InterleavedStream<G> {
+impl<G: CounterRng + 'static> Rng for InterleavedStream<G> {
     fn next_u32(&mut self) -> u32 {
         if self.cur.is_none() {
-            self.cur = Some(G::new(self.pid ^ self.global_seed, self.iteration));
+            self.cur = Some(BufferedWords::new(
+                Box::new(G::new(self.pid ^ self.global_seed, self.iteration)),
+                self.words_per_micro as usize,
+            ));
         }
         let w = self.cur.as_mut().unwrap().next_u32();
         self.word += 1;
@@ -75,7 +85,7 @@ pub const HOOMD_PARTICLES: u64 = 16_000;
 pub const HOOMD_WORDS: u32 = 3;
 
 /// Run a set of single-stream tests over the interleaved construction.
-pub fn run_parallel_suite<G: CounterRng>(
+pub fn run_parallel_suite<G: CounterRng + 'static>(
     global_seed: u64,
     words: usize,
 ) -> Vec<TestResult> {
@@ -155,6 +165,23 @@ mod tests {
         }
         let mut direct_it1 = Philox::new(0, 1);
         assert_eq!(s.next_u32(), direct_it1.next_u32());
+    }
+
+    #[test]
+    fn buffered_micro_streams_match_direct_draws() {
+        // The per-stream BufferedWords routing must not move a word:
+        // replay the construction with direct engine draws over several
+        // full pid/iteration cycles.
+        let (particles, wpm) = (5u64, 3u32);
+        let mut s: InterleavedStream<Squares> = InterleavedStream::new(particles, wpm, 0xAB);
+        for it in 0..4u32 {
+            for pid in 0..particles {
+                let mut direct = Squares::new(pid ^ 0xAB, it);
+                for w in 0..wpm {
+                    assert_eq!(s.next_u32(), direct.next_u32(), "it={it} pid={pid} w={w}");
+                }
+            }
+        }
     }
 
     #[test]

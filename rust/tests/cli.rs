@@ -87,6 +87,62 @@ fn generate_block_fill_bitwise_matches_word_at_a_time() {
 }
 
 #[test]
+fn generate_backend_arms_byte_identical() {
+    // The backend-subsystem contract at the CLI surface: every host arm
+    // (and auto) matches the plain word-at-a-time path byte-for-byte.
+    for format in ["u32", "u64", "f32", "f64"] {
+        let base = ["generate", "--seed", "11", "--ctr", "3", "--n", "41", "--format", format];
+        let (plain, _, ok) = openrand(&base);
+        assert!(ok, "{format}");
+        for backend_args in [
+            &["--backend", "host"][..],
+            &["--backend", "par", "--threads", "4"][..],
+            &["--backend", "auto"][..],
+        ] {
+            let mut args = base.to_vec();
+            args.extend_from_slice(backend_args);
+            let (out, err, ok) = openrand(&args);
+            assert!(ok, "{format} {backend_args:?}: {err}");
+            assert_eq!(plain, out, "{format} {backend_args:?} diverged");
+        }
+    }
+    // --crossover steers the auto arm without changing bytes.
+    let (plain, _, _) = openrand(&["generate", "--seed", "5", "--n", "20"]);
+    let (steered, err, ok) =
+        openrand(&["generate", "--seed", "5", "--n", "20", "--backend", "auto", "--crossover", "1k"]);
+    assert!(ok, "{err}");
+    assert_eq!(plain, steered);
+    // ... and is rejected (not silently ignored) on any other arm.
+    let (_, err, ok) = openrand(&["generate", "--n", "8", "--backend", "par", "--crossover", "1k"]);
+    assert!(!ok);
+    assert!(err.contains("crossover"), "{err}");
+}
+
+#[test]
+fn generate_backend_device_matches_or_reports_unavailable() {
+    // Fresh checkout (vendored PJRT stub / no artifacts): a clean error.
+    // Real backend + artifacts: byte-identical to the plain path.
+    let (plain, _, _) = openrand(&["generate", "--seed", "2", "--ctr", "1", "--n", "29"]);
+    let (out, err, ok) =
+        openrand(&["generate", "--seed", "2", "--ctr", "1", "--n", "29", "--backend", "device"]);
+    if ok {
+        assert_eq!(plain, out, "device arm diverged from the plain path");
+    } else {
+        assert!(
+            err.contains("error"),
+            "device unavailability must be a diagnostic, got: {err}"
+        );
+    }
+}
+
+#[test]
+fn generate_backend_rejects_unknown_arm() {
+    let (_, err, ok) = openrand(&["generate", "--backend", "gpu", "--n", "4"]);
+    assert!(!ok);
+    assert!(err.contains("unknown backend"), "{err}");
+}
+
+#[test]
 fn generate_dist_samples_deterministic() {
     let run = || openrand(&["generate", "--dist", "normal", "--seed", "7", "--ctr", "1", "--n", "6"]);
     let (a, _, ok) = run();
