@@ -4,87 +4,112 @@
 //! cargo run --release --example quickstart
 //! ```
 //!
-//! Covers: construction from (seed, counter), draws, distributions,
-//! per-entity streams, and sub-streams per kernel/timestep — the paper's
-//! §3.1 walk-through as runnable code.
+//! Covers: hierarchical stream keys, the one-handle `Stream` facade
+//! (draws, bulk fills, distributions), per-entity streams and
+//! sub-streams per timestep, and the legacy `(seed, ctr)` equivalence —
+//! the paper's §3.1 walk-through as runnable code.
 
 use openrand::core::{CounterRng, Philox, Rng, Squares, Tyche};
 use openrand::dist::{
     BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform, ZigguratNormal,
 };
+use openrand::stream::{Stream, StreamKey};
 
-fn main() {
-    // 1. A generator is just (seed, counter). No global state, no init
-    //    call, no warm-up to manage. Same pair -> same stream, forever.
-    let mut rng = Philox::new(/*seed=*/ 42, /*ctr=*/ 0);
-    println!("u32      : {}", rng.next_u32());
-    println!("f64      : {:.6}", rng.draw_double());
-    let (a, b) = rng.draw_double2(); // the paper's draw_double2
+fn main() -> anyhow::Result<()> {
+    // 1. A stream is named by a typed hierarchical key — no global
+    //    state, no init call, no hand-packed integers. Same key ->
+    //    same stream, forever.
+    let run = StreamKey::root(42);
+    let mut s = Stream::<Philox>::new(run);
+    println!("u32      : {}", s.next_u32());
+    println!("f64      : {:.6}", s.draw_double());
+    let (a, b) = s.draw_double2(); // the paper's draw_double2
     println!("double2  : ({a:.6}, {b:.6})");
 
-    // 2. Distributions compose with any engine. Each sampler consumes a
-    //    documented word pattern from the stream (the contract table in
-    //    `dist`), so distribution draws replay bitwise too. BoxMuller is
-    //    the normative normal: exactly one draw_double2 pair (= one
-    //    Philox counter block) per sample, shared with the device graphs.
+    // 2. Distributions compose with the same handle. Each sampler
+    //    consumes a documented word pattern from the stream (the
+    //    contract table in `dist`), so distribution draws replay
+    //    bitwise too. BoxMuller is the normative normal: exactly one
+    //    draw_double2 pair (= one Philox counter block) per sample,
+    //    shared with the device graphs.
     let normal = BoxMuller::standard();
     let expo = Exponential::new(2.0);
     let pois = Poisson::new(4.5);
     let uni = Uniform::new(-1.0, 1.0);
-    println!("gaussian : {:.6}", normal.sample(&mut rng));
-    println!("exp(2)   : {:.6}", expo.sample(&mut rng));
-    println!("poisson  : {}", pois.sample(&mut rng));
-    println!("uniform  : {:.6}", uni.sample(&mut rng));
+    // Both directions compose: the handle samples a distribution, and a
+    // distribution draws from the handle (Stream implements Rng).
+    println!("gaussian : {:.6}", normal.sample(&mut s));
+    println!("exp(2)   : {:.6}", s.sample(&expo));
+    println!("poisson  : {}", s.sample(&pois));
+    println!("uniform  : {:.6}", s.sample(&uni));
 
-    // 2b. The ziggurat is the host fast path for normals: ~1 stream word
-    //     per sample against Box-Muller's 4 + ln/sqrt/cos/sin (see
-    //     `cargo bench --bench fig_dist`). Deterministic per stream, but
-    //     variable word consumption — use BoxMuller where host/device
-    //     streams must stay aligned.
+    // 2b. The ziggurat is the host fast path for normals: ~1 stream
+    //     word per sample against Box-Muller's 4 + ln/sqrt/cos/sin (see
+    //     `cargo bench --bench fig_dist`). Deterministic per stream,
+    //     but variable word consumption — use BoxMuller where
+    //     host/device streams must stay aligned.
     let zig = ZigguratNormal::standard();
-    println!("ziggurat : {:.6}", zig.sample(&mut rng));
+    println!("ziggurat : {:.6}", s.sample(&zig));
 
     // 2c. Weighted categorical draws in O(1) per sample via Walker's
     //     alias method (table built once in O(n)).
     let loot = DiscreteAlias::new(&[60.0, 30.0, 9.0, 1.0]);
     let names = ["common", "uncommon", "rare", "legendary"];
-    println!("alias    : {}", names[loot.sample(&mut rng)]);
+    println!("alias    : {}", names[s.sample(&loot)]);
 
     // 3. The parallel pattern (paper Fig. 1): one stream per logical
-    //    entity, derived from the entity's OWN id — reproducible no
-    //    matter which thread runs it, or how many threads exist.
+    //    entity, derived from the entity's OWN id via the normative
+    //    child mix — reproducible no matter which thread runs it, and
+    //    collision-proof without xor-packing seeds by hand.
     let total: f64 = (0..8u64)
         .map(|particle_id| {
-            let mut r = Philox::new(particle_id, /*timestep=*/ 7);
+            let mut r = Stream::<Philox>::new(run.child(particle_id).epoch(/*timestep=*/ 7));
             r.draw_double()
         })
         .sum();
     println!("8 per-particle draws, timestep 7, sum = {total:.6}");
 
-    // 4. Sub-streams: bump the counter for a new independent stream of
-    //    the same entity (next timestep, next kernel, ...).
-    let mut t0 = Philox::new(1234, 0);
-    let mut t1 = Philox::new(1234, 1);
+    // 4. Sub-streams: epoch(t) selects an independent stream of the
+    //    same entity (next timestep, next kernel, ...). Absolute:
+    //    epoch(1) means "sub-stream 1", not "advance once".
+    let entity = run.child(1234);
+    let mut t0 = Stream::<Philox>::new(entity.epoch(0));
+    let mut t1 = Stream::<Philox>::new(entity.epoch(1));
     println!("particle 1234 @ t0: {:.6}, @ t1: {:.6}", t0.draw_double(), t1.draw_double());
 
-    // 5. Other engines, same API (pick per DESIGN.md guidance: Philox
-    //    default; Squares/Tyche for CPU speed; Threefry where multipliers
-    //    are slow).
-    let mut sq = Squares::new(42, 0);
-    let mut ty = Tyche::new(42, 0);
-    println!("squares  : {}", sq.next_u32());
+    // 5. Bulk generation through the same handle: key-addressed fills
+    //    and bulk sampling, routed through a fill backend — None picks
+    //    the calibrated Auto arm. Byte-identical to the scalar draws
+    //    on every arm (the backend contract).
+    let mut words = vec![0u32; 8];
+    s.fill_u32(None, &mut words)?;
+    let mut first = Stream::<Philox>::new(s.key());
+    assert_eq!(words[0], first.next_u32()); // fills re-read from word 0
+    let mut normals = vec![0.0f64; 4];
+    s.sample_fill(&normal, None, &mut normals)?;
+    println!("bulk     : {words:?}");
+    println!("normals  : {normals:?}");
+
+    // 6. The legacy spelling is a thin, documented equivalence:
+    //    StreamKey::raw(seed, ctr) opens the byte-identical stream
+    //    CounterRng::new(seed, ctr) always opened — existing code and
+    //    every pinned KAT replay unchanged. Other engines, same API.
+    let mut via_key = Stream::<Squares>::new(StreamKey::raw(42, 0));
+    let mut legacy = Squares::new(42, 0);
+    assert_eq!(via_key.next_u32(), legacy.next_u32());
+    let mut ty = Stream::<Tyche>::new(StreamKey::raw(42, 0));
+    println!("squares  : {}", legacy.next_u32());
     println!("tyche    : {}", ty.next_u32());
 
-    // 6. Reproducibility is bitwise: re-creating the generator replays
-    //    the stream exactly.
-    let w1: Vec<u32> = {
-        let mut r = Philox::new(42, 0);
+    // 7. Reproducibility is bitwise: re-opening the key replays the
+    //    stream exactly.
+    let keyed_words = |key: StreamKey| -> Vec<u32> {
+        let mut r = Stream::<Philox>::new(key);
         (0..4).map(|_| r.next_u32()).collect()
     };
-    let w2: Vec<u32> = {
-        let mut r = Philox::new(42, 0);
-        (0..4).map(|_| r.next_u32()).collect()
-    };
+    let w1 = keyed_words(run.child(3).epoch(1));
+    let w2 = keyed_words(run.child(3).epoch(1));
     assert_eq!(w1, w2);
-    println!("replayed stream bitwise: OK {w1:?}");
+    println!("replayed derived stream bitwise: OK {w1:?}");
+    Ok(())
 }

@@ -73,6 +73,75 @@ def squares_key(seed: int) -> int:
     return splitmix64(seed) | 1
 
 
+# ---------------------------------------------------------------------------
+# StreamKey derivation (hierarchical stream addressing) — shared bit-exactly
+# with ``rust/src/stream/mod.rs``. A stream key is a (seed: u64, ctr: u32)
+# pair reached structurally: root(s) = (s, 0); epoch(t) sets ctr = t
+# (absolute, last wins); child(id) derives a fresh seed via the normative
+# mix below and resets ctr to 0. ``python/tests/test_stream_keys.py`` and
+# the Rust doctests pin the same literals on both layers.
+# ---------------------------------------------------------------------------
+
+#: Domain-separation tag of the child derivation (ASCII "chld").
+STREAMKEY_DOMAIN_CHILD = 0x63686C64
+
+
+def derive_child_seed(parent_seed: int, parent_ctr: int, child_id: int) -> int:
+    """Normative child-key mix — the single 64 -> (seed, ctr) function.
+
+    ``tag = (parent_ctr << 32) | STREAMKEY_DOMAIN_CHILD``;
+    ``child_seed = splitmix64(splitmix64(splitmix64(parent_seed) ^ tag) ^ id)``;
+    the child's counter is 0. For a fixed parent the map id -> seed is a
+    bijection (xor + the splitmix64 permutation), so distinct child ids
+    are guaranteed distinct seeds.
+    """
+    m64 = 0xFFFF_FFFF_FFFF_FFFF
+    tag = ((int(parent_ctr) & 0xFFFF_FFFF) << 32) | STREAMKEY_DOMAIN_CHILD
+    h = splitmix64(int(parent_seed) & m64)
+    h = splitmix64(h ^ tag)
+    return splitmix64(h ^ (int(child_id) & m64))
+
+
+def stream_key_path(spec: str):
+    """Parse the CLI key-path spelling ``SEED[/cID|/eT]...`` to (seed, ctr).
+
+    Mirrors ``StreamKey::parse_path`` in rust/src/stream/mod.rs: a root
+    seed (decimal or 0x hex) followed by c-prefixed child derivations and
+    e-prefixed absolute epochs, applied left to right. ``7/c3/e1`` is
+    root(7).child(3).epoch(1); ``7/e1`` is the legacy (seed=7, ctr=1).
+    """
+
+    def as_int(s: str, what: str) -> int:
+        # Match Rust's u64 parse: no sign, no underscores, no overflow
+        # (python's int() is laxer on all three).
+        s = s.strip()
+        try:
+            if "_" in s or s.startswith(("-", "+")):
+                raise ValueError(s)
+            v = int(s, 16) if s.startswith("0x") else int(s)
+        except ValueError as e:
+            raise ValueError(f"bad {what} {s!r}") from e
+        if v > 0xFFFF_FFFF_FFFF_FFFF:
+            raise ValueError(f"bad {what} {s!r} (exceeds u64)")
+        return v
+
+    parts = spec.split("/")
+    if not parts or not parts[0]:
+        raise ValueError("empty key path (expected 'SEED[/cID|/eT]...')")
+    seed, ctr = as_int(parts[0], "root seed"), 0
+    for seg in parts[1:]:
+        if seg.startswith("c"):
+            seed, ctr = derive_child_seed(seed, ctr, as_int(seg[1:], "child id")), 0
+        elif seg.startswith("e"):
+            t = as_int(seg[1:], "epoch")
+            if t > 0xFFFF_FFFF:
+                raise ValueError(f"epoch {seg!r} exceeds the 32-bit counter")
+            ctr = t
+        else:
+            raise ValueError(f"bad key segment {seg!r} (expected cID or eT)")
+    return seed, ctr
+
+
 def mulhilo32(a, b):
     """(hi, lo) 32-bit halves of the 64-bit product a*b (u32 inputs)."""
     prod = a.astype(U64) * b.astype(U64)

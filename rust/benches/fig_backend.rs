@@ -15,9 +15,10 @@
 //! # ^ writes <artifacts>/backend_crossover.txt for the Auto arm
 //! ```
 
-use openrand::backend::{auto, Auto, CrossoverTable, DeviceFill, FillBackend, HostSerial};
+use openrand::backend::{auto, Auto, CrossoverTable, DeviceFill, HostSerial};
 use openrand::coordinator::repro;
 use openrand::core::Generator;
+use openrand::stream::{self, StreamKey};
 
 const SIZES: [usize; 4] = [1 << 12, 1 << 16, 1 << 18, 1 << 20];
 
@@ -27,10 +28,14 @@ fn main() {
     let sizes: &[usize] = if quick { &SIZES[..2] } else { &SIZES };
     let reps = if quick { 3 } else { 15 };
 
-    // Repro gate first: all arms byte-identical before any timing.
+    // Repro gates first: all arms byte-identical, and the StreamKey
+    // facade byte-identical to the legacy spelling, before any timing.
     let gate = repro::verify_backend_invariance(Generator::Philox, 65_536, 0xF16, 1, threads);
     eprint!("{}", gate.render());
     assert!(gate.consistent, "backend arms disagree — refusing to bench wrong bytes");
+    let key_gate = repro::verify_key_equivalence(0xF16, 1, 8_192);
+    eprint!("{}", key_gate.render());
+    assert!(key_gate.consistent, "StreamKey drifted from CounterRng::new — refusing to bench");
 
     let device_note = match DeviceFill::try_new() {
         Ok(_) => "device arm available".to_string(),
@@ -46,14 +51,18 @@ fn main() {
 
     // Serial host baseline, measured the same way the calibration
     // measures par/device (median of reps) so columns are comparable.
+    // Addressing goes through the key facade (epoch per rep) — the
+    // same bytes as the raw spelling, by the key_gate above.
     let serial_ns: Vec<f64> = sizes
         .iter()
         .map(|&n| {
             let mut buf = vec![0u32; n];
             let mut ns: Vec<f64> = (0..reps)
                 .map(|rep| {
+                    let key = StreamKey::root(1).epoch(rep as u32);
                     let t = std::time::Instant::now();
-                    HostSerial.fill_u32(Generator::Philox, 1, rep as u32, &mut buf).unwrap();
+                    stream::fill_u32_key(Some(&mut HostSerial), Generator::Philox, key, &mut buf)
+                        .unwrap();
                     t.elapsed().as_nanos() as f64
                 })
                 .collect();

@@ -196,6 +196,50 @@ pub fn verify_backend_invariance(
     }
 }
 
+/// The `StreamKey` zero-drift ladder: for every engine,
+/// `StreamKey::raw(seed, ctr)` must open the byte-identical stream as
+/// `CounterRng::new(seed, ctr)` (the facade's documented equivalence),
+/// and the hierarchical derivation must match the normative mix —
+/// checked against the cross-layer KAT literal (`root(7).child(3)
+/// .epoch(1)`, pinned identically in `python/tests/test_stream_keys.py`)
+/// plus the epoch-absoluteness rule. One row per engine; each
+/// fingerprint covers both spellings' words.
+pub fn verify_key_equivalence(seed: u64, ctr: u32, n: usize) -> ReproReport {
+    use crate::stream::{derive_child_seed, DynStream, StreamKey};
+    let key = StreamKey::raw(seed, ctr);
+    let mut hashes = Vec::new();
+    let mut consistent = true;
+    for gen in Generator::ALL {
+        let mut legacy = vec![0u32; n];
+        gen.with_rng(seed, ctr, |r| r.fill_u32(&mut legacy));
+        let mut keyed = vec![0u32; n];
+        let mut s = DynStream::open(gen, key);
+        Rng::fill_u32(&mut s, &mut keyed);
+        if legacy != keyed {
+            consistent = false;
+        }
+        let mut h = Fnv1a::new();
+        h.write_u32_slice(&legacy);
+        h.write_u32_slice(&keyed);
+        hashes.push((gen.name().to_string(), h.finish()));
+    }
+    // Derivation KAT + epoch absoluteness (the documented order rule).
+    let derived = StreamKey::root(7).child(3).epoch(1);
+    if (derived.seed(), derived.ctr()) != (0xBC83_12B7_34DE_4237, 1)
+        || derive_child_seed(7, 0, 3) != derived.seed()
+        || StreamKey::root(9).epoch(5).epoch(2) != StreamKey::raw(9, 2)
+    {
+        consistent = false;
+    }
+    ReproReport {
+        description: format!(
+            "StreamKey::raw vs CounterRng::new (seed={seed:#x}, ctr={ctr}, n={n}) + derivation KAT"
+        ),
+        hashes,
+        consistent,
+    }
+}
+
 /// Host vs device: positions agree within `tol` relative error per
 /// coordinate (XLA may re-associate float ops; the RNG words themselves
 /// are pinned bitwise by the cross-layer integration test).
@@ -277,6 +321,14 @@ mod tests {
             "{}",
             r.render()
         );
+    }
+
+    #[test]
+    fn key_equivalence_holds() {
+        let r = verify_key_equivalence(0xFEED_F00D, 11, 4096);
+        assert!(r.consistent, "{}", r.render());
+        assert_eq!(r.hashes.len(), Generator::ALL.len());
+        assert!(r.description.contains("StreamKey"), "{}", r.description);
     }
 
     #[test]

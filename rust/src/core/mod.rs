@@ -114,6 +114,34 @@ impl Generator {
             Generator::TycheI => f(&mut TycheI::new(seed, ctr)),
         }
     }
+
+    /// Boxed engine for stream `(seed, ctr)`, cursor at word 0 — the
+    /// dispatch the CLI, batteries, and `stream::DynStream` share.
+    pub fn boxed(self, seed: u64, ctr: u32) -> Box<dyn Rng> {
+        self.boxed_at(seed, ctr, 0)
+    }
+
+    /// Boxed engine positioned at absolute stream word `pos` (O(1)
+    /// counter jump; Tyche/Tyche-i replay O(pos) per their documented
+    /// `set_position` exception).
+    pub fn boxed_at(self, seed: u64, ctr: u32, pos: u32) -> Box<dyn Rng> {
+        fn mk<G: CounterRng + 'static>(seed: u64, ctr: u32, pos: u32) -> Box<dyn Rng> {
+            let mut g = G::new(seed, ctr);
+            if pos != 0 {
+                g.set_position(pos);
+            }
+            Box::new(g)
+        }
+        match self {
+            Generator::Philox => mk::<Philox>(seed, ctr, pos),
+            Generator::Philox2x32 => mk::<Philox2x32>(seed, ctr, pos),
+            Generator::Threefry => mk::<Threefry>(seed, ctr, pos),
+            Generator::Threefry2x32 => mk::<Threefry2x32>(seed, ctr, pos),
+            Generator::Squares => mk::<Squares>(seed, ctr, pos),
+            Generator::Tyche => mk::<Tyche>(seed, ctr, pos),
+            Generator::TycheI => mk::<TycheI>(seed, ctr, pos),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +172,21 @@ mod tests {
         for g in Generator::ALL {
             let v = g.with_rng(42, 0, |r| r.draw_double());
             assert!((0.0..1.0).contains(&v), "{:?} -> {v}", g);
+        }
+    }
+
+    #[test]
+    fn boxed_matches_with_rng_and_positions() {
+        for g in Generator::ALL {
+            let want: Vec<u32> = g.with_rng(0xB0, 3, |r| (0..64).map(|_| r.next_u32()).collect());
+            let mut b = g.boxed(0xB0, 3);
+            let got: Vec<u32> = (0..64).map(|_| b.next_u32()).collect();
+            assert_eq!(got, want, "{:?}", g);
+            // boxed_at(pos) resumes at absolute word pos.
+            let mut tail = g.boxed_at(0xB0, 3, 17);
+            for (i, &w) in want[17..].iter().enumerate() {
+                assert_eq!(tail.next_u32(), w, "{:?} word {}", g, 17 + i);
+            }
         }
     }
 }

@@ -110,9 +110,17 @@ pub trait Rng {
 
     /// Unbiased uniform integer in `[0, bound)` — Lemire's multiply-shift
     /// rejection method (no modulo on the happy path).
+    ///
+    /// # Panics
+    ///
+    /// Panics when `bound == 0` — in **all** build profiles. `[0, 0)` is
+    /// empty, so there is no uniform value to return; the former
+    /// `debug_assert!` let release builds silently return 0 (one stream
+    /// word still consumed), which is exactly the kind of quiet
+    /// divergence a reproducibility library cannot ship.
     #[inline]
     fn range_u32(&mut self, bound: u32) -> u32 {
-        debug_assert!(bound > 0);
+        assert!(bound > 0, "range_u32: bound must be positive (empty range has no uniform value)");
         let mut x = self.next_u32();
         let mut m = (x as u64) * (bound as u64);
         let mut l = m as u32;
@@ -218,6 +226,15 @@ mod tests {
     fn range_u32_bound_one_is_zero() {
         let mut s = Seq(vec![u32::MAX, 123], 0);
         assert_eq!(s.range_u32(1), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "bound must be positive")]
+    fn range_u32_zero_bound_panics_in_all_profiles() {
+        // Documented hard panic: a plain assert!, not debug_assert!, so
+        // release builds fail loudly instead of returning garbage.
+        let mut s = Seq(vec![7, 8, 9], 0);
+        let _ = s.range_u32(0);
     }
 
     #[test]

@@ -30,10 +30,13 @@
 //! [`Uniform`] and [`BoxMuller`] additionally expose `sample_fill` bulk
 //! fast paths that pull words through the engines' block-fill machinery;
 //! they consume the identical word pattern (bit-identical output to
-//! repeated `sample`), so the table above covers them unchanged. Their
-//! `sample_fill_backend` variants route the same word pattern through a
-//! [`crate::backend::FillBackend`] handle (serial, sharded-parallel, or
-//! device) — still byte-identical on every arm, per `docs/backends.md`.
+//! repeated `sample`), so the table above covers them unchanged. Bulk
+//! sampling through a [`crate::backend::FillBackend`] arm goes through
+//! the one trait surface [`Distribution::fill_backend`] (what
+//! [`crate::stream::Stream::sample_fill`] routes) — still byte-identical
+//! on every arm, per `docs/backends.md`. The per-sampler
+//! `sample_fill_backend` inherent methods are deprecated spellings of
+//! the same operation.
 //!
 //! "Variable" samplers are still **counter-stream-deterministic**: the
 //! number of words consumed is a pure function of the stream contents,
@@ -102,6 +105,34 @@ pub trait Distribution<T> {
         self.fill(rng, &mut out);
         out
     }
+
+    /// Key-addressed bulk sampling through a fill backend: write samples
+    /// `0..out.len()` of the `(seed, ctr)` sample sequence of `gen` —
+    /// bit-identical to [`fill`] over a fresh engine at `(seed, ctr)`.
+    ///
+    /// This is the one bulk surface the [`crate::stream::Stream`] facade
+    /// routes through (collapsing the old `sample` / `sample_fill` /
+    /// `sample_fill_backend` triplet). The default implementation draws
+    /// host-side from a fresh engine — correct for every sampler,
+    /// including the data-dependent-consumption ones, which have no
+    /// bulk word pattern to ship across a backend. Fixed-pattern
+    /// samplers ([`Uniform`], [`BoxMuller`]) override it to move raw
+    /// stream words through the backend arm (byte-identical on every
+    /// arm, per `docs/backends.md`) and transform host-side.
+    ///
+    /// [`fill`]: Distribution::fill
+    fn fill_backend(
+        &self,
+        backend: &mut dyn crate::backend::FillBackend,
+        gen: crate::core::Generator,
+        seed: u64,
+        ctr: u32,
+        out: &mut [T],
+    ) -> anyhow::Result<()> {
+        let _ = backend; // no fixed bulk word pattern -> host-side draw
+        gen.with_rng(seed, ctr, |rng| self.fill(rng, out));
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -135,6 +166,24 @@ mod tests {
         }
         // Streams left at the same position.
         assert_eq!(a.next_u32(), b.next_u32());
+    }
+
+    #[test]
+    fn fill_backend_default_matches_host_fill() {
+        use crate::backend::{HostParallel, HostSerial};
+        use crate::core::Generator;
+        // The trait default must equal `fill` on a fresh engine for a
+        // data-dependent sampler (no bulk pattern), on any arm.
+        let d = ZigguratNormal::standard();
+        let mut want = vec![0.0f64; 129];
+        d.fill(&mut Philox::new(6, 2), &mut want);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let mut a = vec![0.0f64; 129];
+        d.fill_backend(&mut HostSerial, Generator::Philox, 6, 2, &mut a).unwrap();
+        assert_eq!(bits(&a), bits(&want));
+        let mut b = vec![0.0f64; 129];
+        d.fill_backend(&mut HostParallel::new(4), Generator::Philox, 6, 2, &mut b).unwrap();
+        assert_eq!(bits(&b), bits(&want));
     }
 
     #[test]

@@ -91,15 +91,39 @@ impl BoxMuller {
         }
     }
 
-    /// [`BoxMuller::sample_fill`] through a fill backend: fetches the
-    /// `4·out.len()` stream words of `(seed, ctr)` on the chosen arm and
-    /// applies the identical cosine-branch transform, so the output is
-    /// byte-identical to `sample_fill` on a fresh `gen` engine — on
-    /// every arm, by the backend contract. (The *device-trig* graphs
+    /// Deprecated spelling of [`Distribution::fill_backend`] — same
+    /// operation, same bytes.
+    #[deprecated(
+        since = "0.2.0",
+        note = "route through `stream::Stream::sample_fill` or `Distribution::fill_backend`"
+    )]
+    pub fn sample_fill_backend(
+        &self,
+        backend: &mut dyn crate::backend::FillBackend,
+        gen: crate::core::Generator,
+        seed: u64,
+        ctr: u32,
+        out: &mut [f64],
+    ) -> anyhow::Result<()> {
+        self.fill_backend(backend, gen, seed, ctr, out)
+    }
+}
+
+impl Distribution<f64> for BoxMuller {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> f64 {
+        self.sample_pair(rng).0
+    }
+
+    /// Backend bulk path: fetch the `4·out.len()` stream words of
+    /// `(seed, ctr)` on the chosen arm and apply the identical
+    /// cosine-branch transform, so the output is byte-identical to
+    /// [`BoxMuller::sample_fill`] on a fresh `gen` engine — on every
+    /// arm, by the backend contract. (The *device-trig* graphs
     /// `normal_f64_*` are a separate, tolerance-compared path; this one
     /// moves only raw words across the backend boundary and keeps the
     /// transform in libm, which is what makes it bitwise.)
-    pub fn sample_fill_backend(
+    fn fill_backend(
         &self,
         backend: &mut dyn crate::backend::FillBackend,
         gen: crate::core::Generator,
@@ -117,13 +141,6 @@ impl BoxMuller {
             *slot = self.mean + self.sigma * (r * theta.cos());
         }
         Ok(())
-    }
-}
-
-impl Distribution<f64> for BoxMuller {
-    #[inline]
-    fn sample(&self, rng: &mut dyn Rng) -> f64 {
-        self.sample_pair(rng).0
     }
 }
 
@@ -292,7 +309,7 @@ mod tests {
     }
 
     #[test]
-    fn sample_fill_backend_matches_engine_path() {
+    fn fill_backend_matches_engine_path() {
         use crate::backend::{HostParallel, HostSerial};
         use crate::core::Generator;
         let dist = BoxMuller::new(10.0, 2.0);
@@ -300,12 +317,19 @@ mod tests {
         dist.sample_fill(&mut Philox::new(55, 6), &mut want);
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         let mut a = vec![0.0f64; 300];
-        dist.sample_fill_backend(&mut HostSerial, Generator::Philox, 55, 6, &mut a).unwrap();
+        dist.fill_backend(&mut HostSerial, Generator::Philox, 55, 6, &mut a).unwrap();
         assert_eq!(bits(&a), bits(&want));
         let mut b = vec![0.0f64; 300];
-        dist.sample_fill_backend(&mut HostParallel::new(4), Generator::Philox, 55, 6, &mut b)
+        dist.fill_backend(&mut HostParallel::new(4), Generator::Philox, 55, 6, &mut b)
             .unwrap();
         assert_eq!(bits(&b), bits(&want));
+        // The deprecated spelling stays byte-compatible until removal.
+        #[allow(deprecated)]
+        {
+            let mut c = vec![0.0f64; 300];
+            dist.sample_fill_backend(&mut HostSerial, Generator::Philox, 55, 6, &mut c).unwrap();
+            assert_eq!(bits(&c), bits(&want));
+        }
     }
 
     #[test]

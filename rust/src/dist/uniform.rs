@@ -56,13 +56,36 @@ impl Uniform {
         }
     }
 
-    /// [`Uniform::sample_fill`] through a fill backend: draws the whole
-    /// `[0, 1)` buffer from stream `(seed, ctr)` of `gen` on the chosen
-    /// arm and applies the affine map in place (the identical
-    /// expression, so the output is byte-identical to `sample_fill` on a
-    /// fresh `gen` engine at `(seed, ctr)` — on every arm, by the
-    /// backend contract).
+    /// Deprecated spelling of [`Distribution::fill_backend`] — same
+    /// operation, same bytes.
+    #[deprecated(
+        since = "0.2.0",
+        note = "route through `stream::Stream::sample_fill` or `Distribution::fill_backend`"
+    )]
     pub fn sample_fill_backend(
+        &self,
+        backend: &mut dyn crate::backend::FillBackend,
+        gen: crate::core::Generator,
+        seed: u64,
+        ctr: u32,
+        out: &mut [f64],
+    ) -> anyhow::Result<()> {
+        self.fill_backend(backend, gen, seed, ctr, out)
+    }
+}
+
+impl Distribution<f64> for Uniform {
+    #[inline]
+    fn sample(&self, rng: &mut dyn Rng) -> f64 {
+        self.lo + (self.hi - self.lo) * rng.draw_double()
+    }
+
+    /// Backend bulk path: draw the whole `[0, 1)` buffer from stream
+    /// `(seed, ctr)` of `gen` on the chosen arm and apply the affine map
+    /// in place (the identical expression, so the output is
+    /// byte-identical to [`Uniform::sample_fill`] on a fresh `gen`
+    /// engine at `(seed, ctr)` — on every arm, by the backend contract).
+    fn fill_backend(
         &self,
         backend: &mut dyn crate::backend::FillBackend,
         gen: crate::core::Generator,
@@ -75,13 +98,6 @@ impl Uniform {
             *slot = self.lo + (self.hi - self.lo) * *slot;
         }
         Ok(())
-    }
-}
-
-impl Distribution<f64> for Uniform {
-    #[inline]
-    fn sample(&self, rng: &mut dyn Rng) -> f64 {
-        self.lo + (self.hi - self.lo) * rng.draw_double()
     }
 }
 
@@ -127,7 +143,7 @@ mod tests {
     }
 
     #[test]
-    fn sample_fill_backend_matches_engine_path() {
+    fn fill_backend_matches_engine_path() {
         use crate::backend::{HostParallel, HostSerial};
         use crate::core::Generator;
         let d = Uniform::new(-3.0, 11.5);
@@ -135,12 +151,19 @@ mod tests {
         d.sample_fill(&mut Philox::new(21, 4), &mut want);
         let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
         let mut a = vec![0.0f64; 700];
-        d.sample_fill_backend(&mut HostSerial, Generator::Philox, 21, 4, &mut a).unwrap();
+        d.fill_backend(&mut HostSerial, Generator::Philox, 21, 4, &mut a).unwrap();
         assert_eq!(bits(&a), bits(&want));
         let mut b = vec![0.0f64; 700];
-        d.sample_fill_backend(&mut HostParallel::new(3), Generator::Philox, 21, 4, &mut b)
+        d.fill_backend(&mut HostParallel::new(3), Generator::Philox, 21, 4, &mut b)
             .unwrap();
         assert_eq!(bits(&b), bits(&want));
+        // The deprecated spelling stays byte-compatible until removal.
+        #[allow(deprecated)]
+        {
+            let mut c = vec![0.0f64; 700];
+            d.sample_fill_backend(&mut HostSerial, Generator::Philox, 21, 4, &mut c).unwrap();
+            assert_eq!(bits(&c), bits(&want));
+        }
     }
 
     #[test]

@@ -21,10 +21,27 @@
 //!
 //! ## Quick start
 //!
+//! Streams are addressed by typed hierarchical keys and drawn through
+//! one handle ([`stream::StreamKey`] + [`stream::Stream`] — the crate's
+//! public entry point; the raw engine layer below stays available):
+//!
+//! ```
+//! use openrand::core::{Philox, Rng};
+//! use openrand::stream::{Stream, StreamKey};
+//! // One unique, reproducible stream per key — no global state, no
+//! // init kernel, no hand-assembled (seed, ctr) integers:
+//! let key = StreamKey::root(42).child(/*particle=*/ 7).epoch(/*step=*/ 0);
+//! let mut s = Stream::<Philox>::new(key);
+//! let u = s.draw_float();
+//! assert!((0.0..1.0).contains(&u));
+//! ```
+//!
+//! The legacy spelling is a documented equivalence
+//! (`StreamKey::raw(seed, ctr)` ⇔ `CounterRng::new(seed, ctr)`,
+//! byte-identical):
+//!
 //! ```
 //! use openrand::core::{CounterRng, Philox, Rng};
-//! // One unique, reproducible stream per (seed, counter) pair — no state
-//! // management, no init kernel:
 //! let mut rng = Philox::new(/*seed=*/ 42, /*ctr=*/ 0);
 //! let u = rng.draw_float();
 //! assert!((0.0..1.0).contains(&u));
@@ -62,5 +79,6 @@ pub mod dist;
 pub mod runtime;
 pub mod sim;
 pub mod stats;
+pub mod stream;
 pub mod testing;
 pub mod util;

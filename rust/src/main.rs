@@ -29,6 +29,7 @@ use openrand::runtime::ArtifactStore;
 use openrand::sim::brownian::{BrownianParams, RngStyle};
 use openrand::stats::parallel;
 use openrand::stats::{run_battery, run_dist_battery, Verdict};
+use openrand::stream::{DynStream, StreamKey};
 use openrand::util::cli::{Args, OptSpec};
 
 const COMMANDS: [&str; 5] = ["generate", "brownian", "stats", "repro", "artifacts"];
@@ -39,9 +40,10 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "generator", help: "philox|philox2x32|threefry|threefry2x32|squares|tyche|tyche_i", default: Some("philox"), is_flag: false },
         OptSpec { name: "seed", help: "64-bit seed (hex ok)", default: Some("0"), is_flag: false },
         OptSpec { name: "ctr", help: "32-bit stream counter", default: Some("0"), is_flag: false },
+        OptSpec { name: "key", help: "hierarchical stream key path 'SEED[/cID|/eT]...' (e.g. 7/c3/e1 = root(7).child(3).epoch(1)); replaces --seed/--ctr — '7/e1' is byte-identical to --seed 7 --ctr 1 (brownian/repro take the seed and derive epochs internally)", default: None, is_flag: false },
         OptSpec { name: "n", help: "count (supports k/M/G suffix)", default: Some("16"), is_flag: false },
         OptSpec { name: "format", help: "generate output: u32|u64|f32|f64", default: Some("u32"), is_flag: false },
-        OptSpec { name: "block-fill", help: "generate: batch raw output through the deterministic block-fill engine (alias for --backend par; honors --threads; bitwise identical to the word-at-a-time path)", default: None, is_flag: true },
+        OptSpec { name: "block-fill", help: "generate: DEPRECATED alias for --backend par (same bytes; honors --threads; warns on use)", default: None, is_flag: true },
         OptSpec { name: "crossover", help: "generate: auto-backend device crossover in words (k/M/G ok; overrides the persisted calibration; env OPENRAND_BACKEND_CROSSOVER elsewhere)", default: None, is_flag: false },
         OptSpec { name: "chunk-sweep", help: "stats: sweep BufferedWords chunk sizes {1k,4k,16k,64k} and report battery throughput per size", default: None, is_flag: true },
         OptSpec { name: "dist", help: "generate: sample a distribution instead of raw words: none|uniform|normal|ziggurat|exp|poisson|bernoulli|binomial|alias", default: Some("none"), is_flag: false },
@@ -107,10 +109,29 @@ fn parse_generator(args: &Args) -> Result<Generator, anyhow::Error> {
     Generator::parse(name).ok_or_else(|| anyhow::anyhow!("unknown generator '{name}'"))
 }
 
+/// Resolve the stream address: `--key PATH` (hierarchical, exclusive
+/// with the legacy flags) or `--seed/--ctr` (the `StreamKey::raw`
+/// equivalence — byte-identical streams either way).
+fn resolve_key(args: &Args) -> anyhow::Result<StreamKey> {
+    match args.get("key") {
+        Some(spec) => {
+            if args.get("seed").is_some() || args.get("ctr").is_some() {
+                anyhow::bail!("--key replaces --seed/--ctr (pick one addressing)");
+            }
+            StreamKey::parse_path(spec).map_err(|e| anyhow::anyhow!("--key: {e}"))
+        }
+        None => {
+            let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+            let ctr = args.get_u64("ctr", 0).map_err(anyhow::Error::msg)? as u32;
+            Ok(StreamKey::raw(seed, ctr))
+        }
+    }
+}
+
 fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let gen = parse_generator(args)?;
-    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
-    let ctr = args.get_u64("ctr", 0).map_err(anyhow::Error::msg)? as u32;
+    let key = resolve_key(args)?;
+    let (seed, ctr) = (key.seed(), key.ctr());
     let n = args.get_usize("n", 16).map_err(anyhow::Error::msg)?;
     let dist = args.get_or("dist", "none").to_string();
     // Validate --format once, up front, so both the word-at-a-time and
@@ -121,6 +142,11 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     }
     // Backend selection: --backend names an arm explicitly; --block-fill
     // stays as the PR-2 spelling for the parallel host arm.
+    if args.flag("block-fill") {
+        eprintln!(
+            "warning: --block-fill is deprecated; use --backend par (same bytes, same --threads)"
+        );
+    }
     let kind = match args.get("backend") {
         Some(s) => Some(
             BackendKind::parse(s)
@@ -319,7 +345,17 @@ fn generate_dist(
 fn cmd_brownian(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("n", 16_384).map_err(anyhow::Error::msg)?;
     let steps = args.get_usize("steps", 100).map_err(anyhow::Error::msg)? as u32;
-    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    // Unified addressing here too — but brownian derives its per-step
+    // sub-streams internally (ctr = step), so an epoch in the key would
+    // be silently discarded; reject it rather than ignore it.
+    let key = resolve_key(args)?;
+    if key.ctr() != 0 {
+        anyhow::bail!(
+            "brownian derives per-step epochs internally (ctr = step); \
+             give a key without /e (got {key})"
+        );
+    }
+    let seed = key.seed();
     let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
     let style = match args.get_or("style", "openrand") {
         "openrand" => RngStyle::OpenRand,
@@ -342,18 +378,28 @@ fn cmd_brownian(args: &Args) -> anyhow::Result<()> {
 
 fn cmd_stats(args: &Args) -> anyhow::Result<()> {
     let words = args.get_usize("words", 4 << 20).map_err(anyhow::Error::msg)?;
-    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let key = resolve_key(args)?;
+    let seed = key.seed();
+    let keyed = args.get("key").is_some();
     let gen = parse_generator(args)?;
+    // Per-test stream addressing: with --key, test i draws from the
+    // derived child root.child(i) (structural derivation); the legacy
+    // --seed path keeps its historical `seed ^ (i << 32)` re-seeding
+    // byte-for-byte.
+    let test_stream = |i: usize| -> Box<dyn Rng> {
+        if keyed {
+            Box::new(DynStream::open(gen, key.child(i as u64)))
+        } else {
+            gen.boxed(seed ^ ((i as u64) << 32), 0)
+        }
+    };
     if args.flag("chunk-sweep") {
         println!("chunk-size sweep: {} ({} words/test budget)", gen.name(), words);
         println!(
             "{:<10} {:>14} {:>12} {:>10}",
             "chunk", "battery wall", "words/s", "failures"
         );
-        let rows = openrand::stats::battery::chunk_sweep(gen.name(), words, |i| {
-            let s = seed ^ ((i as u64) << 32);
-            boxed_rng(gen, s)
-        });
+        let rows = openrand::stats::battery::chunk_sweep(gen.name(), words, test_stream);
         for r in &rows {
             println!(
                 "{:<10} {:>14} {:>12} {:>10}",
@@ -374,10 +420,13 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
         return Ok(());
     }
     if args.flag("dist-battery") {
-        let report = run_dist_battery(gen.name(), words, |i| {
-            let s = seed ^ ((i as u64) << 32);
-            boxed_rng(gen, s)
-        });
+        let report = if keyed {
+            // Child-derived per-test streams, word delivery through the
+            // calibrated default Auto backend (stream::BackendWords).
+            openrand::stats::distcheck::run_dist_battery_keyed(gen, key, words)
+        } else {
+            run_dist_battery(gen.name(), words, test_stream)
+        };
         print!("{}", report.render());
         if !report.passed() {
             anyhow::bail!("distribution battery reported failures");
@@ -410,10 +459,7 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
         println!("{} failures", fails);
         return Ok(());
     }
-    let report = run_battery(gen.name(), words, |i| {
-        let s = seed ^ ((i as u64) << 32);
-        boxed_rng(gen, s)
-    });
+    let report = run_battery(gen.name(), words, test_stream);
     print!("{}", report.render());
     if args.flag("baselines") {
         for name in ["mt19937", "pcg32", "xoshiro256pp"] {
@@ -431,23 +477,11 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn boxed_rng(gen: Generator, seed: u64) -> Box<dyn Rng> {
-    use openrand::core::*;
-    match gen {
-        Generator::Philox => Box::new(Philox::new(seed, 0)),
-        Generator::Philox2x32 => Box::new(Philox2x32::new(seed, 0)),
-        Generator::Threefry => Box::new(Threefry::new(seed, 0)),
-        Generator::Threefry2x32 => Box::new(Threefry2x32::new(seed, 0)),
-        Generator::Squares => Box::new(Squares::new(seed, 0)),
-        Generator::Tyche => Box::new(Tyche::new(seed, 0)),
-        Generator::TycheI => Box::new(TycheI::new(seed, 0)),
-    }
-}
-
 fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("n", 16_384).map_err(anyhow::Error::msg)?;
     let steps = args.get_usize("steps", 50).map_err(anyhow::Error::msg)? as u32;
-    let seed = args.get_u64("seed", 0).map_err(anyhow::Error::msg)?;
+    let key = resolve_key(args)?;
+    let seed = key.seed();
     let max_threads = args.get_usize("max-threads", 8).map_err(anyhow::Error::msg)?;
     let params = BrownianParams {
         n_particles: n,
@@ -466,9 +500,20 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     // The backend-invariance ladder: host / par{1,2,8} / device (when
     // artifacts exist) / auto, byte-compared against the serial arm.
     let gen = parse_generator(args)?;
-    let r5 = repro::verify_backend_invariance(gen, 1 << 20, seed, 0, max_threads);
+    let r5 = repro::verify_backend_invariance(gen, 1 << 20, seed, key.ctr(), max_threads);
     print!("{}", r5.render());
-    if r1.consistent && r2.consistent && r3.consistent && r4.consistent && r5.consistent {
+    // The StreamKey zero-drift ladder: raw-key streams == legacy
+    // CounterRng::new streams for all seven engines, plus the
+    // cross-layer derivation KAT.
+    let r6 = repro::verify_key_equivalence(seed, key.ctr(), 1 << 16);
+    print!("{}", r6.render());
+    if r1.consistent
+        && r2.consistent
+        && r3.consistent
+        && r4.consistent
+        && r5.consistent
+        && r6.consistent
+    {
         println!("ALL REPRODUCIBILITY CHECKS PASSED");
         Ok(())
     } else {

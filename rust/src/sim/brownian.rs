@@ -190,9 +190,12 @@ impl BrownianSim {
         self.vy[pid] = vy;
     }
 
-    /// Optional backend hook: superpose a deterministic thermal velocity
-    /// perturbation drawn in bulk from stream `(global_seed, ctr)` of
-    /// `gen` through a fill backend. Particle `pid` consumes doubles
+    /// Bulk thermal kick: superpose a deterministic thermal velocity
+    /// perturbation drawn in bulk from the stream
+    /// `StreamKey::raw(global_seed, ctr)` of `gen` through a fill
+    /// backend — `None` routes through the calibrated default `Auto`
+    /// arm ([`crate::stream::default_backend`], the ROADMAP
+    /// "Auto-backend consumers" item). Particle `pid` consumes doubles
     /// `2·pid` (vx) and `2·pid + 1` (vy) — a fixed word pattern, so by
     /// the backend contract the resulting state is byte-identical on
     /// every arm (serial, sharded-parallel, device) and composes with
@@ -200,14 +203,15 @@ impl BrownianSim {
     /// step range (steps use `ctr = step`) to keep streams disjoint.
     pub fn thermalize(
         &mut self,
-        backend: &mut dyn crate::backend::FillBackend,
+        backend: Option<&mut dyn crate::backend::FillBackend>,
         gen: crate::core::Generator,
         ctr: u32,
         scale: f64,
     ) -> anyhow::Result<()> {
         let n = self.params.n_particles;
+        let key = crate::stream::StreamKey::raw(self.params.global_seed, ctr);
         let mut u = vec![0.0f64; 2 * n];
-        backend.fill_f64(gen, self.params.global_seed, ctr, &mut u)?;
+        crate::stream::fill_f64_key(backend, gen, key, &mut u)?;
         for pid in 0..n {
             self.vx[pid] += scale * (2.0 * u[2 * pid] - 1.0);
             self.vy[pid] += scale * (2.0 * u[2 * pid + 1] - 1.0);
@@ -334,21 +338,25 @@ mod tests {
         use crate::core::Generator;
         let mk = || BrownianSim::new(params(RngStyle::OpenRand));
         let mut a = mk();
-        a.thermalize(&mut HostSerial, Generator::Philox, u32::MAX, 0.3).unwrap();
+        a.thermalize(Some(&mut HostSerial), Generator::Philox, u32::MAX, 0.3).unwrap();
         for t in [1usize, 2, 8] {
             let mut b = mk();
-            b.thermalize(&mut HostParallel::new(t), Generator::Philox, u32::MAX, 0.3)
+            b.thermalize(Some(&mut HostParallel::new(t)), Generator::Philox, u32::MAX, 0.3)
                 .unwrap();
             assert_eq!(a.state_hash(), b.state_hash(), "threads={t}");
         }
+        // The default (None = calibrated Auto arm) is byte-identical too.
+        let mut auto = mk();
+        auto.thermalize(None, Generator::Philox, u32::MAX, 0.3).unwrap();
+        assert_eq!(a.state_hash(), auto.state_hash(), "default auto arm");
         // And it actually perturbed something.
         assert_ne!(a.state_hash(), mk().state_hash());
         // Composes with stepping: still bitwise reproducible end to end.
         let mut c = mk();
-        c.thermalize(&mut HostParallel::new(4), Generator::Philox, u32::MAX, 0.3).unwrap();
+        c.thermalize(Some(&mut HostParallel::new(4)), Generator::Philox, u32::MAX, 0.3).unwrap();
         c.run();
         let mut d = mk();
-        d.thermalize(&mut HostSerial, Generator::Philox, u32::MAX, 0.3).unwrap();
+        d.thermalize(None, Generator::Philox, u32::MAX, 0.3).unwrap();
         d.run();
         assert_eq!(c.state_hash(), d.state_hash());
     }

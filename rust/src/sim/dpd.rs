@@ -25,7 +25,8 @@
 
 use crate::core::counter::splitmix64;
 use crate::core::fill::u01_f64;
-use crate::core::{BlockRng, CounterRng, Philox};
+use crate::core::{BlockRng, Philox};
+use crate::stream::{Stream, StreamKey};
 
 /// Canonical pair seed: order-independent, well-mixed.
 #[inline]
@@ -34,11 +35,22 @@ pub fn pair_seed(i: u64, j: u64, global: u64) -> u64 {
     splitmix64(lo.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ hi) ^ global
 }
 
+/// The stream address of one pair at one step — the seeding-discipline
+/// pattern of `docs/stream-contracts.md` §6 as a typed key: the pair
+/// identity is the seed ([`pair_seed`], order-independent), the step is
+/// the epoch. Byte-identical to the raw spelling both sides of a pair
+/// have always regenerated.
+#[inline]
+pub fn pair_key(i: u64, j: u64, global: u64, step: u32) -> StreamKey {
+    StreamKey::raw(pair_seed(i, j, global), step)
+}
+
 /// Symmetric pair gaussian-ish variate (uniform-sum, variance 1): both
 /// members of the pair regenerate this identically.
 #[inline]
 pub fn pair_theta(i: u64, j: u64, global: u64, step: u32) -> f64 {
-    let mut rng = Philox::new(pair_seed(i, j, global), step);
+    let mut stream = Stream::<Philox>::new(pair_key(i, j, global, step));
+    let rng = stream.rng_mut();
     // Sum of 3 uniforms, centered/scaled to unit variance (Groot-Warren
     // use a plain uniform; a 3-sum is smoother at identical cost class).
     // The 3 uniforms are 6 stream words = 1.5 Philox blocks; drawing the
@@ -104,7 +116,11 @@ impl DpdSim {
             y[i] = (i / side) as f64 * spacing + 0.25 * spacing;
             // One counter block per particle (two f64s), via the block
             // path — bit-identical to the draw_double pair it replaces.
-            let mut rng = Philox::new(i as u64 ^ p.global_seed, u32::MAX);
+            // Addressing: the reserved init epoch (ctr = u32::MAX) of
+            // the particle's stream, through the key facade.
+            let mut stream =
+                Stream::<Philox>::new(StreamKey::raw(i as u64 ^ p.global_seed, u32::MAX));
+            let rng = stream.rng_mut();
             let mut blk = [0u32; 4];
             rng.generate_block(&mut blk);
             vx[i] = (u01_f64(blk[0], blk[1]) - 0.5) * 2.0 * p.kt.sqrt();
@@ -327,7 +343,7 @@ impl DpdSim {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::core::Rng;
+    use crate::core::{CounterRng, Rng};
 
     fn params(n: usize) -> DpdParams {
         DpdParams {
@@ -349,6 +365,16 @@ mod tests {
         // (i,j) vs (j,i) with swapped identity must differ: (1,2) != (2,1)
         // collapses to the same canonical pair — but (1,3) != (2,3):
         assert_ne!(pair_seed(1, 3, 0), pair_seed(2, 3, 0));
+    }
+
+    #[test]
+    fn pair_key_is_the_legacy_identity_and_symmetric() {
+        // Zero drift: the typed pair address resolves to exactly the
+        // raw (pair_seed, step) spelling, both pair orders.
+        let k = pair_key(3, 7, 5, 2);
+        assert_eq!((k.seed(), k.ctr()), (pair_seed(3, 7, 5), 2));
+        assert_eq!(pair_key(7, 3, 5, 2), k);
+        assert_ne!(pair_key(3, 7, 5, 3), k); // next step = next epoch
     }
 
     #[test]

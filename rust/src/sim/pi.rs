@@ -1,6 +1,8 @@
 //! Monte-Carlo π — the canonical reproducible-parallelism demo: each
-//! logical chunk owns stream (seed = chunk_id, ctr = 0), so the estimate
-//! is bitwise independent of how chunks are scheduled onto threads.
+//! logical chunk owns the stream [`chunk_key`] addresses (the legacy
+//! `(chunk_id ^ seed, ctr = 0)` identity behind the `StreamKey` facade),
+//! so the estimate is bitwise independent of how chunks are scheduled
+//! onto threads.
 //!
 //! The sample loop draws through the block-fill engine
 //! ([`crate::core::fill`]): stream words arrive in stack-tile batches
@@ -10,6 +12,15 @@
 
 use crate::backend::FillBackend;
 use crate::core::{fill, BlockRng, Generator};
+use crate::stream::{self, StreamKey};
+
+/// The stream address of one π chunk — the facade spelling of the
+/// legacy `(chunk_id ^ global_seed, ctr = 0)` addressing, byte-identical
+/// by the [`StreamKey::raw`] equivalence (zero drift: the estimates of
+/// every prior release replay unchanged).
+pub fn chunk_key(chunk_id: u64, global_seed: u64) -> StreamKey {
+    StreamKey::raw(chunk_id ^ global_seed, 0)
+}
 
 /// Count hits inside the quarter circle for one chunk of samples.
 /// Sample `k` uses stream words `4k..4k + 4` (x from the first pair, y
@@ -19,7 +30,8 @@ pub fn chunk_hits<G: BlockRng>(chunk_id: u64, global_seed: u64, samples_per_chun
     // Samples per stack tile (4 words each — 4 KiB of scratch).
     const TILE: usize = 256;
     let mut words = [0u32; 4 * TILE];
-    let mut g = G::new(chunk_id ^ global_seed, 0);
+    let key = chunk_key(chunk_id, global_seed);
+    let mut g = G::new(key.seed(), key.ctr());
     let mut pos = 0u32;
     let mut hits = 0u64;
     let mut done = 0usize;
@@ -62,7 +74,7 @@ pub fn chunk_hits_backend(
     samples_per_chunk: usize,
 ) -> anyhow::Result<u64> {
     let mut xy = vec![0.0f64; 2 * samples_per_chunk];
-    backend.fill_f64(gen, chunk_id ^ global_seed, 0, &mut xy)?;
+    stream::fill_f64_key(Some(backend), gen, chunk_key(chunk_id, global_seed), &mut xy)?;
     Ok(hits_in(&xy))
 }
 
@@ -76,28 +88,26 @@ fn hits_in(xy: &[f64]) -> u64 {
     hits
 }
 
-/// [`estimate_pi`] with an optional backend handle: `None` runs the
-/// serial reference, `Some(backend)` routes every chunk's draws through
-/// the backend (host-parallel or device) — the estimate is bitwise
-/// identical either way.
+/// [`estimate_pi`] with an optional backend handle: `None` routes every
+/// chunk through the calibrated default `Auto` arm
+/// ([`stream::default_backend`]), `Some(backend)` through the given arm
+/// (host-serial, host-parallel, or device) — the estimate is bitwise
+/// identical on every arm by the backend contract.
 pub fn estimate_pi_with(
-    backend: Option<&mut dyn FillBackend>,
+    mut backend: Option<&mut dyn FillBackend>,
     gen: Generator,
     chunks: u64,
     samples_per_chunk: usize,
     global_seed: u64,
 ) -> anyhow::Result<f64> {
-    let mut serial = crate::backend::HostSerial;
-    let backend: &mut dyn FillBackend = match backend {
-        Some(b) => b,
-        None => &mut serial,
-    };
     // One xy buffer for the whole run; per-chunk allocation would put a
     // malloc/free pair in the hot loop this module promises is clean.
+    // Each chunk routes through fill_f64_key, so the None case reuses
+    // the thread-cached Auto instance instead of re-probing per call.
     let mut xy = vec![0.0f64; 2 * samples_per_chunk];
     let mut hits = 0u64;
     for c in 0..chunks {
-        backend.fill_f64(gen, c ^ global_seed, 0, &mut xy)?;
+        stream::fill_f64_key(backend.as_deref_mut(), gen, chunk_key(c, global_seed), &mut xy)?;
         hits += hits_in(&xy);
     }
     Ok(4.0 * hits as f64 / (chunks as f64 * samples_per_chunk as f64))
@@ -152,6 +162,20 @@ mod tests {
         let mut par = HostParallel::new(3);
         let with = estimate_pi_with(Some(&mut par), gen, 16, 500, 7).unwrap();
         assert_eq!(with.to_bits(), reference.to_bits());
+    }
+
+    #[test]
+    fn chunk_key_is_the_legacy_identity() {
+        use crate::core::{CounterRng, Rng};
+        // Zero drift: the facade addressing opens the byte-identical
+        // stream the raw spelling always opened.
+        let key = chunk_key(3, 9);
+        assert_eq!((key.seed(), key.ctr()), (3 ^ 9, 0));
+        let mut via_key = crate::stream::Stream::<Philox>::new(key);
+        let mut legacy = Philox::new(3 ^ 9, 0);
+        for _ in 0..32 {
+            assert_eq!(via_key.next_u32(), legacy.next_u32());
+        }
     }
 
     #[test]

@@ -259,6 +259,37 @@ pub fn run_dist_battery(
     super::battery::run_suite(&format!("{generator} [distributions]"), words, all_dist_tests(), mk)
 }
 
+/// The hierarchically-addressed battery entry (`stats --dist-battery
+/// --key ...`): test `i` draws from the derived stream `root.child(i)`
+/// — the re-seeding discipline as structural key derivation instead of
+/// ad-hoc seed arithmetic — served through
+/// [`crate::stream::BackendWords`], so each test's word budget arrives
+/// as one prefix fill on the calibrated default `Auto` backend (the
+/// ROADMAP "Auto-backend consumers" item for the battery defaults).
+/// Words served are bit-identical to draining each child stream
+/// directly; only the delivery route differs.
+pub fn run_dist_battery_keyed(
+    gen: crate::core::Generator,
+    root: crate::stream::StreamKey,
+    words: usize,
+) -> BatteryReport {
+    // Prefetch what each test will actually draw — the same weighted
+    // budget formula `run_suite` applies — so half-weight tests don't
+    // materialize words they discard. Slight overdraw past the budget
+    // (rejection samplers, clamp floors) spills to the word-at-a-time
+    // tail, which BackendWords serves seamlessly.
+    let weights: Vec<f64> = all_dist_tests().iter().map(|(_, _, w)| *w).collect();
+    super::battery::run_suite(
+        &format!("{} [distributions @ {root}]", gen.name()),
+        words,
+        all_dist_tests(),
+        |i| -> Box<dyn Rng> {
+            let budget = ((words as f64 * weights[i]) as usize).max(1 << 14);
+            Box::new(crate::stream::BackendWords::auto(gen, root.child(i as u64), budget))
+        },
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -298,6 +329,27 @@ mod tests {
             "distribution battery lacks power:\n{}",
             report.render()
         );
+    }
+
+    #[test]
+    fn keyed_battery_matches_direct_child_streams_and_passes() {
+        use crate::core::Generator;
+        use crate::stream::StreamKey;
+        let root = StreamKey::root(0xD157_3000);
+        let keyed = run_dist_battery_keyed(Generator::Philox, root, 1 << 16);
+        assert!(keyed.passed(), "keyed battery failed:\n{}", keyed.render());
+        // The BackendWords delivery is bitwise invisible: identical
+        // statistics to serving each child stream directly.
+        let direct = run_dist_battery("direct", 1 << 16, |i| {
+            let k = root.child(i as u64);
+            Generator::Philox.boxed(k.seed(), k.ctr())
+        });
+        for (a, b) in keyed.results.iter().zip(direct.results.iter()) {
+            assert_eq!(a.statistic.to_bits(), b.statistic.to_bits(), "{}", a.name);
+            assert_eq!(a.p.to_bits(), b.p.to_bits(), "{}", a.name);
+        }
+        // The report names the root so runs are attributable.
+        assert!(keyed.generator.contains("distributions @"), "{}", keyed.generator);
     }
 
     #[test]

@@ -33,5 +33,5 @@ pub mod suite;
 pub use battery::{
     chunk_sweep, run_battery, BatteryReport, BufferedWords, ChunkSweepRow, DEFAULT_FILL_CHUNK,
 };
-pub use distcheck::run_dist_battery;
+pub use distcheck::{run_dist_battery, run_dist_battery_keyed};
 pub use suite::{TestResult, Verdict};

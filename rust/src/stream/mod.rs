@@ -1,0 +1,887 @@
+//! Hierarchical stream addressing and the one-handle drawing facade.
+//!
+//! After the core (`(seed, ctr)` engines), fill (`core::fill`), backend
+//! (`openrand::backend`), and distribution (`dist`) layers, the crate
+//! exposed four uncoordinated ways to name and drain a stream — and
+//! every consumer still hand-assembled raw `(seed, ctr)` integers, the
+//! collision-prone bookkeeping a reproducible-RNG library should own
+//! (Shoverand and Randompack both make this argument). This module is
+//! the single entry point that replaces that bookkeeping:
+//!
+//! * [`StreamKey`] — a typed, hierarchical stream address. Build one
+//!   from a root seed and derive sub-addresses structurally:
+//!   `root(run).child(particle).epoch(step)`. Derivation goes through
+//!   one **normative mix function** ([`derive_child_seed`], a
+//!   splitmix64 chain shared bit-exactly with
+//!   `python/compile/kernels/common.py::derive_child_seed`), so host
+//!   and device layers agree on every derived stream.
+//! * [`Stream<E>`] / [`DynStream`] — one handle over a keyed stream
+//!   that unifies scalar draws (the [`Rng`] API), key-addressed bulk
+//!   fills (routed through any [`FillBackend`] arm, defaulting to the
+//!   calibrated `Auto` arm), positioned block fills, and distribution
+//!   sampling ([`Stream::sample`], [`Stream::sample_fill`]).
+//! * [`BackendWords`] — a word source that serves a key's stream with
+//!   its opening words delivered as one backend prefix fill (how the
+//!   statistical batteries drain keyed streams).
+//!
+//! ## Zero drift (normative)
+//!
+//! [`StreamKey::raw(seed, ctr)`](StreamKey::raw) is the documented
+//! equivalence with the legacy spelling: its stream is **byte-identical**
+//! to [`CounterRng::new(seed, ctr)`](CounterRng::new) for every engine
+//! — the facade renames nothing and re-mixes nothing. `root(s)` is
+//! `raw(s, 0)` and `epoch(t)` sets the counter absolutely, so
+//! `root(s).epoch(t) == raw(s, t)`: simple uses of the new API read the
+//! exact streams the old API read. Only [`StreamKey::child`] derives a
+//! *new* 64-bit seed (and resets the counter), via the normative mix.
+//!
+//! The full derivation contract, worked examples, and the old-API →
+//! new-API migration table live in `docs/stream-keys.md`.
+//!
+//! ```
+//! use openrand::core::Philox;
+//! use openrand::dist::{BoxMuller, Distribution};
+//! use openrand::stream::{Stream, StreamKey};
+//!
+//! // Address streams structurally instead of packing integers by hand:
+//! let run = StreamKey::root(42);
+//! let key = run.child(/*particle=*/ 17).epoch(/*step=*/ 3);
+//! let mut s = Stream::<Philox>::new(key);
+//! let kick = BoxMuller::standard().sample(&mut s);
+//! assert!(kick.is_finite());
+//!
+//! // The legacy spelling is a thin, documented equivalence:
+//! use openrand::core::{CounterRng, Rng};
+//! let mut a = Stream::<Philox>::new(StreamKey::raw(7, 1));
+//! let mut b = Philox::new(7, 1);
+//! assert_eq!(a.next_u32(), b.next_u32());
+//! ```
+
+use anyhow::Result;
+
+use crate::backend::{self, FillBackend};
+use crate::core::counter::splitmix64;
+use crate::core::{fill, BlockRng, CounterRng, Generator, Rng};
+use crate::dist::Distribution;
+
+/// Domain-separation tag of the child derivation (ASCII `"chld"`).
+/// Mixed into every [`derive_child_seed`] call so child seeds can never
+/// collide with a future derivation family that uses a different tag.
+pub const DOMAIN_CHILD: u64 = 0x6368_6C64;
+
+/// The normative child-key mix — the single 64 → `(seed, ctr)` function
+/// behind [`StreamKey::child`], shared bit-exactly with
+/// `python/compile/kernels/common.py::derive_child_seed` (pinned by
+/// `python/tests/test_stream_keys.py` and the KATs below).
+///
+/// A splitmix64 chain over the parent identity and the child id:
+///
+/// ```text
+/// tag        = (parent_ctr << 32) | DOMAIN_CHILD
+/// child_seed = splitmix64( splitmix64( splitmix64(parent_seed) ^ tag ) ^ id )
+/// child_ctr  = 0
+/// ```
+///
+/// For a fixed parent, `id -> child_seed` is a **bijection** (xor with a
+/// constant composed with the splitmix64 permutation), so distinct child
+/// ids are *guaranteed* distinct seeds — not merely probable.
+///
+/// ```
+/// use openrand::stream::derive_child_seed;
+/// // The cross-layer KAT literal (same constant in python/tests):
+/// assert_eq!(derive_child_seed(7, 0, 3), 0xBC83_12B7_34DE_4237);
+/// // Parent counter separates child spaces per epoch:
+/// assert_ne!(derive_child_seed(7, 2, 3), derive_child_seed(7, 0, 3));
+/// ```
+#[inline]
+pub fn derive_child_seed(parent_seed: u64, parent_ctr: u32, id: u64) -> u64 {
+    let tag = ((parent_ctr as u64) << 32) | DOMAIN_CHILD;
+    splitmix64(splitmix64(splitmix64(parent_seed) ^ tag) ^ id)
+}
+
+/// A typed, hierarchical stream address.
+///
+/// A key *is* a `(seed: u64, ctr: u32)` pair — the same identity the
+/// engines consume — reached structurally instead of assembled by hand:
+///
+/// * [`StreamKey::root`]`(s)` — the run/root address `(s, 0)`.
+/// * [`StreamKey::child`]`(id)` — a derived address for a sub-entity
+///   (particle, chunk, test index): fresh seed via the normative mix
+///   ([`derive_child_seed`]), counter reset to 0. Path-dependent:
+///   `root(s).child(a).child(b)` names a grandchild, and deriving under
+///   a different epoch gives a different child space.
+/// * [`StreamKey::epoch`]`(t)` — the sub-stream counter, set
+///   **absolutely** (timestep, kernel launch): `k.epoch(a).epoch(b) ==
+///   k.epoch(b)` (last wins, documented order independence).
+/// * [`StreamKey::raw`]`(seed, ctr)` — the legacy equivalence: streams
+///   byte-identical to `CounterRng::new(seed, ctr)`.
+///
+/// ```
+/// use openrand::stream::StreamKey;
+/// // The cross-layer derivation KAT (python/tests/test_stream_keys.py
+/// // pins the identical literals):
+/// let k = StreamKey::root(7).child(3).epoch(1);
+/// assert_eq!((k.seed(), k.ctr()), (0xBC83_12B7_34DE_4237, 1));
+/// // Legacy equivalence and epoch absoluteness:
+/// assert_eq!(StreamKey::root(7).epoch(1), StreamKey::raw(7, 1));
+/// assert_eq!(StreamKey::root(9).epoch(5).epoch(2), StreamKey::raw(9, 2));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct StreamKey {
+    seed: u64,
+    ctr: u32,
+}
+
+impl StreamKey {
+    /// The root address of a run: `(seed, ctr = 0)`.
+    #[inline]
+    pub fn root(seed: u64) -> StreamKey {
+        StreamKey { seed, ctr: 0 }
+    }
+
+    /// The legacy `(seed, ctr)` spelling, verbatim — byte-identical
+    /// streams to `CounterRng::new(seed, ctr)` (the zero-drift
+    /// equivalence; `coordinator::repro::verify_key_equivalence` checks
+    /// it for all seven engines on every `openrand repro` run).
+    #[inline]
+    pub fn raw(seed: u64, ctr: u32) -> StreamKey {
+        StreamKey { seed, ctr }
+    }
+
+    /// Derive the address of sub-entity `id` via the normative mix
+    /// ([`derive_child_seed`]): fresh seed, counter reset to 0.
+    /// Distinct ids map to distinct seeds (bijective for a fixed
+    /// parent).
+    #[inline]
+    pub fn child(self, id: u64) -> StreamKey {
+        StreamKey { seed: derive_child_seed(self.seed, self.ctr, id), ctr: 0 }
+    }
+
+    /// Select sub-stream `t` of this entity (timestep, kernel launch).
+    /// Absolute, not cumulative: the counter is *set* to `t`, so the
+    /// last `epoch` wins and `root(s).epoch(t) == raw(s, t)`.
+    #[inline]
+    pub fn epoch(self, t: u32) -> StreamKey {
+        StreamKey { seed: self.seed, ctr: t }
+    }
+
+    /// The engine-level seed this key resolves to.
+    #[inline]
+    pub fn seed(self) -> u64 {
+        self.seed
+    }
+
+    /// The engine-level counter this key resolves to.
+    #[inline]
+    pub fn ctr(self) -> u32 {
+        self.ctr
+    }
+
+    /// Parse the CLI path spelling: `SEED[/cID|/eT]...` — a root seed
+    /// (decimal or `0x` hex) followed by `c`-prefixed child ids and
+    /// `e`-prefixed epochs, applied left to right. `7/c3/e1` is
+    /// `root(7).child(3).epoch(1)`; `7/e1` is the legacy `--seed 7
+    /// --ctr 1`.
+    pub fn parse_path(spec: &str) -> Result<StreamKey, String> {
+        fn int(s: &str, what: &str) -> Result<u64, String> {
+            let s = s.trim();
+            // No sign spellings anywhere (incl. after '0x', which
+            // from_str_radix would accept): the accepted grammar stays
+            // identical to the python mirror (`common.stream_key_path`).
+            if s.contains('+') {
+                return Err(format!("bad {what} '{s}'"));
+            }
+            if let Some(h) = s.strip_prefix("0x") {
+                return u64::from_str_radix(h, 16).map_err(|_| format!("bad hex {what} '{s}'"));
+            }
+            s.parse::<u64>().map_err(|_| format!("bad {what} '{s}'"))
+        }
+        let mut segs = spec.split('/');
+        let root = segs.next().unwrap_or("");
+        if root.is_empty() {
+            return Err("empty key path (expected 'SEED[/cID|/eT]...', e.g. 7/c3/e1)".to_string());
+        }
+        let mut key = StreamKey::root(int(root, "root seed")?);
+        for seg in segs {
+            if let Some(id) = seg.strip_prefix('c') {
+                key = key.child(int(id, "child id")?);
+            } else if let Some(t) = seg.strip_prefix('e') {
+                let t = int(t, "epoch")?;
+                if t > u32::MAX as u64 {
+                    return Err(format!("epoch '{seg}' exceeds the 32-bit counter"));
+                }
+                key = key.epoch(t as u32);
+            } else {
+                return Err(format!("bad key segment '{seg}' (expected cID or eT)"));
+            }
+        }
+        Ok(key)
+    }
+}
+
+impl std::fmt::Display for StreamKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "0x{:016x}/e{}", self.seed, self.ctr)
+    }
+}
+
+/// Construct the default bulk-fill backend: the calibrated `Auto` arm
+/// (host/device by buffer size from the persisted crossover table,
+/// degrading to the sharded host arm on stub builds) over auto-sized
+/// host threads. This is what every `backend: None` fill in this module
+/// runs on — the ROADMAP "Auto-backend consumers" item made uniform.
+///
+/// The `None` route does not call this per fill: it reuses one cached
+/// instance per thread, so the device probe, the crossover-table load,
+/// and `DeviceFill`'s compiled-graph / buffer pools are paid once per
+/// thread, not once per call. First use on a thread pins that thread's
+/// calibration table.
+pub fn default_backend() -> Box<dyn FillBackend> {
+    Box::new(backend::Auto::new(backend::HostParallel::auto_threads().threads()))
+}
+
+thread_local! {
+    /// The per-thread cached default backend ([`FillBackend`] is not
+    /// `Send` — the device arm is thread-confined like the PJRT client
+    /// it wraps, so per-thread is exactly the right sharing granularity).
+    static DEFAULT_BACKEND: std::cell::RefCell<Option<Box<dyn FillBackend>>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Run `f` on `backend`, or on this thread's cached [`default_backend`]
+/// when none was supplied. The cached instance is *taken* for the
+/// duration of `f` and put back afterwards, so a re-entrant `None` fill
+/// constructs a fresh temporary instead of panicking on a double
+/// borrow.
+fn route<R>(
+    backend: Option<&mut dyn FillBackend>,
+    f: impl FnOnce(&mut dyn FillBackend) -> R,
+) -> R {
+    match backend {
+        Some(b) => f(b),
+        None => DEFAULT_BACKEND.with(|slot| {
+            let mut b = slot.borrow_mut().take().unwrap_or_else(default_backend);
+            let r = f(b.as_mut());
+            *slot.borrow_mut() = Some(b);
+            r
+        }),
+    }
+}
+
+/// Key-addressed bulk fill: stream words `0..out.len()` of `key`'s
+/// stream of `gen`, through `backend` (`None` = the calibrated
+/// [`default_backend`]). Byte-identical on every arm by the backend
+/// contract (`docs/backends.md`).
+pub fn fill_u32_key(
+    backend: Option<&mut dyn FillBackend>,
+    gen: Generator,
+    key: StreamKey,
+    out: &mut [u32],
+) -> Result<()> {
+    route(backend, |b| b.fill_u32(gen, key.seed(), key.ctr(), out))
+}
+
+/// Key-addressed `u64` fill — element `i` ← words `2i, 2i+1`
+/// (first word high), per the §2 conversion contract.
+pub fn fill_u64_key(
+    backend: Option<&mut dyn FillBackend>,
+    gen: Generator,
+    key: StreamKey,
+    out: &mut [u64],
+) -> Result<()> {
+    route(backend, |b| b.fill_u64(gen, key.seed(), key.ctr(), out))
+}
+
+/// Key-addressed `f32` fill — element `i` ← word `i` (top 24 bits).
+pub fn fill_f32_key(
+    backend: Option<&mut dyn FillBackend>,
+    gen: Generator,
+    key: StreamKey,
+    out: &mut [f32],
+) -> Result<()> {
+    route(backend, |b| b.fill_f32(gen, key.seed(), key.ctr(), out))
+}
+
+/// Key-addressed `f64` fill — element `i` ← words `2i, 2i+1`
+/// (top 53 bits).
+pub fn fill_f64_key(
+    backend: Option<&mut dyn FillBackend>,
+    gen: Generator,
+    key: StreamKey,
+    out: &mut [f64],
+) -> Result<()> {
+    route(backend, |b| b.fill_f64(gen, key.seed(), key.ctr(), out))
+}
+
+/// One handle over the keyed stream of a concrete engine `E`.
+///
+/// Unifies the crate's drawing surfaces behind a single object:
+///
+/// * **Scalar draws** — `Stream<E>` implements [`Rng`], delegating to
+///   the engine, so `next_u32`/`draw_double`/… and every
+///   [`Distribution`] compose with it directly and advance the handle's
+///   cursor.
+/// * **Key-addressed bulk fills** — [`Stream::fill_u32`] and friends
+///   write stream words `0..n` of the *key* (not the cursor) through a
+///   [`FillBackend`], defaulting to the calibrated `Auto` arm.
+/// * **Positioned block fills** — [`Stream::fill_u32_at`] writes words
+///   `pos..pos + n` host-side via the engine's block path.
+/// * **Distribution sampling** — [`Stream::sample`] (cursor-advancing)
+///   and [`Stream::sample_fill`] (key-addressed bulk, backend-routed
+///   for fixed-pattern samplers) collapse the old
+///   `sample`/`sample_fill`/`sample_fill_backend` triplet.
+///
+/// The cursor (trait) and key (inherent) surfaces are deliberately
+/// distinct operations: the first continues the stream, the second
+/// re-reads it from word 0 — the same split the draw API and the fill
+/// engine have always had, now on one handle.
+///
+/// Note on method resolution: the inherent `fill_u32(backend, out)`
+/// shadows [`Rng::fill_u32`]`(out)` for direct calls on a concrete
+/// handle (inherent methods win before arity is checked). Generic and
+/// `dyn Rng` contexts are unaffected; to call the cursor-advancing
+/// trait version on a concrete `Stream`, use UFCS:
+/// `Rng::fill_u32(&mut s, out)`.
+pub struct Stream<E: CounterRng> {
+    key: StreamKey,
+    rng: E,
+}
+
+impl<E: CounterRng> Stream<E> {
+    /// Open the stream `key` addresses, cursor at word 0.
+    pub fn new(key: StreamKey) -> Stream<E> {
+        Stream { key, rng: E::new(key.seed(), key.ctr()) }
+    }
+
+    /// The address this handle draws from.
+    pub fn key(&self) -> StreamKey {
+        self.key
+    }
+
+    /// Rewind the cursor to word 0 (streams replay bitwise).
+    pub fn reset(&mut self) {
+        self.rng = E::new(self.key.seed(), self.key.ctr());
+    }
+
+    /// The underlying engine (block-API access, e.g.
+    /// [`BlockRng::generate_block`]).
+    pub fn rng_mut(&mut self) -> &mut E {
+        &mut self.rng
+    }
+
+    /// Open the derived child handle (fresh stream, cursor at 0).
+    pub fn child(&self, id: u64) -> Stream<E> {
+        Stream::new(self.key.child(id))
+    }
+
+    /// Open the sub-stream handle for epoch `t`.
+    pub fn epoch(&self, t: u32) -> Stream<E> {
+        Stream::new(self.key.epoch(t))
+    }
+
+    /// Draw one sample, advancing the cursor (delegates to
+    /// [`Distribution::sample`] — the word-consumption contract of the
+    /// sampler applies unchanged).
+    pub fn sample<T, D: Distribution<T> + ?Sized>(&mut self, d: &D) -> T {
+        d.sample(&mut self.rng)
+    }
+}
+
+impl<E: CounterRng + BlockRng> Stream<E> {
+    /// The runtime tag of `E`, when it is one of the seven core engines
+    /// (backend routing needs the tag; unknown engines fill host-side).
+    pub fn generator(&self) -> Option<Generator> {
+        Generator::parse(E::NAME)
+    }
+
+    /// Key-addressed bulk fill: stream words `0..out.len()` of the key,
+    /// through `backend` (`None` = the calibrated [`default_backend`]).
+    /// Independent of — and not advancing — the scalar cursor.
+    pub fn fill_u32(&self, backend: Option<&mut dyn FillBackend>, out: &mut [u32]) -> Result<()> {
+        match Generator::parse(E::NAME) {
+            Some(gen) => fill_u32_key(backend, gen, self.key, out),
+            None => {
+                fill::fill_u32::<E>(self.key.seed(), self.key.ctr(), out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Key-addressed `u64` fill (element `i` ← words `2i, 2i+1`).
+    pub fn fill_u64(&self, backend: Option<&mut dyn FillBackend>, out: &mut [u64]) -> Result<()> {
+        match Generator::parse(E::NAME) {
+            Some(gen) => fill_u64_key(backend, gen, self.key, out),
+            None => {
+                fill::fill_u64::<E>(self.key.seed(), self.key.ctr(), out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Key-addressed `f32` fill (element `i` ← word `i`).
+    pub fn fill_f32(&self, backend: Option<&mut dyn FillBackend>, out: &mut [f32]) -> Result<()> {
+        match Generator::parse(E::NAME) {
+            Some(gen) => fill_f32_key(backend, gen, self.key, out),
+            None => {
+                fill::fill_f32::<E>(self.key.seed(), self.key.ctr(), out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Key-addressed `f64` fill (element `i` ← words `2i, 2i+1`).
+    pub fn fill_f64(&self, backend: Option<&mut dyn FillBackend>, out: &mut [f64]) -> Result<()> {
+        match Generator::parse(E::NAME) {
+            Some(gen) => fill_f64_key(backend, gen, self.key, out),
+            None => {
+                fill::fill_f64::<E>(self.key.seed(), self.key.ctr(), out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Positioned block fill: stream words `pos..pos + out.len()` of
+    /// the key, host-side through the engine's block path
+    /// ([`fill::fill_from`]). O(1) jump for the counter engines;
+    /// Tyche's documented O(pos) exception applies.
+    pub fn fill_u32_at(&self, pos: u32, out: &mut [u32]) {
+        let mut g = E::new(self.key.seed(), self.key.ctr());
+        if pos != 0 {
+            g.set_position(pos);
+        }
+        fill::fill_from(&mut g, pos, out);
+    }
+
+    /// Key-addressed bulk sampling: samples `0..out.len()` of the key's
+    /// sample sequence under `d`, routed through
+    /// [`Distribution::fill_backend`] (`None` backend = the calibrated
+    /// [`default_backend`]). Bit-identical to repeated
+    /// [`Stream::sample`] calls on a fresh handle.
+    pub fn sample_fill<T, D: Distribution<T> + ?Sized>(
+        &self,
+        d: &D,
+        backend: Option<&mut dyn FillBackend>,
+        out: &mut [T],
+    ) -> Result<()> {
+        match Generator::parse(E::NAME) {
+            Some(gen) => route(backend, |b| d.fill_backend(b, gen, self.key.seed(), self.key.ctr(), out)),
+            None => {
+                let mut rng = E::new(self.key.seed(), self.key.ctr());
+                d.fill(&mut rng, out);
+                Ok(())
+            }
+        }
+    }
+}
+
+impl<E: CounterRng> Rng for Stream<E> {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    #[inline]
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        self.rng.fill_u32(out)
+    }
+}
+
+/// The object-safe stream handle: [`Stream`] over the runtime
+/// [`Generator`] tag (built on the same boxed dispatch the CLI and the
+/// batteries use). Same surface as [`Stream`], minus the generic.
+pub struct DynStream {
+    key: StreamKey,
+    gen: Generator,
+    rng: Box<dyn Rng>,
+}
+
+impl DynStream {
+    /// Open the stream `key` addresses on engine `gen`, cursor at 0.
+    pub fn open(gen: Generator, key: StreamKey) -> DynStream {
+        DynStream { key, gen, rng: gen.boxed(key.seed(), key.ctr()) }
+    }
+
+    /// Open with the cursor positioned at absolute stream word `pos`
+    /// (O(1) counter jump; Tyche's documented O(pos) exception
+    /// applies).
+    pub fn open_at(gen: Generator, key: StreamKey, pos: u32) -> DynStream {
+        DynStream { key, gen, rng: gen.boxed_at(key.seed(), key.ctr(), pos) }
+    }
+
+    pub fn key(&self) -> StreamKey {
+        self.key
+    }
+
+    pub fn generator(&self) -> Generator {
+        self.gen
+    }
+
+    /// Rewind the cursor to word 0.
+    pub fn reset(&mut self) {
+        self.rng = self.gen.boxed(self.key.seed(), self.key.ctr());
+    }
+
+    /// Open the derived child handle.
+    pub fn child(&self, id: u64) -> DynStream {
+        DynStream::open(self.gen, self.key.child(id))
+    }
+
+    /// Open the sub-stream handle for epoch `t`.
+    pub fn epoch(&self, t: u32) -> DynStream {
+        DynStream::open(self.gen, self.key.epoch(t))
+    }
+
+    /// Draw one sample, advancing the cursor.
+    pub fn sample<T, D: Distribution<T> + ?Sized>(&mut self, d: &D) -> T {
+        d.sample(self.rng.as_mut())
+    }
+
+    /// Key-addressed bulk fill (see [`Stream::fill_u32`]).
+    pub fn fill_u32(&self, backend: Option<&mut dyn FillBackend>, out: &mut [u32]) -> Result<()> {
+        fill_u32_key(backend, self.gen, self.key, out)
+    }
+
+    /// Key-addressed `u64` fill.
+    pub fn fill_u64(&self, backend: Option<&mut dyn FillBackend>, out: &mut [u64]) -> Result<()> {
+        fill_u64_key(backend, self.gen, self.key, out)
+    }
+
+    /// Key-addressed `f32` fill.
+    pub fn fill_f32(&self, backend: Option<&mut dyn FillBackend>, out: &mut [f32]) -> Result<()> {
+        fill_f32_key(backend, self.gen, self.key, out)
+    }
+
+    /// Key-addressed `f64` fill.
+    pub fn fill_f64(&self, backend: Option<&mut dyn FillBackend>, out: &mut [f64]) -> Result<()> {
+        fill_f64_key(backend, self.gen, self.key, out)
+    }
+
+    /// Positioned block fill: words `pos..pos + out.len()` of the key.
+    pub fn fill_u32_at(&self, pos: u32, out: &mut [u32]) {
+        let mut g = self.gen.boxed_at(self.key.seed(), self.key.ctr(), pos);
+        g.fill_u32(out);
+    }
+
+    /// Key-addressed bulk sampling (see [`Stream::sample_fill`]).
+    pub fn sample_fill<T, D: Distribution<T> + ?Sized>(
+        &self,
+        d: &D,
+        backend: Option<&mut dyn FillBackend>,
+        out: &mut [T],
+    ) -> Result<()> {
+        route(backend, |b| d.fill_backend(b, self.gen, self.key.seed(), self.key.ctr(), out))
+    }
+}
+
+impl Rng for DynStream {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        self.rng.next_u32()
+    }
+
+    #[inline]
+    fn next_u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    #[inline]
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        self.rng.fill_u32(out)
+    }
+}
+
+/// Hard cap on [`BackendWords`] prefetch (16 MiB of words) — a word
+/// source is a streaming abstraction, not a license to materialize the
+/// whole period.
+pub const MAX_PREFETCH_WORDS: usize = 1 << 22;
+
+/// A keyed word source whose opening words arrive as **one backend
+/// prefix fill** (the calibrated `Auto` arm by default) and whose tail
+/// — if a consumer reads past the prefetch — continues word-at-a-time
+/// from an engine positioned at the boundary.
+///
+/// Served words are bit-identical to drawing the key's stream directly
+/// (the prefetch size is invisible, like the
+/// [`crate::stats::battery::BufferedWords`] chunk size); what the
+/// prefix fill buys is that bulk generation runs on whichever backend
+/// arm the crossover table picks. This is how the statistical batteries
+/// drain keyed streams (`openrand stats --key ...`).
+pub struct BackendWords {
+    buf: Vec<u32>,
+    pos: usize,
+    spill: DynStream,
+}
+
+impl BackendWords {
+    /// A source for `key`'s stream of `gen` with `prefetch` words
+    /// (capped at [`MAX_PREFETCH_WORDS`]) materialized through
+    /// `backend` (`None` = the calibrated [`default_backend`]).
+    pub fn new(
+        gen: Generator,
+        key: StreamKey,
+        prefetch: usize,
+        backend: Option<&mut dyn FillBackend>,
+    ) -> Result<BackendWords> {
+        let n = prefetch.min(MAX_PREFETCH_WORDS);
+        let mut buf = vec![0u32; n];
+        fill_u32_key(backend, gen, key, &mut buf)?;
+        Ok(BackendWords { buf, pos: 0, spill: DynStream::open_at(gen, key, n as u32) })
+    }
+
+    /// [`BackendWords::new`] on the default `Auto` route (host arms are
+    /// infallible and `Auto` degrades to host, so this cannot fail).
+    pub fn auto(gen: Generator, key: StreamKey, prefetch: usize) -> BackendWords {
+        BackendWords::new(gen, key, prefetch, None).expect("auto backend fill is infallible")
+    }
+}
+
+impl Rng for BackendWords {
+    #[inline]
+    fn next_u32(&mut self) -> u32 {
+        if self.pos < self.buf.len() {
+            let w = self.buf[self.pos];
+            self.pos += 1;
+            return w;
+        }
+        self.spill.next_u32()
+    }
+
+    #[inline]
+    fn fill_u32(&mut self, out: &mut [u32]) {
+        let take = (self.buf.len() - self.pos).min(out.len());
+        out[..take].copy_from_slice(&self.buf[self.pos..self.pos + take]);
+        self.pos += take;
+        if take < out.len() {
+            Rng::fill_u32(&mut self.spill, &mut out[take..]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Philox, Squares, Tyche};
+    use crate::dist::{BoxMuller, Uniform};
+
+    #[test]
+    fn derivation_kat_root7_child3_epoch1() {
+        // The cross-layer KAT: identical literals pinned by
+        // python/tests/test_stream_keys.py.
+        let k = StreamKey::root(7).child(3).epoch(1);
+        assert_eq!(k.seed(), 0xBC83_12B7_34DE_4237);
+        assert_eq!(k.ctr(), 1);
+        // Grandchild literal.
+        assert_eq!(StreamKey::root(7).child(3).child(5).seed(), 0x2D4C_1D0A_8595_6C49);
+        // Epoch separates child spaces.
+        assert_eq!(StreamKey::root(7).epoch(2).child(3).seed(), 0x2E49_EAED_C17E_2B71);
+    }
+
+    #[test]
+    fn derived_stream_kat_philox_words() {
+        // The derived stream itself, not just the key: Philox words of
+        // root(7).child(3).epoch(1) — the same literals
+        // python/tests/test_stream_keys.py pins through the jnp oracle,
+        // so host and device agree on *derived* streams end to end.
+        let mut s = Stream::<Philox>::new(StreamKey::root(7).child(3).epoch(1));
+        assert_eq!(s.next_u32(), 0x9022_9F37);
+        assert_eq!(s.next_u32(), 0x89AF_95F5);
+        let mut s2 = Stream::<Philox>::new(StreamKey::root(7).child(3).epoch(1));
+        assert_eq!(s2.draw_double(), 0.5630282888975542);
+    }
+
+    #[test]
+    fn raw_is_byte_identical_to_counter_rng_all_engines() {
+        for gen in Generator::ALL {
+            let key = StreamKey::raw(0xFACE, 9);
+            let mut s = DynStream::open(gen, key);
+            let mut legacy = gen.boxed(0xFACE, 9);
+            for i in 0..256 {
+                assert_eq!(s.next_u32(), legacy.next_u32(), "{} word {i}", gen.name());
+            }
+        }
+    }
+
+    #[test]
+    fn child_ids_injective_for_fixed_parent() {
+        let parent = StreamKey::root(0xABCD).epoch(4);
+        let mut seen = std::collections::HashSet::new();
+        for id in 0..4096u64 {
+            assert!(seen.insert(parent.child(id).seed()), "collision at id {id}");
+        }
+    }
+
+    #[test]
+    fn epoch_is_absolute_and_order_independent() {
+        let k = StreamKey::root(0xBEEF);
+        assert_eq!(k.epoch(5).epoch(2), k.epoch(2));
+        assert_eq!(k.epoch(2), StreamKey::raw(0xBEEF, 2));
+        // Children are path-dependent, by contrast.
+        assert_ne!(k.child(1).child(2), k.child(2).child(1));
+    }
+
+    #[test]
+    fn parse_path_spellings() {
+        assert_eq!(StreamKey::parse_path("7").unwrap(), StreamKey::root(7));
+        assert_eq!(StreamKey::parse_path("0x1F/e3").unwrap(), StreamKey::raw(0x1F, 3));
+        assert_eq!(
+            StreamKey::parse_path("7/c3/e1").unwrap(),
+            StreamKey::root(7).child(3).epoch(1)
+        );
+        assert_eq!(
+            StreamKey::parse_path("42/c0x10/c2").unwrap(),
+            StreamKey::root(42).child(0x10).child(2)
+        );
+        for bad in [
+            "",
+            "x",
+            "7/z3",
+            "7/c",
+            "7/e",
+            "7/e4294967296",
+            "7//e1",
+            // Signed/underscored/oversized spellings: rejected in
+            // lockstep with the python mirror's test_path_errors.
+            "7/e-1",
+            "7/c-1",
+            "-7",
+            "+7",
+            "0x+1F",
+            "1_000",
+            "18446744073709551616",
+        ] {
+            assert!(StreamKey::parse_path(bad).is_err(), "accepted '{bad}'");
+        }
+    }
+
+    #[test]
+    fn display_names_the_resolved_pair() {
+        let s = format!("{}", StreamKey::root(7).epoch(3));
+        assert!(s.contains("0x0000000000000007") && s.contains("e3"), "{s}");
+    }
+
+    #[test]
+    fn stream_scalar_draws_match_engine() {
+        let mut s = Stream::<Squares>::new(StreamKey::raw(11, 2));
+        let mut e = Squares::new(11, 2);
+        assert_eq!(s.next_u32(), e.next_u32());
+        assert_eq!(s.next_u64(), e.next_u64());
+        assert_eq!(s.draw_double().to_bits(), e.draw_double().to_bits());
+        s.reset();
+        let mut e2 = Squares::new(11, 2);
+        assert_eq!(s.next_u32(), e2.next_u32());
+    }
+
+    #[test]
+    fn stream_fill_matches_serial_fill_and_ignores_cursor() {
+        let s = Stream::<Philox>::new(StreamKey::raw(21, 4));
+        let mut got = vec![0u32; 300];
+        s.fill_u32(None, &mut got).unwrap();
+        let mut want = vec![0u32; 300];
+        fill::fill_u32::<Philox>(21, 4, &mut want);
+        assert_eq!(got, want);
+        // f64 path, explicit serial arm.
+        let mut f_got = vec![0.0f64; 150];
+        s.fill_f64(Some(&mut crate::backend::HostSerial), &mut f_got).unwrap();
+        let mut f_want = vec![0.0f64; 150];
+        fill::fill_f64::<Philox>(21, 4, &mut f_want);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&f_got), bits(&f_want));
+    }
+
+    #[test]
+    fn positioned_fill_matches_offset_words() {
+        let s = Stream::<Philox>::new(StreamKey::raw(5, 5));
+        let mut all = vec![0u32; 100];
+        s.fill_u32(None, &mut all).unwrap();
+        let mut tail = vec![0u32; 63];
+        s.fill_u32_at(37, &mut tail);
+        assert_eq!(tail, all[37..], "typed positioned fill");
+        let d = DynStream::open(Generator::Philox, StreamKey::raw(5, 5));
+        let mut dtail = vec![0u32; 63];
+        d.fill_u32_at(37, &mut dtail);
+        assert_eq!(dtail, all[37..], "dyn positioned fill");
+        // The O(pos) engine exception still lands on the same words.
+        let t = DynStream::open(Generator::Tyche, StreamKey::raw(5, 5));
+        let mut t_all = vec![0u32; 100];
+        t.fill_u32(Some(&mut crate::backend::HostSerial), &mut t_all).unwrap();
+        let mut t_tail = vec![0u32; 50];
+        t.fill_u32_at(50, &mut t_tail);
+        assert_eq!(t_tail, t_all[50..], "tyche positioned fill");
+    }
+
+    #[test]
+    fn sample_and_sample_fill_match_distribution_paths() {
+        let d = BoxMuller::standard();
+        let key = StreamKey::root(55).epoch(6);
+        // sample == Distribution::sample on the raw engine.
+        let mut s = Stream::<Philox>::new(key);
+        let mut e = Philox::new(key.seed(), key.ctr());
+        for _ in 0..16 {
+            assert_eq!(s.sample(&d).to_bits(), crate::dist::Distribution::sample(&d, &mut e).to_bits());
+        }
+        // sample_fill == repeated sample on a fresh handle, every arm.
+        let mut want = vec![0.0f64; 200];
+        d.sample_fill(&mut Philox::new(key.seed(), key.ctr()), &mut want);
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        let mut got = vec![0.0f64; 200];
+        s.sample_fill(&d, None, &mut got).unwrap();
+        assert_eq!(bits(&got), bits(&want), "default auto arm");
+        let mut par = crate::backend::HostParallel::new(3);
+        let mut got2 = vec![0.0f64; 200];
+        s.sample_fill(&d, Some(&mut par), &mut got2).unwrap();
+        assert_eq!(bits(&got2), bits(&want), "parallel arm");
+        // DynStream surface, uniform sampler.
+        let u = Uniform::new(-2.0, 2.0);
+        let dstream = DynStream::open(Generator::Philox, key);
+        let mut uwant = vec![0.0f64; 99];
+        u.sample_fill(&mut Philox::new(key.seed(), key.ctr()), &mut uwant);
+        let mut ugot = vec![0.0f64; 99];
+        dstream.sample_fill(&u, None, &mut ugot).unwrap();
+        assert_eq!(bits(&ugot), bits(&uwant));
+    }
+
+    #[test]
+    fn backend_words_bit_identical_across_prefetch_boundary() {
+        let key = StreamKey::root(0xB0B).child(2);
+        let gen = Generator::Philox;
+        // Tiny prefetch so the test crosses the spill boundary; serving
+        // must be seamless and bit-identical to the direct stream.
+        let mut src = BackendWords::new(gen, key, 64, None).unwrap();
+        let mut direct = DynStream::open(gen, key);
+        for i in 0..300 {
+            assert_eq!(src.next_u32(), direct.next_u32(), "word {i}");
+        }
+        // Bulk serving straddling the boundary too.
+        let mut src = BackendWords::auto(gen, key, 64);
+        let mut direct = DynStream::open(gen, key);
+        for len in [10usize, 50, 10, 200] {
+            let mut a = vec![0u32; len];
+            let mut b = vec![0u32; len];
+            Rng::fill_u32(&mut src, &mut a);
+            Rng::fill_u32(&mut direct, &mut b);
+            assert_eq!(a, b, "len {len}");
+        }
+        // The sequential engines honor the same boundary contract.
+        let key = StreamKey::root(3).child(9);
+        let mut src = BackendWords::auto(Generator::Tyche, key, 32);
+        let mut direct = DynStream::open(Generator::Tyche, key);
+        for i in 0..100 {
+            assert_eq!(src.next_u32(), direct.next_u32(), "tyche word {i}");
+        }
+    }
+
+    #[test]
+    fn zero_prefetch_serves_from_the_spill_engine() {
+        let key = StreamKey::root(1);
+        let mut src = BackendWords::auto(Generator::Squares, key, 0);
+        let mut direct = DynStream::open(Generator::Squares, key);
+        for _ in 0..50 {
+            assert_eq!(src.next_u32(), direct.next_u32());
+        }
+    }
+}

@@ -143,6 +143,72 @@ fn generate_backend_rejects_unknown_arm() {
 }
 
 #[test]
+fn generate_key_addressing_byte_identical_to_seed_ctr() {
+    // The hierarchical-key CLI surface: '--key S/eT' must be
+    // byte-identical to '--seed S --ctr T' (the StreamKey::raw
+    // equivalence, end to end), for raw words and dist samples alike.
+    for format in ["u32", "f64"] {
+        let (legacy, _, ok) =
+            openrand(&["generate", "--seed", "7", "--ctr", "1", "--n", "23", "--format", format]);
+        assert!(ok, "{format}");
+        let (keyed, _, ok) =
+            openrand(&["generate", "--key", "7/e1", "--n", "23", "--format", format]);
+        assert!(ok, "{format}");
+        assert_eq!(legacy, keyed, "{format}: --key 7/e1 diverged from --seed 7 --ctr 1");
+    }
+    let (legacy, _, _) = openrand(&["generate", "--dist", "normal", "--seed", "7", "--ctr", "1", "--n", "4"]);
+    let (keyed, _, _) = openrand(&["generate", "--dist", "normal", "--key", "7/e1", "--n", "4"]);
+    assert_eq!(legacy, keyed, "dist sampling under --key diverged");
+    // A bare root is (seed, ctr=0).
+    let (legacy, _, _) = openrand(&["generate", "--seed", "42", "--n", "6"]);
+    let (keyed, _, _) = openrand(&["generate", "--key", "42", "--n", "6"]);
+    assert_eq!(legacy, keyed);
+    // Child derivation opens a NEW stream (deterministically).
+    let (child_a, _, ok) = openrand(&["generate", "--key", "7/c3/e1", "--n", "6"]);
+    assert!(ok);
+    let (child_b, _, _) = openrand(&["generate", "--key", "7/c3/e1", "--n", "6"]);
+    assert_eq!(child_a, child_b, "derived streams must replay");
+    let (root, _, _) = openrand(&["generate", "--key", "7/e1", "--n", "6"]);
+    assert_ne!(child_a, root, "child stream must differ from its parent");
+    // The first word of root(7).child(3).epoch(1) is the cross-layer
+    // derivation KAT literal (pinned in rust + python suites).
+    assert_eq!(child_a.lines().next().unwrap(), format!("{}", 0x9022_9F37u32));
+}
+
+#[test]
+fn generate_key_conflicts_and_errors() {
+    let (_, err, ok) = openrand(&["generate", "--key", "7/e1", "--seed", "7", "--n", "4"]);
+    assert!(!ok);
+    assert!(err.contains("--key"), "{err}");
+    let (_, err, ok) = openrand(&["generate", "--key", "7/z9", "--n", "4"]);
+    assert!(!ok);
+    assert!(err.contains("key"), "{err}");
+    let (_, err, ok) = openrand(&["generate", "--key", "", "--n", "4"]);
+    assert!(!ok);
+    assert!(err.contains("key"), "{err}");
+}
+
+#[test]
+fn generate_block_fill_warns_deprecated() {
+    let (_, err, ok) = openrand(&["generate", "--n", "4", "--block-fill"]);
+    assert!(ok, "{err}");
+    assert!(err.contains("deprecated"), "expected a deprecation warning, got: {err}");
+    // The supported spelling stays silent.
+    let (_, err, ok) = openrand(&["generate", "--n", "4", "--backend", "par"]);
+    assert!(ok);
+    assert!(!err.contains("deprecated"), "{err}");
+}
+
+#[test]
+fn stats_dist_battery_keyed_passes() {
+    let (out, err, ok) =
+        openrand(&["stats", "--dist-battery", "--key", "7/c1", "--words", "64k"]);
+    assert!(ok, "{err}");
+    assert!(out.contains("[distributions @"), "{out}");
+    assert!(out.contains("0 failures"), "{out}");
+}
+
+#[test]
 fn generate_dist_samples_deterministic() {
     let run = || openrand(&["generate", "--dist", "normal", "--seed", "7", "--ctr", "1", "--n", "6"]);
     let (a, _, ok) = run();
@@ -237,6 +303,22 @@ fn unknown_arguments_rejected() {
     let (_, err, ok) = openrand(&["generate", "--generator", "mt19937x"]);
     assert!(!ok);
     assert!(err.contains("unknown generator"));
+}
+
+#[test]
+fn brownian_key_addressing() {
+    // --key seeds the run like --seed (same trajectory hash)...
+    let hash = |s: &str| s.lines().find(|l| l.contains("hash")).unwrap().to_string();
+    let (a, err, ok) = openrand(&["brownian", "--n", "512", "--steps", "3", "--seed", "9"]);
+    assert!(ok, "{err}");
+    let (b, err, ok) = openrand(&["brownian", "--n", "512", "--steps", "3", "--key", "9"]);
+    assert!(ok, "{err}");
+    assert_eq!(hash(&a), hash(&b));
+    // ... and an epoch in the key is rejected, not silently dropped
+    // (brownian owns its per-step epochs).
+    let (_, err, ok) = openrand(&["brownian", "--n", "512", "--steps", "3", "--key", "9/e2"]);
+    assert!(!ok);
+    assert!(err.contains("epoch"), "{err}");
 }
 
 #[test]

@@ -8,6 +8,7 @@ use openrand::core::{CounterRng, Philox, Rng};
 use openrand::sim::brownian::{BrownianParams, RngStyle};
 use openrand::sim::pi;
 use openrand::stats::run_battery;
+use openrand::stream::{DynStream, StreamKey};
 
 #[test]
 fn full_repro_ladder() {
@@ -75,6 +76,28 @@ fn quick_battery_smoke_all_generators() {
             }
         });
         assert!(report.passed(), "{}", report.render());
+    }
+}
+
+#[test]
+fn keyed_battery_e2e_and_zero_drift_ladder() {
+    use openrand::core::Generator;
+    // The facade end to end: the repro ladder's zero-drift check, a
+    // battery fed by derived child streams, and dist sampling through
+    // DynStream — all from one root key.
+    let root = StreamKey::root(0xE2E);
+    let r = repro::verify_key_equivalence(root.seed(), root.ctr(), 8_192);
+    assert!(r.consistent, "{}", r.render());
+    let report = run_battery("philox@keys", 1 << 16, |i| -> Box<dyn Rng> {
+        Box::new(DynStream::open(Generator::Philox, root.child(i as u64)))
+    });
+    assert!(report.passed(), "{}", report.render());
+    // A derived stream replays bitwise through an independent handle.
+    let key = root.child(3).epoch(1);
+    let mut a = DynStream::open(Generator::Philox, key);
+    let mut b = DynStream::open(Generator::Philox, key);
+    for _ in 0..64 {
+        assert_eq!(a.next_u32(), b.next_u32());
     }
 }
 

@@ -9,6 +9,7 @@ use openrand::dist::{
     Bernoulli, Binomial, BoxMuller, DiscreteAlias, Distribution, Exponential, Poisson, Uniform,
     ZigguratNormal,
 };
+use openrand::stream::{derive_child_seed, DynStream, Stream, StreamKey};
 use openrand::testing::prop::{Gen, Prop};
 
 fn stream<G: CounterRng>(seed: u64, ctr: u32, n: usize) -> Vec<u32> {
@@ -342,6 +343,93 @@ fn prop_parallel_fill_bitwise_thread_invariant() {
             check::<Philox>(seed, 1, n) && check::<Squares>(seed, 1, n) && check::<Tyche>(seed, 1, n)
         },
     );
+}
+
+#[test]
+fn prop_streamkey_raw_equals_counter_rng_all_engines() {
+    // The facade's zero-drift guarantee, property-tested over random
+    // (seed, ctr) for all 7 engines: StreamKey::raw streams are
+    // byte-identical to CounterRng::new streams.
+    Prop::new("StreamKey::raw == CounterRng::new").cases(40).check2(
+        Gen::u64(),
+        Gen::u32(),
+        |seed, ctr| {
+            openrand::core::Generator::ALL.iter().all(|&g| {
+                let mut keyed = DynStream::open(g, StreamKey::raw(seed, ctr));
+                let mut legacy = g.boxed(seed, ctr);
+                (0..32).all(|_| keyed.next_u32() == legacy.next_u32())
+            })
+        },
+    );
+}
+
+#[test]
+fn prop_streamkey_child_ids_distinct() {
+    // Distinct child ids under the same parent derive distinct (seed,
+    // ctr) addresses — guaranteed (the mix is bijective in the id for a
+    // fixed parent), so this must hold for EVERY pair, not just
+    // overwhelmingly often.
+    Prop::new("distinct child ids -> distinct keys").cases(120).check3(
+        Gen::u64(),
+        Gen::u64(),
+        Gen::u64(),
+        |parent_seed, a, b| {
+            let parent = StreamKey::root(parent_seed);
+            a == b || parent.child(a) != parent.child(b)
+        },
+    );
+}
+
+#[test]
+fn prop_streamkey_epoch_absolute_and_child_path_dependent() {
+    Prop::new("epoch last-wins; child mixes parent ctr").cases(80).check3(
+        Gen::u64(),
+        Gen::u32(),
+        Gen::u32(),
+        |seed, t1, t2| {
+            let k = StreamKey::root(seed);
+            // Documented order independence: epoch is absolute.
+            let absolute = k.epoch(t1).epoch(t2) == k.epoch(t2)
+                && k.epoch(t2) == StreamKey::raw(seed, t2);
+            // Child derivation sees the parent epoch (separate spaces).
+            let separated = t1 == t2 || k.epoch(t1).child(5) != k.epoch(t2).child(5);
+            // And the mix is the single normative function.
+            let normative = k.epoch(t1).child(9).seed() == derive_child_seed(seed, t1, 9);
+            absolute && separated && normative
+        },
+    );
+}
+
+#[test]
+fn prop_streamkey_path_roundtrip() {
+    // The CLI path spelling parses back to the structural derivation.
+    Prop::new("parse_path == root().child().epoch()").cases(80).check3(
+        Gen::u64(),
+        Gen::u64(),
+        Gen::u32(),
+        |seed, child, epoch| {
+            let spec = format!("{seed}/c{child}/e{epoch}");
+            StreamKey::parse_path(&spec).unwrap() == StreamKey::root(seed).child(child).epoch(epoch)
+        },
+    );
+}
+
+#[test]
+fn prop_stream_facade_draws_match_engine() {
+    // One handle, same words: scalar draws through Stream<E> equal the
+    // raw engine, and the key-addressed bulk fill equals the serial
+    // fill contract.
+    Prop::new("Stream<E> == raw engine").cases(40).check2(Gen::u64(), Gen::u32(), |seed, ctr| {
+        let key = StreamKey::raw(seed, ctr);
+        let mut s = Stream::<Philox>::new(key);
+        let mut e = Philox::new(seed, ctr);
+        if (0..16).any(|_| s.next_u32() != e.next_u32()) {
+            return false;
+        }
+        let mut bulk = vec![0u32; 64];
+        s.fill_u32(None, &mut bulk).unwrap();
+        bulk == stream::<Philox>(seed, ctr, 64)
+    });
 }
 
 #[test]
