@@ -215,6 +215,14 @@ impl Auto {
         self.device.is_some()
     }
 
+    /// `(pool hits, uploads)` of the device arm's param-buffer pool
+    /// ([`DeviceFill::pool_stats`]), `None` without a device. The serve
+    /// metrics layer delta-aggregates this across worker backends;
+    /// `repro --verbose` prints it directly.
+    pub fn device_pool_stats(&self) -> Option<(u64, u64)> {
+        self.device.as_ref().map(|d| d.pool_stats())
+    }
+
     /// Which arm a `words`-word fill of `gen` will run on. Pure function
     /// of `(gen, words, table, availability)` — the repro ladder asserts
     /// the output is byte-identical either way.

@@ -34,9 +34,7 @@
 //! sampling through a [`crate::backend::FillBackend`] arm goes through
 //! the one trait surface [`Distribution::fill_backend`] (what
 //! [`crate::stream::Stream::sample_fill`] routes) — still byte-identical
-//! on every arm, per `docs/backends.md`. The per-sampler
-//! `sample_fill_backend` inherent methods are deprecated spellings of
-//! the same operation.
+//! on every arm, per `docs/backends.md`.
 //!
 //! "Variable" samplers are still **counter-stream-deterministic**: the
 //! number of words consumed is a pure function of the stream contents,
@@ -111,8 +109,8 @@ pub trait Distribution<T> {
     /// bit-identical to [`fill`] over a fresh engine at `(seed, ctr)`.
     ///
     /// This is the one bulk surface the [`crate::stream::Stream`] facade
-    /// routes through (collapsing the old `sample` / `sample_fill` /
-    /// `sample_fill_backend` triplet). The default implementation draws
+    /// routes through (the per-sampler `sample_fill_backend` spellings
+    /// it replaced are gone). The default implementation draws
     /// host-side from a fresh engine — correct for every sampler,
     /// including the data-dependent-consumption ones, which have no
     /// bulk word pattern to ship across a backend. Fixed-pattern

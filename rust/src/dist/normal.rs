@@ -91,21 +91,23 @@ impl BoxMuller {
         }
     }
 
-    /// Deprecated spelling of [`Distribution::fill_backend`] — same
-    /// operation, same bytes.
-    #[deprecated(
-        since = "0.2.0",
-        note = "route through `stream::Stream::sample_fill` or `Distribution::fill_backend`"
-    )]
-    pub fn sample_fill_backend(
-        &self,
-        backend: &mut dyn crate::backend::FillBackend,
-        gen: crate::core::Generator,
-        seed: u64,
-        ctr: u32,
-        out: &mut [f64],
-    ) -> anyhow::Result<()> {
-        self.fill_backend(backend, gen, seed, ctr, out)
+    /// The normative word→normal transform applied to already-fetched
+    /// stream words: sample `k` ← words `4k..4k+4` (one `draw_double2`
+    /// pair), cosine branch. `words.len()` must be `4 * out.len()`.
+    ///
+    /// This is the single definition the engine path
+    /// ([`BoxMuller::sample_fill`]), the backend path
+    /// ([`Distribution::fill_backend`]), and the serve layer
+    /// (`openrand::serve`) all reduce to, so no surface can drift.
+    pub fn transform_words(&self, words: &[u32], out: &mut [f64]) {
+        assert_eq!(words.len(), 4 * out.len(), "need 4 stream words per normal sample");
+        for (k, slot) in out.iter_mut().enumerate() {
+            // Same expression order as sample_pair's cosine branch.
+            let u1 = u01_f64(words[4 * k], words[4 * k + 1]).max(MIN_POS);
+            let r = (-2.0 * u1.ln()).sqrt();
+            let theta = std::f64::consts::TAU * u01_f64(words[4 * k + 2], words[4 * k + 3]);
+            *slot = self.mean + self.sigma * (r * theta.cos());
+        }
     }
 }
 
@@ -133,13 +135,7 @@ impl Distribution<f64> for BoxMuller {
     ) -> anyhow::Result<()> {
         let mut words = vec![0u32; 4 * out.len()];
         backend.fill_u32(gen, seed, ctr, &mut words)?;
-        for (k, slot) in out.iter_mut().enumerate() {
-            // Same expression order as sample_pair's cosine branch.
-            let u1 = u01_f64(words[4 * k], words[4 * k + 1]).max(MIN_POS);
-            let r = (-2.0 * u1.ln()).sqrt();
-            let theta = std::f64::consts::TAU * u01_f64(words[4 * k + 2], words[4 * k + 3]);
-            *slot = self.mean + self.sigma * (r * theta.cos());
-        }
+        self.transform_words(&words, out);
         Ok(())
     }
 }
@@ -323,13 +319,12 @@ mod tests {
         dist.fill_backend(&mut HostParallel::new(4), Generator::Philox, 55, 6, &mut b)
             .unwrap();
         assert_eq!(bits(&b), bits(&want));
-        // The deprecated spelling stays byte-compatible until removal.
-        #[allow(deprecated)]
-        {
-            let mut c = vec![0.0f64; 300];
-            dist.sample_fill_backend(&mut HostSerial, Generator::Philox, 55, 6, &mut c).unwrap();
-            assert_eq!(bits(&c), bits(&want));
-        }
+        // transform_words over pre-fetched words is the same definition.
+        let mut words = vec![0u32; 4 * 300];
+        crate::core::fill::fill_u32::<Philox>(55, 6, &mut words);
+        let mut c = vec![0.0f64; 300];
+        dist.transform_words(&words, &mut c);
+        assert_eq!(bits(&c), bits(&want));
     }
 
     #[test]

@@ -56,22 +56,6 @@ impl Uniform {
         }
     }
 
-    /// Deprecated spelling of [`Distribution::fill_backend`] — same
-    /// operation, same bytes.
-    #[deprecated(
-        since = "0.2.0",
-        note = "route through `stream::Stream::sample_fill` or `Distribution::fill_backend`"
-    )]
-    pub fn sample_fill_backend(
-        &self,
-        backend: &mut dyn crate::backend::FillBackend,
-        gen: crate::core::Generator,
-        seed: u64,
-        ctr: u32,
-        out: &mut [f64],
-    ) -> anyhow::Result<()> {
-        self.fill_backend(backend, gen, seed, ctr, out)
-    }
 }
 
 impl Distribution<f64> for Uniform {
@@ -157,13 +141,6 @@ mod tests {
         d.fill_backend(&mut HostParallel::new(3), Generator::Philox, 21, 4, &mut b)
             .unwrap();
         assert_eq!(bits(&b), bits(&want));
-        // The deprecated spelling stays byte-compatible until removal.
-        #[allow(deprecated)]
-        {
-            let mut c = vec![0.0f64; 700];
-            d.sample_fill_backend(&mut HostSerial, Generator::Philox, 21, 4, &mut c).unwrap();
-            assert_eq!(bits(&c), bits(&want));
-        }
     }
 
     #[test]

@@ -13,8 +13,11 @@
 //!   TestU01/PractRand-substitute statistical battery ([`stats`]), the
 //!   Brownian-dynamics macro-benchmark substrate ([`sim`]), a
 //!   reproducibility-preserving parallel coordinator ([`coordinator`]),
-//!   and a PJRT runtime ([`runtime`]) that executes the AOT-compiled
-//!   device kernels.
+//!   a PJRT runtime ([`runtime`]) that executes the AOT-compiled
+//!   device kernels, and a keyed-stream TCP service ([`serve`]) whose
+//!   replies are pinned byte-identical to the local CLI — caching,
+//!   coalescing, and backpressure without touching a byte
+//!   (`docs/serve.md`).
 //! * **L2/L1 (build time)** — JAX graphs + Pallas kernels in
 //!   `python/compile/`, lowered once to `artifacts/*.hlo.txt`. Python is
 //!   never on the request path.
@@ -77,6 +80,7 @@ pub mod coordinator;
 pub mod core;
 pub mod dist;
 pub mod runtime;
+pub mod serve;
 pub mod sim;
 pub mod stats;
 pub mod stream;

@@ -10,13 +10,19 @@
 //! * `stats`     — run the Crush-lite statistical battery (E3), the
 //!   HOOMD-style parallel-stream suite (E4), or with `--dist-battery`
 //!   the KS/χ²/moment checks on distribution outputs.
-//! * `repro`     — reproducibility verification ladder (E6).
+//! * `repro`     — reproducibility verification ladder (E6);
+//!   `--verbose` adds device buffer-pool observability.
 //! * `artifacts` — list the AOT artifacts the runtime can execute.
+//! * `serve`     — keyed-stream RNG daemon over TCP (`docs/serve.md`):
+//!   replies byte-identical to `generate --key`, with an LRU block
+//!   cache, request coalescing, and BUSY backpressure.
+//! * `fetch`     — client for `serve`: fetch a keyed fill (printed
+//!   exactly like `generate`), server STATS, or remote shutdown.
 //!
 //! `openrand --help` for options. Benchmarks that regenerate the paper's
 //! figures live under `cargo bench` (see DESIGN.md experiment index).
 
-use openrand::backend::{self, BackendKind, CrossoverTable};
+use openrand::backend::{self, BackendKind, CrossoverTable, FillBackend};
 use openrand::baseline::{Mt19937, Pcg32, Xoshiro256pp};
 use openrand::coordinator::repro;
 use openrand::coordinator::{Backend, SimDriver};
@@ -26,13 +32,15 @@ use openrand::dist::{
     ZigguratNormal,
 };
 use openrand::runtime::ArtifactStore;
+use openrand::serve::{Client, FillRequest, PayloadKind, ServeConfig, Server};
 use openrand::sim::brownian::{BrownianParams, RngStyle};
 use openrand::stats::parallel;
 use openrand::stats::{run_battery, run_dist_battery, Verdict};
 use openrand::stream::{DynStream, StreamKey};
 use openrand::util::cli::{Args, OptSpec};
 
-const COMMANDS: [&str; 5] = ["generate", "brownian", "stats", "repro", "artifacts"];
+const COMMANDS: [&str; 7] =
+    ["generate", "brownian", "stats", "repro", "artifacts", "serve", "fetch"];
 
 fn specs() -> Vec<OptSpec> {
     vec![
@@ -42,8 +50,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "ctr", help: "32-bit stream counter", default: Some("0"), is_flag: false },
         OptSpec { name: "key", help: "hierarchical stream key path 'SEED[/cID|/eT]...' (e.g. 7/c3/e1 = root(7).child(3).epoch(1)); replaces --seed/--ctr — '7/e1' is byte-identical to --seed 7 --ctr 1 (brownian/repro take the seed and derive epochs internally)", default: None, is_flag: false },
         OptSpec { name: "n", help: "count (supports k/M/G suffix)", default: Some("16"), is_flag: false },
-        OptSpec { name: "format", help: "generate output: u32|u64|f32|f64", default: Some("u32"), is_flag: false },
-        OptSpec { name: "block-fill", help: "generate: DEPRECATED alias for --backend par (same bytes; honors --threads; warns on use)", default: None, is_flag: true },
+        OptSpec { name: "format", help: "generate/fetch output: u32|u64|f32|f64 (fetch also: normal)", default: Some("u32"), is_flag: false },
         OptSpec { name: "crossover", help: "generate: auto-backend device crossover in words (k/M/G ok; overrides the persisted calibration; env OPENRAND_BACKEND_CROSSOVER elsewhere)", default: None, is_flag: false },
         OptSpec { name: "chunk-sweep", help: "stats: sweep BufferedWords chunk sizes {1k,4k,16k,64k} and report battery throughput per size", default: None, is_flag: true },
         OptSpec { name: "dist", help: "generate: sample a distribution instead of raw words: none|uniform|normal|ziggurat|exp|poisson|bernoulli|binomial|alias", default: Some("none"), is_flag: false },
@@ -62,6 +69,16 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "dist-battery", help: "stats: run KS/chi2/moment checks on distribution outputs", default: None, is_flag: true },
         OptSpec { name: "baselines", help: "stats: also run mt19937/pcg32/xoshiro baselines", default: None, is_flag: true },
         OptSpec { name: "max-threads", help: "repro: thread ladder upper bound", default: Some("8"), is_flag: false },
+        OptSpec { name: "verbose", help: "repro: also report device buffer-pool stats", default: None, is_flag: true },
+        OptSpec { name: "addr", help: "serve: bind HOST:PORT (port 0 = ephemeral); fetch: server address", default: None, is_flag: false },
+        OptSpec { name: "workers", help: "serve: worker threads (one connection at a time each)", default: Some("4"), is_flag: false },
+        OptSpec { name: "queue", help: "serve: bounded connection-queue depth (beyond it, BUSY is shed)", default: Some("64"), is_flag: false },
+        OptSpec { name: "cache-blocks", help: "serve: LRU cache capacity in 4096-word blocks (0 disables)", default: Some("1024"), is_flag: false },
+        OptSpec { name: "fill-threads", help: "serve: host threads inside each worker's auto backend", default: Some("1"), is_flag: false },
+        OptSpec { name: "metrics-interval", help: "serve: seconds between one-line metrics summaries on stderr", default: None, is_flag: false },
+        OptSpec { name: "offset", help: "fetch: first element index (elements, not words)", default: Some("0"), is_flag: false },
+        OptSpec { name: "stats", help: "fetch: print the server's STATS counters and exit", default: None, is_flag: true },
+        OptSpec { name: "shutdown", help: "fetch: ask the server to shut down cleanly and exit", default: None, is_flag: true },
     ]
 }
 
@@ -93,6 +110,8 @@ fn main() {
         Some("stats") => cmd_stats(&args),
         Some("repro") => cmd_repro(&args),
         Some("artifacts") => cmd_artifacts(),
+        Some("serve") => cmd_serve(&args),
+        Some("fetch") => cmd_fetch(&args),
         _ => {
             eprintln!("error: missing command (try --help)");
             std::process::exit(2);
@@ -135,24 +154,16 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("n", 16).map_err(anyhow::Error::msg)?;
     let dist = args.get_or("dist", "none").to_string();
     // Validate --format once, up front, so both the word-at-a-time and
-    // block-fill paths report the identical error the identical way.
+    // backend paths report the identical error the identical way.
     let format = args.get_or("format", "u32").to_string();
     if dist == "none" && !matches!(format.as_str(), "u32" | "u64" | "f32" | "f64") {
         anyhow::bail!("unknown format '{format}' (u32|u64|f32|f64)");
-    }
-    // Backend selection: --backend names an arm explicitly; --block-fill
-    // stays as the PR-2 spelling for the parallel host arm.
-    if args.flag("block-fill") {
-        eprintln!(
-            "warning: --block-fill is deprecated; use --backend par (same bytes, same --threads)"
-        );
     }
     let kind = match args.get("backend") {
         Some(s) => Some(
             BackendKind::parse(s)
                 .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (host|par|device|auto)"))?,
         ),
-        None if args.flag("block-fill") => Some(BackendKind::HostParallel),
         None => None,
     };
     if args.get("crossover").is_some() && kind != Some(BackendKind::Auto) {
@@ -160,7 +171,7 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(kind) = kind {
         if dist != "none" {
-            anyhow::bail!("--backend/--block-fill apply to raw formats (drop --dist)");
+            anyhow::bail!("--backend applies to raw formats (drop --dist)");
         }
         let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
         if threads == 0 {
@@ -197,8 +208,8 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// `generate --backend <arm>` (or legacy `--block-fill`): batch-generate
-/// through the selected fill backend (`openrand::backend`). Every arm is
+/// `generate --backend <arm>`: batch-generate through the selected fill
+/// backend (`openrand::backend`). Every arm is
 /// byte-identical to the word-at-a-time path for every format — the
 /// backend contract (`docs/backends.md`); `rust/tests/cli.rs` pins it
 /// end to end. `--crossover N` overrides the `auto` arm's calibrated
@@ -507,6 +518,26 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     // cross-layer derivation KAT.
     let r6 = repro::verify_key_equivalence(seed, key.ctr(), 1 << 16);
     print!("{}", r6.render());
+    if args.flag("verbose") {
+        // Device buffer-pool observability (the serve metrics layer
+        // aggregates the same counters fleet-wide): repeated fills of
+        // one artifact-sized buffer should hit the param pool after the
+        // first upload.
+        match backend::DeviceFill::try_new() {
+            Ok(mut dev) => {
+                let mut buf = vec![0u32; 65_536];
+                for _ in 0..3 {
+                    if let Err(e) = dev.fill_u32(Generator::Philox, seed, 0, &mut buf) {
+                        println!("device buffer pool: fill failed ({e:#})");
+                        break;
+                    }
+                }
+                let (hits, uploads) = dev.pool_stats();
+                println!("device buffer pool: hits={hits} uploads={uploads}");
+            }
+            Err(e) => println!("device buffer pool: unavailable ({e:#})"),
+        }
+    }
     if r1.consistent
         && r2.consistent
         && r3.consistent
@@ -519,6 +550,121 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     } else {
         anyhow::bail!("reproducibility violated");
     }
+}
+
+/// `openrand serve --addr HOST:PORT`: run the keyed-stream daemon in
+/// the foreground until a client sends SHUTDOWN (`fetch --shutdown`).
+/// Binding port 0 picks an ephemeral port; the resolved address is the
+/// first stdout line (`serving on HOST:PORT` — CI greps it).
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("serve requires --addr HOST:PORT (port 0 = ephemeral)"))?
+        .to_string();
+    let metrics_interval = match args.get("metrics-interval") {
+        Some(_) => {
+            let secs = args.get_f64("metrics-interval", 10.0).map_err(anyhow::Error::msg)?;
+            if !(secs.is_finite() && secs > 0.0) {
+                anyhow::bail!("--metrics-interval must be positive seconds, got {secs}");
+            }
+            Some(std::time::Duration::from_secs_f64(secs))
+        }
+        None => None,
+    };
+    let cfg = ServeConfig {
+        addr,
+        workers: args.get_usize("workers", 4).map_err(anyhow::Error::msg)?,
+        queue: args.get_usize("queue", 64).map_err(anyhow::Error::msg)?,
+        cache_blocks: args.get_usize("cache-blocks", 1024).map_err(anyhow::Error::msg)?,
+        fill_threads: args.get_usize("fill-threads", 1).map_err(anyhow::Error::msg)?,
+        metrics_interval,
+    };
+    let server = Server::start(cfg)?;
+    println!("serving on {}", server.local_addr());
+    std::io::stdout().flush()?;
+    server.run();
+    Ok(())
+}
+
+/// `openrand fetch --addr A`: client for the serve daemon. Three
+/// exclusive modes: a keyed FILL (default; printed with the identical
+/// `{}` formatting `generate` uses, so `cmp` holds line for line),
+/// `--stats`, or `--shutdown`.
+fn cmd_fetch(args: &Args) -> anyhow::Result<()> {
+    use std::io::Write as _;
+    let addr = args
+        .get("addr")
+        .ok_or_else(|| anyhow::anyhow!("fetch requires --addr HOST:PORT"))?;
+    if args.flag("stats") && args.flag("shutdown") {
+        anyhow::bail!("--stats and --shutdown are exclusive");
+    }
+    let mut client = Client::connect(addr)?;
+    if args.flag("stats") {
+        print!("{}", client.stats()?);
+        return Ok(());
+    }
+    if args.flag("shutdown") {
+        client.shutdown()?;
+        println!("server shut down");
+        return Ok(());
+    }
+    let gen = parse_generator(args)?;
+    let kind = PayloadKind::parse(args.get_or("format", "u32")).ok_or_else(|| {
+        anyhow::anyhow!("unknown fetch format '{}' (u32|u64|f32|f64|normal)", args.get_or("format", "u32"))
+    })?;
+    let n = args.get_usize("n", 16).map_err(anyhow::Error::msg)?;
+    if n as u64 > openrand::serve::proto::MAX_FILL_ELEMS as u64 {
+        anyhow::bail!(
+            "--n {n} is above the per-request cap ({}); split across --offset windows",
+            openrand::serve::proto::MAX_FILL_ELEMS
+        );
+    }
+    let offset = args.get_u64("offset", 0).map_err(anyhow::Error::msg)?;
+    // Split --key into the tenant root (the leading seed segment) and
+    // the relative derivation path shipped on the wire; the server
+    // re-resolves `{tenant}/{path}` through the same parse_path grammar,
+    // so the reply is byte-identical to `generate --key` (offset 0).
+    let spec = args.get_or("key", "0");
+    let (root_spec, rel) = match spec.split_once('/') {
+        Some((root, rest)) => (root, rest),
+        None => (spec, ""),
+    };
+    let root = StreamKey::parse_path(root_spec).map_err(|e| anyhow::anyhow!("--key: {e}"))?;
+    let req = FillRequest {
+        tenant: root.seed(),
+        path: rel.to_string(),
+        gen,
+        kind,
+        offset,
+        len: n as u32,
+    };
+    let bytes = client.fill(&req)?;
+    let stdout = std::io::stdout();
+    let mut out = std::io::BufWriter::new(stdout.lock());
+    match kind {
+        PayloadKind::U32 => {
+            for c in bytes.chunks_exact(4) {
+                writeln!(out, "{}", u32::from_le_bytes(c.try_into().unwrap()))?;
+            }
+        }
+        PayloadKind::U64 => {
+            for c in bytes.chunks_exact(8) {
+                writeln!(out, "{}", u64::from_le_bytes(c.try_into().unwrap()))?;
+            }
+        }
+        PayloadKind::F32 => {
+            for c in bytes.chunks_exact(4) {
+                writeln!(out, "{}", f32::from_le_bytes(c.try_into().unwrap()))?;
+            }
+        }
+        PayloadKind::F64 | PayloadKind::Normal => {
+            for c in bytes.chunks_exact(8) {
+                writeln!(out, "{}", f64::from_le_bytes(c.try_into().unwrap()))?;
+            }
+        }
+    }
+    Ok(())
 }
 
 fn cmd_artifacts() -> anyhow::Result<()> {

@@ -1,0 +1,261 @@
+//! Capacity-bounded LRU cache over fixed-size stream-word blocks.
+//!
+//! The serve layer materializes streams in aligned [`BLOCK_WORDS`]-word
+//! blocks keyed by [`BlockKey`] `(stream key, generator, block index)`.
+//! Because a block's content is a pure function of its key — stream
+//! words `block·W .. (block+1)·W` of the `(seed, ctr)` stream, exactly
+//! what a fresh backend fill would produce — cache hits, misses, and
+//! evictions are *byte-invisible by construction*: the only observable
+//! difference is latency. `rust/tests/serve.rs` pins that property
+//! against uncached fills at arbitrary offsets.
+//!
+//! Implementation: a `HashMap` into a slab of entries threaded on an
+//! intrusive doubly-linked recency list (no per-access allocation, O(1)
+//! get/insert/evict). Capacity 0 is a supported degenerate mode: every
+//! `insert` is a no-op and every `get` misses, so the serve path runs
+//! fully uncached — the property tests exercise exactly this.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::core::Generator;
+use crate::stream::StreamKey;
+
+/// Words per cache block. 4096 words = 16 KiB per block; with Philox,
+/// exactly 1024 counter blocks. Chosen to amortize fill dispatch without
+/// making single-element requests fetch megabytes.
+pub const BLOCK_WORDS: usize = 4096;
+
+/// Identity of one cached block: stream words
+/// `block·BLOCK_WORDS .. (block+1)·BLOCK_WORDS` of `key`'s stream under
+/// `gen`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct BlockKey {
+    pub key: StreamKey,
+    pub gen: Generator,
+    pub block: u32,
+}
+
+/// Sentinel for "no slot" in the intrusive list.
+const NIL: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Entry {
+    key: BlockKey,
+    data: Arc<Vec<u32>>,
+    prev: usize,
+    next: usize,
+}
+
+/// LRU block cache. Not internally synchronized — the serve layer wraps
+/// it (together with the in-flight fill table) in one mutex.
+#[derive(Debug)]
+pub struct BlockCache {
+    cap: usize,
+    map: HashMap<BlockKey, usize>,
+    slab: Vec<Entry>,
+    free: Vec<usize>,
+    /// Most recently used slot.
+    head: usize,
+    /// Least recently used slot (next eviction victim).
+    tail: usize,
+}
+
+impl BlockCache {
+    /// A cache holding at most `cap` blocks (`cap == 0` disables it).
+    pub fn new(cap: usize) -> BlockCache {
+        BlockCache {
+            cap,
+            map: HashMap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            head: NIL,
+            tail: NIL,
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Look up a block, promoting it to most-recently-used on a hit.
+    pub fn get(&mut self, key: &BlockKey) -> Option<Arc<Vec<u32>>> {
+        let slot = *self.map.get(key)?;
+        self.unlink(slot);
+        self.push_front(slot);
+        Some(Arc::clone(&self.slab[slot].data))
+    }
+
+    /// Insert (or refresh) a block, evicting the least-recently-used
+    /// entry when over capacity. Returns the number of evictions (0 or
+    /// 1). With `cap == 0` this is a no-op returning 0.
+    pub fn insert(&mut self, key: BlockKey, data: Arc<Vec<u32>>) -> usize {
+        if self.cap == 0 {
+            return 0;
+        }
+        if let Some(&slot) = self.map.get(&key) {
+            // Same key re-filled: identical bytes by determinism, but
+            // refresh the Arc and recency anyway.
+            self.slab[slot].data = data;
+            self.unlink(slot);
+            self.push_front(slot);
+            return 0;
+        }
+        let mut evicted = 0;
+        if self.map.len() >= self.cap {
+            let victim = self.tail;
+            debug_assert_ne!(victim, NIL);
+            self.unlink(victim);
+            self.map.remove(&self.slab[victim].key);
+            self.free.push(victim);
+            evicted = 1;
+        }
+        let slot = match self.free.pop() {
+            Some(s) => {
+                self.slab[s] = Entry { key, data, prev: NIL, next: NIL };
+                s
+            }
+            None => {
+                self.slab.push(Entry { key, data, prev: NIL, next: NIL });
+                self.slab.len() - 1
+            }
+        };
+        self.map.insert(key, slot);
+        self.push_front(slot);
+        evicted
+    }
+
+    /// Keys in recency order, most recent first (test introspection).
+    pub fn keys_mru(&self) -> Vec<BlockKey> {
+        let mut out = Vec::with_capacity(self.map.len());
+        let mut slot = self.head;
+        while slot != NIL {
+            out.push(self.slab[slot].key);
+            slot = self.slab[slot].next;
+        }
+        out
+    }
+
+    fn unlink(&mut self, slot: usize) {
+        let (prev, next) = (self.slab[slot].prev, self.slab[slot].next);
+        match prev {
+            NIL => {
+                if self.head == slot {
+                    self.head = next;
+                }
+            }
+            p => self.slab[p].next = next,
+        }
+        match next {
+            NIL => {
+                if self.tail == slot {
+                    self.tail = prev;
+                }
+            }
+            n => self.slab[n].prev = prev,
+        }
+        self.slab[slot].prev = NIL;
+        self.slab[slot].next = NIL;
+    }
+
+    fn push_front(&mut self, slot: usize) {
+        self.slab[slot].prev = NIL;
+        self.slab[slot].next = self.head;
+        if self.head != NIL {
+            self.slab[self.head].prev = slot;
+        }
+        self.head = slot;
+        if self.tail == NIL {
+            self.tail = slot;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bk(block: u32) -> BlockKey {
+        BlockKey { key: StreamKey::root(7), gen: Generator::Philox, block }
+    }
+
+    fn data(v: u32) -> Arc<Vec<u32>> {
+        Arc::new(vec![v; 4])
+    }
+
+    #[test]
+    fn eviction_is_lru_order() {
+        let mut c = BlockCache::new(3);
+        for b in 0..3 {
+            assert_eq!(c.insert(bk(b), data(b)), 0);
+        }
+        assert_eq!(c.keys_mru(), vec![bk(2), bk(1), bk(0)]);
+        // Touch block 0: it becomes most recent, block 1 is now LRU.
+        assert!(c.get(&bk(0)).is_some());
+        assert_eq!(c.keys_mru(), vec![bk(0), bk(2), bk(1)]);
+        // Inserting a 4th block evicts exactly the LRU (block 1).
+        assert_eq!(c.insert(bk(3), data(3)), 1);
+        assert!(c.get(&bk(1)).is_none());
+        assert_eq!(c.keys_mru(), vec![bk(3), bk(0), bk(2)]);
+        // Continue evicting in recency order: 2, then 0.
+        assert_eq!(c.insert(bk(4), data(4)), 1);
+        assert!(c.get(&bk(2)).is_none());
+        assert_eq!(c.insert(bk(5), data(5)), 1);
+        assert!(c.get(&bk(0)).is_none());
+        assert_eq!(c.len(), 3);
+    }
+
+    #[test]
+    fn capacity_zero_is_passthrough() {
+        let mut c = BlockCache::new(0);
+        assert_eq!(c.insert(bk(0), data(0)), 0);
+        assert!(c.get(&bk(0)).is_none());
+        assert_eq!(c.len(), 0);
+        assert!(c.is_empty());
+        assert!(c.keys_mru().is_empty());
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c = BlockCache::new(2);
+        c.insert(bk(0), data(0));
+        c.insert(bk(1), data(1));
+        // Re-inserting an existing key evicts nothing and promotes it.
+        assert_eq!(c.insert(bk(0), data(9)), 0);
+        assert_eq!(c.keys_mru(), vec![bk(0), bk(1)]);
+        assert_eq!(c.get(&bk(0)).unwrap()[0], 9);
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn get_returns_inserted_bytes() {
+        let mut c = BlockCache::new(4);
+        let d = data(0xABCD);
+        c.insert(bk(11), Arc::clone(&d));
+        assert_eq!(c.get(&bk(11)).unwrap(), d);
+        // Distinct generators / keys / blocks are distinct entries.
+        let other = BlockKey { key: StreamKey::root(8), gen: Generator::Philox, block: 11 };
+        assert!(c.get(&other).is_none());
+        let other = BlockKey { key: StreamKey::root(7), gen: Generator::Squares, block: 11 };
+        assert!(c.get(&other).is_none());
+    }
+
+    #[test]
+    fn capacity_one_churns_correctly() {
+        let mut c = BlockCache::new(1);
+        for b in 0..16 {
+            let ev = c.insert(bk(b), data(b));
+            assert_eq!(ev, usize::from(b > 0));
+            assert_eq!(c.len(), 1);
+            assert_eq!(c.get(&bk(b)).unwrap()[0], b);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Atomic serve counters, exposed over the STATS request and the
+//! `--metrics-interval` stderr line.
+//!
+//! Every counter is observational only: by the cache/coalescing
+//! contract (`docs/serve.md` §"Byte-invisibility"), no value here may
+//! correlate with a byte difference in any reply. The property tests
+//! run the same workload across cache sizes and assert identical bytes
+//! while these counters diverge wildly — that is the point.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Shared serve counters. All increments are `Relaxed` — they are
+/// statistics, not synchronization; the reply bytes are ordered by the
+/// service's own locks.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// FILL requests received (whether served, errored, or shed).
+    pub requests: AtomicU64,
+    /// Reply payload bytes written for OK replies.
+    pub bytes_out: AtomicU64,
+    /// Backend fill calls issued (each covers a run of ≥ 1 blocks).
+    pub backend_fills: AtomicU64,
+    /// Block fetches satisfied by waiting on another request's in-flight
+    /// fill instead of issuing a new one.
+    pub coalesced: AtomicU64,
+    /// Block fetches served from the LRU cache.
+    pub cache_hits: AtomicU64,
+    /// Block fetches that had to fill (cache miss, not in flight).
+    pub cache_misses: AtomicU64,
+    /// Blocks evicted from the LRU cache.
+    pub evictions: AtomicU64,
+    /// Connections shed with BUSY because the work queue was full.
+    pub shed: AtomicU64,
+    /// Requests answered with an ERROR reply.
+    pub errors: AtomicU64,
+    /// Connections currently queued for a worker (gauge).
+    pub queue_depth: AtomicU64,
+    /// Device param-buffer pool hits (delta-aggregated from the worker
+    /// backends' `DeviceFill::pool_stats`; 0 on host-only builds).
+    pub pool_hits: AtomicU64,
+    /// Device param-buffer pool uploads (same source).
+    pub pool_uploads: AtomicU64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    #[inline]
+    pub fn inc(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(counter: &AtomicU64, n: u64) {
+        counter.fetch_add(n, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn dec(counter: &AtomicU64) {
+        counter.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Fraction of block fetches served from cache, in [0, 1] (0 when
+    /// nothing has been fetched).
+    pub fn cache_hit_ratio(&self) -> f64 {
+        let hits = self.cache_hits.load(Ordering::Relaxed) as f64;
+        let misses = self.cache_misses.load(Ordering::Relaxed) as f64;
+        if hits + misses == 0.0 {
+            0.0
+        } else {
+            hits / (hits + misses)
+        }
+    }
+
+    /// STATS reply body: one `key=value` line per counter. `cache_len`
+    /// and `cache_capacity` come from the caller (they live behind the
+    /// service lock, not in an atomic).
+    pub fn render(&self, cache_len: usize, cache_capacity: usize) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        format!(
+            "requests={}\nbytes_out={}\nbackend_fills={}\ncoalesced={}\n\
+             cache_hits={}\ncache_misses={}\ncache_hit_ratio={:.4}\n\
+             cache_evictions={}\ncache_len={}\ncache_capacity={}\n\
+             queue_depth={}\nshed={}\nerrors={}\npool_hits={}\npool_uploads={}\n",
+            g(&self.requests),
+            g(&self.bytes_out),
+            g(&self.backend_fills),
+            g(&self.coalesced),
+            g(&self.cache_hits),
+            g(&self.cache_misses),
+            self.cache_hit_ratio(),
+            g(&self.evictions),
+            cache_len,
+            cache_capacity,
+            g(&self.queue_depth),
+            g(&self.shed),
+            g(&self.errors),
+            g(&self.pool_hits),
+            g(&self.pool_uploads),
+        )
+    }
+
+    /// One-line `--metrics-interval` summary for stderr.
+    pub fn summary_line(&self) -> String {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        format!(
+            "serve: requests={} fills={} coalesced={} hit_ratio={:.2} queue={} shed={} errors={}",
+            g(&self.requests),
+            g(&self.backend_fills),
+            g(&self.coalesced),
+            self.cache_hit_ratio(),
+            g(&self.queue_depth),
+            g(&self.shed),
+            g(&self.errors),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_contains_every_counter() {
+        let m = Metrics::new();
+        Metrics::add(&m.requests, 5);
+        Metrics::add(&m.cache_hits, 3);
+        Metrics::inc(&m.cache_misses);
+        let text = m.render(2, 64);
+        for needle in [
+            "requests=5",
+            "cache_hits=3",
+            "cache_misses=1",
+            "cache_hit_ratio=0.7500",
+            "cache_len=2",
+            "cache_capacity=64",
+            "queue_depth=0",
+            "shed=0",
+            "pool_hits=0",
+        ] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn hit_ratio_handles_zero_traffic() {
+        assert_eq!(Metrics::new().cache_hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn gauge_inc_dec() {
+        let m = Metrics::new();
+        Metrics::inc(&m.queue_depth);
+        Metrics::inc(&m.queue_depth);
+        Metrics::dec(&m.queue_depth);
+        assert_eq!(m.queue_depth.load(Ordering::Relaxed), 1);
+        assert!(m.summary_line().contains("queue=1"));
+    }
+}

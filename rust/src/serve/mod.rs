@@ -1,0 +1,42 @@
+//! `openrand serve` — keyed-stream RNG over TCP, byte-identical to the
+//! local CLI.
+//!
+//! The serving thesis (ROADMAP direction 1): once streams are addressed
+//! by [`StreamKey`](crate::stream::StreamKey) and fills are positioned,
+//! *where* the bytes are produced stops mattering — a remote daemon can
+//! hand any client any slice of any stream, and the bytes are pinned
+//! byte-identical to `openrand generate --key` for the same
+//! `(key path, generator, kind, offset, len)` tuple. That one contract
+//! makes the whole stack testable: every reply is checked against a
+//! fresh single-threaded replay, across caching, coalescing, and
+//! concurrency (`rust/tests/serve.rs`).
+//!
+//! Layout (each module's docs are normative for its layer; the wire
+//! format is additionally documented in `docs/serve.md`):
+//!
+//! * [`proto`] — length-prefixed binary frames, request/reply types
+//!   (FILL / STATS / SHUTDOWN → OK / BUSY / ERROR / STATS_OK / BYE),
+//!   and the blocking [`Client`].
+//! * [`cache`] — the LRU [`BlockCache`] over aligned
+//!   [`BLOCK_WORDS`]-word blocks; byte-invisible by construction.
+//! * [`server`] — the coalescing [`StreamService`] core and the
+//!   [`Server`] accept/worker topology with bounded-queue backpressure
+//!   (typed BUSY shedding).
+//! * [`metrics`] — atomic counters behind the STATS request and the
+//!   `--metrics-interval` stderr line.
+//!
+//! Per-tenant namespacing: a FILL names `(tenant, path)` and the server
+//! resolves `root(tenant)` extended by `path` — tenants are disjoint by
+//! [`derive_child_seed`](crate::stream::derive_child_seed)'s domain
+//! separation, and a client cannot name another tenant's derived
+//! streams without its tenant id.
+
+pub mod cache;
+pub mod metrics;
+pub mod proto;
+pub mod server;
+
+pub use cache::{BlockCache, BlockKey, BLOCK_WORDS};
+pub use metrics::Metrics;
+pub use proto::{Client, FillRequest, PayloadKind, Reply, Request};
+pub use server::{resolve_key, ServeConfig, Server, StreamService};

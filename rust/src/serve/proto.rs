@@ -1,0 +1,489 @@
+//! The serve wire protocol: length-prefixed binary frames.
+//!
+//! Normative layout (`docs/serve.md` mirrors this module):
+//!
+//! ```text
+//! frame   := len:u32le payload[len]
+//! payload := type:u8 body
+//! ```
+//!
+//! Request types:
+//!
+//! | type | name     | body |
+//! |------|----------|------|
+//! | 0x01 | FILL     | tenant:u64le path_len:u16le path[path_len] gen:u8 kind:u8 offset:u64le len:u32le |
+//! | 0x02 | STATS    | (empty) |
+//! | 0x03 | SHUTDOWN | (empty) |
+//!
+//! Reply types:
+//!
+//! | type | name     | body |
+//! |------|----------|------|
+//! | 0x81 | OK       | raw little-endian element bytes |
+//! | 0x82 | BUSY     | (empty) — server queue full, retry later |
+//! | 0x83 | ERROR    | UTF-8 message |
+//! | 0x84 | STATS_OK | UTF-8 `key=value` lines |
+//! | 0x85 | BYE      | (empty) — shutdown acknowledged |
+//!
+//! A FILL names a stream by `(tenant, path)`: the effective
+//! [`StreamKey`](crate::stream::StreamKey) is `parse_path("{tenant}/{path}")`
+//! (just `root(tenant)` when `path` is empty), so the server's bytes are
+//! pinned byte-identical to `openrand generate --key {tenant}/{path}`
+//! *by construction* — both sides resolve the same path grammar.
+//! `gen` is an index into [`Generator::ALL`]; `kind` a [`PayloadKind`];
+//! `offset`/`len` are in **elements** of that kind (the server maps them
+//! onto stream words via [`PayloadKind::words_per_elem`]).
+
+use std::io::{self, Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::core::Generator;
+
+/// Hard cap on a relative key path on the wire (defense against
+/// malformed length fields; real paths are tens of bytes).
+pub const MAX_PATH_BYTES: usize = 512;
+
+/// Hard cap on one FILL's element count (2^22 elements; ≤ 32 MiB of f64
+/// payload). Larger consumers split requests — same bytes either way,
+/// by the positioned-fill contract.
+pub const MAX_FILL_ELEMS: u32 = 1 << 22;
+
+/// Request frames are small and fixed-shape; reject anything larger.
+pub const MAX_REQUEST_FRAME: usize = 1024 + MAX_PATH_BYTES;
+
+/// Reply frames carry at most `MAX_FILL_ELEMS` f64s plus the type byte,
+/// with slack for STATS text.
+pub const MAX_REPLY_FRAME: usize = (MAX_FILL_ELEMS as usize) * 8 + 4096;
+
+const REQ_FILL: u8 = 0x01;
+const REQ_STATS: u8 = 0x02;
+const REQ_SHUTDOWN: u8 = 0x03;
+const REP_OK: u8 = 0x81;
+const REP_BUSY: u8 = 0x82;
+const REP_ERROR: u8 = 0x83;
+const REP_STATS: u8 = 0x84;
+const REP_BYE: u8 = 0x85;
+
+/// Element type of a FILL payload. `U32`/`U64`/`F32`/`F64` are the raw
+/// formats of `generate --format`; `Normal` is the normative Box–Muller
+/// cosine branch of `generate --dist normal` (4 stream words/sample).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PayloadKind {
+    U32,
+    U64,
+    F32,
+    F64,
+    Normal,
+}
+
+impl PayloadKind {
+    pub const ALL: [PayloadKind; 5] = [
+        PayloadKind::U32,
+        PayloadKind::U64,
+        PayloadKind::F32,
+        PayloadKind::F64,
+        PayloadKind::Normal,
+    ];
+
+    /// Wire code (index into [`PayloadKind::ALL`]).
+    pub fn code(self) -> u8 {
+        PayloadKind::ALL.iter().position(|k| *k == self).unwrap() as u8
+    }
+
+    pub fn from_code(c: u8) -> Option<PayloadKind> {
+        PayloadKind::ALL.get(c as usize).copied()
+    }
+
+    /// CLI spelling (`fetch --format`).
+    pub fn name(self) -> &'static str {
+        match self {
+            PayloadKind::U32 => "u32",
+            PayloadKind::U64 => "u64",
+            PayloadKind::F32 => "f32",
+            PayloadKind::F64 => "f64",
+            PayloadKind::Normal => "normal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PayloadKind> {
+        PayloadKind::ALL.into_iter().find(|k| k.name() == s)
+    }
+
+    /// Stream words consumed per element (§2 conversions; Normal is the
+    /// 4-word Box–Muller pair draw).
+    pub fn words_per_elem(self) -> usize {
+        match self {
+            PayloadKind::U32 | PayloadKind::F32 => 1,
+            PayloadKind::U64 | PayloadKind::F64 => 2,
+            PayloadKind::Normal => 4,
+        }
+    }
+
+    /// Bytes per element on the wire (little-endian).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            PayloadKind::U32 | PayloadKind::F32 => 4,
+            PayloadKind::U64 | PayloadKind::F64 | PayloadKind::Normal => 8,
+        }
+    }
+}
+
+/// One FILL request: elements `offset .. offset+len` of `kind` drawn
+/// from the stream `root(tenant)` extended by the relative `path`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FillRequest {
+    pub tenant: u64,
+    /// Relative key path under the tenant root: `""`, `"c3"`, `"c3/e1"`…
+    /// (same segment grammar as `StreamKey::parse_path`, minus the seed).
+    pub path: String,
+    pub gen: Generator,
+    pub kind: PayloadKind,
+    /// First element index.
+    pub offset: u64,
+    /// Element count.
+    pub len: u32,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Request {
+    Fill(FillRequest),
+    Stats,
+    Shutdown,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// Raw little-endian element bytes.
+    Ok(Vec<u8>),
+    /// Bounded queue full — shed, retry later.
+    Busy,
+    Error(String),
+    Stats(String),
+    Bye,
+}
+
+/// Generator wire code = index into [`Generator::ALL`].
+pub fn gen_code(gen: Generator) -> u8 {
+    Generator::ALL.iter().position(|g| *g == gen).unwrap() as u8
+}
+
+pub fn gen_from_code(c: u8) -> Option<Generator> {
+    Generator::ALL.get(c as usize).copied()
+}
+
+pub fn encode_request(req: &Request) -> Vec<u8> {
+    match req {
+        Request::Fill(f) => {
+            let mut p = Vec::with_capacity(25 + f.path.len());
+            p.push(REQ_FILL);
+            p.extend_from_slice(&f.tenant.to_le_bytes());
+            p.extend_from_slice(&(f.path.len() as u16).to_le_bytes());
+            p.extend_from_slice(f.path.as_bytes());
+            p.push(gen_code(f.gen));
+            p.push(f.kind.code());
+            p.extend_from_slice(&f.offset.to_le_bytes());
+            p.extend_from_slice(&f.len.to_le_bytes());
+            p
+        }
+        Request::Stats => vec![REQ_STATS],
+        Request::Shutdown => vec![REQ_SHUTDOWN],
+    }
+}
+
+pub fn decode_request(payload: &[u8]) -> Result<Request> {
+    let (&ty, body) = payload.split_first().ok_or_else(|| anyhow!("empty request frame"))?;
+    match ty {
+        REQ_FILL => {
+            let mut c = Cursor::new(body);
+            let tenant = c.u64()?;
+            let path_len = c.u16()? as usize;
+            if path_len > MAX_PATH_BYTES {
+                bail!("path length {path_len} exceeds {MAX_PATH_BYTES}");
+            }
+            let path = String::from_utf8(c.bytes(path_len)?.to_vec())
+                .map_err(|_| anyhow!("path is not UTF-8"))?;
+            let gen = gen_from_code(c.u8()?).ok_or_else(|| anyhow!("unknown generator code"))?;
+            let kind =
+                PayloadKind::from_code(c.u8()?).ok_or_else(|| anyhow!("unknown payload kind"))?;
+            let offset = c.u64()?;
+            let len = c.u32()?;
+            c.finish()?;
+            Ok(Request::Fill(FillRequest { tenant, path, gen, kind, offset, len }))
+        }
+        REQ_STATS => {
+            ensure_empty(body)?;
+            Ok(Request::Stats)
+        }
+        REQ_SHUTDOWN => {
+            ensure_empty(body)?;
+            Ok(Request::Shutdown)
+        }
+        other => bail!("unknown request type 0x{other:02x}"),
+    }
+}
+
+pub fn encode_reply(rep: &Reply) -> Vec<u8> {
+    match rep {
+        Reply::Ok(bytes) => {
+            let mut p = Vec::with_capacity(1 + bytes.len());
+            p.push(REP_OK);
+            p.extend_from_slice(bytes);
+            p
+        }
+        Reply::Busy => vec![REP_BUSY],
+        Reply::Error(msg) => {
+            let mut p = Vec::with_capacity(1 + msg.len());
+            p.push(REP_ERROR);
+            p.extend_from_slice(msg.as_bytes());
+            p
+        }
+        Reply::Stats(text) => {
+            let mut p = Vec::with_capacity(1 + text.len());
+            p.push(REP_STATS);
+            p.extend_from_slice(text.as_bytes());
+            p
+        }
+        Reply::Bye => vec![REP_BYE],
+    }
+}
+
+pub fn decode_reply(payload: &[u8]) -> Result<Reply> {
+    let (&ty, body) = payload.split_first().ok_or_else(|| anyhow!("empty reply frame"))?;
+    match ty {
+        REP_OK => Ok(Reply::Ok(body.to_vec())),
+        REP_BUSY => {
+            ensure_empty(body)?;
+            Ok(Reply::Busy)
+        }
+        REP_ERROR => Ok(Reply::Error(String::from_utf8_lossy(body).into_owned())),
+        REP_STATS => Ok(Reply::Stats(String::from_utf8_lossy(body).into_owned())),
+        REP_BYE => {
+            ensure_empty(body)?;
+            Ok(Reply::Bye)
+        }
+        other => bail!("unknown reply type 0x{other:02x}"),
+    }
+}
+
+/// Write one `len:u32le + payload` frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame. `Ok(None)` on a clean close (EOF at the length
+/// prefix); an error on a mid-frame EOF, or a frame above `max` bytes.
+pub fn read_frame(r: &mut impl Read, max: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > max {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {max}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+fn ensure_empty(body: &[u8]) -> Result<()> {
+    if !body.is_empty() {
+        bail!("{} trailing bytes after request", body.len());
+    }
+    Ok(())
+}
+
+/// Byte-cursor over a request body (strict: over-reads and trailing
+/// garbage are protocol errors, not silent truncations).
+struct Cursor<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() < n {
+            bail!("truncated frame (wanted {n} more bytes, have {})", self.buf.len());
+        }
+        let (head, rest) = self.buf.split_at(n);
+        self.buf = rest;
+        Ok(head)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn finish(self) -> Result<()> {
+        ensure_empty(self.buf)
+    }
+}
+
+/// Blocking client for the serve protocol (CLI `fetch`, tests, bench).
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    /// Wrap an already-connected socket (backpressure tests park raw
+    /// connections in the server queue and speak the protocol later).
+    pub fn from_stream(stream: TcpStream) -> Client {
+        Client { stream }
+    }
+
+    /// One request/reply round trip.
+    pub fn request(&mut self, req: &Request) -> Result<Reply> {
+        write_frame(&mut self.stream, &encode_request(req))?;
+        let payload = read_frame(&mut self.stream, MAX_REPLY_FRAME)?
+            .ok_or_else(|| anyhow!("server closed the connection"))?;
+        decode_reply(&payload)
+    }
+
+    /// FILL round trip returning the raw element bytes; BUSY and ERROR
+    /// become errors (retry policy belongs to the caller).
+    pub fn fill(&mut self, req: &FillRequest) -> Result<Vec<u8>> {
+        match self.request(&Request::Fill(req.clone()))? {
+            Reply::Ok(bytes) => Ok(bytes),
+            Reply::Busy => bail!("server busy (queue full)"),
+            Reply::Error(msg) => bail!("server error: {msg}"),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<String> {
+        match self.request(&Request::Stats)? {
+            Reply::Stats(text) => Ok(text),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.request(&Request::Shutdown)? {
+            Reply::Bye => Ok(()),
+            other => bail!("unexpected reply {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fill_request_roundtrip() {
+        let req = Request::Fill(FillRequest {
+            tenant: 0xDEAD_BEEF_0123_4567,
+            path: "c3/e1".into(),
+            gen: Generator::Threefry,
+            kind: PayloadKind::F64,
+            offset: 9_000_000_000,
+            len: 4096,
+        });
+        assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        for req in [Request::Stats, Request::Shutdown] {
+            assert_eq!(decode_request(&encode_request(&req)).unwrap(), req);
+        }
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        for rep in [
+            Reply::Ok(vec![1, 2, 3, 4]),
+            Reply::Ok(vec![]),
+            Reply::Busy,
+            Reply::Error("no such path".into()),
+            Reply::Stats("requests=3\n".into()),
+            Reply::Bye,
+        ] {
+            assert_eq!(decode_reply(&encode_reply(&rep)).unwrap(), rep);
+        }
+    }
+
+    #[test]
+    fn gen_and_kind_codes_roundtrip() {
+        for g in Generator::ALL {
+            assert_eq!(gen_from_code(gen_code(g)), Some(g));
+        }
+        assert_eq!(gen_from_code(200), None);
+        for k in PayloadKind::ALL {
+            assert_eq!(PayloadKind::from_code(k.code()), Some(k));
+            assert_eq!(PayloadKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(PayloadKind::from_code(200), None);
+        assert_eq!(PayloadKind::parse("u128"), None);
+    }
+
+    #[test]
+    fn malformed_requests_rejected() {
+        assert!(decode_request(&[]).is_err());
+        assert!(decode_request(&[0x7F]).is_err());
+        // Truncated FILL body.
+        assert!(decode_request(&[REQ_FILL, 1, 2, 3]).is_err());
+        // Trailing garbage after a well-formed FILL.
+        let mut p = encode_request(&Request::Fill(FillRequest {
+            tenant: 1,
+            path: String::new(),
+            gen: Generator::Philox,
+            kind: PayloadKind::U32,
+            offset: 0,
+            len: 1,
+        }));
+        p.push(0);
+        assert!(decode_request(&p).is_err());
+        // Trailing garbage after STATS.
+        assert!(decode_request(&[REQ_STATS, 0]).is_err());
+        // Over-long path length field.
+        let mut p = vec![REQ_FILL];
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.extend_from_slice(&u16::MAX.to_le_bytes());
+        assert!(decode_request(&p).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip_and_limits() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, 64).unwrap().unwrap(), b"");
+        assert_eq!(read_frame(&mut r, 64).unwrap(), None);
+        // Over-cap frame rejected without allocating it.
+        let mut big = Vec::new();
+        write_frame(&mut big, &[0u8; 128]).unwrap();
+        assert!(read_frame(&mut &big[..], 64).is_err());
+        // Mid-frame EOF is an error, not a clean close.
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        buf.truncate(6);
+        assert!(read_frame(&mut &buf[..], 64).is_err());
+    }
+}

@@ -1,0 +1,791 @@
+//! The serve daemon: a std-only multi-threaded TCP server whose replies
+//! are pinned byte-identical to `openrand generate --key` for the same
+//! `(key path, generator, kind, offset, len)` tuple.
+//!
+//! ## Topology
+//!
+//! One accept thread pushes connections into a **bounded**
+//! `mpsc::sync_channel`; when the queue is full the connection is shed
+//! with a typed [`Reply::Busy`] frame instead of stalling the acceptor
+//! or growing an unbounded backlog — explicit backpressure, never OOM.
+//! A fixed pool of worker threads drains the queue, one connection at a
+//! time per worker. Each worker owns its *own* [`Auto`] backend:
+//! [`crate::backend::FillBackend`] is deliberately not `Send` (the
+//! device arm is thread-confined like the PJRT client it wraps), so
+//! backends are constructed inside the worker thread and never cross it.
+//!
+//! ## Byte pinning
+//!
+//! [`StreamService::fill_words`] materializes streams in aligned
+//! [`BLOCK_WORDS`] blocks through one shared state: an LRU
+//! [`BlockCache`] plus an in-flight table that **coalesces** concurrent
+//! fills of the same block — the second requester waits on the first
+//! fill's slot instead of issuing a duplicate backend call. Because a
+//! block's bytes are a pure function of `(key, gen, block)`, hits,
+//! waits, and fresh fills are indistinguishable in the reply bytes;
+//! only the metrics differ. Runs of missing blocks that start at stream
+//! word 0 are filled through the worker's backend arm (host / par /
+//! device / auto — the §4 sharding contract makes them all identical);
+//! interior runs use the positioned serial host fill
+//! ([`Generator::boxed_at`]), since device artifacts serve only prefix
+//! fills. `rust/tests/serve.rs` holds the whole stack to the
+//! single-threaded `Stream` replay, across cache sizes including zero.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, TrySendError};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::backend::{convert, Auto, FillBackend};
+use crate::core::{Generator, Rng as _};
+use crate::dist::BoxMuller;
+use crate::stream::StreamKey;
+
+use super::cache::{BlockCache, BlockKey, BLOCK_WORDS};
+use super::metrics::Metrics;
+use super::proto::{
+    decode_request, encode_reply, read_frame, write_frame, FillRequest, PayloadKind, Reply,
+    Request, MAX_FILL_ELEMS, MAX_REQUEST_FRAME,
+};
+
+/// Serve daemon configuration (CLI `openrand serve` flags map 1:1).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Bind address; port 0 picks an ephemeral port (CI smoke uses it).
+    pub addr: String,
+    /// Worker threads (each owns one backend; one connection at a time).
+    pub workers: usize,
+    /// Bounded connection-queue depth; beyond it, BUSY is shed.
+    pub queue: usize,
+    /// LRU cache capacity in [`BLOCK_WORDS`] blocks (0 disables).
+    pub cache_blocks: usize,
+    /// Host threads inside each worker's `Auto` backend.
+    pub fill_threads: usize,
+    /// Emit a one-line metrics summary to stderr at this period.
+    pub metrics_interval: Option<Duration>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            workers: 4,
+            queue: 64,
+            cache_blocks: 1024,
+            fill_threads: 1,
+            metrics_interval: None,
+        }
+    }
+}
+
+/// Resolve a wire `(tenant, path)` pair to the effective [`StreamKey`]:
+/// the same `parse_path` grammar `generate --key` uses, rooted at the
+/// tenant seed — `root(tenant)` when `path` is empty, else
+/// `parse_path("{tenant}/{path}")`. This is what pins serve replies
+/// byte-identical to `openrand generate --key {tenant}/{path}`.
+pub fn resolve_key(tenant: u64, path: &str) -> Result<StreamKey> {
+    if path.is_empty() {
+        return Ok(StreamKey::root(tenant));
+    }
+    StreamKey::parse_path(&format!("{tenant}/{path}"))
+        .map_err(|e| anyhow!("bad key path '{path}': {e}"))
+}
+
+/// State of one in-flight block fill.
+enum SlotState {
+    Pending,
+    Ready(Arc<Vec<u32>>),
+    Failed(String),
+}
+
+/// Rendezvous for coalesced waiters on one block fill.
+struct Slot {
+    state: Mutex<SlotState>,
+    cv: Condvar,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot { state: Mutex::new(SlotState::Pending), cv: Condvar::new() }
+    }
+}
+
+struct Shared {
+    cache: BlockCache,
+    inflight: HashMap<BlockKey, Arc<Slot>>,
+}
+
+/// How the claim pass resolved one block of a request.
+enum Got {
+    /// Served from the LRU cache.
+    Hit(Arc<Vec<u32>>),
+    /// Another request is filling it — wait on its slot.
+    Wait(Arc<Slot>),
+    /// This request owns the fill (slot registered in `inflight`).
+    Own(Arc<Slot>),
+}
+
+/// The TCP-free serving core: block cache + coalescing + request
+/// decoding into bytes. The tests and bench hammer this directly;
+/// [`Server`] wraps it in the accept/worker topology.
+pub struct StreamService {
+    shared: Mutex<Shared>,
+    cache_capacity: usize,
+    metrics: Arc<Metrics>,
+}
+
+impl StreamService {
+    pub fn new(cache_blocks: usize, metrics: Arc<Metrics>) -> StreamService {
+        StreamService {
+            shared: Mutex::new(Shared {
+                cache: BlockCache::new(cache_blocks),
+                inflight: HashMap::new(),
+            }),
+            cache_capacity: cache_blocks,
+            metrics,
+        }
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// STATS reply body (counters + live cache occupancy).
+    pub fn stats_text(&self) -> String {
+        let shared = self.shared.lock().unwrap();
+        self.metrics.render(shared.cache.len(), self.cache_capacity)
+    }
+
+    /// Serve one FILL: validate, resolve the key, fetch the word span
+    /// through the cache/coalescing core, convert per the §2 contract,
+    /// and serialize little-endian. Everything that can be wrong with a
+    /// request surfaces here as an error (→ ERROR reply), never a panic.
+    pub fn serve_fill(
+        &self,
+        backend: &mut dyn FillBackend,
+        req: &FillRequest,
+    ) -> Result<Vec<u8>> {
+        if req.len > MAX_FILL_ELEMS {
+            bail!("len {} exceeds the per-request cap ({MAX_FILL_ELEMS})", req.len);
+        }
+        let wpe = req.kind.words_per_elem() as u64;
+        let first_word = req
+            .offset
+            .checked_mul(wpe)
+            .filter(|w| *w < 1 << 32)
+            .ok_or_else(|| anyhow!("offset {} is outside the 2^32-word stream", req.offset))?;
+        let nwords = req.len as u64 * wpe;
+        if first_word + nwords > 1 << 32 {
+            bail!(
+                "offset {} + len {} exceeds the 2^32-word stream period",
+                req.offset,
+                req.len
+            );
+        }
+        let key = resolve_key(req.tenant, &req.path)?;
+        let mut words = vec![0u32; nwords as usize];
+        self.fill_words(backend, req.gen, key, first_word, &mut words)?;
+        let n = req.len as usize;
+        let mut out = Vec::with_capacity(n * req.kind.bytes_per_elem());
+        match req.kind {
+            PayloadKind::U32 => {
+                for w in &words {
+                    out.extend_from_slice(&w.to_le_bytes());
+                }
+            }
+            PayloadKind::U64 => {
+                let mut tmp = vec![0u64; n];
+                convert::u64s(&words, &mut tmp);
+                for v in &tmp {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            PayloadKind::F32 => {
+                let mut tmp = vec![0.0f32; n];
+                convert::f32s(&words, &mut tmp);
+                for v in &tmp {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            PayloadKind::F64 => {
+                let mut tmp = vec![0.0f64; n];
+                convert::f64s(&words, &mut tmp);
+                for v in &tmp {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+            PayloadKind::Normal => {
+                // Standard normal, the Box–Muller cosine branch —
+                // sample i ← words 4i..4i+4, exactly `generate --dist
+                // normal`'s consumption.
+                let mut tmp = vec![0.0f64; n];
+                BoxMuller::standard().transform_words(&words, &mut tmp);
+                for v in &tmp {
+                    out.extend_from_slice(&v.to_le_bytes());
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    /// Fetch stream words `first_word .. first_word + out.len()` of
+    /// `key`'s stream under `gen`, through the block cache with
+    /// coalescing. The caller has validated the span against the 2^32
+    /// stream period.
+    pub fn fill_words(
+        &self,
+        backend: &mut dyn FillBackend,
+        gen: Generator,
+        key: StreamKey,
+        first_word: u64,
+        out: &mut [u32],
+    ) -> Result<()> {
+        if out.is_empty() {
+            return Ok(());
+        }
+        let m = &*self.metrics;
+        if self.cache_capacity == 0 {
+            // Passthrough mode: no cache, no coalescing — one direct
+            // fill per request (byte-identical by the fill contracts).
+            Metrics::inc(&m.backend_fills);
+            return fill_span(backend, gen, key, first_word, out);
+        }
+        let bw = BLOCK_WORDS as u64;
+        let b0 = (first_word / bw) as u32;
+        let b1 = ((first_word + out.len() as u64 - 1) / bw) as u32;
+
+        // Claim pass: classify every covering block under one lock so
+        // concurrent requests agree on exactly one owner per block.
+        let mut plan: Vec<(u32, Got)> = Vec::with_capacity((b1 - b0 + 1) as usize);
+        {
+            let mut shared = self.shared.lock().unwrap();
+            for b in b0..=b1 {
+                let bk = BlockKey { key, gen, block: b };
+                let got = if let Some(data) = shared.cache.get(&bk) {
+                    Metrics::inc(&m.cache_hits);
+                    Got::Hit(data)
+                } else if let Some(slot) = shared.inflight.get(&bk) {
+                    Metrics::inc(&m.coalesced);
+                    Got::Wait(Arc::clone(slot))
+                } else {
+                    Metrics::inc(&m.cache_misses);
+                    let slot = Arc::new(Slot::new());
+                    shared.inflight.insert(bk, Arc::clone(&slot));
+                    Got::Own(slot)
+                };
+                plan.push((b, got));
+            }
+        }
+
+        // Fill owned blocks in maximal contiguous runs (one backend /
+        // positioned fill per run, not per block).
+        let owned: Vec<u32> = plan
+            .iter()
+            .filter_map(|(b, g)| matches!(g, Got::Own(_)).then_some(*b))
+            .collect();
+        let mut filled: HashMap<u32, Arc<Vec<u32>>> = HashMap::new();
+        let mut fill_err: Option<anyhow::Error> = None;
+        let mut i = 0;
+        while i < owned.len() {
+            let mut j = i;
+            while j + 1 < owned.len() && owned[j + 1] == owned[j] + 1 {
+                j += 1;
+            }
+            let (rs, re) = (owned[i], owned[j]);
+            let span_first = rs as u64 * bw;
+            let mut buf = vec![0u32; (re - rs + 1) as usize * BLOCK_WORDS];
+            Metrics::inc(&m.backend_fills);
+            match fill_span(backend, gen, key, span_first, &mut buf) {
+                Ok(()) => {
+                    for (k, b) in (rs..=re).enumerate() {
+                        let chunk = buf[k * BLOCK_WORDS..(k + 1) * BLOCK_WORDS].to_vec();
+                        filled.insert(b, Arc::new(chunk));
+                    }
+                }
+                Err(e) => {
+                    fill_err = Some(e);
+                    break;
+                }
+            }
+            i = j + 1;
+        }
+
+        // Publish: cache + un-register under the shared lock, then wake
+        // waiters slot by slot (lock order is always shared → slot, and
+        // waiters never hold the shared lock — no deadlock).
+        {
+            let mut shared = self.shared.lock().unwrap();
+            for &b in &owned {
+                let bk = BlockKey { key, gen, block: b };
+                if let Some(data) = filled.get(&b) {
+                    let ev = shared.cache.insert(bk, Arc::clone(data));
+                    Metrics::add(&m.evictions, ev as u64);
+                }
+                shared.inflight.remove(&bk);
+            }
+        }
+        for (b, got) in &plan {
+            if let Got::Own(slot) = got {
+                let mut state = slot.state.lock().unwrap();
+                *state = match filled.get(b) {
+                    Some(data) => SlotState::Ready(Arc::clone(data)),
+                    None => SlotState::Failed(
+                        fill_err
+                            .as_ref()
+                            .map(|e| format!("{e:#}"))
+                            .unwrap_or_else(|| "fill aborted".into()),
+                    ),
+                };
+                slot.cv.notify_all();
+            }
+        }
+        if let Some(e) = fill_err {
+            return Err(e);
+        }
+
+        // Assemble the request span from hit / waited / freshly filled
+        // blocks.
+        for (b, got) in plan {
+            let data = match got {
+                Got::Hit(d) => d,
+                Got::Wait(slot) => await_slot(&slot)?,
+                Got::Own(_) => Arc::clone(filled.get(&b).expect("owned block filled")),
+            };
+            let block_first = b as u64 * bw;
+            let lo = first_word.max(block_first);
+            let hi = (first_word + out.len() as u64).min(block_first + bw);
+            out[(lo - first_word) as usize..(hi - first_word) as usize]
+                .copy_from_slice(&data[(lo - block_first) as usize..(hi - block_first) as usize]);
+        }
+        Ok(())
+    }
+}
+
+/// One span fill: a prefix span goes through the backend arm (host /
+/// par / device / auto — all byte-identical by the backend contract);
+/// an interior span uses the positioned serial host fill, since device
+/// artifacts only serve stream prefixes.
+fn fill_span(
+    backend: &mut dyn FillBackend,
+    gen: Generator,
+    key: StreamKey,
+    first_word: u64,
+    out: &mut [u32],
+) -> Result<()> {
+    if first_word == 0 {
+        backend.fill_u32(gen, key.seed(), key.ctr(), out)
+    } else {
+        gen.boxed_at(key.seed(), key.ctr(), first_word as u32).fill_u32(out);
+        Ok(())
+    }
+}
+
+/// Wait for a coalesced fill to publish (bounded — a wedged owner
+/// surfaces as an ERROR reply, not a hung connection).
+fn await_slot(slot: &Slot) -> Result<Arc<Vec<u32>>> {
+    let mut state = slot.state.lock().unwrap();
+    loop {
+        match &*state {
+            SlotState::Ready(data) => return Ok(Arc::clone(data)),
+            SlotState::Failed(msg) => bail!("coalesced fill failed: {msg}"),
+            SlotState::Pending => {
+                let (next, timeout) =
+                    slot.cv.wait_timeout(state, Duration::from_secs(60)).unwrap();
+                state = next;
+                if timeout.timed_out() && matches!(&*state, SlotState::Pending) {
+                    bail!("timed out waiting for a coalesced fill");
+                }
+            }
+        }
+    }
+}
+
+/// A running serve daemon (accept thread + worker pool + optional
+/// metrics reporter). Dropping without [`Server::shutdown`] /
+/// [`Server::run`] detaches the threads; tests always join.
+pub struct Server {
+    addr: SocketAddr,
+    service: Arc<StreamService>,
+    metrics: Arc<Metrics>,
+    stop: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    reporter: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving. Returns once the listener is live (the
+    /// resolved address is [`Server::local_addr`] — bind to port 0 for
+    /// an ephemeral port).
+    pub fn start(cfg: ServeConfig) -> Result<Server> {
+        if cfg.workers == 0 {
+            bail!("serve needs at least one worker");
+        }
+        if cfg.queue == 0 {
+            // sync_channel(0) is a rendezvous channel — every accept
+            // would block on a worker, which is stalling, not shedding.
+            bail!("serve queue depth must be at least 1");
+        }
+        if cfg.fill_threads == 0 {
+            bail!("fill threads must be positive");
+        }
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let metrics = Arc::new(Metrics::new());
+        let service = Arc::new(StreamService::new(cfg.cache_blocks, Arc::clone(&metrics)));
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(cfg.queue);
+        let rx = Arc::new(Mutex::new(rx));
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for _ in 0..cfg.workers {
+            let rx = Arc::clone(&rx);
+            let service = Arc::clone(&service);
+            let stop = Arc::clone(&stop);
+            let fill_threads = cfg.fill_threads;
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&rx, &service, &stop, addr, fill_threads)
+            }));
+        }
+
+        let accept = {
+            let metrics = Arc::clone(&metrics);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                for conn in listener.incoming() {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(conn) = conn else { continue };
+                    // Gauge before try_send so a fast worker's decrement
+                    // can never observe the counter at zero.
+                    Metrics::inc(&metrics.queue_depth);
+                    match tx.try_send(conn) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(mut conn)) => {
+                            Metrics::dec(&metrics.queue_depth);
+                            Metrics::inc(&metrics.shed);
+                            // Best-effort typed shed; the client sees
+                            // BUSY instead of a hang or a reset.
+                            let _ = conn.set_nodelay(true);
+                            let _ = write_frame(&mut conn, &encode_reply(&Reply::Busy));
+                            let _ = conn.flush();
+                        }
+                        Err(TrySendError::Disconnected(_)) => {
+                            Metrics::dec(&metrics.queue_depth);
+                            break;
+                        }
+                    }
+                }
+                // Dropping tx lets the workers drain the queue and exit.
+            })
+        };
+
+        let reporter = cfg.metrics_interval.map(|period| {
+            let service = Arc::clone(&service);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut elapsed = Duration::ZERO;
+                let tick = Duration::from_millis(50);
+                while !stop.load(Ordering::SeqCst) {
+                    std::thread::sleep(tick);
+                    elapsed += tick;
+                    if elapsed >= period {
+                        elapsed = Duration::ZERO;
+                        eprintln!("{}", service.metrics().summary_line());
+                    }
+                }
+            })
+        });
+
+        Ok(Server {
+            addr,
+            service,
+            metrics,
+            stop,
+            accept: Some(accept),
+            workers,
+            reporter,
+        })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    pub fn service(&self) -> &Arc<StreamService> {
+        &self.service
+    }
+
+    /// Block until the daemon stops (a client SHUTDOWN request, or
+    /// [`Server::shutdown`] from another thread).
+    pub fn join(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(h) = self.reporter.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting, drain, and join all threads. Idempotent.
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        poke(self.addr);
+        self.join();
+    }
+
+    /// Run until a client SHUTDOWN arrives (the CLI foreground mode).
+    pub fn run(mut self) {
+        self.join();
+    }
+}
+
+/// Wake a listener blocked in `accept` so it can observe the stop flag.
+fn poke(addr: SocketAddr) {
+    let _ = TcpStream::connect(addr);
+}
+
+fn worker_loop(
+    rx: &Mutex<Receiver<TcpStream>>,
+    service: &StreamService,
+    stop: &AtomicBool,
+    addr: SocketAddr,
+    fill_threads: usize,
+) {
+    // The backend lives and dies inside this thread (`FillBackend` is
+    // not `Send`; the device arm is thread-confined).
+    let mut backend = Auto::new(fill_threads);
+    let mut last_pool = (0u64, 0u64);
+    loop {
+        // Holding the receiver lock while blocked in `recv` serializes
+        // dequeues across workers; each worker releases it the moment a
+        // connection (or disconnect) arrives.
+        let conn = { rx.lock().unwrap().recv() };
+        let Ok(conn) = conn else { break };
+        Metrics::dec(&service.metrics().queue_depth);
+        handle_conn(service, &mut backend, conn, stop, addr);
+        // Satellite observability: fold the device param-pool deltas
+        // into the shared counters after every connection.
+        if let Some((hits, uploads)) = backend.device_pool_stats() {
+            let m = service.metrics();
+            Metrics::add(&m.pool_hits, hits - last_pool.0);
+            Metrics::add(&m.pool_uploads, uploads - last_pool.1);
+            last_pool = (hits, uploads);
+        }
+    }
+}
+
+/// Serve one connection until it closes, errors, times out, or issues
+/// SHUTDOWN.
+fn handle_conn(
+    service: &StreamService,
+    backend: &mut Auto,
+    mut conn: TcpStream,
+    stop: &AtomicBool,
+    addr: SocketAddr,
+) {
+    let m = Arc::clone(service.metrics());
+    let _ = conn.set_nodelay(true);
+    // A worker parked on a dead connection is a denial of service on a
+    // small pool; bound the idle read.
+    let _ = conn.set_read_timeout(Some(Duration::from_secs(30)));
+    loop {
+        let payload = match read_frame(&mut conn, MAX_REQUEST_FRAME) {
+            Ok(Some(p)) => p,
+            // Clean close, idle timeout, or transport error: drop the
+            // connection; per-stream state lives server-side keyed by
+            // the request tuple, so nothing is corrupted.
+            Ok(None) | Err(_) => return,
+        };
+        let req = match decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                // A malformed frame means the framing itself is suspect;
+                // answer once and hang up rather than desync.
+                Metrics::inc(&m.errors);
+                let _ = write_frame(&mut conn, &encode_reply(&Reply::Error(format!("{e:#}"))));
+                return;
+            }
+        };
+        let ok = match req {
+            Request::Fill(f) => {
+                Metrics::inc(&m.requests);
+                match service.serve_fill(backend, &f) {
+                    Ok(bytes) => {
+                        Metrics::add(&m.bytes_out, bytes.len() as u64);
+                        write_frame(&mut conn, &encode_reply(&Reply::Ok(bytes)))
+                    }
+                    Err(e) => {
+                        Metrics::inc(&m.errors);
+                        write_frame(&mut conn, &encode_reply(&Reply::Error(format!("{e:#}"))))
+                    }
+                }
+            }
+            Request::Stats => {
+                write_frame(&mut conn, &encode_reply(&Reply::Stats(service.stats_text())))
+            }
+            Request::Shutdown => {
+                let _ = write_frame(&mut conn, &encode_reply(&Reply::Bye));
+                stop.store(true, Ordering::SeqCst);
+                poke(addr);
+                return;
+            }
+        };
+        if ok.is_err() {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostSerial;
+    use crate::core::fill;
+
+    fn service(cache_blocks: usize) -> StreamService {
+        StreamService::new(cache_blocks, Arc::new(Metrics::new()))
+    }
+
+    fn req(kind: PayloadKind, offset: u64, len: u32) -> FillRequest {
+        FillRequest { tenant: 7, path: "c3/e1".into(), gen: Generator::Philox, kind, offset, len }
+    }
+
+    /// Reference bytes: a fresh serial engine fill of the same span.
+    fn reference(r: &FillRequest) -> Vec<u8> {
+        let key = resolve_key(r.tenant, &r.path).unwrap();
+        let wpe = r.kind.words_per_elem();
+        let n = r.len as usize;
+        let mut words = vec![0u32; n * wpe];
+        let mut rng = r.gen.boxed_at(key.seed(), key.ctr(), (r.offset * wpe as u64) as u32);
+        rng.fill_u32(&mut words);
+        let mut out = Vec::new();
+        match r.kind {
+            PayloadKind::U32 => {
+                words.iter().for_each(|w| out.extend_from_slice(&w.to_le_bytes()))
+            }
+            PayloadKind::U64 => {
+                let mut t = vec![0u64; n];
+                convert::u64s(&words, &mut t);
+                t.iter().for_each(|v| out.extend_from_slice(&v.to_le_bytes()));
+            }
+            PayloadKind::F32 => {
+                let mut t = vec![0.0f32; n];
+                convert::f32s(&words, &mut t);
+                t.iter().for_each(|v| out.extend_from_slice(&v.to_le_bytes()));
+            }
+            PayloadKind::F64 => {
+                let mut t = vec![0.0f64; n];
+                convert::f64s(&words, &mut t);
+                t.iter().for_each(|v| out.extend_from_slice(&v.to_le_bytes()));
+            }
+            PayloadKind::Normal => {
+                let mut t = vec![0.0f64; n];
+                BoxMuller::standard().transform_words(&words, &mut t);
+                t.iter().for_each(|v| out.extend_from_slice(&v.to_le_bytes()));
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn serve_fill_matches_reference_all_kinds() {
+        for cache_blocks in [0usize, 2, 64] {
+            let svc = service(cache_blocks);
+            for kind in PayloadKind::ALL {
+                for (offset, len) in [(0u64, 16u32), (5, 100), (4096, 7), (10_000, 3000)] {
+                    let r = req(kind, offset, len);
+                    let got = svc.serve_fill(&mut HostSerial, &r).unwrap();
+                    assert_eq!(
+                        got,
+                        reference(&r),
+                        "kind={} offset={offset} len={len} cache={cache_blocks}",
+                        kind.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cached_refetch_is_byte_identical_and_hits() {
+        let svc = service(64);
+        let r = req(PayloadKind::U32, 3, 9000);
+        let first = svc.serve_fill(&mut HostSerial, &r).unwrap();
+        let misses = svc.metrics().cache_misses.load(Ordering::Relaxed);
+        assert!(misses > 0);
+        let second = svc.serve_fill(&mut HostSerial, &r).unwrap();
+        assert_eq!(first, second);
+        assert_eq!(svc.metrics().cache_misses.load(Ordering::Relaxed), misses);
+        assert!(svc.metrics().cache_hits.load(Ordering::Relaxed) >= 3);
+    }
+
+    #[test]
+    fn prefix_words_match_backend_prefix_fill() {
+        // Offset-0 spans must equal a plain backend prefix fill — the
+        // `generate --key` pinning at the word level.
+        let svc = service(16);
+        let key = resolve_key(7, "c3/e1").unwrap();
+        let mut got = vec![0u32; 6000];
+        svc.fill_words(&mut HostSerial, Generator::Philox, key, 0, &mut got).unwrap();
+        let mut want = vec![0u32; 6000];
+        fill::fill_u32_gen(Generator::Philox, key.seed(), key.ctr(), &mut want);
+        assert_eq!(got, want);
+        // First word of 7/c3/e1 is the cross-layer KAT value.
+        assert_eq!(got[0], 0x9022_9F37);
+    }
+
+    #[test]
+    fn validation_rejects_bad_requests() {
+        let svc = service(4);
+        let mut b = HostSerial;
+        // Over the per-request cap.
+        let r = FillRequest { len: MAX_FILL_ELEMS + 1, ..req(PayloadKind::U32, 0, 0) };
+        assert!(svc.serve_fill(&mut b, &r).is_err());
+        // Past the stream period (f64: 2 words/elem).
+        let r = req(PayloadKind::F64, 1 << 31, 1);
+        assert!(svc.serve_fill(&mut b, &r).is_err());
+        // Bad path.
+        let r = FillRequest { path: "x9".into(), ..req(PayloadKind::U32, 0, 1) };
+        assert!(svc.serve_fill(&mut b, &r).is_err());
+        // Empty request is fine (zero bytes).
+        let r = req(PayloadKind::U32, 0, 0);
+        assert_eq!(svc.serve_fill(&mut b, &r).unwrap(), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn last_block_of_stream_serves() {
+        // The span ending exactly at word 2^32 must work.
+        let svc = service(4);
+        let r = req(PayloadKind::U32, (1u64 << 32) - 64, 64);
+        let got = svc.serve_fill(&mut HostSerial, &r).unwrap();
+        assert_eq!(got, reference(&r));
+        // One element past it must not.
+        let r = req(PayloadKind::U32, (1u64 << 32) - 64, 65);
+        assert!(svc.serve_fill(&mut HostSerial, &r).is_err());
+    }
+
+    #[test]
+    fn resolve_key_matches_cli_grammar() {
+        assert_eq!(resolve_key(7, "").unwrap(), StreamKey::root(7));
+        assert_eq!(
+            resolve_key(7, "c3/e1").unwrap(),
+            StreamKey::parse_path("7/c3/e1").unwrap()
+        );
+        assert!(resolve_key(7, "bogus").is_err());
+    }
+}

@@ -328,8 +328,8 @@ pub fn fill_f64_key(
 ///   `pos..pos + n` host-side via the engine's block path.
 /// * **Distribution sampling** — [`Stream::sample`] (cursor-advancing)
 ///   and [`Stream::sample_fill`] (key-addressed bulk, backend-routed
-///   for fixed-pattern samplers) collapse the old
-///   `sample`/`sample_fill`/`sample_fill_backend` triplet.
+///   for fixed-pattern samplers) are the one distribution surface (the
+///   per-sampler backend spellings they replaced are gone).
 ///
 /// The cursor (trait) and key (inherent) surfaces are deliberately
 /// distinct operations: the first continues the stream, the second

@@ -20,7 +20,9 @@ fn openrand(args: &[&str]) -> (String, String, bool) {
 fn help_lists_commands_and_options() {
     let (stdout, _, ok) = openrand(&["--help"]);
     assert!(ok);
-    for needle in ["generate", "brownian", "stats", "repro", "artifacts", "--generator", "--seed"] {
+    for needle in
+        ["generate", "brownian", "stats", "repro", "artifacts", "serve", "fetch", "--generator", "--seed"]
+    {
         assert!(stdout.contains(needle), "missing {needle}");
     }
 }
@@ -51,8 +53,8 @@ fn generate_differs_across_generators_and_ctrs() {
 }
 
 #[test]
-fn generate_block_fill_bitwise_matches_word_at_a_time() {
-    // The tentpole contract, end to end: --block-fill output is byte
+fn generate_backend_par_bitwise_matches_word_at_a_time() {
+    // The block-fill contract, end to end: --backend par output is byte
     // identical to the plain path for every format, and independent of
     // --threads.
     for format in ["u32", "u64", "f32", "f64"] {
@@ -60,7 +62,7 @@ fn generate_block_fill_bitwise_matches_word_at_a_time() {
         let (base, _, ok) = openrand(&base_args);
         assert!(ok, "{format}");
         let mut one_args = base_args.to_vec();
-        one_args.push("--block-fill");
+        one_args.extend_from_slice(&["--backend", "par"]);
         let (one, _, ok1) = openrand(&one_args);
         assert!(ok1, "{format}");
         let mut par_args = one_args.clone();
@@ -75,15 +77,15 @@ fn generate_block_fill_bitwise_matches_word_at_a_time() {
     for generator in ["threefry", "squares", "tyche"] {
         let (plain, _, _) = openrand(&["generate", "--generator", generator, "--n", "17"]);
         let (filled, _, ok) = openrand(&[
-            "generate", "--generator", generator, "--n", "17", "--block-fill", "--threads", "3",
+            "generate", "--generator", generator, "--n", "17", "--backend", "par", "--threads", "3",
         ]);
         assert!(ok, "{generator}");
         assert_eq!(plain, filled, "{generator}");
     }
-    // --block-fill is a raw-format path; combining it with --dist errors.
-    let (_, err, ok) = openrand(&["generate", "--dist", "normal", "--block-fill"]);
+    // Backends are a raw-format path; combining one with --dist errors.
+    let (_, err, ok) = openrand(&["generate", "--dist", "normal", "--backend", "par"]);
     assert!(!ok);
-    assert!(err.contains("block-fill"), "{err}");
+    assert!(err.contains("--backend"), "{err}");
 }
 
 #[test]
@@ -189,14 +191,16 @@ fn generate_key_conflicts_and_errors() {
 }
 
 #[test]
-fn generate_block_fill_warns_deprecated() {
+fn generate_block_fill_alias_removed() {
+    // The PR-2 `--block-fill` spelling (deprecated in PR 5) is gone:
+    // an unknown option is a hard parse error, not a silent ignore.
     let (_, err, ok) = openrand(&["generate", "--n", "4", "--block-fill"]);
-    assert!(ok, "{err}");
-    assert!(err.contains("deprecated"), "expected a deprecation warning, got: {err}");
-    // The supported spelling stays silent.
+    assert!(!ok);
+    assert!(err.contains("unknown option"), "{err}");
+    // The supported spelling works and stays silent on stderr.
     let (_, err, ok) = openrand(&["generate", "--n", "4", "--backend", "par"]);
     assert!(ok);
-    assert!(!err.contains("deprecated"), "{err}");
+    assert!(err.is_empty(), "{err}");
 }
 
 #[test]
