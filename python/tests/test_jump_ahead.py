@@ -1,0 +1,115 @@
+"""Cross-layer KATs for the jump-ahead contract (`CounterRng::advance`).
+
+The Rust engines implement `advance(n)` / `jump()` as O(1) counter
+arithmetic: word position `p` of stream `(seed, ctr)` lives in block
+`p // W` at lane `p % W`, with 4x32 block ids widened past u32 as
+`[j_lo, ctr, j_hi, 0]`. These tests pin that address arithmetic against
+the jnp oracle at the exact positions the Rust unit suite pins
+(`rust/src/core/{philox,threefry,squares,tyche}.rs` and
+`rust/src/stats/interstream.rs` assert the same hex literals), so a
+drifted counter layout on either layer breaks one side's KAT.
+
+Strides covered: the per-engine `jump()` stride (2^33 for the 4x32
+engines, 2^16 for the 2x32/Squares engines), a beyond-2^32-words
+position (the u64 widening), the short-period wrap (2x32: 2^33 words,
+Squares: 2^32 words), and Tyche's O(n) stepping `advance`.
+"""
+
+import numpy as np
+
+from compile.kernels import common as cm
+from compile.kernels import ref
+
+U32 = np.uint32
+
+# One literal per claim; the Rust side pins the identical values.
+PHILOX_S7_C1_JUMP_2_33 = 0x3A294131  # block [0x80000000, 1, 0, 0] word 0
+PHILOX_S7_C1_WORD_2_34P2 = 0x275A0C0F  # block [0, 1, 1, 0] word 2
+PHILOX_S7_C1_WORD_9 = 0x498FF58B
+PHILOX2_S7_C1_JUMP_2_16 = 0x44EF38AA  # block [0x8000, 1] word 0
+PHILOX2_S7_C1_WORD_5 = 0xB92B6CAC  # == word 2^33 + 5 (period wrap)
+THREEFRY_S2_C6_JUMP_2_33 = 0xDFC693FF  # block [0x80000000, 6, 0, 0] word 0
+THREEFRY_S2_C6_WORD_2_34 = 0x31ADC0A0  # block [0, 6, 1, 0] word 0
+THREEFRY2_S5_C3_JUMP_2_16 = 0xFB1254E1  # block [0x8000, 3] word 0
+SQUARES_S7_C1_JUMP_2_16 = 0x853F0F97
+SQUARES_S7_C1_WORD_3 = 0x7900D050  # == word 2^32 + 3 (period wrap)
+TYCHE_S7_C1_WORD_5 = 0x6912D082
+TYCHE_I_S7_C1_WORD_5 = 0xC1170F7E
+
+# InterStream<Philox> over root(7), K = 4 children, stride 1: round q
+# emits word q of child s = derive_child_seed(7, 0, s) in s order.
+INTERSTREAM_PHILOX_ROOT7_K4_ROUND0 = [0xEF16B664, 0xF1282995, 0x89A68AC1, 0x079F41FA]
+INTERSTREAM_PHILOX_ROOT7_K4_ROUND1_PREFIX = [0x2EDDD51C, 0xB2BDD7E0]
+
+
+def philox_block(j, ctr, seed):
+    """Philox4x32 block at 64-bit block id j — the widened counter layout."""
+    blk = np.array([j & 0xFFFF_FFFF, ctr, j >> 32, 0], U32)
+    return ref.philox4x32(blk, np.array(cm.split_seed(seed), U32))
+
+
+def threefry_block(j, ctr, seed):
+    blk = np.array([j & 0xFFFF_FFFF, ctr, j >> 32, 0], U32)
+    lo, hi = cm.split_seed(seed)
+    return ref.threefry4x32(blk, np.array([lo, hi, 0, 0], U32))
+
+
+def test_philox_jump_kats():
+    # jump() = advance(2^33 words) = 2^31 blocks.
+    assert int(philox_block(1 << 31, 1, 7)[0]) == PHILOX_S7_C1_JUMP_2_33
+    # Past 2^32 words: position 2^34 + 2 -> block 2^32 (j_hi = 1), lane 2.
+    assert int(philox_block(1 << 32, 1, 7)[2]) == PHILOX_S7_C1_WORD_2_34P2
+    # Small advance agrees with the sequential stream oracle.
+    assert int(ref.philox4x32_stream(7, 1, 10)[9]) == PHILOX_S7_C1_WORD_9
+    # The widened layout is bit-identical to the legacy [j, ctr, 0, 0]
+    # layout for every block id below 2^32 (zero stream drift).
+    legacy = ref.philox4x32_stream(7, 1, 8)
+    for p in range(8):
+        assert int(philox_block(p // 4, 1, 7)[p % 4]) == int(legacy[p])
+
+
+def test_threefry_jump_kats():
+    assert int(threefry_block(1 << 31, 6, 2)[0]) == THREEFRY_S2_C6_JUMP_2_33
+    assert int(threefry_block(1 << 32, 6, 2)[0]) == THREEFRY_S2_C6_WORD_2_34
+    legacy = ref.threefry4x32_stream(2, 6, 8)
+    for p in range(8):
+        assert int(threefry_block(p // 4, 6, 2)[p % 4]) == int(legacy[p])
+
+
+def test_2x32_jump_and_period_wrap_kats():
+    # jump() = advance(2^16 words) = block 2^15, lane 0.
+    got = ref.philox2x32_stream(7, 1, (1 << 16) + 1)
+    assert int(got[1 << 16]) == PHILOX2_S7_C1_JUMP_2_16
+    # The 2x32 stream period is 2^33 words; advance wraps mod it, so
+    # word 2^33 + 5 must equal word 5 — the Rust advance() KAT target.
+    assert int(got[5]) == PHILOX2_S7_C1_WORD_5
+    lo, hi = cm.split_seed(5)
+    tf = ref.threefry2x32(np.array([0x8000, 3], U32), np.array([lo, hi], U32))
+    assert int(tf[0]) == THREEFRY2_S5_C3_JUMP_2_16
+
+
+def test_squares_jump_and_wrap_kats():
+    key = np.uint64(cm.squares_key(7))
+    c = np.uint64((1 << 32) | (1 << 16))  # ctr 1, low-half position 2^16
+    assert int(ref.squares32(c, key)) == SQUARES_S7_C1_JUMP_2_16
+    # Squares' per-stream period is 2^32 words (the low counter half);
+    # word 2^32 + 3 wraps to word 3.
+    assert int(ref.squares_stream(7, 1, 4)[3]) == SQUARES_S7_C1_WORD_3
+
+
+def test_tyche_advance_is_exact_stepping():
+    # Tyche has no O(1) skip; advance(n) is n mixes, so word 5 after
+    # advance(5) is just the sequential stream's word 5.
+    assert int(ref.tyche_stream_api(7, 1, 6)[5]) == TYCHE_S7_C1_WORD_5
+    assert int(ref.tyche_stream_api(7, 1, 6, inverse=True)[5]) == TYCHE_I_S7_C1_WORD_5
+
+
+def test_interstream_interleaving_kat():
+    # The inter-stream battery's merge order: round q emits word q of
+    # child s for s = 0..K-1. Mirrors interstream.rs's KAT test.
+    k = 4
+    children = [cm.derive_child_seed(7, 0, s) for s in range(k)]
+    round0 = [int(ref.philox4x32_stream(cs, 0, 1)[0]) for cs in children]
+    assert round0 == INTERSTREAM_PHILOX_ROOT7_K4_ROUND0
+    round1 = [int(ref.philox4x32_stream(cs, 0, 2)[1]) for cs in children[:2]]
+    assert round1 == INTERSTREAM_PHILOX_ROOT7_K4_ROUND1_PREFIX

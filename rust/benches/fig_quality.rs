@@ -1,0 +1,209 @@
+//! fig_quality — jump-ahead cost + the inter-stream correlation battery.
+//!
+//! Two tables for the quality/skip-ahead story:
+//!
+//! 1. **Jump-ahead cost**: ns to `advance(n)` far into a stream (plus
+//!    one draw), for every engine that offers sub-linear skip-ahead —
+//!    the counter engines (O(1) counter arithmetic), PCG32/LCG64
+//!    (O(log n) [`lcg_skip`]), SplitMix64 (O(1) Weyl multiply) and
+//!    xoshiro256++'s fixed-stride polynomial `jump()`. Tyche has no
+//!    sub-linear skip (`JUMP_LOG2 = None`) and is timed at a small,
+//!    honest `n` so the O(n) cost is visible, not hidden.
+//! 2. **Inter-stream battery**: `stats::interstream` — the full
+//!    single-stream suite over a round-robin interleave of K
+//!    `StreamKey::child` streams, each word addressed by jump-ahead.
+//!    Asserted zero failures for every engine at every K (this is the
+//!    bench-side acceptance gate for `stats --inter-stream`).
+//!
+//! ```bash
+//! cargo bench --bench fig_quality          # full
+//! OPENRAND_BENCH_QUICK=1 cargo bench --bench fig_quality
+//! ```
+
+use openrand::baseline::{Lcg64, Pcg32, SplitMix64, Xoshiro256pp};
+use openrand::bench::harness::black_box;
+use openrand::bench::{Bencher, Series};
+use openrand::core::traits::CounterRng;
+use openrand::core::{Philox, Philox2x32, Rng, Squares, Threefry, Threefry2x32, Tyche, TycheI};
+use openrand::stats::interstream::run_inter_stream_suite;
+use openrand::stats::suite::{TestResult, Verdict};
+use std::time::Instant;
+
+/// Far enough that an accidental O(n) implementation would visibly hang
+/// (2^40 words), with a ragged offset so block-aligned shortcuts can't
+/// fake it.
+const FAR: u64 = (1 << 40) + 12_345;
+
+fn bench_advance(b: &Bencher, name: &str, mut f: impl FnMut() -> u32) -> f64 {
+    let r = b.run(name, 1, || {
+        black_box(f());
+    });
+    eprintln!("  {}", r.summary());
+    r.median_ns
+}
+
+fn counter_advance<G: CounterRng>(b: &Bencher, n: u64) -> f64 {
+    bench_advance(b, &format!("advance/{}", G::NAME), || {
+        let mut g = G::new(0xF1C5, 1);
+        g.advance(n);
+        g.next_u32()
+    })
+}
+
+fn jump_rows(b: &Bencher) -> Vec<(&'static str, f64)> {
+    let mut rows = vec![
+        ("philox", counter_advance::<Philox>(b, FAR)),
+        ("philox2x32", counter_advance::<Philox2x32>(b, FAR)),
+        ("threefry", counter_advance::<Threefry>(b, FAR)),
+        ("threefry2x32", counter_advance::<Threefry2x32>(b, FAR)),
+        ("squares", counter_advance::<Squares>(b, FAR)),
+    ];
+    rows.push((
+        "pcg32",
+        bench_advance(b, "advance/pcg32", || {
+            let mut g = Pcg32::new(0xF1C5, 54);
+            g.advance(FAR);
+            g.next_u32()
+        }),
+    ));
+    rows.push((
+        "lcg64",
+        bench_advance(b, "advance/lcg64", || {
+            let mut g = Lcg64::new(0xF1C5);
+            g.advance(FAR);
+            g.next_u32()
+        }),
+    ));
+    rows.push((
+        "splitmix64",
+        bench_advance(b, "advance/splitmix64", || {
+            let mut g = SplitMix64::new(0xF1C5);
+            g.advance(FAR);
+            g.next_u32()
+        }),
+    ));
+    rows.push((
+        "xoshiro256pp",
+        bench_advance(b, "jump/xoshiro256pp (fixed 2^128)", || {
+            let mut g = Xoshiro256pp::new(0xF1C5);
+            g.jump();
+            g.next_u32()
+        }),
+    ));
+    // Tyche: O(n) stepping only — timed at 4096 words so the linear
+    // cost shows as ns/4k-words, not an hour-long hang.
+    rows.push((
+        "tyche (O(n), n=4k)",
+        bench_advance(b, "advance/tyche (O(n), n=4096)", || {
+            let mut g = Tyche::new(0xF1C5, 1);
+            g.advance(4096);
+            g.next_u32()
+        }),
+    ));
+    rows
+}
+
+fn battery_row(engine: &str, results: &[TestResult], wall_s: f64) -> (usize, usize) {
+    let fails = results.iter().filter(|r| r.verdict() == Verdict::Fail).count();
+    let susp = results.iter().filter(|r| r.verdict() == Verdict::Suspicious).count();
+    let min_p = results.iter().map(|r| r.p).fold(1.0f64, f64::min);
+    let words: usize = results.iter().map(|r| r.words_used).sum();
+    println!(
+        "  {:<22} {:>2} tests  {fails} failures  {susp} suspicious  min-p={min_p:<9.2e} {:>9} words/s",
+        engine,
+        results.len(),
+        openrand::util::format::si(words as f64 / wall_s)
+    );
+    (fails, susp)
+}
+
+fn main() {
+    let b = Bencher::from_env();
+    let quick = std::env::var("OPENRAND_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+
+    // ── Table 1: jump-ahead cost ─────────────────────────────────────
+    eprintln!("fig_quality: advance({FAR}) + 1 draw, ns (engine re-created each sample)");
+    let rows = jump_rows(&b);
+    let mut fig = Series::new(
+        "Fig Q1 — jump-ahead cost (ns per far advance + draw)",
+        "generator",
+        "ns",
+        (0..rows.len()).map(|i| i as f64).collect(),
+    );
+    fig.push("advance_ns", rows.iter().map(|(_, ns)| *ns).collect());
+    for (i, (name, _)) in rows.iter().enumerate() {
+        eprintln!("  col {i} = {name}");
+    }
+    println!("{}", fig.render(|y| format!("{y:.1}")));
+
+    // Shape check: every O(1)/O(log n) far advance must be far cheaper
+    // than stepping there could ever be — bound it at 1 ms/advance
+    // (an O(n) regression at n=2^40 would take minutes to hours).
+    for (name, ns) in &rows {
+        if !name.starts_with("tyche") {
+            assert!(*ns < 1e6, "{name}: far advance took {ns:.0} ns — O(n) regression?");
+        }
+    }
+
+    // ── Table 2: inter-stream correlation battery ────────────────────
+    let words = if quick { 1 << 16 } else { 1 << 18 };
+    let ks: &[u64] = if quick { &[64, 1024] } else { &[64, 4096, 65_536] };
+    let mut all_pass = true;
+    let mut throughput: Vec<(u64, Vec<f64>)> = ks.iter().map(|&k| (k, Vec::new())).collect();
+    for &k in ks {
+        println!("inter-stream battery: K={k} child streams, {words} words/test budget");
+        macro_rules! engines {
+            ($(($name:literal, $g:ty)),+ $(,)?) => {{
+                $(
+                    let t0 = Instant::now();
+                    let results = run_inter_stream_suite::<$g>(0x0DDB_A11, k, 1, words);
+                    let wall = t0.elapsed().as_secs_f64();
+                    let (fails, _susp) = battery_row($name, &results, wall);
+                    all_pass &= fails == 0;
+                    let total: usize = results.iter().map(|r| r.words_used).sum();
+                    throughput
+                        .iter_mut()
+                        .find(|(kk, _)| *kk == k)
+                        .unwrap()
+                        .1
+                        .push(total as f64 / wall / 1e6);
+                )+
+            }};
+        }
+        if quick {
+            engines!(("philox", Philox), ("squares", Squares));
+        } else {
+            engines!(
+                ("philox", Philox),
+                ("philox2x32", Philox2x32),
+                ("threefry", Threefry),
+                ("threefry2x32", Threefry2x32),
+                ("squares", Squares),
+                ("tyche", Tyche),
+                ("tyche_i", TycheI),
+            );
+        }
+    }
+
+    let n_engines = throughput[0].1.len();
+    let mut fig2 = Series::new(
+        "Fig Q2 — inter-stream battery throughput (Mwords/s; flat in K = jump-ahead works)",
+        "engine",
+        "Mwords_per_s",
+        (0..n_engines).map(|i| i as f64).collect(),
+    );
+    for (k, vals) in throughput {
+        fig2.push(&format!("K={k}"), vals);
+    }
+    println!("{}", fig2.render(|y| format!("{y:.1}")));
+
+    println!(
+        "{}",
+        if all_pass {
+            "ALL ENGINES PASS the inter-stream battery at every K"
+        } else {
+            "INTER-STREAM FAILURES — investigate above"
+        }
+    );
+    assert!(all_pass, "inter-stream battery reported failures");
+}

@@ -11,7 +11,12 @@
 //!   builds counters/keys by hand and packs u64s from 4-word blocks.
 //! * [`Pcg32`], [`Xoshiro256pp`], [`SplitMix64`], [`Lcg64`] — classic
 //!   sequential baselines for the statistical battery (known-good) and
-//!   its self-test (known-bad: `Lcg64` low bits, `WeakCounter`).
+//!   its self-test (known-bad: `Lcg64` low bits, `WeakCounter`). Each
+//!   carries its native skip-ahead (`Pcg32::advance` / `Lcg64::advance`
+//!   O(log n), `SplitMix64::advance` O(1), `Xoshiro256pp::jump` fixed
+//!   2^128 stride) so jump-ahead bench comparisons against the counter
+//!   engines stay honest; [`Mt19937`] documents `advance` as
+//!   unsupported.
 //! * [`WeakCounter`] — a deliberately broken "generator" (raw counter)
 //!   that the battery MUST flag; used to prove the tests have power.
 

@@ -3,6 +3,12 @@
 //! seeding: 624 words of state are fully initialized on construction,
 //! which is exactly why short streams are expensive (the paper's point),
 //! and why 2.5 kB of state disqualifies it from GPU per-thread use.
+//!
+//! **No `advance`/`jump`**: skipping n MT19937 outputs requires either n
+//! twists or a GF(2) polynomial jump over a degree-19937 characteristic
+//! polynomial (Haramoto et al. 2008) — far outside this baseline's
+//! scope, and exactly the contrast with the counter engines' O(1)
+//! `advance` that `docs/stream-contracts.md` §5 documents.
 
 use crate::core::traits::Rng;
 

@@ -6,6 +6,28 @@
 
 use crate::core::traits::Rng;
 
+/// O'Neill's O(log n) LCG skip-ahead: the state after `delta` steps of
+/// `state = state * mult + inc`, by binary exponentiation of the affine
+/// map (PCG paper §4.3.1 / Brown's "Random number generation with
+/// arbitrary strides"). Shared by the [`Pcg32`] and [`Lcg64`] jumps so
+/// the baseline bench comparisons against the counter engines'
+/// `advance` stay honest.
+#[inline]
+pub fn lcg_skip(state: u64, mult: u64, inc: u64, mut delta: u64) -> u64 {
+    let (mut acc_mult, mut acc_plus) = (1u64, 0u64);
+    let (mut cur_mult, mut cur_plus) = (mult, inc);
+    while delta > 0 {
+        if delta & 1 == 1 {
+            acc_mult = acc_mult.wrapping_mul(cur_mult);
+            acc_plus = acc_plus.wrapping_mul(cur_mult).wrapping_add(cur_plus);
+        }
+        cur_plus = cur_mult.wrapping_add(1).wrapping_mul(cur_plus);
+        cur_mult = cur_mult.wrapping_mul(cur_mult);
+        delta >>= 1;
+    }
+    state.wrapping_mul(acc_mult).wrapping_add(acc_plus)
+}
+
 /// PCG32 (O'Neill 2014): 64-bit LCG state, XSH-RR output.
 #[derive(Debug, Clone)]
 pub struct Pcg32 {
@@ -22,6 +44,19 @@ impl Pcg32 {
         rng.state = rng.state.wrapping_add(seed);
         rng.next_u32();
         rng
+    }
+
+    /// Advance by `n` outputs in O(log n) — bit-identical to `n`
+    /// [`Rng::next_u32`] calls (one LCG step each). Wraps mod the
+    /// 2^64-step period.
+    pub fn advance(&mut self, n: u64) {
+        self.state = lcg_skip(self.state, Self::MULT, self.inc, n);
+    }
+
+    /// Far jump: 2^32 outputs (sqrt of the 2^64 period), mirroring the
+    /// counter engines' [`crate::core::CounterRng::jump`] contract.
+    pub fn jump(&mut self) {
+        self.advance(1 << 32);
     }
 }
 
@@ -43,8 +78,23 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// The Weyl increment (golden-ratio gamma).
+    pub const GAMMA: u64 = 0x9E37_79B9_7F4A_7C15;
+
     pub fn new(seed: u64) -> Self {
         SplitMix64 { state: seed }
+    }
+
+    /// Advance by `n` outputs in O(1): the state is a Weyl sequence, so
+    /// `n` steps are one multiply. Counts *native* steps — both
+    /// [`Rng::next_u32`] and [`Rng::next_u64`] consume exactly one.
+    pub fn advance(&mut self, n: u64) {
+        self.state = self.state.wrapping_add(n.wrapping_mul(Self::GAMMA));
+    }
+
+    /// Far jump: 2^32 outputs, as for [`Pcg32::jump`].
+    pub fn jump(&mut self) {
+        self.advance(1 << 32);
     }
 
     #[inline]
@@ -78,18 +128,28 @@ pub struct Lcg64 {
 }
 
 impl Lcg64 {
+    pub const MULT: u64 = 6_364_136_223_846_793_005;
+    pub const INC: u64 = 1_442_695_040_888_963_407;
+
     pub fn new(seed: u64) -> Self {
         Lcg64 { state: seed }
+    }
+
+    /// Advance by `n` outputs in O(log n) ([`lcg_skip`]).
+    pub fn advance(&mut self, n: u64) {
+        self.state = lcg_skip(self.state, Self::MULT, Self::INC, n);
+    }
+
+    /// Far jump: 2^32 outputs, as for [`Pcg32::jump`].
+    pub fn jump(&mut self) {
+        self.advance(1 << 32);
     }
 }
 
 impl Rng for Lcg64 {
     #[inline]
     fn next_u32(&mut self) -> u32 {
-        self.state = self
-            .state
-            .wrapping_mul(6_364_136_223_846_793_005)
-            .wrapping_add(1_442_695_040_888_963_407);
+        self.state = self.state.wrapping_mul(Self::MULT).wrapping_add(Self::INC);
         self.state as u32 // deliberately the weak low half
     }
 }
@@ -138,6 +198,54 @@ mod tests {
         // output must equal counter::splitmix64(seed).
         let mut rng = SplitMix64::new(987);
         assert_eq!(rng.next_u64_native(), crate::core::counter::splitmix64(987));
+    }
+
+    #[test]
+    fn advance_matches_stepping() {
+        // Pcg32 / Lcg64 / SplitMix64: skip-ahead == n sequential outputs.
+        for n in [0u64, 1, 2, 13, 100] {
+            let mut a = Pcg32::new(42, 54);
+            let mut b = Pcg32::new(42, 54);
+            a.advance(n);
+            for _ in 0..n {
+                b.next_u32();
+            }
+            assert_eq!(a.next_u32(), b.next_u32(), "pcg n={n}");
+
+            let mut a = Lcg64::new(7);
+            let mut b = Lcg64::new(7);
+            a.advance(n);
+            for _ in 0..n {
+                b.next_u32();
+            }
+            assert_eq!(a.next_u32(), b.next_u32(), "lcg n={n}");
+
+            let mut a = SplitMix64::new(9);
+            let mut b = SplitMix64::new(9);
+            a.advance(n);
+            for _ in 0..n {
+                b.next_u64_native();
+            }
+            assert_eq!(a.next_u64_native(), b.next_u64_native(), "splitmix n={n}");
+        }
+    }
+
+    #[test]
+    fn jump_is_2_32_steps() {
+        // lcg_skip is O(log n), so the far jump can be cross-checked
+        // against two half-jumps (exponent additivity) rather than 2^32
+        // actual steps.
+        let mut once = Pcg32::new(3, 1);
+        once.advance(1 << 32);
+        let mut twice = Pcg32::new(3, 1);
+        twice.advance(1 << 31);
+        twice.advance(1 << 31);
+        assert_eq!(once.next_u32(), twice.next_u32());
+        let mut j = Pcg32::new(3, 1);
+        j.jump();
+        let mut a = Pcg32::new(3, 1);
+        a.advance(1 << 32);
+        assert_eq!(j.next_u32(), a.next_u32());
     }
 
     #[test]

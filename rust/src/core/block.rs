@@ -123,12 +123,30 @@ impl<G: BlockRng> CounterRng for BlockBuffered<G> {
         BlockBuffered::from_engine(G::new(seed, ctr))
     }
 
+    /// Same jump stride as the wrapped engine.
+    const JUMP_LOG2: Option<u32> = G::JUMP_LOG2;
+
     #[inline]
-    fn set_position(&mut self, pos: u32) {
-        let w = G::WORDS_PER_BLOCK as u32;
+    fn set_position(&mut self, pos: u64) {
+        let w = G::WORDS_PER_BLOCK as u64;
         self.inner.set_position(pos - pos % w);
         self.inner.generate_block(&mut self.buf);
         self.pos = (pos % w) as usize;
+    }
+
+    #[inline]
+    fn advance(&mut self, n: u64) {
+        // The inner engine is already past every buffered word, so a
+        // skip either stays inside the buffer or discards it and
+        // advances the inner stream by the remainder — O(1) on top of
+        // the engine's own advance.
+        let buffered = (G::WORDS_PER_BLOCK - self.pos) as u64;
+        if n < buffered {
+            self.pos += n as usize;
+        } else {
+            self.pos = G::WORDS_PER_BLOCK;
+            self.inner.advance(n - buffered);
+        }
     }
 }
 
@@ -217,10 +235,37 @@ mod tests {
     }
 
     #[test]
+    fn buffered_adapter_advance_any_phase() {
+        fn check<G: BlockRng>() {
+            let mut seq = BlockBuffered::<G>::new(8, 1);
+            let w: Vec<u32> = (0..48).map(|_| seq.next_u32()).collect();
+            for start in 0..6usize {
+                for n in [0u64, 1, 2, 3, 5, 8, 21] {
+                    let mut r = BlockBuffered::<G>::new(8, 1);
+                    for _ in 0..start {
+                        r.next_u32();
+                    }
+                    r.advance(n);
+                    assert_eq!(
+                        r.next_u32(),
+                        w[start + n as usize],
+                        "{} start={start} n={n}",
+                        G::NAME
+                    );
+                }
+            }
+        }
+        check::<Philox>();
+        check::<Threefry2x32>();
+        check::<Squares>();
+        check::<Tyche>();
+    }
+
+    #[test]
     fn buffered_adapter_set_position() {
         let mut seq = BlockBuffered::<Philox>::new(1, 2);
         let words: Vec<u32> = (0..24).map(|_| seq.next_u32()).collect();
-        for pos in [0u32, 1, 4, 7, 13, 23] {
+        for pos in [0u64, 1, 4, 7, 13, 23] {
             let mut r = BlockBuffered::<Philox>::new(1, 2);
             r.set_position(pos);
             assert_eq!(r.next_u32(), words[pos as usize], "pos={pos}");

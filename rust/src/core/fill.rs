@@ -24,9 +24,11 @@
 //! `coordinator::repro::verify_fill_invariance` and
 //! `rust/tests/properties.rs` hold this invariant.
 //!
-//! A fill of `n` words occupies stream positions `0..n` and therefore
-//! requires `n < 2^32` (the per-`(seed, ctr)` stream period); the
-//! parallel entry points assert this.
+//! A fill of `n` words occupies stream positions `0..n`; the parallel
+//! entry points assert `n < 2^32` words, the period of the
+//! shortest-period engine (Squares — Philox/Threefry now run 2^66-word
+//! streams and address the first 2^64 words directly, see
+//! `docs/stream-contracts.md` §5).
 //!
 //! For Tyche/Tyche-i, `set_position` is O(pos) (documented engine
 //! exception), so parallel fills pay an O(start) warm-up per shard;
@@ -50,11 +52,12 @@ const TILE_WORDS: usize = 1024;
 /// stream position is `pos` (phase information — needed to locate block
 /// boundaries so the bulk of the work runs on the aligned fast path).
 /// Bit-identical to `out.len()` consecutive `next_u32` calls.
-pub fn fill_from<G: BlockRng>(g: &mut G, pos: u32, out: &mut [u32]) {
+pub fn fill_from<G: BlockRng>(g: &mut G, pos: u64, out: &mut [u32]) {
     let w = G::WORDS_PER_BLOCK;
+    let phase = (pos % w as u64) as usize;
     let mut i = 0usize;
     // Up-align to a block boundary word-at-a-time.
-    while i < out.len() && (pos as usize + i) % w != 0 {
+    while i < out.len() && (phase + i) % w != 0 {
         out[i] = g.next_u32();
         i += 1;
     }
@@ -74,7 +77,7 @@ pub fn fill_from<G: BlockRng>(g: &mut G, pos: u32, out: &mut [u32]) {
 
 /// Fresh engine for stream `(seed, ctr)` positioned at word `word`.
 #[inline]
-fn start_engine<G: BlockRng>(seed: u64, ctr: u32, word: u32) -> G {
+fn start_engine<G: BlockRng>(seed: u64, ctr: u32, word: u64) -> G {
     let mut g = G::new(seed, ctr);
     if word != 0 {
         g.set_position(word);
@@ -83,14 +86,14 @@ fn start_engine<G: BlockRng>(seed: u64, ctr: u32, word: u32) -> G {
 }
 
 /// Fill one shard: stream words `start..start + out.len()`.
-fn shard_u32<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [u32]) {
+fn shard_u32<G: BlockRng>(seed: u64, ctr: u32, start: u64, out: &mut [u32]) {
     let mut g = start_engine::<G>(seed, ctr, start);
     fill_from(&mut g, start, out);
 }
 
 /// Fill one shard of u64s: elements `start..start + out.len()`, element
 /// `i` composed from words `2i, 2i+1` (first word high).
-fn shard_u64<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [u64]) {
+fn shard_u64<G: BlockRng>(seed: u64, ctr: u32, start: u64, out: &mut [u64]) {
     let word0 = start.wrapping_mul(2);
     let mut g = start_engine::<G>(seed, ctr, word0);
     let mut words = [0u32; TILE_WORDS];
@@ -98,7 +101,7 @@ fn shard_u64<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [u64]) {
     while done < out.len() {
         let n = (out.len() - done).min(TILE_WORDS / 2);
         let tile = &mut words[..2 * n];
-        fill_from(&mut g, word0.wrapping_add((2 * done) as u32), tile);
+        fill_from(&mut g, word0.wrapping_add((2 * done) as u64), tile);
         for k in 0..n {
             out[done + k] = u64_from_words(tile[2 * k], tile[2 * k + 1]);
         }
@@ -107,14 +110,14 @@ fn shard_u64<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [u64]) {
 }
 
 /// Fill one shard of f32s: element `i` from word `i`.
-fn shard_f32<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [f32]) {
+fn shard_f32<G: BlockRng>(seed: u64, ctr: u32, start: u64, out: &mut [f32]) {
     let mut g = start_engine::<G>(seed, ctr, start);
     let mut words = [0u32; TILE_WORDS];
     let mut done = 0usize;
     while done < out.len() {
         let n = (out.len() - done).min(TILE_WORDS);
         let tile = &mut words[..n];
-        fill_from(&mut g, start.wrapping_add(done as u32), tile);
+        fill_from(&mut g, start.wrapping_add(done as u64), tile);
         for k in 0..n {
             out[done + k] = u01_f32(tile[k]);
         }
@@ -123,7 +126,7 @@ fn shard_f32<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [f32]) {
 }
 
 /// Fill one shard of f64s: element `i` from words `2i, 2i+1`.
-fn shard_f64<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [f64]) {
+fn shard_f64<G: BlockRng>(seed: u64, ctr: u32, start: u64, out: &mut [f64]) {
     let word0 = start.wrapping_mul(2);
     let mut g = start_engine::<G>(seed, ctr, word0);
     let mut words = [0u32; TILE_WORDS];
@@ -131,7 +134,7 @@ fn shard_f64<G: BlockRng>(seed: u64, ctr: u32, start: u32, out: &mut [f64]) {
     while done < out.len() {
         let n = (out.len() - done).min(TILE_WORDS / 2);
         let tile = &mut words[..2 * n];
-        fill_from(&mut g, word0.wrapping_add((2 * done) as u32), tile);
+        fill_from(&mut g, word0.wrapping_add((2 * done) as u64), tile);
         for k in 0..n {
             out[done + k] = u01_f64(tile[2 * k], tile[2 * k + 1]);
         }
@@ -167,7 +170,7 @@ pub fn fill_f64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f64]) {
 /// coordinator partition) and run `shard(range_start, chunk)` on scoped
 /// threads. Output depends only on what each shard writes at its
 /// absolute positions — never on scheduling.
-fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u32, &mut [T]) + Sync) {
+fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u64, &mut [T]) + Sync) {
     assert!(threads > 0, "threads must be positive");
     if threads == 1 || out.len() <= 1 {
         shard(0, out);
@@ -183,7 +186,7 @@ fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u32, &mut [
             if head.is_empty() {
                 continue;
             }
-            let start = r.start as u32;
+            let start = r.start as u64;
             scope.spawn(move || shard(start, head));
         }
     });
@@ -191,25 +194,25 @@ fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u32, &mut [
 
 /// Parallel block fill: same output as [`fill_u32`] for every `threads`.
 pub fn par_fill_u32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u32], threads: usize) {
-    assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word stream period");
+    assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_u32::<G>(seed, ctr, start, chunk));
 }
 
 /// Parallel block fill: same output as [`fill_u64`] for every `threads`.
 pub fn par_fill_u64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u64], threads: usize) {
-    assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word stream period");
+    assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_u64::<G>(seed, ctr, start, chunk));
 }
 
 /// Parallel block fill: same output as [`fill_f32`] for every `threads`.
 pub fn par_fill_f32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f32], threads: usize) {
-    assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word stream period");
+    assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_f32::<G>(seed, ctr, start, chunk));
 }
 
 /// Parallel block fill: same output as [`fill_f64`] for every `threads`.
 pub fn par_fill_f64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f64], threads: usize) {
-    assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word stream period");
+    assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_f64::<G>(seed, ctr, start, chunk));
 }
 

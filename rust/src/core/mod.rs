@@ -5,7 +5,9 @@
 //! constructed from `(seed: u64, ctr: u32)` — the seed identifies a
 //! logical processing element (a particle, a pixel, a cell), the counter
 //! identifies a sub-stream for that element (a timestep, a kernel launch)
-//! — and yields a statistically independent stream of `2^32` 32-bit words.
+//! — and yields a statistically independent stream of 32-bit words
+//! (`2^66` of them for Philox/Threefry, `2^33` for the 2x32 variants,
+//! `2^32` for Squares).
 //! Construction costs a few dozen integer ops and **no state** has to be
 //! stored, initialized, or synchronized anywhere.
 //!
@@ -123,9 +125,11 @@ impl Generator {
 
     /// Boxed engine positioned at absolute stream word `pos` (O(1)
     /// counter jump; Tyche/Tyche-i replay O(pos) per their documented
-    /// `set_position` exception).
-    pub fn boxed_at(self, seed: u64, ctr: u32, pos: u32) -> Box<dyn Rng> {
-        fn mk<G: CounterRng + 'static>(seed: u64, ctr: u32, pos: u32) -> Box<dyn Rng> {
+    /// `set_position` exception). `pos` is a full 64-bit word index —
+    /// engines with shorter periods reduce it per their
+    /// `set_position` contract.
+    pub fn boxed_at(self, seed: u64, ctr: u32, pos: u64) -> Box<dyn Rng> {
+        fn mk<G: CounterRng + 'static>(seed: u64, ctr: u32, pos: u64) -> Box<dyn Rng> {
             let mut g = G::new(seed, ctr);
             if pos != 0 {
                 g.set_position(pos);

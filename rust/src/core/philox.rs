@@ -70,16 +70,31 @@ pub fn philox2x32(ctr: [u32; 2], key: u32) -> [u32; 2] {
     philox2x32_r(ctr, key, 10)
 }
 
+/// Counter block `j` (64-bit block index) of stream `(key, ctr)`.
+///
+/// The normative layout (`docs/stream-contracts.md` §1): words 0 and 2
+/// carry the low/high halves of the block index, word 1 the user
+/// counter, word 3 is spare. For `j < 2^32` this is bit-identical to the
+/// historical `[j, ctr, 0, 0]` layout, so all pre-widening output is
+/// unchanged; the high half extends the per-stream period to `2^66`
+/// words and is what makes >4G-word `set_position`/`advance` exact.
+#[inline(always)]
+fn ctr4(j: u64, ctr: u32) -> [u32; 4] {
+    [j as u32, ctr, (j >> 32) as u32, 0]
+}
+
 /// The OpenRAND default engine: Philox4x32-10 in counter mode.
 ///
-/// State: 96-bit stream identity (key + user counter) + block index +
-/// 4-word output buffer — all in registers, nothing in memory.
+/// State: 96-bit stream identity (key + user counter) + 64-bit block
+/// index + 4-word output buffer — all in registers, nothing in memory.
+/// Period `2^66` words; the first `2^64` are addressable via
+/// [`CounterRng::set_position`]/[`CounterRng::advance`].
 #[derive(Debug, Clone)]
 pub struct Philox {
     key: [u32; 2],
     ctr: u32,
     /// Next counter block index to generate.
-    blk: u32,
+    blk: u64,
     buf: [u32; 4],
     /// Consumed words within `buf`; 4 means empty.
     pos: u8,
@@ -92,7 +107,7 @@ impl Philox {
 
     #[inline]
     fn refill(&mut self) {
-        self.buf = philox4x32([self.blk, self.ctr, 0, 0], self.key);
+        self.buf = philox4x32(ctr4(self.blk, self.ctr), self.key);
         self.blk = self.blk.wrapping_add(1);
         self.pos = 0;
     }
@@ -100,8 +115,20 @@ impl Philox {
     /// Generate counter block `j` of this stream without disturbing the
     /// sequential position (pure function of the stream identity).
     #[inline]
-    pub fn block(&self, j: u32) -> [u32; 4] {
-        philox4x32([j, self.ctr, 0, 0], self.key)
+    pub fn block(&self, j: u64) -> [u32; 4] {
+        philox4x32(ctr4(j, self.ctr), self.key)
+    }
+
+    /// Absolute word index of the next `next_u32` result, in the
+    /// `2^64`-word addressable window (wrapping there like
+    /// `set_position`).
+    #[inline]
+    fn position(&self) -> u64 {
+        if self.pos >= 4 {
+            self.blk.wrapping_mul(4)
+        } else {
+            self.blk.wrapping_sub(1).wrapping_mul(4).wrapping_add(self.pos as u64)
+        }
     }
 }
 
@@ -131,7 +158,7 @@ impl Rng for Philox {
         // core they cost 30-33% (461 -> 321/310 Mwords/s); the simple
         // loop is the measured optimum. Revisit on wider hardware.
         while i + 4 <= out.len() {
-            let b = philox4x32([self.blk, self.ctr, 0, 0], self.key);
+            let b = philox4x32(ctr4(self.blk, self.ctr), self.key);
             out[i..i + 4].copy_from_slice(&b);
             self.blk = self.blk.wrapping_add(1);
             i += 4;
@@ -164,6 +191,10 @@ impl BlockRng for Philox {
 impl CounterRng for Philox {
     const NAME: &'static str = "philox";
 
+    /// Half the 2^66-word period: `jump()` partitions a stream into
+    /// 2^33 disjoint 8G-word subsequences.
+    const JUMP_LOG2: Option<u32> = Some(33);
+
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
         let (lo, hi) = split_seed(seed);
@@ -171,14 +202,22 @@ impl CounterRng for Philox {
     }
 
     #[inline]
-    fn set_position(&mut self, pos: u32) {
+    fn set_position(&mut self, pos: u64) {
         self.blk = pos / 4;
         self.refill();
         self.pos = (pos % 4) as u8;
     }
+
+    #[inline]
+    fn advance(&mut self, n: u64) {
+        self.set_position(self.position().wrapping_add(n));
+    }
 }
 
-/// Philox2x32-10 engine — half-width block, single-word key.
+/// Philox2x32-10 engine — half-width block, single-word key. Period
+/// `2^33` words (32-bit block counter × 2-word blocks);
+/// `set_position`/`advance` reduce modulo that period, matching where
+/// sequential draws wrap.
 #[derive(Debug, Clone)]
 pub struct Philox2x32 {
     key: u32,
@@ -186,6 +225,23 @@ pub struct Philox2x32 {
     blk: u32,
     buf: [u32; 2],
     pos: u8,
+}
+
+impl Philox2x32 {
+    /// Stream period in words: 2^32 counter blocks × 2 words.
+    const PERIOD: u64 = 1 << 33;
+
+    /// Absolute word index of the next `next_u32` result, mod the
+    /// 2^33-word period.
+    #[inline]
+    fn position(&self) -> u64 {
+        let p = if self.pos >= 2 {
+            (self.blk as u64).wrapping_mul(2)
+        } else {
+            (self.blk.wrapping_sub(1) as u64).wrapping_mul(2) + self.pos as u64
+        };
+        p % Self::PERIOD
+    }
 }
 
 impl Rng for Philox2x32 {
@@ -221,17 +277,26 @@ impl BlockRng for Philox2x32 {
 impl CounterRng for Philox2x32 {
     const NAME: &'static str = "philox2x32";
 
+    /// ~sqrt of the 2^33-word period.
+    const JUMP_LOG2: Option<u32> = Some(16);
+
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
         Philox2x32 { key: philox2_key(seed), ctr, blk: 0, buf: [0; 2], pos: 2 }
     }
 
     #[inline]
-    fn set_position(&mut self, pos: u32) {
-        self.blk = pos / 2;
+    fn set_position(&mut self, pos: u64) {
+        let pos = pos % Self::PERIOD;
+        self.blk = (pos / 2) as u32;
         self.buf = philox2x32([self.blk, self.ctr], self.key);
         self.blk = self.blk.wrapping_add(1);
         self.pos = (pos % 2) as u8;
+    }
+
+    #[inline]
+    fn advance(&mut self, n: u64) {
+        self.set_position(self.position() + n % Self::PERIOD);
     }
 }
 
@@ -324,7 +389,7 @@ mod tests {
     fn set_position_skips_ahead() {
         let mut seq = Philox::new(1, 2);
         let words: Vec<u32> = (0..40).map(|_| seq.next_u32()).collect();
-        for pos in [0u32, 1, 4, 7, 13, 39] {
+        for pos in [0u64, 1, 4, 7, 13, 39] {
             let mut r = Philox::new(1, 2);
             r.set_position(pos);
             assert_eq!(r.next_u32(), words[pos as usize], "pos={pos}");
@@ -341,6 +406,93 @@ mod tests {
         // Distinct from the 4x32 stream of the same identity.
         let mut p4 = Philox::new(42, 1);
         assert_ne!(words[0], p4.next_u32());
+    }
+
+    #[test]
+    fn advance_matches_sequential_draws() {
+        let mut seq = Philox::new(3, 9);
+        let words: Vec<u32> = (0..64).map(|_| seq.next_u32()).collect();
+        for start in [0usize, 1, 2, 5] {
+            for n in [0u64, 1, 3, 4, 9, 32] {
+                let mut r = Philox::new(3, 9);
+                for _ in 0..start {
+                    r.next_u32();
+                }
+                r.advance(n);
+                assert_eq!(r.next_u32(), words[start + n as usize], "start={start} n={n}");
+            }
+        }
+    }
+
+    /// Regression (widened addressing): positions past 2^32 words used
+    /// to be unreachable. Block index 2^32 must land in counter
+    /// `[0, ctr, 1, 0]` — the high half of the 64-bit block index in the
+    /// formerly-spare third word.
+    #[test]
+    fn set_position_beyond_4g_words() {
+        let pos = (1u64 << 34) + 2; // block 2^32, word 2 of the block
+        let mut r = Philox::new(7, 1);
+        r.set_position(pos);
+        let b = philox4x32([0, 1, 1, 0], [7, 0]); // split_seed(7) = (7, 0)
+        assert_eq!(r.next_u32(), b[2]);
+        assert_eq!(r.next_u32(), b[3]);
+        assert_eq!(r.next_u32(), philox4x32([1, 1, 1, 0], [7, 0])[0]);
+        // advance across the former u32 boundary == absolute positioning.
+        let mut a = Philox::new(7, 1);
+        a.set_position(u32::MAX as u64 - 1);
+        a.advance(6);
+        let mut s = Philox::new(7, 1);
+        s.set_position(u32::MAX as u64 + 5);
+        assert_eq!(a.next_u32(), s.next_u32());
+    }
+
+    #[test]
+    fn jump_is_2_33_words_and_composes() {
+        let mut a = Philox::new(5, 2);
+        a.jump();
+        let mut b = Philox::new(5, 2);
+        b.set_position(1 << 33);
+        assert_eq!(a.next_u32(), b.next_u32());
+        a.jump(); // now at 2^33 + 1 + 2^33
+        let mut c = Philox::new(5, 2);
+        c.set_position((1 << 34) + 1);
+        assert_eq!(a.next_u32(), c.next_u32());
+    }
+
+    #[test]
+    fn philox2x32_advance_wraps_at_period() {
+        let mut seq = Philox2x32::new(11, 4);
+        let words: Vec<u32> = (0..32).map(|_| seq.next_u32()).collect();
+        let mut r = Philox2x32::new(11, 4);
+        r.advance(13);
+        assert_eq!(r.next_u32(), words[13]);
+        // Period 2^33: advancing by it is a no-op on the position.
+        let mut w = Philox2x32::new(11, 4);
+        w.advance(1 << 33);
+        assert_eq!(w.next_u32(), words[0]);
+        w.advance((1 << 33) - 1); // drew 1 word, +period-1 => back to 0
+        assert_eq!(w.next_u32(), words[0]);
+    }
+
+    /// Cross-layer jump-ahead KAT: python/tests/test_jump_ahead.py pins
+    /// the identical literals from the jnp oracle.
+    #[test]
+    fn jump_kats_match_python_oracle() {
+        let mut j = Philox::new(7, 1);
+        j.jump(); // 2^33 words = block 0x8000_0000
+        assert_eq!(j.next_u32(), 0x3A29_4131);
+        let mut far = Philox::new(7, 1);
+        far.set_position((1 << 34) + 2); // block 2^32 (j_hi = 1), lane 2
+        assert_eq!(far.next_u32(), 0x275A_0C0F);
+        let mut a = Philox::new(7, 1);
+        a.advance(9);
+        assert_eq!(a.next_u32(), 0x498F_F58B);
+        let mut j2 = Philox2x32::new(7, 1);
+        j2.jump(); // 2^16 words = block 0x8000
+        assert_eq!(j2.next_u32(), 0x44EF_38AA);
+        let mut w = Philox2x32::new(7, 1);
+        w.advance((1 << 33) + 5); // period wrap: == advance(5)
+        assert_eq!(w.next_u32(), 0xB92B_6CAC);
     }
 
     #[test]

@@ -74,14 +74,26 @@ impl BlockRng for Squares {
 impl CounterRng for Squares {
     const NAME: &'static str = "squares";
 
+    /// sqrt of the 2^32-word period: `jump()` carves a stream into
+    /// 2^16 subsequences of 2^16 words.
+    const JUMP_LOG2: Option<u32> = Some(16);
+
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
         Squares { key: squares_key(seed), ctr: (ctr as u64) << 32 }
     }
 
+    /// Reduces `pos` mod the 2^32-word period — exactly where `pos`
+    /// sequential draws land, since only the low counter half advances.
     #[inline]
-    fn set_position(&mut self, pos: u32) {
-        self.ctr = (self.ctr & 0xFFFF_FFFF_0000_0000) | pos as u64;
+    fn set_position(&mut self, pos: u64) {
+        self.ctr = (self.ctr & 0xFFFF_FFFF_0000_0000) | (pos as u32 as u64);
+    }
+
+    #[inline]
+    fn advance(&mut self, n: u64) {
+        let j = (self.ctr as u32).wrapping_add(n as u32);
+        self.ctr = (self.ctr & 0xFFFF_FFFF_0000_0000) | j as u64;
     }
 }
 
@@ -129,6 +141,38 @@ mod tests {
         let mut r = Squares::new(9, 1);
         r.set_position(17);
         assert_eq!(r.next_u32(), w[17]);
+    }
+
+    #[test]
+    fn advance_and_jump_wrap_the_low_half() {
+        let mut seq = Squares::new(9, 1);
+        let w: Vec<u32> = (0..32).map(|_| seq.next_u32()).collect();
+        let mut r = Squares::new(9, 1);
+        r.advance(13);
+        assert_eq!(r.next_u32(), w[13]);
+        r.advance(5); // from 14 -> 19
+        assert_eq!(r.next_u32(), w[19]);
+        // Wrap mod 2^32 never touches the user-ctr half.
+        let mut z = Squares::new(9, 1);
+        z.advance(1 << 32);
+        assert_eq!(z.next_u32(), w[0]);
+        let mut far = Squares::new(9, 1);
+        far.set_position((1u64 << 32) + 3); // reduces to 3
+        assert_eq!(far.next_u32(), w[3]);
+        // jump == advance(2^16).
+        let mut j = Squares::new(9, 1);
+        j.jump();
+        let mut p = Squares::new(9, 1);
+        p.set_position(1 << 16);
+        assert_eq!(j.next_u32(), p.next_u32());
+        // Cross-layer KAT: python/tests/test_jump_ahead.py pins the
+        // identical literals from the jnp oracle.
+        let mut j = Squares::new(7, 1);
+        j.jump();
+        assert_eq!(j.next_u32(), 0x853F_0F97);
+        let mut w = Squares::new(7, 1);
+        w.advance((1u64 << 32) + 3); // period wrap: == advance(3)
+        assert_eq!(w.next_u32(), 0x7900_D050);
     }
 
     #[test]

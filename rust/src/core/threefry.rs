@@ -87,12 +87,16 @@ pub fn threefry2x32(ctr: [u32; 2], key: [u32; 2]) -> [u32; 2] {
     threefry2x32_r(ctr, key, 20)
 }
 
-/// Threefry4x32-20 engine in counter mode.
+/// Threefry4x32-20 engine in counter mode. Like [`super::Philox`], the
+/// 64-bit block index splits across counter words 0 (low) and 2 (high) —
+/// bit-identical to the historical `[j, ctr, 0, 0]` layout below 2^32
+/// blocks — for a `2^66`-word period with O(1) `advance`/`set_position`
+/// over the first `2^64` words.
 #[derive(Debug, Clone)]
 pub struct Threefry {
     key: [u32; 4],
     ctr: u32,
-    blk: u32,
+    blk: u64,
     buf: [u32; 4],
     pos: u8,
 }
@@ -100,8 +104,19 @@ pub struct Threefry {
 impl Threefry {
     /// Counter block `j` of this stream.
     #[inline]
-    pub fn block(&self, j: u32) -> [u32; 4] {
-        threefry4x32([j, self.ctr, 0, 0], self.key)
+    pub fn block(&self, j: u64) -> [u32; 4] {
+        threefry4x32([j as u32, self.ctr, (j >> 32) as u32, 0], self.key)
+    }
+
+    /// Absolute word index of the next `next_u32` result (wrapping in
+    /// the `2^64`-word addressable window).
+    #[inline]
+    fn position(&self) -> u64 {
+        if self.pos >= 4 {
+            self.blk.wrapping_mul(4)
+        } else {
+            self.blk.wrapping_sub(1).wrapping_mul(4).wrapping_add(self.pos as u64)
+        }
     }
 }
 
@@ -157,6 +172,9 @@ impl BlockRng for Threefry {
 impl CounterRng for Threefry {
     const NAME: &'static str = "threefry";
 
+    /// Half the 2^66-word period, as for Philox.
+    const JUMP_LOG2: Option<u32> = Some(33);
+
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
         let (lo, hi) = split_seed(seed);
@@ -164,15 +182,21 @@ impl CounterRng for Threefry {
     }
 
     #[inline]
-    fn set_position(&mut self, pos: u32) {
+    fn set_position(&mut self, pos: u64) {
         self.blk = pos / 4;
         self.buf = self.block(self.blk);
         self.blk = self.blk.wrapping_add(1);
         self.pos = (pos % 4) as u8;
     }
+
+    #[inline]
+    fn advance(&mut self, n: u64) {
+        self.set_position(self.position().wrapping_add(n));
+    }
 }
 
-/// Threefry2x32-20 engine.
+/// Threefry2x32-20 engine. Period `2^33` words;
+/// `set_position`/`advance` reduce modulo that period.
 #[derive(Debug, Clone)]
 pub struct Threefry2x32 {
     key: [u32; 2],
@@ -180,6 +204,23 @@ pub struct Threefry2x32 {
     blk: u32,
     buf: [u32; 2],
     pos: u8,
+}
+
+impl Threefry2x32 {
+    /// Stream period in words: 2^32 counter blocks × 2 words.
+    const PERIOD: u64 = 1 << 33;
+
+    /// Absolute word index of the next `next_u32` result, mod the
+    /// 2^33-word period.
+    #[inline]
+    fn position(&self) -> u64 {
+        let p = if self.pos >= 2 {
+            (self.blk as u64).wrapping_mul(2)
+        } else {
+            (self.blk.wrapping_sub(1) as u64).wrapping_mul(2) + self.pos as u64
+        };
+        p % Self::PERIOD
+    }
 }
 
 impl Rng for Threefry2x32 {
@@ -215,6 +256,9 @@ impl BlockRng for Threefry2x32 {
 impl CounterRng for Threefry2x32 {
     const NAME: &'static str = "threefry2x32";
 
+    /// ~sqrt of the 2^33-word period.
+    const JUMP_LOG2: Option<u32> = Some(16);
+
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
         let (lo, hi) = split_seed(seed);
@@ -222,11 +266,17 @@ impl CounterRng for Threefry2x32 {
     }
 
     #[inline]
-    fn set_position(&mut self, pos: u32) {
-        self.blk = pos / 2;
+    fn set_position(&mut self, pos: u64) {
+        let pos = pos % Self::PERIOD;
+        self.blk = (pos / 2) as u32;
         self.buf = threefry2x32([self.blk, self.ctr], self.key);
         self.blk = self.blk.wrapping_add(1);
         self.pos = (pos % 2) as u8;
+    }
+
+    #[inline]
+    fn advance(&mut self, n: u64) {
+        self.set_position(self.position() + n % Self::PERIOD);
     }
 }
 
@@ -289,6 +339,50 @@ mod tests {
         let mut r2 = Threefry2x32::new(1, 1);
         r2.set_position(9);
         assert_eq!(r2.next_u32(), w2[9]);
+    }
+
+    #[test]
+    fn advance_and_jump_match_positions() {
+        let mut seq = Threefry::new(2, 6);
+        let w: Vec<u32> = (0..48).map(|_| seq.next_u32()).collect();
+        for start in [0usize, 3] {
+            for n in [0u64, 1, 4, 7, 19] {
+                let mut r = Threefry::new(2, 6);
+                for _ in 0..start {
+                    r.next_u32();
+                }
+                r.advance(n);
+                assert_eq!(r.next_u32(), w[start + n as usize], "start={start} n={n}");
+            }
+        }
+        // jump == set_position(2^33) == counter block 2^31; the hex
+        // literals are the cross-layer KAT
+        // (python/tests/test_jump_ahead.py pins the same values).
+        let mut j = Threefry::new(2, 6);
+        j.jump();
+        assert_eq!(j.next_u32(), threefry4x32([0x8000_0000, 6, 0, 0], [2, 0, 0, 0])[0]);
+        let mut j = Threefry::new(2, 6);
+        j.jump();
+        assert_eq!(j.next_u32(), 0xDFC6_93FF);
+        // >4G-word regression: block 2^32 spills into counter word 2.
+        let mut far = Threefry::new(2, 6);
+        far.set_position(1 << 34);
+        assert_eq!(far.next_u32(), threefry4x32([0, 6, 1, 0], [2, 0, 0, 0])[0]);
+        let mut far = Threefry::new(2, 6);
+        far.set_position(1 << 34);
+        assert_eq!(far.next_u32(), 0x31AD_C0A0);
+        let mut j2 = Threefry2x32::new(5, 3);
+        j2.jump(); // 2^16 words = block 0x8000
+        assert_eq!(j2.next_u32(), 0xFB12_54E1);
+
+        let mut seq2 = Threefry2x32::new(2, 6);
+        let w2: Vec<u32> = (0..24).map(|_| seq2.next_u32()).collect();
+        let mut r2 = Threefry2x32::new(2, 6);
+        r2.advance(17);
+        assert_eq!(r2.next_u32(), w2[17]);
+        let mut p2 = Threefry2x32::new(2, 6);
+        p2.advance(1 << 33); // full period: no-op on the position
+        assert_eq!(p2.next_u32(), w2[0]);
     }
 
     #[test]

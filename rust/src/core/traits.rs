@@ -171,7 +171,47 @@ pub trait CounterRng: Rng + Sized {
     /// index, valid from any current state — in O(1) (counter
     /// arithmetic; Tyche documents its O(pos) exception, replaying from
     /// its warm-up origin).
-    fn set_position(&mut self, pos: u32);
+    ///
+    /// `pos` addresses the first `2^64` words of the stream; engines with
+    /// a shorter period (Philox2x32/Threefry2x32: `2^33` words, Squares:
+    /// `2^32`) reduce `pos` modulo their period, exactly matching where
+    /// `pos` sequential `next_u32` draws would land.
+    fn set_position(&mut self, pos: u64);
+
+    /// log2 of the stride of one [`CounterRng::jump`] call, or `None`
+    /// when the engine has no O(1) far jump (Tyche/TycheI, whose state
+    /// only steps forward). Chosen per engine as roughly the square root
+    /// of the period, so `jump()` partitions a stream into
+    /// period/2^JUMP_LOG2 non-overlapping subsequences.
+    const JUMP_LOG2: Option<u32>;
+
+    /// Advance the stream by `n` words — bit-identical to calling
+    /// [`Rng::next_u32`] `n` times and discarding the results, from any
+    /// starting phase. O(1) for the counter-addressable engines
+    /// (Philox/Threefry/Squares families); O(n) for Tyche/TycheI, which
+    /// step their mix function forward. Wraps modulo the engine period
+    /// like [`CounterRng::set_position`].
+    fn advance(&mut self, n: u64);
+
+    /// Far jump: skip `2^JUMP_LOG2` words in O(1), for carving one
+    /// logical stream into provably disjoint subsequences (the
+    /// PRAND-style block-splitting contract; see
+    /// `docs/stream-contracts.md` §5 for the per-engine strides).
+    ///
+    /// # Panics
+    ///
+    /// Panics for engines with `JUMP_LOG2 == None` (Tyche/TycheI): a
+    /// "jump" that silently cost O(2^k) stepping would defeat its point.
+    #[inline]
+    fn jump(&mut self) {
+        match Self::JUMP_LOG2 {
+            Some(k) => self.advance(1u64 << k),
+            None => panic!(
+                "{}: jump() unsupported (no O(1) skip-ahead; use advance(n) — O(n) stepping)",
+                Self::NAME
+            ),
+        }
+    }
 }
 
 #[cfg(test)]

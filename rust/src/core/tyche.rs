@@ -90,6 +90,10 @@ impl BlockRng for Tyche {
 impl CounterRng for Tyche {
     const NAME: &'static str = "tyche";
 
+    /// No O(1) far jump: the state only steps forward one MIX at a time,
+    /// so `jump()` panics (an O(2^k) "jump" would defeat its point).
+    const JUMP_LOG2: Option<u32> = None;
+
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
         let s0 = init(seed, ctr, false);
@@ -99,9 +103,17 @@ impl CounterRng for Tyche {
     /// O(pos): Tyche has no counter to jump — documented exception.
     /// Absolute (replays from the warm-up origin), like the rest of the
     /// family.
-    fn set_position(&mut self, pos: u32) {
+    fn set_position(&mut self, pos: u64) {
         self.s = self.s0;
         for _ in 0..pos {
+            self.s = mix(self.s);
+        }
+    }
+
+    /// O(n) — steps the MIX forward from the *current* state (no
+    /// replay), so `advance` is the cheap way to stride a Tyche stream.
+    fn advance(&mut self, n: u64) {
+        for _ in 0..n {
             self.s = mix(self.s);
         }
     }
@@ -137,6 +149,9 @@ impl BlockRng for TycheI {
 impl CounterRng for TycheI {
     const NAME: &'static str = "tyche_i";
 
+    /// No O(1) far jump — same exception as [`Tyche`].
+    const JUMP_LOG2: Option<u32> = None;
+
     #[inline]
     fn new(seed: u64, ctr: u32) -> Self {
         let s0 = init(seed, ctr, true);
@@ -145,9 +160,16 @@ impl CounterRng for TycheI {
 
     /// O(pos) — same exception (and same absolute semantics) as
     /// [`Tyche`].
-    fn set_position(&mut self, pos: u32) {
+    fn set_position(&mut self, pos: u64) {
         self.s = self.s0;
         for _ in 0..pos {
+            self.s = mix_i(self.s);
+        }
+    }
+
+    /// O(n) stepping from the current state, as for [`Tyche`].
+    fn advance(&mut self, n: u64) {
+        for _ in 0..n {
             self.s = mix_i(self.s);
         }
     }
@@ -237,6 +259,38 @@ mod tests {
         ri.next_u32();
         ri.set_position(0);
         assert_eq!(ri.next_u32(), first);
+    }
+
+    #[test]
+    fn advance_steps_from_current_state() {
+        let mut seq = Tyche::new(3, 3);
+        let w: Vec<u32> = (0..24).map(|_| seq.next_u32()).collect();
+        let mut r = Tyche::new(3, 3);
+        r.advance(7);
+        assert_eq!(r.next_u32(), w[7]);
+        r.advance(4); // relative: 8 drawn + 4 skipped -> word 12
+        assert_eq!(r.next_u32(), w[12]);
+
+        let mut seqi = TycheI::new(3, 3);
+        let wi: Vec<u32> = (0..8).map(|_| seqi.next_u32()).collect();
+        let mut ri = TycheI::new(3, 3);
+        ri.advance(5);
+        assert_eq!(ri.next_u32(), wi[5]);
+
+        // Cross-layer KAT: python/tests/test_jump_ahead.py pins the
+        // identical literals from the jnp oracle.
+        let mut k = Tyche::new(7, 1);
+        k.advance(5);
+        assert_eq!(k.next_u32(), 0x6912_D082);
+        let mut ki = TycheI::new(7, 1);
+        ki.advance(5);
+        assert_eq!(ki.next_u32(), 0xC117_0F7E);
+    }
+
+    #[test]
+    #[should_panic(expected = "jump() unsupported")]
+    fn jump_panics_without_o1_skip() {
+        Tyche::new(1, 0).jump();
     }
 
     #[test]

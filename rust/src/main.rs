@@ -8,8 +8,10 @@
 //! * `brownian`  — run the Brownian-dynamics macro-benchmark on the host
 //!   (multithreaded) or device (PJRT AOT artifact) backend.
 //! * `stats`     — run the Crush-lite statistical battery (E3), the
-//!   HOOMD-style parallel-stream suite (E4), or with `--dist-battery`
-//!   the KS/χ²/moment checks on distribution outputs.
+//!   HOOMD-style parallel-stream suite (E4), the `--inter-stream`
+//!   key-family correlation battery (round-robin interleave of
+//!   `--streams` StreamKey children, jump-ahead addressed), or with
+//!   `--dist-battery` the KS/χ²/moment checks on distribution outputs.
 //! * `repro`     — reproducibility verification ladder (E6);
 //!   `--verbose` adds device buffer-pool observability.
 //! * `artifacts` — list the AOT artifacts the runtime can execute.
@@ -66,6 +68,9 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "style", help: "brownian: openrand|curand_style|random123", default: Some("openrand"), is_flag: false },
         OptSpec { name: "words", help: "stats: words per test", default: Some("4M"), is_flag: false },
         OptSpec { name: "parallel", help: "stats: run the HOOMD parallel-stream suite", default: None, is_flag: true },
+        OptSpec { name: "inter-stream", help: "stats: run the suite over a round-robin interleave of --streams StreamKey children (jump-ahead addressed)", default: None, is_flag: true },
+        OptSpec { name: "streams", help: "inter-stream: number of sibling child streams to interleave", default: Some("4096"), is_flag: false },
+        OptSpec { name: "stride", help: "inter-stream: per-stream word stride (sample every stride-th word)", default: Some("1"), is_flag: false },
         OptSpec { name: "dist-battery", help: "stats: run KS/chi2/moment checks on distribution outputs", default: None, is_flag: true },
         OptSpec { name: "baselines", help: "stats: also run mt19937/pcg32/xoshiro baselines", default: None, is_flag: true },
         OptSpec { name: "max-threads", help: "repro: thread ladder upper bound", default: Some("8"), is_flag: false },
@@ -441,6 +446,51 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
         print!("{}", report.render());
         if !report.passed() {
             anyhow::bail!("distribution battery reported failures");
+        }
+        return Ok(());
+    }
+    if args.flag("inter-stream") {
+        let streams = args.get_u64("streams", 4096).map_err(anyhow::Error::msg)?;
+        let stride = args.get_u64("stride", 1).map_err(anyhow::Error::msg)?;
+        if streams == 0 {
+            anyhow::bail!("--streams must be >= 1");
+        }
+        if stride == 0 {
+            anyhow::bail!("--stride must be >= 1");
+        }
+        println!(
+            "inter-stream suite: {} x {} child streams (stride {})",
+            gen.name(),
+            streams,
+            stride
+        );
+        use openrand::stats::interstream::run_inter_stream_suite as run;
+        let results = match gen {
+            Generator::Philox => run::<openrand::core::Philox>(seed, streams, stride, words),
+            Generator::Philox2x32 => run::<openrand::core::Philox2x32>(seed, streams, stride, words),
+            Generator::Threefry => run::<openrand::core::Threefry>(seed, streams, stride, words),
+            Generator::Threefry2x32 => {
+                run::<openrand::core::Threefry2x32>(seed, streams, stride, words)
+            }
+            Generator::Squares => run::<openrand::core::Squares>(seed, streams, stride, words),
+            Generator::Tyche => run::<openrand::core::Tyche>(seed, streams, stride, words),
+            Generator::TycheI => run::<openrand::core::TycheI>(seed, streams, stride, words),
+        };
+        let mut fails = 0;
+        for r in &results {
+            let v = match r.verdict() {
+                Verdict::Pass => "pass",
+                Verdict::Suspicious => "SUSPICIOUS",
+                Verdict::Fail => {
+                    fails += 1;
+                    "FAIL"
+                }
+            };
+            println!("  {:<22} p={:<12.3e} {v}", r.name, r.p);
+        }
+        println!("{} failures", fails);
+        if fails > 0 {
+            anyhow::bail!("inter-stream suite reported failures");
         }
         return Ok(());
     }

@@ -33,7 +33,7 @@ pub const BLOCK_WORDS: usize = 4096;
 pub struct BlockKey {
     pub key: StreamKey,
     pub gen: Generator,
-    pub block: u32,
+    pub block: u64,
 }
 
 /// Sentinel for "no slot" in the intrusive list.
@@ -183,7 +183,7 @@ impl BlockCache {
 mod tests {
     use super::*;
 
-    fn bk(block: u32) -> BlockKey {
+    fn bk(block: u64) -> BlockKey {
         BlockKey { key: StreamKey::root(7), gen: Generator::Philox, block }
     }
 

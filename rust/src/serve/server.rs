@@ -257,12 +257,12 @@ impl StreamService {
             return fill_span(backend, gen, key, first_word, out);
         }
         let bw = BLOCK_WORDS as u64;
-        let b0 = (first_word / bw) as u32;
-        let b1 = ((first_word + out.len() as u64 - 1) / bw) as u32;
+        let b0 = first_word / bw;
+        let b1 = (first_word + out.len() as u64 - 1) / bw;
 
         // Claim pass: classify every covering block under one lock so
         // concurrent requests agree on exactly one owner per block.
-        let mut plan: Vec<(u32, Got)> = Vec::with_capacity((b1 - b0 + 1) as usize);
+        let mut plan: Vec<(u64, Got)> = Vec::with_capacity((b1 - b0 + 1) as usize);
         {
             let mut shared = self.shared.lock().unwrap();
             for b in b0..=b1 {
@@ -285,11 +285,11 @@ impl StreamService {
 
         // Fill owned blocks in maximal contiguous runs (one backend /
         // positioned fill per run, not per block).
-        let owned: Vec<u32> = plan
+        let owned: Vec<u64> = plan
             .iter()
             .filter_map(|(b, g)| matches!(g, Got::Own(_)).then_some(*b))
             .collect();
-        let mut filled: HashMap<u32, Arc<Vec<u32>>> = HashMap::new();
+        let mut filled: HashMap<u64, Arc<Vec<u32>>> = HashMap::new();
         let mut fill_err: Option<anyhow::Error> = None;
         let mut i = 0;
         while i < owned.len() {
@@ -298,7 +298,7 @@ impl StreamService {
                 j += 1;
             }
             let (rs, re) = (owned[i], owned[j]);
-            let span_first = rs as u64 * bw;
+            let span_first = rs * bw;
             let mut buf = vec![0u32; (re - rs + 1) as usize * BLOCK_WORDS];
             Metrics::inc(&m.backend_fills);
             match fill_span(backend, gen, key, span_first, &mut buf) {
@@ -357,7 +357,7 @@ impl StreamService {
                 Got::Wait(slot) => await_slot(&slot)?,
                 Got::Own(_) => Arc::clone(filled.get(&b).expect("owned block filled")),
             };
-            let block_first = b as u64 * bw;
+            let block_first = b * bw;
             let lo = first_word.max(block_first);
             let hi = (first_word + out.len() as u64).min(block_first + bw);
             out[(lo - first_word) as usize..(hi - first_word) as usize]
@@ -381,7 +381,7 @@ fn fill_span(
     if first_word == 0 {
         backend.fill_u32(gen, key.seed(), key.ctr(), out)
     } else {
-        gen.boxed_at(key.seed(), key.ctr(), first_word as u32).fill_u32(out);
+        gen.boxed_at(key.seed(), key.ctr(), first_word).fill_u32(out);
         Ok(())
     }
 }
@@ -671,7 +671,7 @@ mod tests {
         let wpe = r.kind.words_per_elem();
         let n = r.len as usize;
         let mut words = vec![0u32; n * wpe];
-        let mut rng = r.gen.boxed_at(key.seed(), key.ctr(), (r.offset * wpe as u64) as u32);
+        let mut rng = r.gen.boxed_at(key.seed(), key.ctr(), r.offset * wpe as u64);
         rng.fill_u32(&mut words);
         let mut out = Vec::new();
         match r.kind {

@@ -36,7 +36,7 @@ pub fn pair_seed(i: u64, j: u64, global: u64) -> u64 {
 }
 
 /// The stream address of one pair at one step — the seeding-discipline
-/// pattern of `docs/stream-contracts.md` §6 as a typed key: the pair
+/// pattern of `docs/stream-contracts.md` §7 as a typed key: the pair
 /// identity is the seed ([`pair_seed`], order-independent), the step is
 /// the epoch. Byte-identical to the raw spelling both sides of a pair
 /// have always regenerated.

@@ -32,14 +32,14 @@ pub fn chunk_hits<G: BlockRng>(chunk_id: u64, global_seed: u64, samples_per_chun
     let mut words = [0u32; 4 * TILE];
     let key = chunk_key(chunk_id, global_seed);
     let mut g = G::new(key.seed(), key.ctr());
-    let mut pos = 0u32;
+    let mut pos = 0u64;
     let mut hits = 0u64;
     let mut done = 0usize;
     while done < samples_per_chunk {
         let n = (samples_per_chunk - done).min(TILE);
         let tile = &mut words[..4 * n];
         fill::fill_from(&mut g, pos, tile);
-        pos = pos.wrapping_add((4 * n) as u32);
+        pos = pos.wrapping_add((4 * n) as u64);
         for k in 0..n {
             let x = fill::u01_f64(tile[4 * k], tile[4 * k + 1]);
             let y = fill::u01_f64(tile[4 * k + 2], tile[4 * k + 3]);

@@ -1,0 +1,210 @@
+//! Inter-stream correlation battery (`openrand stats --inter-stream`).
+//!
+//! [`parallel`](super::parallel) reproduces the paper's HOOMD procedure:
+//! a few words from each of 16k particles, re-keyed every iteration.
+//! This module asks the complementary question the paper's §5.2 leaves
+//! implicit: do *sibling streams of one key family* stay independent
+//! when read side by side? It interleaves words round-robin from `K`
+//! children of a single [`StreamKey`] — stream `s` is
+//! `root(seed).child(s)` — and subjects the merged stream to the full
+//! single-stream suite. Any cross-child structure (a weak
+//! `derive_child_seed`, a counter layout that aliases siblings) becomes
+//! serial structure here and fails the battery.
+//!
+//! The construction deliberately retains **no per-stream state**: each
+//! word is produced by re-opening its child engine and `advance`-ing to
+//! the right phase (O(1) for the counter engines). That keeps memory
+//! flat in `K`, so `--streams 1000000` costs the same as `--streams 4`,
+//! and it doubles as an end-to-end exercise of the jump-ahead contract:
+//! a wrong `advance` *moves words* and the layout test below catches it.
+
+use super::suite::{StatTest, TestResult};
+use crate::core::traits::{CounterRng, Rng};
+use crate::stream::StreamKey;
+use std::marker::PhantomData;
+
+/// Round-robin interleaving of `streams` sibling child streams, as an
+/// `Rng` so every single-stream test can run on it without
+/// materializing the merge.
+///
+/// Word `i` of the interleaving is word `(i / streams) * stride` of
+/// child `i % streams`; `stride = 1` reads each child sequentially,
+/// larger strides sample every `stride`-th word (a cheap decimation
+/// check). Each draw re-derives the child key and `advance`s a fresh
+/// engine to the phase, so the cursor is the whole state.
+pub struct InterStream<G: CounterRng + 'static> {
+    key: StreamKey,
+    streams: u64,
+    stride: u64,
+    /// Next stream index in the round.
+    s: u64,
+    /// Completed rounds == words already taken per stream.
+    q: u64,
+    _g: PhantomData<G>,
+}
+
+impl<G: CounterRng + 'static> InterStream<G> {
+    pub fn new(key: StreamKey, streams: u64, stride: u64) -> Self {
+        assert!(streams > 0, "inter-stream battery needs at least one stream");
+        assert!(stride > 0, "stride must be >= 1");
+        InterStream { key, streams, stride, s: 0, q: 0, _g: PhantomData }
+    }
+}
+
+impl<G: CounterRng + 'static> Rng for InterStream<G> {
+    fn next_u32(&mut self) -> u32 {
+        let child = self.key.child(self.s);
+        let mut g = G::new(child.seed(), child.ctr());
+        g.advance(self.q * self.stride);
+        let w = g.next_u32();
+        self.s += 1;
+        if self.s == self.streams {
+            self.s = 0;
+            self.q += 1;
+        }
+        w
+    }
+}
+
+/// Run the full single-stream suite over the `K`-way interleaving of
+/// `root(seed)`'s children. Same budget shaping as
+/// [`super::parallel::run_parallel_suite`].
+pub fn run_inter_stream_suite<G: CounterRng + 'static>(
+    seed: u64,
+    streams: u64,
+    stride: u64,
+    words: usize,
+) -> Vec<TestResult> {
+    let tests: Vec<(&'static str, StatTest, f64)> = super::suite::all_tests();
+    let mut out = Vec::new();
+    for (_, test, weight) in tests {
+        let mut stream: InterStream<G> = InterStream::new(StreamKey::root(seed), streams, stride);
+        let budget = ((words as f64 * weight) as usize).max(1 << 14);
+        out.push(test(&mut stream, budget));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::{Philox, Squares, Tyche};
+    use crate::stats::suite::Verdict;
+
+    #[test]
+    fn interleaving_matches_direct_child_draws() {
+        // Word (q*K + s) must be word q*stride of child s, checked
+        // against plain sequential draws — this pins the advance() path
+        // (a fresh engine advanced to phase q*stride) to the ground
+        // truth (one engine stepped q*stride words).
+        let (k, stride) = (4u64, 3u64);
+        let root = StreamKey::root(0xFACE);
+        let mut inter: InterStream<Philox> = InterStream::new(root, k, stride);
+        let mut direct: Vec<Philox> = (0..k)
+            .map(|s| {
+                let c = root.child(s);
+                Philox::new(c.seed(), c.ctr())
+            })
+            .collect();
+        for q in 0..6u64 {
+            for (s, d) in direct.iter_mut().enumerate() {
+                let want = d.next_u32();
+                // Burn the skipped stride-1 words of the direct engine.
+                for _ in 0..stride - 1 {
+                    d.next_u32();
+                }
+                assert_eq!(inter.next_u32(), want, "q={q} s={s}");
+            }
+        }
+    }
+
+    #[test]
+    fn sequential_engines_interleave_too() {
+        // Tyche has no O(1) skip (JUMP_LOG2 = None) but advance(n) is
+        // still exact (O(n) stepping), so the battery must cover it.
+        let root = StreamKey::root(9);
+        let mut inter: InterStream<Tyche> = InterStream::new(root, 2, 1);
+        let c0 = root.child(0);
+        let c1 = root.child(1);
+        let mut d0 = Tyche::new(c0.seed(), c0.ctr());
+        let mut d1 = Tyche::new(c1.seed(), c1.ctr());
+        for q in 0..5 {
+            assert_eq!(inter.next_u32(), d0.next_u32(), "q={q} s=0");
+            assert_eq!(inter.next_u32(), d1.next_u32(), "q={q} s=1");
+        }
+    }
+
+    #[test]
+    fn cursor_is_flat_in_stream_count() {
+        // A million streams must construct instantly and draw from the
+        // right children: word 0 is child 0's word 0, word 999_999 is
+        // child 999_999's word 0.
+        let k = 1_000_000u64;
+        let root = StreamKey::root(3);
+        let mut inter: InterStream<Squares> = InterStream::new(root, k, 1);
+        let c0 = root.child(0);
+        assert_eq!(inter.next_u32(), Squares::new(c0.seed(), c0.ctr()).next_u32());
+        // Jump the cursor to the last stream of the round by hand.
+        inter.s = k - 1;
+        let clast = root.child(k - 1);
+        assert_eq!(inter.next_u32(), Squares::new(clast.seed(), clast.ctr()).next_u32());
+        assert_eq!((inter.s, inter.q), (0, 1));
+    }
+
+    #[test]
+    fn interleaving_kat_matches_python_oracle() {
+        // python/tests/test_jump_ahead.py pins the identical literals:
+        // round 0 of InterStream<Philox> over root(7) with K=4, then
+        // the first two words of round 1.
+        let mut inter: InterStream<Philox> = InterStream::new(StreamKey::root(7), 4, 1);
+        for want in [0xEF16_B664u32, 0xF128_2995, 0x89A6_8AC1, 0x079F_41FA] {
+            assert_eq!(inter.next_u32(), want);
+        }
+        assert_eq!(inter.next_u32(), 0x2EDD_D51C);
+        assert_eq!(inter.next_u32(), 0xB2BD_D7E0);
+    }
+
+    #[test]
+    fn philox_inter_stream_passes() {
+        for r in run_inter_stream_suite::<Philox>(0, 64, 1, 1 << 16) {
+            assert_ne!(r.verdict(), Verdict::Fail, "{}: p={}", r.name, r.p);
+        }
+    }
+
+    #[test]
+    fn squares_inter_stream_passes() {
+        for r in run_inter_stream_suite::<Squares>(42, 32, 1, 1 << 16) {
+            assert_ne!(r.verdict(), Verdict::Fail, "{}: p={}", r.name, r.p);
+        }
+    }
+
+    #[test]
+    fn battery_catches_shared_children() {
+        // Power self-test: a broken engine that ignores its seed makes
+        // every child the SAME stream, so each round emits one word
+        // repeated K times. The suite must fail hard, or this battery
+        // has no detection power.
+        struct SharedChild(Philox);
+        impl crate::core::traits::Rng for SharedChild {
+            fn next_u32(&mut self) -> u32 {
+                self.0.next_u32()
+            }
+        }
+        impl CounterRng for SharedChild {
+            const NAME: &'static str = "shared-child";
+            fn new(_seed: u64, ctr: u32) -> Self {
+                SharedChild(CounterRng::new(0, ctr)) // seed ignored!
+            }
+            const JUMP_LOG2: Option<u32> = Some(33);
+            fn set_position(&mut self, p: u64) {
+                self.0.set_position(p)
+            }
+            fn advance(&mut self, n: u64) {
+                self.0.advance(n)
+            }
+        }
+        let results = run_inter_stream_suite::<SharedChild>(0, 16, 1, 1 << 16);
+        let fails = results.iter().filter(|r| r.verdict() == Verdict::Fail).count();
+        assert!(fails >= 3, "inter-stream battery lacks power: {fails} failures");
+    }
+}

@@ -20,12 +20,15 @@
 //! low bits) that MUST fail. [`parallel`] reproduces the HOOMD-blue
 //! interleaved multi-stream correlation procedure the paper describes,
 //! which is the part that actually exercises the counter-based design.
-//! [`distcheck`] extends the battery past raw words: KS / χ² / moment
-//! checks on the `dist` samplers' outputs (`openrand stats
-//! --dist-battery`).
+//! [`interstream`] is its key-family sibling: a round-robin interleave
+//! of `K` `StreamKey::child` streams, each word reached by jump-ahead
+//! (`openrand stats --inter-stream --streams K`). [`distcheck`] extends
+//! the battery past raw words: KS / χ² / moment checks on the `dist`
+//! samplers' outputs (`openrand stats --dist-battery`).
 
 pub mod battery;
 pub mod distcheck;
+pub mod interstream;
 pub mod parallel;
 pub mod pvalue;
 pub mod suite;
@@ -34,4 +37,5 @@ pub use battery::{
     chunk_sweep, run_battery, BatteryReport, BufferedWords, ChunkSweepRow, DEFAULT_FILL_CHUNK,
 };
 pub use distcheck::{run_dist_battery, run_dist_battery_keyed};
+pub use interstream::{run_inter_stream_suite, InterStream};
 pub use suite::{TestResult, Verdict};

@@ -226,8 +226,12 @@ mod tests {
             fn new(_seed: u64, ctr: u32) -> Self {
                 SharedStream(crate::core::CounterRng::new(0, ctr)) // seed ignored!
             }
-            fn set_position(&mut self, p: u32) {
+            const JUMP_LOG2: Option<u32> = Some(33);
+            fn set_position(&mut self, p: u64) {
                 self.0.set_position(p)
+            }
+            fn advance(&mut self, n: u64) {
+                self.0.advance(n)
             }
         }
         let results = run_parallel_suite::<SharedStream>(0, 1 << 16);

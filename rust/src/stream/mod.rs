@@ -444,7 +444,7 @@ impl<E: CounterRng + BlockRng> Stream<E> {
     /// the key, host-side through the engine's block path
     /// ([`fill::fill_from`]). O(1) jump for the counter engines;
     /// Tyche's documented O(pos) exception applies.
-    pub fn fill_u32_at(&self, pos: u32, out: &mut [u32]) {
+    pub fn fill_u32_at(&self, pos: u64, out: &mut [u32]) {
         let mut g = E::new(self.key.seed(), self.key.ctr());
         if pos != 0 {
             g.set_position(pos);
@@ -509,7 +509,7 @@ impl DynStream {
     /// Open with the cursor positioned at absolute stream word `pos`
     /// (O(1) counter jump; Tyche's documented O(pos) exception
     /// applies).
-    pub fn open_at(gen: Generator, key: StreamKey, pos: u32) -> DynStream {
+    pub fn open_at(gen: Generator, key: StreamKey, pos: u64) -> DynStream {
         DynStream { key, gen, rng: gen.boxed_at(key.seed(), key.ctr(), pos) }
     }
 
@@ -562,7 +562,7 @@ impl DynStream {
     }
 
     /// Positioned block fill: words `pos..pos + out.len()` of the key.
-    pub fn fill_u32_at(&self, pos: u32, out: &mut [u32]) {
+    pub fn fill_u32_at(&self, pos: u64, out: &mut [u32]) {
         let mut g = self.gen.boxed_at(self.key.seed(), self.key.ctr(), pos);
         g.fill_u32(out);
     }
@@ -630,7 +630,7 @@ impl BackendWords {
         let n = prefetch.min(MAX_PREFETCH_WORDS);
         let mut buf = vec![0u32; n];
         fill_u32_key(backend, gen, key, &mut buf)?;
-        Ok(BackendWords { buf, pos: 0, spill: DynStream::open_at(gen, key, n as u32) })
+        Ok(BackendWords { buf, pos: 0, spill: DynStream::open_at(gen, key, n as u64) })
     }
 
     /// [`BackendWords::new`] on the default `Auto` route (host arms are

@@ -1,6 +1,7 @@
 //! Property-based tests over the core invariants, driven by the in-house
 //! `testing::prop` framework (the proptest substitute).
 
+use openrand::baseline::{Lcg64, Pcg32, SplitMix64};
 use openrand::core::{
     fill, BlockBuffered, BlockRng, CounterRng, Philox, Philox2x32, Rng, Squares, Threefry,
     Threefry2x32, Tyche, TycheI,
@@ -101,13 +102,143 @@ fn prop_set_position_matches_sequential() {
         |seed, ctr, pos| {
             let words = stream::<Philox>(seed, ctr, pos as usize + 1);
             let mut r = Philox::new(seed, ctr);
-            r.set_position(pos);
+            r.set_position(pos as u64);
             let jump_ok = r.next_u32() == words[pos as usize];
 
             let words_s = stream::<Squares>(seed, ctr, pos as usize + 1);
             let mut s = Squares::new(seed, ctr);
-            s.set_position(pos);
+            s.set_position(pos as u64);
             jump_ok && s.next_u32() == words_s[pos as usize]
+        },
+    );
+}
+
+#[test]
+fn prop_advance_matches_sequential_all_engines() {
+    // The jump-ahead contract (docs/stream-contracts.md §5): from ANY
+    // phase, advance(n) lands exactly where n next_u32 draws would, for
+    // every engine — O(1) counter engines and O(n) Tyche alike.
+    fn check<G: CounterRng>(seed: u64, ctr: u32, pre: u32, n: u32) -> bool {
+        let mut a = G::new(seed, ctr);
+        let mut b = G::new(seed, ctr);
+        for _ in 0..pre {
+            a.next_u32();
+            b.next_u32();
+        }
+        a.advance(n as u64);
+        for _ in 0..n {
+            b.next_u32();
+        }
+        (0..3).all(|_| a.next_u32() == b.next_u32())
+    }
+    Prop::new("advance(n) == n draws, any phase").cases(30).check3(
+        Gen::u64(),
+        Gen::u32_below(9),
+        Gen::u32_below(300),
+        |seed, pre, n| {
+            check::<Philox>(seed, 1, pre, n)
+                && check::<Philox2x32>(seed, 1, pre, n)
+                && check::<Threefry>(seed, 1, pre, n)
+                && check::<Threefry2x32>(seed, 1, pre, n)
+                && check::<Squares>(seed, 1, pre, n)
+                && check::<Tyche>(seed, 1, pre, n)
+                && check::<TycheI>(seed, 1, pre, n)
+        },
+    );
+}
+
+#[test]
+fn prop_advance_composes() {
+    // advance(a) then advance(b) == advance(a + b): positions are
+    // absolute counter arithmetic for the block engines, so composition
+    // must be exact — including across the u32 block-id boundary.
+    fn check<G: CounterRng>(seed: u64, a: u64, b: u64) -> bool {
+        let mut two = G::new(seed, 2);
+        two.advance(a);
+        two.advance(b);
+        let mut one = G::new(seed, 2);
+        one.advance(a + b);
+        (0..3).all(|_| two.next_u32() == one.next_u32())
+    }
+    Prop::new("advance(a);advance(b) == advance(a+b)").cases(40).check3(
+        Gen::u64(),
+        Gen::u32(),
+        Gen::u32(),
+        |seed, a, b| {
+            // Stretch one leg past 2^32 words to cross the widened
+            // block-id boundary on the 4x32 engines.
+            let big = (a as u64) << 8;
+            check::<Philox>(seed, big, b as u64)
+                && check::<Threefry>(seed, big, b as u64)
+                && check::<Philox2x32>(seed, a as u64, b as u64)
+                && check::<Squares>(seed, a as u64, b as u64)
+        },
+    );
+}
+
+#[test]
+fn prop_set_position_beyond_4g_words() {
+    // Regression for the u32->u64 position widening: addressing past
+    // 2^32 words must stay consistent with drawing forward from there.
+    Prop::new("set_position crosses 4G words").cases(30).check3(
+        Gen::u64(),
+        Gen::u32_below(1 << 20),
+        Gen::u32_below(40),
+        |seed, off, k| {
+            let base = (1u64 << 32) + off as u64;
+            let mut a = Philox::new(seed, 3);
+            a.set_position(base);
+            for _ in 0..k {
+                a.next_u32();
+            }
+            let mut b = Philox::new(seed, 3);
+            b.set_position(base + k as u64);
+            let mut t = Threefry::new(seed, 3);
+            t.set_position(base);
+            for _ in 0..k {
+                t.next_u32();
+            }
+            let mut t2 = Threefry::new(seed, 3);
+            t2.set_position(base + k as u64);
+            a.next_u32() == b.next_u32() && t.next_u32() == t2.next_u32()
+        },
+    );
+}
+
+#[test]
+fn prop_baseline_advance_matches_stepping() {
+    // The sequential baselines' skip-ahead (lcg_skip / Weyl multiply)
+    // == repeated stepping, from any phase, at random small strides.
+    Prop::new("baseline advance == n steps").cases(40).check3(
+        Gen::u64(),
+        Gen::u32_below(7),
+        Gen::u32_below(400),
+        |seed, pre, n| {
+            let mut pa = Pcg32::new(seed, 54);
+            let mut pb = Pcg32::new(seed, 54);
+            let mut la = Lcg64::new(seed);
+            let mut lb = Lcg64::new(seed);
+            let mut sa = SplitMix64::new(seed);
+            let mut sb = SplitMix64::new(seed);
+            for _ in 0..pre {
+                pa.next_u32();
+                pb.next_u32();
+                la.next_u32();
+                lb.next_u32();
+                sa.next_u32();
+                sb.next_u32();
+            }
+            pa.advance(n as u64);
+            la.advance(n as u64);
+            sa.advance(n as u64);
+            for _ in 0..n {
+                pb.next_u32();
+                lb.next_u32();
+                sb.next_u32();
+            }
+            pa.next_u32() == pb.next_u32()
+                && la.next_u32() == lb.next_u32()
+                && sa.next_u32() == sb.next_u32()
         },
     );
 }

@@ -35,7 +35,7 @@ fn reference(req: &FillRequest) -> Vec<u8> {
     let n = req.len as usize;
     let first_word = req.offset as usize * wpe;
     let mut words = vec![0u32; n * wpe];
-    let mut rng = req.gen.boxed_at(key.seed(), key.ctr(), first_word as u32);
+    let mut rng = req.gen.boxed_at(key.seed(), key.ctr(), first_word as u64);
     rng.fill_u32(&mut words);
     let mut out = Vec::with_capacity(n * req.kind.bytes_per_elem());
     match req.kind {
