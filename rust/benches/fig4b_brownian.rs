@@ -55,6 +55,30 @@ fn main() {
         );
     }
 
+    // Campaign runner (rust/src/campaign): the tiled epoch-addressed
+    // large-N path at the same n/steps — this is the row to read at
+    // paper scale (N=1048576), where the per-tile fills amortize and
+    // checkpointability costs nothing per step. Zero persistent engine
+    // state: every word is re-derived from (key, epoch, tile).
+    {
+        use openrand::campaign::{Campaign, CampaignParams, Model};
+        use openrand::stream::StreamKey;
+        let mut p = CampaignParams::new(Model::Brownian, n, StreamKey::root(1));
+        p.threads = threads;
+        let mut c = Campaign::new(p).unwrap();
+        let t0 = std::time::Instant::now();
+        c.run_to(steps).unwrap();
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<26} {:>12.3} {:>14.2} {:>11.2}x {:>12}",
+            format!("campaign[{}t]", threads),
+            wall,
+            n as f64 * steps as f64 / wall / 1e6,
+            wall / openrand_wall,
+            format::bytes(0)
+        );
+    }
+
     // Device backend: openrand + curand_style (raw123 is stream-identical
     // to openrand on device — the API difference is host-side only).
     let mut dev_openrand_wall = f64::NAN;

@@ -1,0 +1,95 @@
+//! `fig_campaign` — campaign throughput: particles/sec vs N and
+//! backend arm, plus the resume reproducibility gate.
+//!
+//! The campaign runner (`rust/src/campaign`) is the Tier-1 end-to-end
+//! scenario: tiled epoch-addressed fills driving the Brownian
+//! integrator at large N with bitwise checkpoint/resume. This bench
+//! answers the two questions the docs make claims about:
+//!
+//! 1. **Scaling** — particle-steps/sec as N grows from cache-resident
+//!    to memory-bound, per thread arm (serial vs all cores).
+//! 2. **Resume is free and exact** — a mid-trajectory checkpoint +
+//!    resume (at a different thread count) must reproduce the
+//!    uninterrupted end state byte-for-byte; the gate asserts it.
+//!
+//! ```bash
+//! cargo bench --bench fig_campaign                 # full sizes (incl. 1M)
+//! OPENRAND_BENCH_QUICK=1 cargo bench --bench fig_campaign   # CI tier
+//! N=4194304 STEPS=20 cargo bench --bench fig_campaign       # custom
+//! ```
+
+use openrand::campaign::{Campaign, CampaignParams, Model};
+use openrand::stream::StreamKey;
+use std::time::Instant;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn params(n: usize, threads: usize) -> CampaignParams {
+    let mut p = CampaignParams::new(Model::Brownian, n, StreamKey::root(1));
+    p.threads = threads;
+    p
+}
+
+fn main() {
+    let quick = std::env::var("OPENRAND_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+    let cores = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    let sizes: Vec<usize> = match std::env::var("N").ok().and_then(|v| v.parse().ok()) {
+        Some(n) => vec![n],
+        None if quick => vec![16_384, 65_536],
+        None => vec![65_536, 262_144, 1_048_576],
+    };
+    let steps = env_usize("STEPS", if quick { 10 } else { 25 }) as u32;
+
+    println!("fig_campaign: brownian campaign throughput (steps={steps})");
+    println!("(paper-scale claim: N >= 1M — the default full tier includes it)\n");
+    println!(
+        "{:<14} {:>10} {:>12} {:>16} {:>12}",
+        "arm", "N", "wall (s)", "pstep/s", "vs serial"
+    );
+    println!("{}", "-".repeat(68));
+
+    let arms: Vec<usize> = if cores > 1 { vec![1, cores] } else { vec![1] };
+    for &n in &sizes {
+        let mut serial_wall = f64::NAN;
+        for &threads in &arms {
+            let mut c = Campaign::new(params(n, threads)).unwrap();
+            let t0 = Instant::now();
+            c.run_to(steps).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            if threads == 1 {
+                serial_wall = wall;
+            }
+            let rate = n as f64 * steps as f64 / wall;
+            println!(
+                "{:<14} {:>10} {:>12.3} {:>16} {:>11.2}x",
+                format!("host[{threads}t]"),
+                n,
+                wall,
+                openrand::util::format::si(rate),
+                serial_wall / wall
+            );
+        }
+    }
+
+    // Repro gate: checkpoint at a mid epoch, resume at a different
+    // thread count, and require the byte-identical end checkpoint the
+    // docs promise. A bench that silently stopped being reproducible
+    // would be measuring the wrong thing.
+    let (gate_n, gate_steps, split) = (2_048, 6u32, 3u32);
+    let mut p = params(gate_n, 2);
+    p.tile = 256;
+    let mut full = Campaign::new(p).unwrap();
+    full.run_to(gate_steps).unwrap();
+    let mut head = Campaign::new(p).unwrap();
+    head.run_to(split).unwrap();
+    let mut tail = Campaign::resume(&head.checkpoint(), 4).unwrap();
+    tail.run_to(gate_steps).unwrap();
+    assert_eq!(
+        full.checkpoint().encode(),
+        tail.checkpoint().encode(),
+        "campaign resume diverged from the uninterrupted run"
+    );
+    println!("\ncampaign repro gate: ok (resume == never-stopped, bitwise)");
+}

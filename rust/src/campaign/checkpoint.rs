@@ -1,0 +1,484 @@
+//! The versioned campaign checkpoint format (normative spec:
+//! `docs/campaigns.md` §"Checkpoint format v1").
+//!
+//! A checkpoint is the **complete** identity of a paused campaign:
+//! the model, the generator, the `StreamKey` address, the tile size,
+//! the epoch count, and the particle arrays. Deliberately absent: any
+//! engine state. Counter-based streams are addressed, not carried —
+//! `key.epoch(t).child(tile)` reconstructs every future draw, which is
+//! what makes resume == never-stopped provable bitwise.
+//!
+//! Layout (all integers little-endian; `n` = particle count):
+//!
+//! ```text
+//! offset  size  field
+//!      0     8  magic          b"ORCAMPCK"
+//!      8     4  version        u32, currently 1
+//!     12     4  model tag      0 = brownian, 1 = dpd
+//!     16     4  generator tag  normative table (see [`generator_tag`])
+//!     20     4  epoch          completed epochs; resume continues here
+//!     24     8  key seed       u64 (root seed of the campaign key)
+//!     32     4  key ctr        u32, must be 0 in v1 (epochs are derived)
+//!     36     4  tile           particles per tile (addressing identity)
+//!     40     8  n              u64 particle count
+//!     48   8·n  x              f64 bit patterns
+//!  48+8n   8·n  y
+//! 48+16n   8·n  vx
+//! 48+24n   8·n  vy
+//! 48+32n     8  checksum       FNV-1a 64 over all preceding bytes
+//! ```
+//!
+//! Decoding rejects malformed input with a typed [`CheckpointError`]
+//! (never a panic): magic, then version, then size (derived from the
+//! header `n`, checked before any allocation so a corrupt length can't
+//! OOM), then checksum, then field validation.
+
+use super::Model;
+use crate::core::Generator;
+use crate::stream::StreamKey;
+use crate::util::hash::Fnv1a;
+use std::fmt;
+use std::path::Path;
+
+/// File magic — the first 8 bytes of every campaign checkpoint.
+pub const MAGIC: [u8; 8] = *b"ORCAMPCK";
+
+/// Current (and only) format version.
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Fixed header size in bytes (through the `n` field).
+pub const HEADER_BYTES: usize = 48;
+
+/// Trailing checksum size in bytes.
+pub const TRAILER_BYTES: usize = 8;
+
+/// Why a checkpoint failed to decode. Every malformed input maps to a
+/// typed variant; decoding never panics.
+#[derive(Debug)]
+pub enum CheckpointError {
+    /// Underlying file I/O failed.
+    Io(std::io::Error),
+    /// The first 8 bytes are not [`MAGIC`].
+    BadMagic,
+    /// The header declares a version this build cannot read.
+    UnsupportedVersion(u32),
+    /// Fewer bytes than the header-derived size (`expected` is the full
+    /// size the header implies; for inputs shorter than a header it is
+    /// the minimum decodable size).
+    Truncated { expected: u64, got: u64 },
+    /// More bytes than the header-derived size.
+    TrailingBytes { expected: u64, got: u64 },
+    /// The FNV-1a trailer does not match the content.
+    ChecksumMismatch { stored: u64, computed: u64 },
+    /// Unknown model tag.
+    BadModel(u32),
+    /// Unknown generator tag.
+    BadGenerator(u32),
+    /// The stored key carries a non-zero counter — v1 keys must be
+    /// epoch-free (epochs are derived per timestep).
+    BadKey(u32),
+    /// Zero or over-large tile size.
+    BadTile(u32),
+}
+
+impl fmt::Display for CheckpointError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CheckpointError::Io(e) => write!(f, "checkpoint i/o: {e}"),
+            CheckpointError::BadMagic => write!(f, "not a campaign checkpoint (bad magic)"),
+            CheckpointError::UnsupportedVersion(v) => {
+                write!(f, "unsupported checkpoint version {v} (this build reads {FORMAT_VERSION})")
+            }
+            CheckpointError::Truncated { expected, got } => {
+                write!(f, "truncated checkpoint: {got} bytes, expected {expected}")
+            }
+            CheckpointError::TrailingBytes { expected, got } => {
+                write!(f, "trailing bytes after checkpoint: {got} bytes, expected {expected}")
+            }
+            CheckpointError::ChecksumMismatch { stored, computed } => write!(
+                f,
+                "checkpoint checksum mismatch: stored {stored:016x}, computed {computed:016x}"
+            ),
+            CheckpointError::BadModel(t) => write!(f, "unknown model tag {t}"),
+            CheckpointError::BadGenerator(t) => write!(f, "unknown generator tag {t}"),
+            CheckpointError::BadKey(ctr) => {
+                write!(f, "checkpoint key has non-zero ctr {ctr} (v1 keys are epoch-free)")
+            }
+            CheckpointError::BadTile(t) => write!(f, "bad tile size {t}"),
+        }
+    }
+}
+
+impl std::error::Error for CheckpointError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            CheckpointError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for CheckpointError {
+    fn from(e: std::io::Error) -> Self {
+        CheckpointError::Io(e)
+    }
+}
+
+/// Normative model tags of format v1 — never reorder.
+pub fn model_tag(m: Model) -> u32 {
+    match m {
+        Model::Brownian => 0,
+        Model::Dpd => 1,
+    }
+}
+
+/// Inverse of [`model_tag`].
+pub fn model_from_tag(t: u32) -> Option<Model> {
+    match t {
+        0 => Some(Model::Brownian),
+        1 => Some(Model::Dpd),
+        _ => None,
+    }
+}
+
+/// Normative generator tags of format v1 — never reorder. (These are
+/// part of the on-disk contract; `Generator` enum order is not.)
+pub fn generator_tag(g: Generator) -> u32 {
+    match g {
+        Generator::Philox => 0,
+        Generator::Philox2x32 => 1,
+        Generator::Threefry => 2,
+        Generator::Threefry2x32 => 3,
+        Generator::Squares => 4,
+        Generator::Tyche => 5,
+        Generator::TycheI => 6,
+    }
+}
+
+/// Inverse of [`generator_tag`].
+pub fn generator_from_tag(t: u32) -> Option<Generator> {
+    match t {
+        0 => Some(Generator::Philox),
+        1 => Some(Generator::Philox2x32),
+        2 => Some(Generator::Threefry),
+        3 => Some(Generator::Threefry2x32),
+        4 => Some(Generator::Squares),
+        5 => Some(Generator::Tyche),
+        6 => Some(Generator::TycheI),
+        _ => None,
+    }
+}
+
+/// A decoded (or to-be-encoded) campaign checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub model: Model,
+    pub gen: Generator,
+    /// The campaign's stream address (ctr always 0 in v1).
+    pub key: StreamKey,
+    /// Completed epochs; resume continues from here.
+    pub epoch: u32,
+    /// Particles per tile — part of the trajectory identity.
+    pub tile: u32,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub vx: Vec<f64>,
+    pub vy: Vec<f64>,
+}
+
+impl Checkpoint {
+    pub fn n_particles(&self) -> usize {
+        self.x.len()
+    }
+
+    /// Total encoded size in bytes for `n` particles.
+    pub fn encoded_len(n: usize) -> usize {
+        HEADER_BYTES + 32 * n + TRAILER_BYTES
+    }
+
+    /// Serialize to the v1 byte layout (deterministic: the same state
+    /// always encodes to the same bytes, which is what lets CI `cmp`
+    /// resumed-vs-uninterrupted end checkpoints).
+    pub fn encode(&self) -> Vec<u8> {
+        let n = self.x.len();
+        debug_assert_eq!(self.y.len(), n);
+        debug_assert_eq!(self.vx.len(), n);
+        debug_assert_eq!(self.vy.len(), n);
+        let mut out = Vec::with_capacity(Self::encoded_len(n));
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&model_tag(self.model).to_le_bytes());
+        out.extend_from_slice(&generator_tag(self.gen).to_le_bytes());
+        out.extend_from_slice(&self.epoch.to_le_bytes());
+        out.extend_from_slice(&self.key.seed().to_le_bytes());
+        out.extend_from_slice(&self.key.ctr().to_le_bytes());
+        out.extend_from_slice(&self.tile.to_le_bytes());
+        out.extend_from_slice(&(n as u64).to_le_bytes());
+        for arr in [&self.x, &self.y, &self.vx, &self.vy] {
+            for v in arr.iter() {
+                out.extend_from_slice(&v.to_bits().to_le_bytes());
+            }
+        }
+        let mut h = Fnv1a::new();
+        for &b in &out {
+            h.write_u8(b);
+        }
+        out.extend_from_slice(&h.finish().to_le_bytes());
+        out
+    }
+
+    /// Decode the v1 byte layout, rejecting malformed input with a
+    /// typed error (see the module docs for the validation order).
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint, CheckpointError> {
+        let min = (HEADER_BYTES + TRAILER_BYTES) as u64;
+        if (bytes.len() as u64) < min {
+            return Err(CheckpointError::Truncated { expected: min, got: bytes.len() as u64 });
+        }
+        if bytes[..8] != MAGIC {
+            return Err(CheckpointError::BadMagic);
+        }
+        let u32at = |o: usize| u32::from_le_bytes(bytes[o..o + 4].try_into().unwrap());
+        let u64at = |o: usize| u64::from_le_bytes(bytes[o..o + 8].try_into().unwrap());
+        let version = u32at(8);
+        if version != FORMAT_VERSION {
+            return Err(CheckpointError::UnsupportedVersion(version));
+        }
+        // Size check from the header-declared n, in u64 so a garbage n
+        // can't overflow — and before any allocation, so it can't OOM.
+        let n64 = u64at(40);
+        let expected = n64
+            .checked_mul(32)
+            .and_then(|p| p.checked_add(min))
+            .ok_or(CheckpointError::Truncated { expected: u64::MAX, got: bytes.len() as u64 })?;
+        match (bytes.len() as u64).cmp(&expected) {
+            std::cmp::Ordering::Less => {
+                return Err(CheckpointError::Truncated { expected, got: bytes.len() as u64 })
+            }
+            std::cmp::Ordering::Greater => {
+                return Err(CheckpointError::TrailingBytes { expected, got: bytes.len() as u64 })
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        let body = &bytes[..bytes.len() - TRAILER_BYTES];
+        let stored = u64at(bytes.len() - TRAILER_BYTES);
+        let mut h = Fnv1a::new();
+        for &b in body {
+            h.write_u8(b);
+        }
+        let computed = h.finish();
+        if stored != computed {
+            return Err(CheckpointError::ChecksumMismatch { stored, computed });
+        }
+        let model = model_from_tag(u32at(12)).ok_or(CheckpointError::BadModel(u32at(12)))?;
+        let gen = generator_from_tag(u32at(16)).ok_or(CheckpointError::BadGenerator(u32at(16)))?;
+        let epoch = u32at(20);
+        let seed = u64at(24);
+        let ctr = u32at(32);
+        if ctr != 0 {
+            return Err(CheckpointError::BadKey(ctr));
+        }
+        let tile = u32at(36);
+        if tile == 0 || tile as usize > super::MAX_TILE {
+            return Err(CheckpointError::BadTile(tile));
+        }
+        let n = n64 as usize;
+        let mut off = HEADER_BYTES;
+        let mut read_arr = || {
+            let mut v = Vec::with_capacity(n);
+            for _ in 0..n {
+                v.push(f64::from_bits(u64::from_le_bytes(
+                    bytes[off..off + 8].try_into().unwrap(),
+                )));
+                off += 8;
+            }
+            v
+        };
+        let x = read_arr();
+        let y = read_arr();
+        let vx = read_arr();
+        let vy = read_arr();
+        Ok(Checkpoint { model, gen, key: StreamKey::root(seed), epoch, tile, x, y, vx, vy })
+    }
+
+    /// Write the encoded checkpoint to a file.
+    pub fn write_file(&self, path: impl AsRef<Path>) -> Result<(), CheckpointError> {
+        std::fs::write(path, self.encode()).map_err(CheckpointError::Io)
+    }
+
+    /// Read and decode a checkpoint file.
+    pub fn read_file(path: impl AsRef<Path>) -> Result<Checkpoint, CheckpointError> {
+        let bytes = std::fs::read(path).map_err(CheckpointError::Io)?;
+        Self::decode(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(n: usize) -> Checkpoint {
+        Checkpoint {
+            model: Model::Brownian,
+            gen: Generator::Threefry,
+            key: StreamKey::root(0xDEAD_BEEF),
+            epoch: 17,
+            tile: 4096,
+            x: (0..n).map(|i| i as f64 * 0.5).collect(),
+            y: (0..n).map(|i| -(i as f64)).collect(),
+            vx: vec![0.25; n],
+            vy: vec![-0.0; n], // -0.0 must survive bitwise
+        }
+    }
+
+    /// Recompute the trailer after a test mutates the body (so the
+    /// mutation under test is the *only* defect).
+    fn rehash(bytes: &mut Vec<u8>) {
+        let body_len = bytes.len() - TRAILER_BYTES;
+        let mut h = Fnv1a::new();
+        for &b in &bytes[..body_len] {
+            h.write_u8(b);
+        }
+        bytes.truncate(body_len);
+        bytes.extend_from_slice(&h.finish().to_le_bytes());
+    }
+
+    #[test]
+    fn roundtrip_is_exact() {
+        let ck = sample(37);
+        let bytes = ck.encode();
+        assert_eq!(bytes.len(), Checkpoint::encoded_len(37));
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_eq!(back, ck);
+        // -0.0 kept its sign bit.
+        assert_eq!(back.vy[0].to_bits(), (-0.0f64).to_bits());
+        // Deterministic bytes: encode(decode(encode(x))) == encode(x).
+        assert_eq!(back.encode(), bytes);
+    }
+
+    #[test]
+    fn empty_campaign_roundtrips() {
+        let ck = sample(0);
+        assert_eq!(Checkpoint::decode(&ck.encode()).unwrap(), ck);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = sample(4).encode();
+        bytes[0] ^= 0xFF;
+        assert!(matches!(Checkpoint::decode(&bytes), Err(CheckpointError::BadMagic)));
+    }
+
+    #[test]
+    fn version_mismatch_rejected() {
+        let mut bytes = sample(4).encode();
+        bytes[8..12].copy_from_slice(&2u32.to_le_bytes());
+        rehash(&mut bytes);
+        assert!(matches!(
+            Checkpoint::decode(&bytes),
+            Err(CheckpointError::UnsupportedVersion(2))
+        ));
+    }
+
+    #[test]
+    fn truncation_rejected_at_every_length() {
+        let bytes = sample(3).encode();
+        for cut in [0, 7, HEADER_BYTES - 1, HEADER_BYTES + 5, bytes.len() - 1] {
+            match Checkpoint::decode(&bytes[..cut]) {
+                Err(CheckpointError::Truncated { .. }) => {}
+                other => panic!("cut at {cut}: expected Truncated, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let mut bytes = sample(3).encode();
+        bytes.push(0);
+        assert!(matches!(
+            Checkpoint::decode(&bytes),
+            Err(CheckpointError::TrailingBytes { .. })
+        ));
+    }
+
+    #[test]
+    fn payload_corruption_rejected_by_checksum() {
+        let mut bytes = sample(8).encode();
+        let mid = HEADER_BYTES + 11;
+        bytes[mid] ^= 0x40;
+        assert!(matches!(
+            Checkpoint::decode(&bytes),
+            Err(CheckpointError::ChecksumMismatch { .. })
+        ));
+    }
+
+    #[test]
+    fn corrupt_header_n_cannot_allocate() {
+        // A garbage particle count must fail the size check, not drive
+        // an allocation: set n to u64::MAX and rehash so only the size
+        // check can object.
+        let mut bytes = sample(2).encode();
+        bytes[40..48].copy_from_slice(&u64::MAX.to_le_bytes());
+        rehash(&mut bytes);
+        assert!(matches!(Checkpoint::decode(&bytes), Err(CheckpointError::Truncated { .. })));
+    }
+
+    #[test]
+    fn bad_tags_rejected() {
+        let mut bad_model = sample(2).encode();
+        bad_model[12..16].copy_from_slice(&9u32.to_le_bytes());
+        rehash(&mut bad_model);
+        assert!(matches!(Checkpoint::decode(&bad_model), Err(CheckpointError::BadModel(9))));
+
+        let mut bad_gen = sample(2).encode();
+        bad_gen[16..20].copy_from_slice(&42u32.to_le_bytes());
+        rehash(&mut bad_gen);
+        assert!(matches!(Checkpoint::decode(&bad_gen), Err(CheckpointError::BadGenerator(42))));
+
+        let mut bad_ctr = sample(2).encode();
+        bad_ctr[32..36].copy_from_slice(&7u32.to_le_bytes());
+        rehash(&mut bad_ctr);
+        assert!(matches!(Checkpoint::decode(&bad_ctr), Err(CheckpointError::BadKey(7))));
+
+        let mut bad_tile = sample(2).encode();
+        bad_tile[36..40].copy_from_slice(&0u32.to_le_bytes());
+        rehash(&mut bad_tile);
+        assert!(matches!(Checkpoint::decode(&bad_tile), Err(CheckpointError::BadTile(0))));
+    }
+
+    #[test]
+    fn generator_tags_roundtrip_and_are_pinned() {
+        for g in Generator::ALL {
+            assert_eq!(generator_from_tag(generator_tag(g)), Some(g));
+        }
+        // The on-disk table is normative — pin the literals.
+        assert_eq!(generator_tag(Generator::Philox), 0);
+        assert_eq!(generator_tag(Generator::Philox2x32), 1);
+        assert_eq!(generator_tag(Generator::Threefry), 2);
+        assert_eq!(generator_tag(Generator::Threefry2x32), 3);
+        assert_eq!(generator_tag(Generator::Squares), 4);
+        assert_eq!(generator_tag(Generator::Tyche), 5);
+        assert_eq!(generator_tag(Generator::TycheI), 6);
+        assert_eq!(generator_from_tag(7), None);
+        assert_eq!((model_tag(Model::Brownian), model_tag(Model::Dpd)), (0, 1));
+        assert_eq!(model_from_tag(2), None);
+    }
+
+    #[test]
+    fn io_error_is_typed() {
+        match Checkpoint::read_file("/nonexistent/campaign.ck") {
+            Err(CheckpointError::Io(_)) => {}
+            other => panic!("expected Io error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("openrand_ck_test_{}.ck", std::process::id()));
+        let ck = sample(16);
+        ck.write_file(&path).unwrap();
+        let back = Checkpoint::read_file(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(back, ck);
+    }
+}

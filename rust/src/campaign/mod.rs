@@ -1,0 +1,660 @@
+//! `openrand::campaign` — large-N simulation campaigns with bitwise
+//! checkpoint/resume and a physics validation gate.
+//!
+//! This is the crate's Tier-1 end-to-end scenario: the paper's
+//! reproducibility claim ("identical trajectories regardless of how the
+//! work is parallelized") stressed at million-particle scale instead of
+//! toy sizes. The design rests on three invariants, all inherited from
+//! lower layers:
+//!
+//! 1. **Epoch addressing.** Timestep `t` of a campaign draws from
+//!    `key.epoch(t)`; tile `k` of that timestep draws words
+//!    `0..2·tile_len` of `key.epoch(t).child(k)`. The child derivation
+//!    mixes the epoch counter, so no two (epoch, tile) cells ever share
+//!    a stream, and a tile never materializes another tile's state —
+//!    backends reach interior words through the PR-7 jump-ahead
+//!    contract (`set_position`), not by generating prefixes.
+//! 2. **Arm-identical fills.** Every `FillBackend` arm produces
+//!    byte-identical words, so the trajectory is invariant across
+//!    thread counts and host/par fill arms (proved by a property test
+//!    in `tests/properties.rs`).
+//! 3. **Stateless checkpoints.** A [`Checkpoint`] carries the particle
+//!    arrays plus the `StreamKey` *address* — no engine state. Keys and
+//!    epochs reconstruct every future draw, so resume == never-stopped,
+//!    bitwise.
+//!
+//! [`validate`] layers the physics gate on top: sample the MSD series,
+//! fit the slope, and require the recovered diffusion constant to sit
+//! within tolerance of the integrator's theoretical value.
+
+pub mod checkpoint;
+pub mod observables;
+
+pub use checkpoint::{Checkpoint, CheckpointError};
+pub use observables::{DiffusionEstimate, MsdSample, DIFFUSION_TOLERANCE};
+
+use crate::backend::FillBackend;
+use crate::coordinator::partition_ranges;
+use crate::core::Generator;
+use crate::sim::brownian::{grid_init, kick_step, DT};
+use crate::sim::dpd::{DpdParams, DpdSim};
+use crate::sim::observables::msd_xy;
+use crate::stream::{self, StreamKey};
+use crate::util::hash::Fnv1a;
+
+/// Default particles per tile — one fill request covers
+/// `2 · DEFAULT_TILE` stream words (f64 elements take two words each).
+pub const DEFAULT_TILE: usize = 1 << 16;
+
+/// Upper bound on the tile size (checkpoint field validation).
+pub const MAX_TILE: usize = 1 << 24;
+
+/// Which physics model a campaign drives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Model {
+    /// Overdamped-kick Brownian particles (the paper's fig. 4 walk).
+    Brownian,
+    /// Groot–Warren DPD fluid with pair-symmetric streams.
+    Dpd,
+}
+
+impl Model {
+    pub const ALL: [Model; 2] = [Model::Brownian, Model::Dpd];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Model::Brownian => "brownian",
+            Model::Dpd => "dpd",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Model> {
+        Model::ALL.iter().copied().find(|m| m.name() == s)
+    }
+}
+
+/// Canonical DPD parameters for a campaign of `n` particles: density 4
+/// (Groot–Warren), standard a/γ/kT, and the campaign key's seed as the
+/// global pair-stream seed.
+pub fn dpd_params(n: usize, global_seed: u64) -> DpdParams {
+    DpdParams {
+        n,
+        box_side: (n as f64 / 4.0).sqrt(),
+        a: 25.0,
+        gamma: 4.5,
+        kt: 1.0,
+        dt: 0.01,
+        global_seed,
+    }
+}
+
+/// Full identity of a campaign trajectory. Everything here is part of
+/// the bitwise contract: changing any field (including `tile`) changes
+/// which stream words land on which particle. `threads` is the one
+/// exception — it only schedules work and provably does not affect the
+/// trajectory.
+#[derive(Debug, Clone, Copy)]
+pub struct CampaignParams {
+    pub model: Model,
+    pub n_particles: usize,
+    /// Root stream address; must carry ctr 0 (epochs are derived from
+    /// the step index, never baked into the key).
+    pub key: StreamKey,
+    pub gen: Generator,
+    /// Worker threads for stepping (not part of the trajectory
+    /// identity).
+    pub threads: usize,
+    /// Particles per tile (part of the trajectory identity).
+    pub tile: usize,
+}
+
+impl CampaignParams {
+    pub fn new(model: Model, n_particles: usize, key: StreamKey) -> CampaignParams {
+        CampaignParams {
+            model,
+            n_particles,
+            key,
+            gen: Generator::Philox,
+            threads: 1,
+            tile: DEFAULT_TILE,
+        }
+    }
+
+    fn validate(&self) -> anyhow::Result<()> {
+        if self.n_particles == 0 {
+            anyhow::bail!("campaign needs at least 1 particle");
+        }
+        if self.tile == 0 || self.tile > MAX_TILE {
+            anyhow::bail!("tile must be in 1..={MAX_TILE}, got {}", self.tile);
+        }
+        if self.key.ctr() != 0 {
+            anyhow::bail!(
+                "campaign key must carry ctr 0 (got ctr {}): epochs are derived per step, \
+                 not baked into the key",
+                self.key.ctr()
+            );
+        }
+        if self.threads == 0 {
+            anyhow::bail!("threads must be positive");
+        }
+        Ok(())
+    }
+}
+
+/// Caller-visible particle state of one model.
+enum ModelState {
+    Brownian { x: Vec<f64>, y: Vec<f64>, vx: Vec<f64>, vy: Vec<f64> },
+    Dpd(Box<DpdSim>),
+}
+
+/// A running campaign: params + particle state + epoch count.
+pub struct Campaign {
+    params: CampaignParams,
+    state: ModelState,
+    epoch: u32,
+}
+
+/// Walk the tiles `first_tile..` covering the given particle stripe:
+/// fill `2·len` kick words from `epoch_key.child(t)` and integrate the
+/// particles of tile `t`. `buf` must hold at least `2·min(tile, stripe)`
+/// elements.
+#[allow(clippy::too_many_arguments)]
+fn step_tiles(
+    mut backend: Option<&mut dyn FillBackend>,
+    gen: Generator,
+    epoch_key: StreamKey,
+    tile: usize,
+    first_tile: u64,
+    x: &mut [f64],
+    y: &mut [f64],
+    vx: &mut [f64],
+    vy: &mut [f64],
+    buf: &mut [f64],
+) -> anyhow::Result<()> {
+    let sqrt_dt = DT.sqrt();
+    let n = x.len();
+    let mut off = 0usize;
+    let mut t = first_tile;
+    while off < n {
+        let len = tile.min(n - off);
+        let kicks = &mut buf[..2 * len];
+        stream::fill_f64_key(backend.as_deref_mut(), gen, epoch_key.child(t), kicks)?;
+        for i in 0..len {
+            kick_step(
+                &mut x[off + i],
+                &mut y[off + i],
+                &mut vx[off + i],
+                &mut vy[off + i],
+                kicks[2 * i],
+                kicks[2 * i + 1],
+                sqrt_dt,
+            );
+        }
+        off += len;
+        t += 1;
+    }
+    Ok(())
+}
+
+/// One Brownian epoch over caller-owned state. Parallelism carves the
+/// tile list into contiguous whole-tile stripes (deterministic
+/// [`partition_ranges`]); each worker fills its own tiles through the
+/// thread-local auto backend, so the words — hence the trajectory — are
+/// independent of the thread count.
+fn step_brownian(
+    gen: Generator,
+    epoch_key: StreamKey,
+    tile: usize,
+    threads: usize,
+    x: &mut [f64],
+    y: &mut [f64],
+    vx: &mut [f64],
+    vy: &mut [f64],
+) -> anyhow::Result<()> {
+    let n = x.len();
+    let n_tiles = n.div_ceil(tile);
+    if threads <= 1 || n_tiles <= 1 {
+        let mut buf = vec![0.0f64; 2 * tile.min(n)];
+        return step_tiles(None, gen, epoch_key, tile, 0, x, y, vx, vy, &mut buf);
+    }
+    let workers = threads.min(n_tiles);
+    let tile_ranges = partition_ranges(n_tiles, workers);
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        let mut handles = Vec::with_capacity(workers);
+        let mut xs = x;
+        let mut ys = y;
+        let mut vxs = vx;
+        let mut vys = vy;
+        let mut lo = 0usize;
+        for r in &tile_ranges {
+            let hi = (r.end * tile).min(n);
+            let len = hi - lo;
+            let (xh, xt) = xs.split_at_mut(len);
+            let (yh, yt) = ys.split_at_mut(len);
+            let (vxh, vxt) = vxs.split_at_mut(len);
+            let (vyh, vyt) = vys.split_at_mut(len);
+            xs = xt;
+            ys = yt;
+            vxs = vxt;
+            vys = vyt;
+            let first_tile = r.start as u64;
+            handles.push(scope.spawn(move || -> anyhow::Result<()> {
+                let mut buf = vec![0.0f64; 2 * tile.min(len.max(1))];
+                step_tiles(None, gen, epoch_key, tile, first_tile, xh, yh, vxh, vyh, &mut buf)
+            }));
+            lo = hi;
+        }
+        for h in handles {
+            h.join().expect("campaign worker panicked")?;
+        }
+        Ok(())
+    })
+}
+
+impl Campaign {
+    /// Start a fresh campaign at epoch 0 (Brownian: grid positions,
+    /// zero velocities; DPD: its deterministic lattice start).
+    pub fn new(params: CampaignParams) -> anyhow::Result<Campaign> {
+        params.validate()?;
+        let n = params.n_particles;
+        let state = match params.model {
+            Model::Brownian => {
+                let (x, y) = grid_init(n);
+                ModelState::Brownian { x, y, vx: vec![0.0; n], vy: vec![0.0; n] }
+            }
+            Model::Dpd => {
+                ModelState::Dpd(Box::new(DpdSim::new(dpd_params(n, params.key.seed()))))
+            }
+        };
+        Ok(Campaign { params, state, epoch: 0 })
+    }
+
+    /// Rebuild a campaign from a checkpoint, resuming at its epoch.
+    /// `threads` is free to differ from the run that wrote the
+    /// checkpoint — it does not affect the trajectory.
+    pub fn resume(ck: &Checkpoint, threads: usize) -> anyhow::Result<Campaign> {
+        let n = ck.n_particles();
+        let params = CampaignParams {
+            model: ck.model,
+            n_particles: n,
+            key: ck.key,
+            gen: ck.gen,
+            threads,
+            tile: ck.tile as usize,
+        };
+        params.validate()?;
+        let state = match ck.model {
+            Model::Brownian => ModelState::Brownian {
+                x: ck.x.clone(),
+                y: ck.y.clone(),
+                vx: ck.vx.clone(),
+                vy: ck.vy.clone(),
+            },
+            Model::Dpd => ModelState::Dpd(Box::new(DpdSim::from_state(
+                dpd_params(n, ck.key.seed()),
+                ck.x.clone(),
+                ck.y.clone(),
+                ck.vx.clone(),
+                ck.vy.clone(),
+                ck.epoch,
+            ))),
+        };
+        Ok(Campaign { params, state, epoch: ck.epoch })
+    }
+
+    pub fn params(&self) -> CampaignParams {
+        self.params
+    }
+
+    /// Completed epochs.
+    pub fn epoch(&self) -> u32 {
+        self.epoch
+    }
+
+    /// Advance one epoch through the default (thread-local auto)
+    /// backend, parallelized across `params.threads` workers.
+    pub fn step(&mut self) -> anyhow::Result<()> {
+        match &mut self.state {
+            ModelState::Brownian { x, y, vx, vy } => {
+                let epoch_key = self.params.key.epoch(self.epoch);
+                step_brownian(
+                    self.params.gen,
+                    epoch_key,
+                    self.params.tile,
+                    self.params.threads,
+                    x,
+                    y,
+                    vx,
+                    vy,
+                )?;
+                self.epoch += 1;
+            }
+            ModelState::Dpd(sim) => {
+                if self.params.threads > 1 {
+                    sim.step_parallel(self.params.threads);
+                } else {
+                    sim.step_all();
+                }
+                self.epoch = sim.step;
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance one Brownian epoch through an explicit fill backend —
+    /// the arm-identity surface the property test drives (`HostSerial`
+    /// vs `HostParallel` must yield bitwise-equal trajectories). DPD
+    /// draws its pair streams engine-side, so the backend does not
+    /// apply there and this falls through to [`Campaign::step`].
+    pub fn step_with(&mut self, backend: &mut dyn FillBackend) -> anyhow::Result<()> {
+        if let ModelState::Brownian { x, y, vx, vy } = &mut self.state {
+            let epoch_key = self.params.key.epoch(self.epoch);
+            let tile = self.params.tile;
+            let mut buf = vec![0.0f64; 2 * tile.min(x.len())];
+            step_tiles(Some(backend), self.params.gen, epoch_key, tile, 0, x, y, vx, vy, &mut buf)?;
+            self.epoch += 1;
+            return Ok(());
+        }
+        self.step()
+    }
+
+    /// Run (forward only) to the target epoch.
+    pub fn run_to(&mut self, target: u32) -> anyhow::Result<()> {
+        if target < self.epoch {
+            anyhow::bail!("cannot run backwards: at epoch {}, target {target}", self.epoch);
+        }
+        while self.epoch < target {
+            self.step()?;
+        }
+        Ok(())
+    }
+
+    /// Snapshot the full trajectory identity + particle state.
+    pub fn checkpoint(&self) -> Checkpoint {
+        let (x, y, vx, vy) = match &self.state {
+            ModelState::Brownian { x, y, vx, vy } => {
+                (x.clone(), y.clone(), vx.clone(), vy.clone())
+            }
+            ModelState::Dpd(sim) => {
+                (sim.x.clone(), sim.y.clone(), sim.vx.clone(), sim.vy.clone())
+            }
+        };
+        Checkpoint {
+            model: self.params.model,
+            gen: self.params.gen,
+            key: self.params.key,
+            epoch: self.epoch,
+            tile: self.params.tile as u32,
+            x,
+            y,
+            vx,
+            vy,
+        }
+    }
+
+    /// FNV-1a digest of (epoch, x, y, vx, vy) — the campaign's compact
+    /// reproducibility fingerprint.
+    pub fn state_hash(&self) -> u64 {
+        let mut h = Fnv1a::new();
+        h.write_u32(self.epoch);
+        let (x, y, vx, vy) = match &self.state {
+            ModelState::Brownian { x, y, vx, vy } => (x, y, vx, vy),
+            ModelState::Dpd(sim) => (&sim.x, &sim.y, &sim.vx, &sim.vy),
+        };
+        h.write_f64_slice(x);
+        h.write_f64_slice(y);
+        h.write_f64_slice(vx);
+        h.write_f64_slice(vy);
+        h.finish()
+    }
+
+    /// Mean-squared displacement from the initial configuration
+    /// (Brownian only — DPD has no fixed reference grid once thermal).
+    pub fn msd(&self) -> anyhow::Result<f64> {
+        match &self.state {
+            ModelState::Brownian { x, y, .. } => {
+                let (x0, y0) = grid_init(self.params.n_particles);
+                Ok(msd_xy(x, y, &x0, &y0))
+            }
+            ModelState::Dpd(_) => anyhow::bail!("msd is defined for the brownian model"),
+        }
+    }
+}
+
+/// Sampling plan for [`validate`].
+#[derive(Debug, Clone, Copy)]
+pub struct ValidateConfig {
+    /// Epochs to discard before sampling. The integrator's velocity
+    /// relaxation time is 1/(γ·dt) = 200 steps, and the MSD *slope*
+    /// approaches its asymptote on the same timescale (residual bias
+    /// ∝ (1 − γ·dt/m)^t, i.e. ~17% at t = 350 but < 1% past t = 1000),
+    /// so the default discards five relaxation times.
+    pub relax_epochs: u32,
+    /// Sample the MSD every this many epochs after relaxation.
+    pub sample_every: u32,
+    /// Relative tolerance the CLI gate applies to the recovered D.
+    pub tolerance: f64,
+}
+
+impl Default for ValidateConfig {
+    fn default() -> ValidateConfig {
+        ValidateConfig { relax_epochs: 1000, sample_every: 50, tolerance: DIFFUSION_TOLERANCE }
+    }
+}
+
+/// Run a fresh Brownian campaign for `steps` epochs, sample the MSD
+/// series per `cfg`, and recover the diffusion constant. The caller
+/// gates on [`DiffusionEstimate::within`].
+pub fn validate(
+    params: CampaignParams,
+    steps: u32,
+    cfg: ValidateConfig,
+) -> anyhow::Result<DiffusionEstimate> {
+    if params.model != Model::Brownian {
+        anyhow::bail!("campaign validate is defined for the brownian model");
+    }
+    if cfg.sample_every == 0 {
+        anyhow::bail!("sample-every must be positive");
+    }
+    let need = cfg.relax_epochs + 2 * cfg.sample_every;
+    if steps < need {
+        anyhow::bail!(
+            "validate needs steps >= relax + 2*sample-every = {need}, got {steps} \
+             (the fit needs at least two post-relaxation samples)"
+        );
+    }
+    let mut c = Campaign::new(params)?;
+    let (x0, y0) = grid_init(params.n_particles);
+    let mut samples = Vec::new();
+    while c.epoch < steps {
+        c.step()?;
+        if c.epoch >= cfg.relax_epochs && (c.epoch - cfg.relax_epochs) % cfg.sample_every == 0 {
+            if let ModelState::Brownian { x, y, .. } = &c.state {
+                samples.push(MsdSample { epoch: c.epoch, msd: msd_xy(x, y, &x0, &y0) });
+            }
+        }
+    }
+    observables::recover_diffusion_constant(&samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::{HostParallel, HostSerial};
+
+    fn brownian_params(n: usize, tile: usize, threads: usize) -> CampaignParams {
+        let mut p = CampaignParams::new(Model::Brownian, n, StreamKey::root(42));
+        p.tile = tile;
+        p.threads = threads;
+        p
+    }
+
+    #[test]
+    fn fresh_campaign_starts_on_the_grid() {
+        let c = Campaign::new(brownian_params(100, 16, 1)).unwrap();
+        assert_eq!(c.epoch(), 0);
+        assert_eq!(c.msd().unwrap(), 0.0);
+        let ck = c.checkpoint();
+        let (x0, y0) = grid_init(100);
+        assert_eq!(ck.x, x0);
+        assert_eq!(ck.y, y0);
+        assert!(ck.vx.iter().chain(ck.vy.iter()).all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn same_params_same_trajectory() {
+        let mut a = Campaign::new(brownian_params(300, 64, 1)).unwrap();
+        let mut b = Campaign::new(brownian_params(300, 64, 1)).unwrap();
+        a.run_to(9).unwrap();
+        b.run_to(9).unwrap();
+        assert_eq!(a.checkpoint().encode(), b.checkpoint().encode());
+    }
+
+    #[test]
+    fn trajectory_is_thread_count_invariant() {
+        let mut reference = Campaign::new(brownian_params(300, 64, 1)).unwrap();
+        reference.run_to(7).unwrap();
+        let want = reference.checkpoint().encode();
+        for threads in [2, 3, 8] {
+            let mut c = Campaign::new(brownian_params(300, 64, threads)).unwrap();
+            c.run_to(7).unwrap();
+            assert_eq!(c.checkpoint().encode(), want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn explicit_backend_arms_match_default_path() {
+        let mut auto = Campaign::new(brownian_params(300, 64, 4)).unwrap();
+        let mut serial = Campaign::new(brownian_params(300, 64, 1)).unwrap();
+        let mut par = Campaign::new(brownian_params(300, 64, 1)).unwrap();
+        let mut hs = HostSerial;
+        let mut hp = HostParallel::new(4);
+        for _ in 0..6 {
+            auto.step().unwrap();
+            serial.step_with(&mut hs).unwrap();
+            par.step_with(&mut hp).unwrap();
+        }
+        assert_eq!(serial.state_hash(), auto.state_hash());
+        assert_eq!(par.state_hash(), auto.state_hash());
+    }
+
+    #[test]
+    fn tile_size_is_part_of_the_identity() {
+        // Different tilings address different (epoch, tile) streams, so
+        // they are *different experiments* — documented, and pinned here
+        // so an accidental tile-independence "fix" can't slip in.
+        let mut a = Campaign::new(brownian_params(300, 64, 1)).unwrap();
+        let mut b = Campaign::new(brownian_params(300, 32, 1)).unwrap();
+        a.run_to(3).unwrap();
+        b.run_to(3).unwrap();
+        assert_ne!(a.state_hash(), b.state_hash());
+    }
+
+    #[test]
+    fn resume_is_bitwise_brownian() {
+        let mut full = Campaign::new(brownian_params(500, 128, 2)).unwrap();
+        full.run_to(12).unwrap();
+        let want = full.checkpoint().encode();
+
+        let mut head = Campaign::new(brownian_params(500, 128, 1)).unwrap();
+        head.run_to(5).unwrap();
+        let mid = Checkpoint::decode(&head.checkpoint().encode()).unwrap();
+        for resume_threads in [1, 3, 8] {
+            let mut tail = Campaign::resume(&mid, resume_threads).unwrap();
+            assert_eq!(tail.epoch(), 5);
+            tail.run_to(12).unwrap();
+            assert_eq!(tail.checkpoint().encode(), want, "resume_threads={resume_threads}");
+        }
+    }
+
+    #[test]
+    fn resume_is_bitwise_dpd() {
+        let mut p = CampaignParams::new(Model::Dpd, 64, StreamKey::root(99));
+        p.threads = 2;
+        let mut full = Campaign::new(p).unwrap();
+        full.run_to(6).unwrap();
+        let want = full.state_hash();
+
+        let mut head = Campaign::new(p).unwrap();
+        head.run_to(3).unwrap();
+        let mid = Checkpoint::decode(&head.checkpoint().encode()).unwrap();
+        assert_eq!(mid.model, Model::Dpd);
+        let mut tail = Campaign::resume(&mid, 1).unwrap();
+        tail.run_to(6).unwrap();
+        assert_eq!(tail.state_hash(), want);
+        assert_eq!(tail.checkpoint().encode(), full.checkpoint().encode());
+    }
+
+    #[test]
+    fn generator_choice_changes_trajectory_but_stays_reproducible() {
+        let mut p = brownian_params(200, 64, 1);
+        p.gen = Generator::Threefry;
+        let mut a = Campaign::new(p).unwrap();
+        let mut b = Campaign::new(p).unwrap();
+        let mut philox = Campaign::new(brownian_params(200, 64, 1)).unwrap();
+        a.run_to(4).unwrap();
+        b.run_to(4).unwrap();
+        philox.run_to(4).unwrap();
+        assert_eq!(a.state_hash(), b.state_hash());
+        assert_ne!(a.state_hash(), philox.state_hash());
+    }
+
+    #[test]
+    fn bad_params_are_typed_errors() {
+        let mut p = brownian_params(0, 64, 1);
+        assert!(Campaign::new(p).is_err());
+        p = brownian_params(100, 0, 1);
+        assert!(Campaign::new(p).is_err());
+        p = brownian_params(100, MAX_TILE + 1, 1);
+        assert!(Campaign::new(p).is_err());
+        p = brownian_params(100, 64, 0);
+        assert!(Campaign::new(p).is_err());
+        p = brownian_params(100, 64, 1);
+        p.key = StreamKey::raw(42, 7); // epoch baked into the key
+        assert!(Campaign::new(p).is_err());
+        let c = Campaign::new(brownian_params(100, 64, 1)).unwrap();
+        assert!(validate(c.params(), 10, ValidateConfig::default()).is_err()); // too few steps
+        assert!(validate(
+            CampaignParams::new(Model::Dpd, 64, StreamKey::root(1)),
+            1000,
+            ValidateConfig::default()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn run_backwards_rejected() {
+        let mut c = Campaign::new(brownian_params(100, 64, 1)).unwrap();
+        c.run_to(5).unwrap();
+        assert!(c.run_to(3).is_err());
+        assert_eq!(c.epoch(), 5);
+    }
+
+    #[test]
+    fn validate_recovers_diffusion_constant() {
+        // Reduced-N arm of the physics gate (CI runs a larger one via
+        // the CLI; the 1M-particle claim is the bench/docs tier). Finite
+        // N puts statistical noise on the MSD slope, hence the wider
+        // band than DIFFUSION_TOLERANCE here.
+        let mut p = brownian_params(8192, 1024, 2);
+        p.key = StreamKey::root(7);
+        let cfg = ValidateConfig { relax_epochs: 1000, sample_every: 60, tolerance: 0.15 };
+        let est = validate(p, 1600, cfg).unwrap();
+        assert!(
+            est.within(cfg.tolerance),
+            "D_est {:.4} vs D_theory {:.4} (rel err {:.3})",
+            est.d_est,
+            est.d_theory,
+            est.rel_err()
+        );
+        assert_eq!(est.samples, 11); // epochs 300, 360, …, 900
+    }
+
+    #[test]
+    fn model_names_roundtrip() {
+        for m in Model::ALL {
+            assert_eq!(Model::parse(m.name()), Some(m));
+        }
+        assert_eq!(Model::parse("ising"), None);
+    }
+}

@@ -1,0 +1,154 @@
+//! Campaign-level physics observables: the MSD time series and the
+//! diffusion-constant recovery that backs `openrand campaign validate`.
+//!
+//! The estimators are deliberately dumb — an ordinary least-squares
+//! line through (epoch, MSD) samples — because the point is not a
+//! clever fit but a *gate*: if per-tile epoch addressing ever draws the
+//! wrong words (reused tiles, swapped axes, off-by-one epochs), the
+//! recovered diffusion constant leaves its tolerance band long before
+//! any statistical battery would notice.
+
+use crate::sim::brownian::DT;
+use crate::sim::observables::theoretical_msd_slope;
+
+/// One MSD observation: mean-squared displacement from the initial
+/// configuration after `epoch` completed steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MsdSample {
+    pub epoch: u32,
+    pub msd: f64,
+}
+
+/// Default relative tolerance for the recovered diffusion constant
+/// (documented in `docs/campaigns.md`; generous enough for the CI
+/// reduced-N arm, tight enough to catch mis-addressed randomness).
+pub const DIFFUSION_TOLERANCE: f64 = 0.05;
+
+/// Least-squares slope of MSD vs epoch (with a free intercept, so the
+/// ballistic transient before sampling starts doesn't bias the fit).
+pub fn fit_msd_slope(samples: &[MsdSample]) -> anyhow::Result<f64> {
+    if samples.len() < 2 {
+        anyhow::bail!("MSD fit needs at least 2 samples, got {}", samples.len());
+    }
+    let n = samples.len() as f64;
+    let mean_t = samples.iter().map(|s| s.epoch as f64).sum::<f64>() / n;
+    let mean_m = samples.iter().map(|s| s.msd).sum::<f64>() / n;
+    let mut sxx = 0.0;
+    let mut sxy = 0.0;
+    for s in samples {
+        let dt = s.epoch as f64 - mean_t;
+        sxx += dt * dt;
+        sxy += dt * (s.msd - mean_m);
+    }
+    if sxx == 0.0 {
+        anyhow::bail!("MSD fit needs samples at distinct epochs");
+    }
+    Ok(sxy / sxx)
+}
+
+/// Result of a diffusion-constant recovery.
+#[derive(Debug, Clone, Copy)]
+pub struct DiffusionEstimate {
+    /// Fitted MSD slope per step.
+    pub slope_per_step: f64,
+    /// Recovered diffusion constant (MSD(t) = 4·D·t in 2D).
+    pub d_est: f64,
+    /// Theoretical diffusion constant for this integrator.
+    pub d_theory: f64,
+    /// Number of MSD samples the fit used.
+    pub samples: usize,
+}
+
+impl DiffusionEstimate {
+    /// Relative error of the recovered constant against theory.
+    pub fn rel_err(&self) -> f64 {
+        (self.d_est / self.d_theory - 1.0).abs()
+    }
+
+    /// Does the estimate sit within the given relative tolerance?
+    pub fn within(&self, tolerance: f64) -> bool {
+        self.rel_err() <= tolerance
+    }
+}
+
+/// Recover the diffusion constant from an MSD time series.
+///
+/// In 2D, MSD(t) = 4·D·t at long times; with the slope measured per
+/// step, D = slope / (4·dt). `theoretical_msd_slope` is MSD growth per
+/// *step* for this integrator, so D_theory follows the same route.
+pub fn recover_diffusion_constant(samples: &[MsdSample]) -> anyhow::Result<DiffusionEstimate> {
+    let slope = fit_msd_slope(samples)?;
+    let d_est = slope / DT / 4.0;
+    let d_theory = theoretical_msd_slope() / DT / 4.0;
+    Ok(DiffusionEstimate { slope_per_step: slope, d_est, d_theory, samples: samples.len() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::observables::msd_xy;
+
+    #[test]
+    fn linear_series_recovers_slope_exactly() {
+        // msd = 3 + 0.25·epoch — slope must come back exactly, with the
+        // intercept absorbed by the fit.
+        let samples: Vec<MsdSample> = (0..20)
+            .map(|i| MsdSample { epoch: 10 + 5 * i, msd: 3.0 + 0.25 * (10 + 5 * i) as f64 })
+            .collect();
+        let slope = fit_msd_slope(&samples).unwrap();
+        assert!((slope - 0.25).abs() < 1e-12, "slope {slope}");
+        let est = recover_diffusion_constant(&samples).unwrap();
+        assert!((est.d_est - 0.25 / DT / 4.0).abs() < 1e-9);
+        assert_eq!(est.samples, 20);
+    }
+
+    #[test]
+    fn zero_motion_recovers_zero_diffusion() {
+        let samples: Vec<MsdSample> =
+            (0..10).map(|i| MsdSample { epoch: i * 7, msd: 0.0 }).collect();
+        let est = recover_diffusion_constant(&samples).unwrap();
+        assert_eq!(est.slope_per_step, 0.0);
+        assert_eq!(est.d_est, 0.0);
+        assert!(!est.within(DIFFUSION_TOLERANCE)); // rel err vs D>0 is 1
+    }
+
+    #[test]
+    fn straight_line_trajectory_has_quadratic_msd() {
+        // A particle moving ballistically at speed (3e, 4e) per step has
+        // displacement 5e·t, so msd_xy = 25e²t² — and the campaign MSD
+        // helper must agree with the hand computation.
+        let e = 0.01;
+        let n = 64;
+        let x0 = vec![0.0; n];
+        let y0 = vec![0.0; n];
+        for t in [1u32, 10, 100] {
+            let x: Vec<f64> = vec![3.0 * e * t as f64; n];
+            let y: Vec<f64> = vec![4.0 * e * t as f64; n];
+            let m = msd_xy(&x, &y, &x0, &y0);
+            let want = 25.0 * e * e * (t as f64) * (t as f64);
+            assert!((m - want).abs() < 1e-12, "t={t}: {m} vs {want}");
+        }
+    }
+
+    #[test]
+    fn degenerate_fits_are_typed_errors() {
+        assert!(fit_msd_slope(&[]).is_err());
+        assert!(fit_msd_slope(&[MsdSample { epoch: 5, msd: 1.0 }]).is_err());
+        // Two samples at the same epoch: no slope.
+        let same = [MsdSample { epoch: 5, msd: 1.0 }, MsdSample { epoch: 5, msd: 2.0 }];
+        assert!(fit_msd_slope(&same).is_err());
+    }
+
+    #[test]
+    fn tolerance_band_behaves() {
+        let est = DiffusionEstimate {
+            slope_per_step: 0.0,
+            d_est: 1.04,
+            d_theory: 1.0,
+            samples: 2,
+        };
+        assert!(est.within(0.05));
+        assert!(!est.within(0.03));
+        assert!((est.rel_err() - 0.04).abs() < 1e-12);
+    }
+}

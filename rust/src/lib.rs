@@ -17,7 +17,10 @@
 //!   device kernels, and a keyed-stream TCP service ([`serve`]) whose
 //!   replies are pinned byte-identical to the local CLI — caching,
 //!   coalescing, and backpressure without touching a byte
-//!   (`docs/serve.md`).
+//!   (`docs/serve.md`), and the Tier-1 end-to-end scenario: large-N
+//!   simulation campaigns with bitwise checkpoint/resume and a
+//!   diffusion-constant physics gate ([`campaign`],
+//!   `docs/campaigns.md`).
 //! * **L2/L1 (build time)** — JAX graphs + Pallas kernels in
 //!   `python/compile/`, lowered once to `artifacts/*.hlo.txt`. Python is
 //!   never on the request path.
@@ -76,6 +79,7 @@
 pub mod backend;
 pub mod baseline;
 pub mod bench;
+pub mod campaign;
 pub mod coordinator;
 pub mod core;
 pub mod dist;

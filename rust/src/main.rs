@@ -20,6 +20,11 @@
 //!   cache, request coalescing, and BUSY backpressure.
 //! * `fetch`     — client for `serve`: fetch a keyed fill (printed
 //!   exactly like `generate`), server STATS, or remote shutdown.
+//! * `campaign`  — large-N simulation campaigns (`docs/campaigns.md`):
+//!   `run` a Brownian/DPD trajectory with tiled epoch-addressed fills
+//!   and optional checkpointing, `resume` one bitwise from a checkpoint
+//!   file, or `validate` the recovered diffusion constant against
+//!   theory.
 //!
 //! `openrand --help` for options. Benchmarks that regenerate the paper's
 //! figures live under `cargo bench` (see DESIGN.md experiment index).
@@ -41,8 +46,8 @@ use openrand::stats::{run_battery, run_dist_battery, Verdict};
 use openrand::stream::{DynStream, StreamKey};
 use openrand::util::cli::{Args, OptSpec};
 
-const COMMANDS: [&str; 7] =
-    ["generate", "brownian", "stats", "repro", "artifacts", "serve", "fetch"];
+const COMMANDS: [&str; 8] =
+    ["generate", "brownian", "stats", "repro", "artifacts", "serve", "fetch", "campaign"];
 
 fn specs() -> Vec<OptSpec> {
     vec![
@@ -62,8 +67,15 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "p", help: "dist: success probability for bernoulli/binomial", default: Some("0.5"), is_flag: false },
         OptSpec { name: "trials", help: "dist: binomial trial count", default: Some("10"), is_flag: false },
         OptSpec { name: "weights", help: "dist: comma-separated alias-table weights", default: Some("1,2,3,4"), is_flag: false },
-        OptSpec { name: "steps", help: "brownian: simulation steps", default: Some("100"), is_flag: false },
-        OptSpec { name: "threads", help: "brownian/generate: host threads", default: Some("1"), is_flag: false },
+        OptSpec { name: "steps", help: "brownian/campaign: simulation steps (campaign resume: the *total* target epoch)", default: Some("100"), is_flag: false },
+        OptSpec { name: "threads", help: "brownian/generate/campaign: host threads", default: Some("1"), is_flag: false },
+        OptSpec { name: "model", help: "campaign: brownian|dpd", default: Some("brownian"), is_flag: false },
+        OptSpec { name: "tile", help: "campaign: particles per tile (part of the trajectory identity; k/M ok)", default: Some("64k"), is_flag: false },
+        OptSpec { name: "checkpoint", help: "campaign run/resume: write the end-state checkpoint to this file", default: None, is_flag: false },
+        OptSpec { name: "from", help: "campaign resume: checkpoint file to resume from", default: None, is_flag: false },
+        OptSpec { name: "relax", help: "campaign validate: epochs to discard before MSD sampling", default: Some("1000"), is_flag: false },
+        OptSpec { name: "sample-every", help: "campaign validate: epochs between MSD samples", default: Some("50"), is_flag: false },
+        OptSpec { name: "tolerance", help: "campaign validate: relative tolerance on the recovered diffusion constant", default: Some("0.05"), is_flag: false },
         OptSpec { name: "backend", help: "generate: host|par|device|auto (fill backend); brownian: host|device", default: None, is_flag: false },
         OptSpec { name: "style", help: "brownian: openrand|curand_style|random123", default: Some("openrand"), is_flag: false },
         OptSpec { name: "words", help: "stats: words per test", default: Some("4M"), is_flag: false },
@@ -117,6 +129,7 @@ fn main() {
         Some("artifacts") => cmd_artifacts(),
         Some("serve") => cmd_serve(&args),
         Some("fetch") => cmd_fetch(&args),
+        Some("campaign") => cmd_campaign(&args),
         _ => {
             eprintln!("error: missing command (try --help)");
             std::process::exit(2);
@@ -459,22 +472,28 @@ fn cmd_stats(args: &Args) -> anyhow::Result<()> {
             anyhow::bail!("--stride must be >= 1");
         }
         println!(
-            "inter-stream suite: {} x {} child streams (stride {})",
+            "inter-stream suite: {} x {} children of {} (stride {})",
             gen.name(),
             streams,
+            key,
             stride
         );
-        use openrand::stats::interstream::run_inter_stream_suite as run;
+        // Keyed variant: children are derived under the *full* key, so
+        // `--key 7/e3` scrutinizes the child family of epoch 3 — the
+        // exact addressing shape the campaign runner draws from. The
+        // default key (ctr 0) is byte-identical to the historical
+        // root-seed behavior.
+        use openrand::stats::interstream::run_inter_stream_suite_keyed as run;
         let results = match gen {
-            Generator::Philox => run::<openrand::core::Philox>(seed, streams, stride, words),
-            Generator::Philox2x32 => run::<openrand::core::Philox2x32>(seed, streams, stride, words),
-            Generator::Threefry => run::<openrand::core::Threefry>(seed, streams, stride, words),
+            Generator::Philox => run::<openrand::core::Philox>(key, streams, stride, words),
+            Generator::Philox2x32 => run::<openrand::core::Philox2x32>(key, streams, stride, words),
+            Generator::Threefry => run::<openrand::core::Threefry>(key, streams, stride, words),
             Generator::Threefry2x32 => {
-                run::<openrand::core::Threefry2x32>(seed, streams, stride, words)
+                run::<openrand::core::Threefry2x32>(key, streams, stride, words)
             }
-            Generator::Squares => run::<openrand::core::Squares>(seed, streams, stride, words),
-            Generator::Tyche => run::<openrand::core::Tyche>(seed, streams, stride, words),
-            Generator::TycheI => run::<openrand::core::TycheI>(seed, streams, stride, words),
+            Generator::Squares => run::<openrand::core::Squares>(key, streams, stride, words),
+            Generator::Tyche => run::<openrand::core::Tyche>(key, streams, stride, words),
+            Generator::TycheI => run::<openrand::core::TycheI>(key, streams, stride, words),
         };
         let mut fails = 0;
         for r in &results {
@@ -715,6 +734,151 @@ fn cmd_fetch(args: &Args) -> anyhow::Result<()> {
         }
     }
     Ok(())
+}
+
+/// `openrand campaign run|resume|validate` (`docs/campaigns.md`): the
+/// Tier-1 end-to-end scenario. `run` starts a fresh trajectory and can
+/// write its end-state checkpoint; `resume` rebuilds bitwise from a
+/// checkpoint file (`--steps` is the *total* target epoch, so an
+/// interrupted run resumed to the same target writes a byte-identical
+/// end checkpoint — CI `cmp`s exactly that); `validate` recovers the
+/// Brownian diffusion constant and gates it against theory.
+fn cmd_campaign(args: &Args) -> anyhow::Result<()> {
+    use openrand::campaign::{self, Campaign, CampaignParams, Checkpoint, Model, ValidateConfig};
+    let action = match args.positional().first() {
+        Some(a) => a.as_str(),
+        None => anyhow::bail!("campaign needs an action: run|resume|validate"),
+    };
+    if args.positional().len() > 1 {
+        anyhow::bail!("campaign takes one action, got {:?}", args.positional());
+    }
+    let steps = args.get_usize("steps", 100).map_err(anyhow::Error::msg)? as u32;
+    let threads = args.get_usize("threads", 1).map_err(anyhow::Error::msg)?;
+    let out_path = args.get("checkpoint").map(str::to_string);
+
+    // Fresh-trajectory params (run/validate). Resume takes its identity
+    // from the checkpoint file instead and rejects these flags' intent
+    // implicitly: only --steps/--threads/--checkpoint apply there.
+    let fresh_params = |args: &Args| -> anyhow::Result<CampaignParams> {
+        let model = args.get_or("model", "brownian");
+        let model = Model::parse(model).ok_or_else(|| {
+            anyhow::anyhow!("unknown model '{model}' (brownian|dpd)")
+        })?;
+        let key = resolve_key(args)?;
+        if key.ctr() != 0 {
+            anyhow::bail!(
+                "campaign derives per-step epochs internally (key.epoch(t)); \
+                 give a key without /e (got {key})"
+            );
+        }
+        let mut p = CampaignParams::new(
+            model,
+            args.get_usize("n", 1 << 20).map_err(anyhow::Error::msg)?,
+            key,
+        );
+        p.gen = parse_generator(args)?;
+        p.threads = threads;
+        p.tile = args.get_usize("tile", campaign::DEFAULT_TILE).map_err(anyhow::Error::msg)?;
+        Ok(p)
+    };
+
+    let report = |c: &Campaign, wall: std::time::Duration, epochs_run: u32| {
+        let p = c.params();
+        println!(
+            "campaign {} n={} tile={} gen={} threads={}",
+            p.model.name(),
+            p.n_particles,
+            p.tile,
+            p.gen.name(),
+            p.threads
+        );
+        let rate = p.n_particles as f64 * epochs_run as f64 / wall.as_secs_f64().max(1e-9);
+        println!(
+            "  {} epochs in {:.2} s ({:.1} Mparticle-steps/s)",
+            epochs_run,
+            wall.as_secs_f64(),
+            rate / 1e6
+        );
+        println!("  epoch: {}  trajectory hash: {:016x}", c.epoch(), c.state_hash());
+    };
+
+    match action {
+        "run" => {
+            let mut c = Campaign::new(fresh_params(args)?)?;
+            let t0 = std::time::Instant::now();
+            c.run_to(steps)?;
+            report(&c, t0.elapsed(), steps);
+            if let Some(path) = out_path {
+                c.checkpoint().write_file(&path)?;
+                println!("  checkpoint: {path} ({} bytes)", Checkpoint::encoded_len(c.params().n_particles));
+            }
+            Ok(())
+        }
+        "resume" => {
+            let from = args
+                .get("from")
+                .ok_or_else(|| anyhow::anyhow!("campaign resume requires --from CHECKPOINT"))?;
+            let ck = Checkpoint::read_file(from)?;
+            if steps < ck.epoch {
+                anyhow::bail!(
+                    "--steps {steps} is before the checkpoint epoch {} \
+                     (--steps is the total target epoch)",
+                    ck.epoch
+                );
+            }
+            let mut c = Campaign::resume(&ck, threads)?;
+            let epochs_run = steps - ck.epoch;
+            let t0 = std::time::Instant::now();
+            c.run_to(steps)?;
+            report(&c, t0.elapsed(), epochs_run);
+            println!("  resumed from {from} at epoch {}", ck.epoch);
+            if let Some(path) = out_path {
+                c.checkpoint().write_file(&path)?;
+                println!("  checkpoint: {path} ({} bytes)", Checkpoint::encoded_len(c.params().n_particles));
+            }
+            Ok(())
+        }
+        "validate" => {
+            let cfg = ValidateConfig {
+                relax_epochs: args.get_usize("relax", 1000).map_err(anyhow::Error::msg)? as u32,
+                sample_every: args.get_usize("sample-every", 50).map_err(anyhow::Error::msg)?
+                    as u32,
+                tolerance: args.get_f64("tolerance", campaign::DIFFUSION_TOLERANCE)
+                    .map_err(anyhow::Error::msg)?,
+            };
+            if !(cfg.tolerance.is_finite() && cfg.tolerance > 0.0) {
+                anyhow::bail!("--tolerance must be positive, got {}", cfg.tolerance);
+            }
+            let params = fresh_params(args)?;
+            let est = campaign::validate(params, steps, cfg)?;
+            println!(
+                "campaign validate {} n={} steps={} (relax {}, sample every {})",
+                params.model.name(),
+                params.n_particles,
+                steps,
+                cfg.relax_epochs,
+                cfg.sample_every
+            );
+            println!(
+                "  D_est {:.6}  D_theory {:.6}  rel err {:.4} ({} MSD samples)",
+                est.d_est,
+                est.d_theory,
+                est.rel_err(),
+                est.samples
+            );
+            if est.within(cfg.tolerance) {
+                println!("  PASS (tolerance {})", cfg.tolerance);
+                Ok(())
+            } else {
+                anyhow::bail!(
+                    "diffusion constant outside tolerance: rel err {:.4} > {}",
+                    est.rel_err(),
+                    cfg.tolerance
+                );
+            }
+        }
+        other => anyhow::bail!("unknown campaign action '{other}' (run|resume|validate)"),
+    }
 }
 
 fn cmd_artifacts() -> anyhow::Result<()> {

@@ -28,6 +28,52 @@ pub const GAMMA: f64 = 0.5;
 pub const MASS: f64 = 1.0;
 pub const DT: f64 = 0.01;
 
+/// Deterministic grid initial positions — the normative pair of
+/// `model.brownian_init`, shared by [`BrownianSim::new`] and the
+/// campaign runner ([`crate::campaign`]). The campaign checkpoint
+/// format stores no initial positions because this function recomputes
+/// them from `n` alone.
+pub fn grid_init(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let side = (n as f64).sqrt().ceil() as usize;
+    let mut x = vec![0.0; n];
+    let mut y = vec![0.0; n];
+    for pid in 0..n {
+        x[pid] = (pid / side) as f64;
+        y[pid] = (pid % side) as f64;
+    }
+    (x, y)
+}
+
+/// One particle's drag + kick + drift update over caller-owned state —
+/// the integrator body extracted so external drivers (the campaign
+/// runner) can step particle arrays they own. Expression order matches
+/// python/compile/model.py exactly so host and device trajectories
+/// agree to the last ulp; do not "simplify" the algebra.
+#[inline(always)]
+pub fn kick_step(
+    x: &mut f64,
+    y: &mut f64,
+    vx: &mut f64,
+    vy: &mut f64,
+    r1: f64,
+    r2: f64,
+    sqrt_dt: f64,
+) {
+    let mut v_x = *vx;
+    let mut v_y = *vy;
+    // Drag force.
+    v_x = v_x - (GAMMA / MASS) * v_x * DT;
+    v_y = v_y - (GAMMA / MASS) * v_y * DT;
+    // Random kick.
+    v_x += (r1 * 2.0 - 1.0) * sqrt_dt;
+    v_y += (r2 * 2.0 - 1.0) * sqrt_dt;
+    // Position update.
+    *x += v_x * DT;
+    *y += v_y * DT;
+    *vx = v_x;
+    *vy = v_y;
+}
+
 /// Which RNG API style drives the kick (the Fig. 4b x-axis).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RngStyle {
@@ -84,13 +130,7 @@ impl BrownianSim {
     /// Deterministic grid init — normative pair of `model.brownian_init`.
     pub fn new(params: BrownianParams) -> Self {
         let n = params.n_particles;
-        let side = (n as f64).sqrt().ceil() as usize;
-        let mut x = vec![0.0; n];
-        let mut y = vec![0.0; n];
-        for pid in 0..n {
-            x[pid] = (pid / side) as f64;
-            y[pid] = (pid % side) as f64;
-        }
+        let (x, y) = grid_init(n);
         let states = if params.style == RngStyle::CurandStyle {
             // The separate init pass cuRAND requires (Fig. 2 rand_init).
             init_states(params.global_seed, n)
@@ -172,22 +212,15 @@ impl BrownianSim {
 
     #[inline(always)]
     fn kick(&mut self, pid: usize, _drag: f64, sqrt_dt: f64, r1: f64, r2: f64) {
-        // Expression order matches python/compile/model.py exactly so
-        // host and device trajectories agree to the last ulp (XLA
-        // permitting — the integration test pins this).
-        let mut vx = self.vx[pid];
-        let mut vy = self.vy[pid];
-        // Drag force.
-        vx = vx - (GAMMA / MASS) * vx * DT;
-        vy = vy - (GAMMA / MASS) * vy * DT;
-        // Random kick.
-        vx += (r1 * 2.0 - 1.0) * sqrt_dt;
-        vy += (r2 * 2.0 - 1.0) * sqrt_dt;
-        // Position update.
-        self.x[pid] += vx * DT;
-        self.y[pid] += vy * DT;
-        self.vx[pid] = vx;
-        self.vy[pid] = vy;
+        kick_step(
+            &mut self.x[pid],
+            &mut self.y[pid],
+            &mut self.vx[pid],
+            &mut self.vy[pid],
+            r1,
+            r2,
+            sqrt_dt,
+        );
     }
 
     /// Bulk thermal kick: superpose a deterministic thermal velocity

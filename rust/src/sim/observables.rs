@@ -4,16 +4,25 @@
 
 use super::brownian::{BrownianSim, DT, GAMMA, MASS};
 
-/// Mean-squared displacement from the initial grid positions.
-pub fn msd(sim: &BrownianSim, x0: &[f64], y0: &[f64]) -> f64 {
-    let n = sim.params.n_particles;
+/// Mean-squared displacement of caller-owned position arrays from a
+/// reference configuration — the slice form the campaign runner
+/// (`crate::campaign::observables`) samples its MSD series through.
+pub fn msd_xy(x: &[f64], y: &[f64], x0: &[f64], y0: &[f64]) -> f64 {
+    assert_eq!(x.len(), x0.len());
+    assert_eq!(y.len(), y0.len());
+    let n = x.len();
     let mut acc = 0.0;
     for i in 0..n {
-        let dx = sim.x[i] - x0[i];
-        let dy = sim.y[i] - y0[i];
+        let dx = x[i] - x0[i];
+        let dy = y[i] - y0[i];
         acc += dx * dx + dy * dy;
     }
     acc / n as f64
+}
+
+/// Mean-squared displacement from the initial grid positions.
+pub fn msd(sim: &BrownianSim, x0: &[f64], y0: &[f64]) -> f64 {
+    msd_xy(&sim.x, &sim.y, x0, y0)
 }
 
 /// Theoretical long-time MSD slope for this integrator.

@@ -67,10 +67,12 @@ impl<G: CounterRng + 'static> Rng for InterStream<G> {
 }
 
 /// Run the full single-stream suite over the `K`-way interleaving of
-/// `root(seed)`'s children. Same budget shaping as
+/// an arbitrary parent key's children — the CLI passes `--key` through
+/// here, so child families under any epoch (`root(s).epoch(t)`) get the
+/// same scrutiny as root families. Same budget shaping as
 /// [`super::parallel::run_parallel_suite`].
-pub fn run_inter_stream_suite<G: CounterRng + 'static>(
-    seed: u64,
+pub fn run_inter_stream_suite_keyed<G: CounterRng + 'static>(
+    key: StreamKey,
     streams: u64,
     stride: u64,
     words: usize,
@@ -78,11 +80,21 @@ pub fn run_inter_stream_suite<G: CounterRng + 'static>(
     let tests: Vec<(&'static str, StatTest, f64)> = super::suite::all_tests();
     let mut out = Vec::new();
     for (_, test, weight) in tests {
-        let mut stream: InterStream<G> = InterStream::new(StreamKey::root(seed), streams, stride);
+        let mut stream: InterStream<G> = InterStream::new(key, streams, stride);
         let budget = ((words as f64 * weight) as usize).max(1 << 14);
         out.push(test(&mut stream, budget));
     }
     out
+}
+
+/// [`run_inter_stream_suite_keyed`] over `root(seed)`'s children.
+pub fn run_inter_stream_suite<G: CounterRng + 'static>(
+    seed: u64,
+    streams: u64,
+    stride: u64,
+    words: usize,
+) -> Vec<TestResult> {
+    run_inter_stream_suite_keyed::<G>(StreamKey::root(seed), streams, stride, words)
 }
 
 #[cfg(test)]
@@ -175,6 +187,47 @@ mod tests {
     fn squares_inter_stream_passes() {
         for r in run_inter_stream_suite::<Squares>(42, 32, 1, 1 << 16) {
             assert_ne!(r.verdict(), Verdict::Fail, "{}: p={}", r.name, r.p);
+        }
+    }
+
+    #[test]
+    fn decimated_stride_passes() {
+        // S > 1 reads every S-th word of each child — decimation must
+        // not surface structure (this is the CI `--stride 3` tier).
+        for r in run_inter_stream_suite::<Philox>(5, 32, 3, 1 << 15) {
+            assert_ne!(r.verdict(), Verdict::Fail, "{}: p={}", r.name, r.p);
+        }
+    }
+
+    #[test]
+    fn child_mix_fuzz_over_random_parent_epochs() {
+        // Battery-driven fuzzing of the campaign addressing shape:
+        // child families under *randomly chosen* parent epochs
+        // (`root(seed).epoch(t)`), at random decimation strides. A
+        // child derivation that mishandles the ctr input would alias
+        // siblings across epochs and fail here.
+        use crate::core::counter::splitmix64;
+        let mut s = 0x5EED_CAFE_u64;
+        for round in 0..4u32 {
+            s = splitmix64(s);
+            let seed = splitmix64(s ^ 0xA5A5);
+            let epoch = (splitmix64(s ^ 1) & 0xFFFF) as u32;
+            let stride = 1 + splitmix64(s ^ 2) % 4;
+            let key = StreamKey::root(seed).epoch(epoch);
+            let results = if round % 2 == 0 {
+                run_inter_stream_suite_keyed::<Philox>(key, 32, stride, 1 << 15)
+            } else {
+                run_inter_stream_suite_keyed::<Squares>(key, 32, stride, 1 << 15)
+            };
+            for r in results {
+                assert_ne!(
+                    r.verdict(),
+                    Verdict::Fail,
+                    "round {round} seed {seed:#x} epoch {epoch} stride {stride}: {}: p={}",
+                    r.name,
+                    r.p
+                );
+            }
         }
     }
 

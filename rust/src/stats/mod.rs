@@ -37,5 +37,5 @@ pub use battery::{
     chunk_sweep, run_battery, BatteryReport, BufferedWords, ChunkSweepRow, DEFAULT_FILL_CHUNK,
 };
 pub use distcheck::{run_dist_battery, run_dist_battery_keyed};
-pub use interstream::{run_inter_stream_suite, InterStream};
+pub use interstream::{run_inter_stream_suite, run_inter_stream_suite_keyed, InterStream};
 pub use suite::{TestResult, Verdict};

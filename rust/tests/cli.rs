@@ -20,11 +20,94 @@ fn openrand(args: &[&str]) -> (String, String, bool) {
 fn help_lists_commands_and_options() {
     let (stdout, _, ok) = openrand(&["--help"]);
     assert!(ok);
-    for needle in
-        ["generate", "brownian", "stats", "repro", "artifacts", "serve", "fetch", "--generator", "--seed"]
-    {
+    for needle in [
+        "generate", "brownian", "stats", "repro", "artifacts", "serve", "fetch", "campaign",
+        "--generator", "--seed",
+    ] {
         assert!(stdout.contains(needle), "missing {needle}");
     }
+}
+
+#[test]
+fn campaign_run_resume_cmp_is_bitwise() {
+    // The CI smoke tier in miniature: uninterrupted run vs checkpoint at
+    // a mid epoch + resume (different thread count) — the end-state
+    // checkpoint files must be byte-identical.
+    let dir = std::env::temp_dir();
+    let tag = std::process::id();
+    let full = dir.join(format!("openrand_cli_full_{tag}.ck"));
+    let mid = dir.join(format!("openrand_cli_mid_{tag}.ck"));
+    let resumed = dir.join(format!("openrand_cli_resumed_{tag}.ck"));
+    let base = [
+        "campaign", "run", "--n", "3000", "--tile", "256", "--seed", "42", "--steps",
+    ];
+    let (_, err, ok) = openrand(
+        &[&base[..], &["20", "--threads", "4", "--checkpoint", full.to_str().unwrap()]].concat(),
+    );
+    assert!(ok, "{err}");
+    let (_, err, ok) = openrand(
+        &[&base[..], &["9", "--checkpoint", mid.to_str().unwrap()]].concat(),
+    );
+    assert!(ok, "{err}");
+    let (out, err, ok) = openrand(&[
+        "campaign", "resume", "--from", mid.to_str().unwrap(), "--steps", "20", "--threads", "2",
+        "--checkpoint", resumed.to_str().unwrap(),
+    ]);
+    assert!(ok, "{err}");
+    assert!(out.contains("resumed from"), "{out}");
+    let a = std::fs::read(&full).unwrap();
+    let b = std::fs::read(&resumed).unwrap();
+    for p in [&full, &mid, &resumed] {
+        std::fs::remove_file(p).ok();
+    }
+    assert_eq!(a, b, "resumed end checkpoint diverged from uninterrupted run");
+}
+
+#[test]
+fn campaign_rejects_bad_invocations() {
+    // No action.
+    let (_, err, ok) = openrand(&["campaign"]);
+    assert!(!ok);
+    assert!(err.contains("run|resume|validate"), "{err}");
+    // Unknown action.
+    let (_, err, ok) = openrand(&["campaign", "replay"]);
+    assert!(!ok);
+    assert!(err.contains("replay"), "{err}");
+    // Resume without --from.
+    let (_, err, ok) = openrand(&["campaign", "resume", "--steps", "10"]);
+    assert!(!ok);
+    assert!(err.contains("--from"), "{err}");
+    // Epoch baked into the key is rejected, not silently dropped.
+    let (_, err, ok) = openrand(&["campaign", "run", "--key", "7/e3", "--n", "100", "--steps", "2"]);
+    assert!(!ok);
+    assert!(err.contains("epoch"), "{err}");
+    // A corrupt checkpoint is a typed decode error, not a panic.
+    let dir = std::env::temp_dir();
+    let junk = dir.join(format!("openrand_cli_junk_{}.ck", std::process::id()));
+    std::fs::write(&junk, b"definitely not a checkpoint").unwrap();
+    let (_, err, ok) = openrand(&["campaign", "resume", "--from", junk.to_str().unwrap()]);
+    std::fs::remove_file(&junk).ok();
+    assert!(!ok);
+    assert!(err.contains("checkpoint") || err.contains("magic"), "{err}");
+    assert!(!err.contains("panicked"), "{err}");
+}
+
+#[test]
+fn campaign_validate_gates_on_tolerance() {
+    // Tiny-N validate: generous tolerance passes, absurdly tight fails
+    // with a diagnostic (not a panic). Small n keeps this test cheap;
+    // CI runs the reduced-N gate at real scale.
+    let base = [
+        "campaign", "validate", "--n", "4096", "--steps", "500", "--relax", "200",
+        "--sample-every", "50", "--threads", "2",
+    ];
+    let (out, err, ok) = openrand(&[&base[..], &["--tolerance", "0.5"]].concat());
+    assert!(ok, "{err}");
+    assert!(out.contains("PASS"), "{out}");
+    assert!(out.contains("D_est"), "{out}");
+    let (_, err, ok) = openrand(&[&base[..], &["--tolerance", "1e-9"]].concat());
+    assert!(!ok);
+    assert!(err.contains("tolerance"), "{err}");
 }
 
 #[test]

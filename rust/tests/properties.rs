@@ -584,3 +584,64 @@ fn prop_stream_nonoverlap_window() {
         true
     });
 }
+
+#[test]
+fn prop_campaign_resume_bitwise() {
+    // The PR-8 acceptance property: resume-from-checkpoint is
+    // byte-identical to the uninterrupted run, for random (seed, n,
+    // split point), across thread counts {1, 2, 8} on both sides of the
+    // split, and across explicit host/par fill-backend arms. The tile
+    // is kept small so even tiny n exercises multi-tile stripes.
+    use openrand::backend::{FillBackend, HostParallel, HostSerial};
+    use openrand::campaign::{Campaign, CampaignParams, Checkpoint, Model};
+
+    const TILE: usize = 128;
+    const TOTAL: u32 = 10;
+    Prop::new("campaign resume == never-stopped (bitwise)").cases(6).check3(
+        Gen::u64(),
+        Gen::usize_in(64, 700),
+        Gen::usize_in(1, TOTAL as usize),
+        |seed, n, split| {
+            let params = |threads: usize| {
+                let mut p = CampaignParams::new(Model::Brownian, n, StreamKey::root(seed));
+                p.tile = TILE;
+                p.threads = threads;
+                p
+            };
+            // Reference: uninterrupted serial run.
+            let mut full = Campaign::new(params(1)).unwrap();
+            full.run_to(TOTAL).unwrap();
+            let want = full.checkpoint().encode();
+
+            for head_threads in [1usize, 2, 8] {
+                let mut head = Campaign::new(params(head_threads)).unwrap();
+                head.run_to(split as u32).unwrap();
+                // Round-trip through the byte format, as a real pause would.
+                let mid = Checkpoint::decode(&head.checkpoint().encode()).unwrap();
+                for tail_threads in [1usize, 2, 8] {
+                    let mut tail = Campaign::resume(&mid, tail_threads).unwrap();
+                    tail.run_to(TOTAL).unwrap();
+                    if tail.checkpoint().encode() != want {
+                        return false;
+                    }
+                }
+            }
+
+            // Explicit fill-backend arms: HostSerial and HostParallel
+            // must drive the identical trajectory as the default path.
+            for backend in [
+                &mut HostSerial as &mut dyn FillBackend,
+                &mut HostParallel::new(4) as &mut dyn FillBackend,
+            ] {
+                let mut c = Campaign::new(params(1)).unwrap();
+                while c.epoch() < TOTAL {
+                    c.step_with(backend).unwrap();
+                }
+                if c.checkpoint().encode() != want {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
