@@ -1,0 +1,580 @@
+//! `openrand_ffi` — the C ABI over the `no_std` openrand core.
+//!
+//! This crate exports the portable surface (the seven engines, the
+//! serial fill paths, the normative conversions, and `StreamKey`
+//! derivation) through opaque handles and plain C types, so that C,
+//! Fortran-via-ISO-C, and any FFI-capable language replay the exact
+//! streams the Rust and Python layers pin. The contract is documented
+//! in `docs/ffi.md`; the C header is hand-maintained at
+//! `include/openrand.h` (no cbindgen in the container — the header IS
+//! the ABI document, and `ffi/tests/kat_harness.c` compiles against it
+//! in CI to keep it honest).
+//!
+//! ## Error discipline
+//!
+//! Unwinding across an `extern "C"` boundary is undefined behavior, so
+//! no panic may escape. Every entry point:
+//!
+//! 1. checks pointers and preconditions first, returning a typed error
+//!    code (`OPENRAND_ERR_*`) for each documented panic source in the
+//!    core (`range_u32(0)`, `jump()` on Tyche/TycheI), and
+//! 2. wraps the remaining call in [`catch_unwind`] as a backstop, so an
+//!    unanticipated panic surfaces as `OPENRAND_ERR_PANIC` instead of
+//!    an abort in the host process.
+//!
+//! The full panic-surface audit lives in `docs/ffi.md` §Errors;
+//! `ffi/tests/ffi.rs` and the C harness both drive the error paths.
+//!
+//! ## Ownership
+//!
+//! Handles returned through `openrand_create*` / `openrand_key_*` are
+//! heap-allocated by this crate and MUST be released with the matching
+//! `openrand_destroy` / `openrand_key_free` — never with `free(3)`.
+//! Handles are not thread-safe; one handle belongs to one thread at a
+//! time (streams are cheap — open one per thread, per the paper's
+//! one-stream-per-work-item model).
+
+use std::ffi::{c_char, CStr};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use openrand::core::fill::u01_f64;
+use openrand::core::{
+    CounterRng, Generator, Philox, Philox2x32, Rng, Squares, Threefry, Threefry2x32, Tyche, TycheI,
+};
+use openrand::selftest;
+use openrand::stream::StreamKey;
+
+/// Success.
+pub const OPENRAND_OK: i32 = 0;
+/// A required pointer argument was NULL.
+pub const OPENRAND_ERR_NULL: i32 = 1;
+/// The generator tag is not one of the seven engine names.
+pub const OPENRAND_ERR_BAD_GENERATOR: i32 = 2;
+/// `bound == 0` passed to `openrand_range_u32` (the core's normative
+/// panic, surfaced as a code).
+pub const OPENRAND_ERR_EMPTY_RANGE: i32 = 3;
+/// `openrand_jump` on an engine with no O(1) jump (tyche, tyche_i).
+pub const OPENRAND_ERR_NO_JUMP: i32 = 4;
+/// A panic was caught at the FFI boundary (backstop — indicates a bug).
+pub const OPENRAND_ERR_PANIC: i32 = 5;
+/// The built-in KAT battery found a diverging vector.
+pub const OPENRAND_ERR_SELFTEST: i32 = 6;
+
+/// Concrete-engine dispatch. The C side names engines by tag string;
+/// internally each handle owns one monomorphized engine so the draw
+/// paths are the same code the native Rust benches measure (no `dyn`
+/// indirection on the hot path).
+enum Engine {
+    Philox(Philox),
+    Philox2x32(Philox2x32),
+    Threefry(Threefry),
+    Threefry2x32(Threefry2x32),
+    Squares(Squares),
+    Tyche(Tyche),
+    TycheI(TycheI),
+}
+
+macro_rules! with_engine {
+    ($e:expr, $r:ident => $body:expr) => {
+        match $e {
+            Engine::Philox($r) => $body,
+            Engine::Philox2x32($r) => $body,
+            Engine::Threefry($r) => $body,
+            Engine::Threefry2x32($r) => $body,
+            Engine::Squares($r) => $body,
+            Engine::Tyche($r) => $body,
+            Engine::TycheI($r) => $body,
+        }
+    };
+}
+
+fn make_engine(gen: Generator, seed: u64, ctr: u32) -> Engine {
+    match gen {
+        Generator::Philox => Engine::Philox(Philox::new(seed, ctr)),
+        Generator::Philox2x32 => Engine::Philox2x32(Philox2x32::new(seed, ctr)),
+        Generator::Threefry => Engine::Threefry(Threefry::new(seed, ctr)),
+        Generator::Threefry2x32 => Engine::Threefry2x32(Threefry2x32::new(seed, ctr)),
+        Generator::Squares => Engine::Squares(Squares::new(seed, ctr)),
+        Generator::Tyche => Engine::Tyche(Tyche::new(seed, ctr)),
+        Generator::TycheI => Engine::TycheI(TycheI::new(seed, ctr)),
+    }
+}
+
+fn jump_log2(e: &Engine) -> Option<u32> {
+    fn jl<G: CounterRng>(_: &G) -> Option<u32> {
+        G::JUMP_LOG2
+    }
+    with_engine!(e, r => jl(r))
+}
+
+/// Opaque engine handle (C: `openrand_engine`).
+pub struct OpenrandEngine {
+    inner: Engine,
+}
+
+/// Opaque stream-key handle (C: `openrand_key`).
+pub struct OpenrandKey {
+    inner: StreamKey,
+}
+
+unsafe fn parse_tag(gen_tag: *const c_char) -> Result<Generator, i32> {
+    if gen_tag.is_null() {
+        return Err(OPENRAND_ERR_NULL);
+    }
+    let tag = CStr::from_ptr(gen_tag).to_str().map_err(|_| OPENRAND_ERR_BAD_GENERATOR)?;
+    Generator::parse(tag).ok_or(OPENRAND_ERR_BAD_GENERATOR)
+}
+
+/// `"<name> <semver>"` of this library, as a static NUL-terminated
+/// string (never freed by the caller).
+#[no_mangle]
+pub extern "C" fn openrand_version() -> *const c_char {
+    const VERSION: &[u8] = b"openrand_ffi 0.1.0\0";
+    VERSION.as_ptr().cast()
+}
+
+/// A static human-readable message for an `OPENRAND_*` code (never
+/// freed by the caller; unknown codes get a placeholder, not NULL).
+#[no_mangle]
+pub extern "C" fn openrand_strerror(code: i32) -> *const c_char {
+    let msg: &[u8] = match code {
+        OPENRAND_OK => b"ok\0",
+        OPENRAND_ERR_NULL => b"null pointer argument\0",
+        OPENRAND_ERR_BAD_GENERATOR => b"unknown generator tag\0",
+        OPENRAND_ERR_EMPTY_RANGE => b"empty range (bound == 0)\0",
+        OPENRAND_ERR_NO_JUMP => b"engine has no O(1) jump; use openrand_advance\0",
+        OPENRAND_ERR_PANIC => b"internal panic caught at FFI boundary\0",
+        OPENRAND_ERR_SELFTEST => b"known-answer selftest failed\0",
+        _ => b"unknown openrand error code\0",
+    };
+    msg.as_ptr().cast()
+}
+
+/// Run the pinned known-answer battery (`openrand::selftest::run`):
+/// every engine's word table, the normative conversions, key
+/// derivation, and the jump-ahead literals. Returns `OPENRAND_OK` when
+/// the linked library reproduces the cross-language vectors bitwise.
+#[no_mangle]
+pub extern "C" fn openrand_selftest() -> i32 {
+    match catch_unwind(selftest::run) {
+        Ok(Ok(())) => OPENRAND_OK,
+        Ok(Err(_)) => OPENRAND_ERR_SELFTEST,
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Open the stream `(seed, ctr)` of the engine named `gen_tag` (one of
+/// `"philox"`, `"philox2x32"`, `"threefry"`, `"threefry2x32"`,
+/// `"squares"`, `"tyche"`, `"tyche_i"`). On success writes a handle to
+/// `*out`; release it with [`openrand_destroy`].
+///
+/// # Safety
+///
+/// `gen_tag` must be NULL or a NUL-terminated string; `out` must be
+/// NULL or valid for writing one pointer.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_create(
+    gen_tag: *const c_char,
+    seed: u64,
+    ctr: u32,
+    out: *mut *mut OpenrandEngine,
+) -> i32 {
+    if out.is_null() {
+        return OPENRAND_ERR_NULL;
+    }
+    let gen = match parse_tag(gen_tag) {
+        Ok(g) => g,
+        Err(code) => return code,
+    };
+    match catch_unwind(|| Box::new(OpenrandEngine { inner: make_engine(gen, seed, ctr) })) {
+        Ok(handle) => {
+            *out = Box::into_raw(handle);
+            OPENRAND_OK
+        }
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Open the stream a [`OpenrandKey`] addresses — exactly
+/// [`openrand_create`] with the key's `(seed, ctr)`; the key is not
+/// consumed.
+///
+/// # Safety
+///
+/// As [`openrand_create`]; `key` must be NULL or a live key handle.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_create_keyed(
+    gen_tag: *const c_char,
+    key: *const OpenrandKey,
+    out: *mut *mut OpenrandEngine,
+) -> i32 {
+    let Some(k) = key.as_ref() else {
+        return OPENRAND_ERR_NULL;
+    };
+    openrand_create(gen_tag, k.inner.seed(), k.inner.ctr(), out)
+}
+
+/// Release an engine handle. NULL is a no-op.
+///
+/// # Safety
+///
+/// `e` must be NULL or a handle from `openrand_create*` not yet
+/// destroyed.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_destroy(e: *mut OpenrandEngine) {
+    if !e.is_null() {
+        drop(Box::from_raw(e));
+    }
+}
+
+/// Draw the next 32-bit word of the stream into `*out`.
+///
+/// # Safety
+///
+/// `e` must be NULL or a live engine handle owned by this thread; `out`
+/// NULL or writable.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_next_u32(e: *mut OpenrandEngine, out: *mut u32) -> i32 {
+    let (Some(h), false) = (e.as_mut(), out.is_null()) else {
+        return OPENRAND_ERR_NULL;
+    };
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.next_u32()))) {
+        Ok(v) => {
+            *out = v;
+            OPENRAND_OK
+        }
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Draw the next 64-bit value (two stream words, first word high — the
+/// normative composition).
+///
+/// # Safety
+///
+/// As [`openrand_next_u32`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_next_u64(e: *mut OpenrandEngine, out: *mut u64) -> i32 {
+    let (Some(h), false) = (e.as_mut(), out.is_null()) else {
+        return OPENRAND_ERR_NULL;
+    };
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.next_u64()))) {
+        Ok(v) => {
+            *out = v;
+            OPENRAND_OK
+        }
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Draw a uniform `float` in `[0, 1)` — top 24 bits of one stream word
+/// times 2^-24 (the normative f32 conversion).
+///
+/// # Safety
+///
+/// As [`openrand_next_u32`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_uniform_f32(e: *mut OpenrandEngine, out: *mut f32) -> i32 {
+    let (Some(h), false) = (e.as_mut(), out.is_null()) else {
+        return OPENRAND_ERR_NULL;
+    };
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.draw_float()))) {
+        Ok(v) => {
+            *out = v;
+            OPENRAND_OK
+        }
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Draw a uniform `double` in `[0, 1)` — top 53 bits of the composed
+/// u64 times 2^-53 (the normative f64 conversion; consumes two words).
+///
+/// # Safety
+///
+/// As [`openrand_next_u32`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_uniform_f64(e: *mut OpenrandEngine, out: *mut f64) -> i32 {
+    let (Some(h), false) = (e.as_mut(), out.is_null()) else {
+        return OPENRAND_ERR_NULL;
+    };
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.draw_double()))) {
+        Ok(v) => {
+            *out = v;
+            OPENRAND_OK
+        }
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Draw a uniform integer in `[0, bound)` (Lemire rejection, one word
+/// plus rare retries). `bound == 0` — a panic in the Rust API — returns
+/// `OPENRAND_ERR_EMPTY_RANGE` without touching the stream.
+///
+/// # Safety
+///
+/// As [`openrand_next_u32`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_range_u32(
+    e: *mut OpenrandEngine,
+    bound: u32,
+    out: *mut u32,
+) -> i32 {
+    let (Some(h), false) = (e.as_mut(), out.is_null()) else {
+        return OPENRAND_ERR_NULL;
+    };
+    if bound == 0 {
+        return OPENRAND_ERR_EMPTY_RANGE;
+    }
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.range_u32(bound)))) {
+        Ok(v) => {
+            *out = v;
+            OPENRAND_OK
+        }
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Fill `buf[0..len]` with the next `len` stream words through the
+/// engines' block path — bit-identical to `len` calls of
+/// [`openrand_next_u32`], and the bulk surface `benches/fig_ffi.rs`
+/// holds to within 1.2x of the native Rust fill.
+///
+/// # Safety
+///
+/// `e` as [`openrand_next_u32`]; `buf` must be NULL or valid for `len`
+/// writes of `uint32_t` (`len == 0` accepts any `buf`).
+#[no_mangle]
+pub unsafe extern "C" fn openrand_fill_u32(
+    e: *mut OpenrandEngine,
+    buf: *mut u32,
+    len: usize,
+) -> i32 {
+    let Some(h) = e.as_mut() else {
+        return OPENRAND_ERR_NULL;
+    };
+    if len == 0 {
+        return OPENRAND_OK;
+    }
+    if buf.is_null() {
+        return OPENRAND_ERR_NULL;
+    }
+    let out = std::slice::from_raw_parts_mut(buf, len);
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.fill_u32(out)))) {
+        Ok(()) => OPENRAND_OK,
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Fill `buf[0..len]` with uniform doubles in `[0, 1)` — bit-identical
+/// to `len` calls of [`openrand_uniform_f64`] (words are pulled in
+/// tiles through the block path; double `i` consumes stream words
+/// `2i, 2i + 1`).
+///
+/// # Safety
+///
+/// `e` as [`openrand_next_u32`]; `buf` must be NULL or valid for `len`
+/// writes of `double` (`len == 0` accepts any `buf`).
+#[no_mangle]
+pub unsafe extern "C" fn openrand_fill_f64(
+    e: *mut OpenrandEngine,
+    buf: *mut f64,
+    len: usize,
+) -> i32 {
+    let Some(h) = e.as_mut() else {
+        return OPENRAND_ERR_NULL;
+    };
+    if len == 0 {
+        return OPENRAND_OK;
+    }
+    if buf.is_null() {
+        return OPENRAND_ERR_NULL;
+    }
+    let out = std::slice::from_raw_parts_mut(buf, len);
+    let filled = catch_unwind(AssertUnwindSafe(|| {
+        with_engine!(&mut h.inner, r => {
+            const TILE: usize = 512;
+            let mut words = [0u32; 2 * TILE];
+            let mut done = 0usize;
+            while done < out.len() {
+                let n = (out.len() - done).min(TILE);
+                let tile = &mut words[..2 * n];
+                r.fill_u32(tile);
+                for k in 0..n {
+                    out[done + k] = u01_f64(tile[2 * k], tile[2 * k + 1]);
+                }
+                done += n;
+            }
+        })
+    }));
+    match filled {
+        Ok(()) => OPENRAND_OK,
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Advance the stream by `n` words — bit-identical to drawing and
+/// discarding `n` words. O(1) for the counter engines, O(n) for
+/// tyche/tyche_i.
+///
+/// # Safety
+///
+/// `e` must be NULL or a live engine handle owned by this thread.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_advance(e: *mut OpenrandEngine, n: u64) -> i32 {
+    let Some(h) = e.as_mut() else {
+        return OPENRAND_ERR_NULL;
+    };
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.advance(n)))) {
+        Ok(()) => OPENRAND_OK,
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// Position the stream at absolute word `pos` in O(1) (engines with a
+/// shorter period reduce `pos` modulo it).
+///
+/// # Safety
+///
+/// As [`openrand_advance`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_set_position(e: *mut OpenrandEngine, pos: u64) -> i32 {
+    let Some(h) = e.as_mut() else {
+        return OPENRAND_ERR_NULL;
+    };
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.set_position(pos)))) {
+        Ok(()) => OPENRAND_OK,
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+/// O(1) far jump by the engine's fixed stride (2^33 words for the 4x32
+/// engines, 2^16 for the 2x32/squares engines). Engines without an
+/// O(1) jump (tyche, tyche_i — a panic in the Rust API) return
+/// `OPENRAND_ERR_NO_JUMP` without touching the stream.
+///
+/// # Safety
+///
+/// As [`openrand_advance`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_jump(e: *mut OpenrandEngine) -> i32 {
+    let Some(h) = e.as_mut() else {
+        return OPENRAND_ERR_NULL;
+    };
+    if jump_log2(&h.inner).is_none() {
+        return OPENRAND_ERR_NO_JUMP;
+    }
+    match catch_unwind(AssertUnwindSafe(|| with_engine!(&mut h.inner, r => r.jump()))) {
+        Ok(()) => OPENRAND_OK,
+        Err(_) => OPENRAND_ERR_PANIC,
+    }
+}
+
+fn key_out(key: StreamKey, out: *mut *mut OpenrandKey) -> i32 {
+    if out.is_null() {
+        return OPENRAND_ERR_NULL;
+    }
+    unsafe {
+        *out = Box::into_raw(Box::new(OpenrandKey { inner: key }));
+    }
+    OPENRAND_OK
+}
+
+/// The root key of a stream tree: `(seed, ctr = 0)`. Release with
+/// [`openrand_key_free`].
+///
+/// # Safety
+///
+/// `out` must be NULL or valid for writing one pointer.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_key_root(seed: u64, out: *mut *mut OpenrandKey) -> i32 {
+    key_out(StreamKey::root(seed), out)
+}
+
+/// A key naming an explicit `(seed, ctr)` address (interoperates with
+/// raw `openrand_create` calls by construction).
+///
+/// # Safety
+///
+/// As [`openrand_key_root`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_key_raw(seed: u64, ctr: u32, out: *mut *mut OpenrandKey) -> i32 {
+    key_out(StreamKey::raw(seed, ctr), out)
+}
+
+/// Derive child `id` of `key` through the normative splitmix64 mix
+/// (`derive_child_seed`) — a fresh key handle; `key` is unchanged.
+///
+/// # Safety
+///
+/// `key` must be NULL or a live key handle; `out` as
+/// [`openrand_key_root`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_key_child(
+    key: *const OpenrandKey,
+    id: u64,
+    out: *mut *mut OpenrandKey,
+) -> i32 {
+    let Some(k) = key.as_ref() else {
+        return OPENRAND_ERR_NULL;
+    };
+    key_out(k.inner.child(id), out)
+}
+
+/// Set the epoch (counter) absolutely — last call wins, per the stream
+/// contract. A fresh key handle; `key` is unchanged.
+///
+/// # Safety
+///
+/// As [`openrand_key_child`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_key_epoch(
+    key: *const OpenrandKey,
+    epoch: u32,
+    out: *mut *mut OpenrandKey,
+) -> i32 {
+    let Some(k) = key.as_ref() else {
+        return OPENRAND_ERR_NULL;
+    };
+    key_out(k.inner.epoch(epoch), out)
+}
+
+/// Read the derived seed a key addresses.
+///
+/// # Safety
+///
+/// `key` must be NULL or a live key handle; `out` NULL or writable.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_key_seed(key: *const OpenrandKey, out: *mut u64) -> i32 {
+    let (Some(k), false) = (key.as_ref(), out.is_null()) else {
+        return OPENRAND_ERR_NULL;
+    };
+    *out = k.inner.seed();
+    OPENRAND_OK
+}
+
+/// Read the counter (epoch) a key addresses.
+///
+/// # Safety
+///
+/// As [`openrand_key_seed`].
+#[no_mangle]
+pub unsafe extern "C" fn openrand_key_ctr(key: *const OpenrandKey, out: *mut u32) -> i32 {
+    let (Some(k), false) = (key.as_ref(), out.is_null()) else {
+        return OPENRAND_ERR_NULL;
+    };
+    *out = k.inner.ctr();
+    OPENRAND_OK
+}
+
+/// Release a key handle. NULL is a no-op.
+///
+/// # Safety
+///
+/// `key` must be NULL or a handle from `openrand_key_*` not yet freed.
+#[no_mangle]
+pub unsafe extern "C" fn openrand_key_free(key: *mut OpenrandKey) {
+    if !key.is_null() {
+        drop(Box::from_raw(key));
+    }
+}

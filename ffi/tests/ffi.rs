@@ -1,0 +1,210 @@
+//! Rust-side exercise of the C ABI: the same calls `kat_harness.c`
+//! makes, driven through the `extern "C"` symbols so `cargo test -p
+//! openrand_ffi` covers the boundary even where no C toolchain exists.
+//! The KAT literals come straight from `openrand::selftest` — one
+//! table, asserted here through the FFI layer instead of natively.
+
+use std::ffi::CStr;
+use std::os::raw::c_char;
+use std::ptr;
+
+use openrand::core::{CounterRng, Philox, Rng};
+use openrand::selftest;
+use openrand_ffi::*;
+
+/// NUL-terminated tag strings in `Generator::ALL` order (matches the
+/// selftest table).
+const TAGS: [&[u8]; 7] = [
+    b"philox\0",
+    b"philox2x32\0",
+    b"threefry\0",
+    b"threefry2x32\0",
+    b"squares\0",
+    b"tyche\0",
+    b"tyche_i\0",
+];
+
+fn tag_ptr(tag: &[u8]) -> *const c_char {
+    tag.as_ptr().cast()
+}
+
+fn open(tag: &[u8], seed: u64, ctr: u32) -> *mut OpenrandEngine {
+    let mut e: *mut OpenrandEngine = ptr::null_mut();
+    let rc = unsafe { openrand_create(tag_ptr(tag), seed, ctr, &mut e) };
+    assert_eq!(rc, OPENRAND_OK);
+    assert!(!e.is_null());
+    e
+}
+
+#[test]
+fn selftest_passes_through_ffi() {
+    assert_eq!(openrand_selftest(), OPENRAND_OK);
+}
+
+#[test]
+fn engine_word_tables_through_ffi() {
+    for (gi, tag) in TAGS.into_iter().enumerate() {
+        let want = &selftest::ENGINE_WORDS_S7_C1[gi];
+        let e = open(tag, 7, 1);
+        for (i, w) in want.iter().enumerate() {
+            let mut v = 0u32;
+            assert_eq!(unsafe { openrand_next_u32(e, &mut v) }, OPENRAND_OK);
+            assert_eq!(v, *w, "{tag:?} word {i}");
+        }
+        unsafe { openrand_destroy(e) };
+
+        let e = open(tag, 7, 1);
+        let mut buf = [0u32; 10];
+        assert_eq!(unsafe { openrand_fill_u32(e, buf.as_mut_ptr(), buf.len()) }, OPENRAND_OK);
+        assert_eq!(buf, *want, "{tag:?} bulk");
+        unsafe { openrand_destroy(e) };
+    }
+}
+
+#[test]
+fn conversions_through_ffi() {
+    let e = open(TAGS[0], 7, 1);
+    let mut v = 0u64;
+    assert_eq!(unsafe { openrand_next_u64(e, &mut v) }, OPENRAND_OK);
+    assert_eq!(v, selftest::PHILOX_S7_C1_U64);
+    unsafe { openrand_destroy(e) };
+
+    let e = open(TAGS[0], 7, 1);
+    let mut d = 0.0f64;
+    assert_eq!(unsafe { openrand_uniform_f64(e, &mut d) }, OPENRAND_OK);
+    assert_eq!(d.to_bits(), selftest::PHILOX_S7_C1_F64_BITS);
+    unsafe { openrand_destroy(e) };
+
+    let e = open(TAGS[0], 7, 1);
+    let mut f = 0.0f32;
+    assert_eq!(unsafe { openrand_uniform_f32(e, &mut f) }, OPENRAND_OK);
+    assert_eq!(f.to_bits(), selftest::PHILOX_S7_C1_F32_BITS);
+    unsafe { openrand_destroy(e) };
+}
+
+#[test]
+fn fill_f64_matches_scalar_draws_across_tile_boundaries() {
+    // 0, 1, tile-1, tile, tile+1, and a multi-tile length (TILE = 512).
+    for n in [0usize, 1, 511, 512, 513, 1500] {
+        let e = open(TAGS[0], 21, 4);
+        let mut bulk = vec![0.0f64; n];
+        assert_eq!(unsafe { openrand_fill_f64(e, bulk.as_mut_ptr(), n) }, OPENRAND_OK);
+        unsafe { openrand_destroy(e) };
+        let mut r = Philox::new(21, 4);
+        for (i, v) in bulk.iter().enumerate() {
+            assert_eq!(v.to_bits(), r.draw_double().to_bits(), "n={n} i={i}");
+        }
+    }
+}
+
+#[test]
+fn positioning_through_ffi() {
+    let e = open(TAGS[0], 7, 1);
+    assert_eq!(unsafe { openrand_jump(e) }, OPENRAND_OK);
+    let mut w = 0u32;
+    assert_eq!(unsafe { openrand_next_u32(e, &mut w) }, OPENRAND_OK);
+    assert_eq!(w, 0x3A29_4131, "philox jump 2^33");
+    unsafe { openrand_destroy(e) };
+
+    let e = open(TAGS[0], 7, 1);
+    assert_eq!(unsafe { openrand_set_position(e, (1 << 34) + 2) }, OPENRAND_OK);
+    assert_eq!(unsafe { openrand_next_u32(e, &mut w) }, OPENRAND_OK);
+    assert_eq!(w, 0x275A_0C0F, "philox word 2^34+2");
+    unsafe { openrand_destroy(e) };
+
+    let e = open(TAGS[0], 7, 1);
+    assert_eq!(unsafe { openrand_advance(e, 9) }, OPENRAND_OK);
+    assert_eq!(unsafe { openrand_next_u32(e, &mut w) }, OPENRAND_OK);
+    assert_eq!(w, selftest::ENGINE_WORDS_S7_C1[0][9], "philox advance(9)");
+    unsafe { openrand_destroy(e) };
+}
+
+#[test]
+fn key_surface_through_ffi() {
+    unsafe {
+        let mut root: *mut OpenrandKey = ptr::null_mut();
+        assert_eq!(openrand_key_root(7, &mut root), OPENRAND_OK);
+        let mut child: *mut OpenrandKey = ptr::null_mut();
+        assert_eq!(openrand_key_child(root, 3, &mut child), OPENRAND_OK);
+        let mut seed = 0u64;
+        assert_eq!(openrand_key_seed(child, &mut seed), OPENRAND_OK);
+        assert_eq!(seed, selftest::CHILD_SEED_R7_C3);
+
+        let mut epoch: *mut OpenrandKey = ptr::null_mut();
+        assert_eq!(openrand_key_epoch(child, 1, &mut epoch), OPENRAND_OK);
+        let mut ctr = 0u32;
+        assert_eq!(openrand_key_ctr(epoch, &mut ctr), OPENRAND_OK);
+        assert_eq!(ctr, 1);
+
+        let mut e: *mut OpenrandEngine = ptr::null_mut();
+        assert_eq!(openrand_create_keyed(tag_ptr(TAGS[0]), epoch, &mut e), OPENRAND_OK);
+        let mut w = 0u32;
+        assert_eq!(openrand_next_u32(e, &mut w), OPENRAND_OK);
+        assert_eq!(w, selftest::CHILD_STREAM_WORDS[0]);
+        assert_eq!(openrand_next_u32(e, &mut w), OPENRAND_OK);
+        assert_eq!(w, selftest::CHILD_STREAM_WORDS[1]);
+        openrand_destroy(e);
+
+        openrand_key_free(epoch);
+        openrand_key_free(child);
+        openrand_key_free(root);
+    }
+}
+
+#[test]
+fn panics_become_error_codes_not_aborts() {
+    unsafe {
+        // Unknown tag and null arguments.
+        let mut e: *mut OpenrandEngine = ptr::null_mut();
+        let bad: &[u8] = b"not-an-engine\0";
+        assert_eq!(openrand_create(tag_ptr(bad), 1, 0, &mut e), OPENRAND_ERR_BAD_GENERATOR);
+        assert_eq!(openrand_create(ptr::null(), 1, 0, &mut e), OPENRAND_ERR_NULL);
+        assert_eq!(openrand_create(tag_ptr(TAGS[0]), 1, 0, ptr::null_mut()), OPENRAND_ERR_NULL);
+        let mut w = 0u32;
+        assert_eq!(openrand_next_u32(ptr::null_mut(), &mut w), OPENRAND_ERR_NULL);
+
+        // The two documented panic sources come back as typed codes.
+        let e = open(TAGS[0], 1, 0);
+        assert_eq!(openrand_range_u32(e, 0, &mut w), OPENRAND_ERR_EMPTY_RANGE);
+        // The failed call consumed no words: the stream replays from 0.
+        assert_eq!(openrand_next_u32(e, &mut w), OPENRAND_OK);
+        assert_eq!(w, Philox::new(1, 0).next_u32());
+        assert_eq!(openrand_next_u32(e, ptr::null_mut()), OPENRAND_ERR_NULL);
+        assert_eq!(openrand_fill_u32(e, ptr::null_mut(), 4), OPENRAND_ERR_NULL);
+        assert_eq!(openrand_fill_u32(e, ptr::null_mut(), 0), OPENRAND_OK);
+        openrand_destroy(e);
+
+        for tag in [&b"tyche\0"[..], &b"tyche_i\0"[..]] {
+            let e = open(tag, 1, 0);
+            assert_eq!(openrand_jump(e), OPENRAND_ERR_NO_JUMP);
+            openrand_destroy(e);
+        }
+
+        // Null keys and no-op frees.
+        let mut k: *mut OpenrandKey = ptr::null_mut();
+        assert_eq!(openrand_key_child(ptr::null(), 1, &mut k), OPENRAND_ERR_NULL);
+        assert_eq!(openrand_key_root(7, ptr::null_mut()), OPENRAND_ERR_NULL);
+        let mut seed = 0u64;
+        assert_eq!(openrand_key_seed(ptr::null(), &mut seed), OPENRAND_ERR_NULL);
+        assert_eq!(openrand_create_keyed(tag_ptr(TAGS[0]), ptr::null(), &mut e), OPENRAND_ERR_NULL);
+        openrand_destroy(ptr::null_mut());
+        openrand_key_free(ptr::null_mut());
+    }
+}
+
+#[test]
+fn strerror_and_version_are_static_c_strings() {
+    let version = openrand_version();
+    assert!(!version.is_null());
+    let v = unsafe { CStr::from_ptr(version) }.to_str().unwrap();
+    assert!(v.starts_with("openrand_ffi "), "{v}");
+    for code in -1..8 {
+        let msg: *const c_char = openrand_strerror(code);
+        assert!(!msg.is_null());
+        assert!(!unsafe { CStr::from_ptr(msg) }.to_str().unwrap().is_empty());
+    }
+    assert_eq!(
+        unsafe { CStr::from_ptr(openrand_strerror(OPENRAND_ERR_NO_JUMP)) }.to_str().unwrap(),
+        "engine has no O(1) jump; use openrand_advance"
+    );
+}

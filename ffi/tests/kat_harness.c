@@ -1,0 +1,304 @@
+/* kat_harness.c — the C leg of the three-language bitwise KAT.
+ *
+ * Replays the shared known-answer vectors through the public C ABI
+ * (include/openrand.h) and exits non-zero on the first byte of drift.
+ * The same table lives in rust/src/selftest.rs (asserted natively and
+ * by `cargo test`) and python/tests/test_ffi_vectors.py (pinned against
+ * the JAX oracle) — three languages, one table.
+ *
+ * Build (what the CI lane runs from the repo root):
+ *
+ *   cargo build --release -p openrand_ffi
+ *   gcc -std=c99 -Wall -Wextra -Werror -Iinclude \
+ *       ffi/tests/kat_harness.c \
+ *       target/release/libopenrand_ffi.a -lpthread -ldl -lm \
+ *       -o target/kat_harness
+ *   ./target/kat_harness
+ *
+ * Also exercises the error-code surface: every condition that panics in
+ * the Rust API must come back as a typed code here, never an abort.
+ */
+
+#include <stdint.h>
+#include <stdio.h>
+#include <string.h>
+
+#include "openrand.h"
+
+static int failures = 0;
+
+#define CHECK(cond, name)                                                      \
+    do {                                                                       \
+        if (!(cond)) {                                                         \
+            failures++;                                                        \
+            fprintf(stderr, "FAIL %s (%s:%d)\n", name, __FILE__, __LINE__);    \
+        }                                                                      \
+    } while (0)
+
+/* Stream words 0..10 of (seed = 7, ctr = 1) for every engine — the
+ * shared engine-word table (ENGINE_WORDS_S7_C1 in rust/src/selftest.rs,
+ * python/tests/test_ffi_vectors.py). */
+static const char *const TAGS[7] = {
+    "philox", "philox2x32", "threefry", "threefry2x32",
+    "squares", "tyche", "tyche_i",
+};
+
+static const uint32_t ENGINE_WORDS_S7_C1[7][10] = {
+    {0x2EC4F55Du, 0x249EF5F4u, 0xF681EC7Fu, 0x807A6601u, 0x3CBE7593u,
+     0x21951225u, 0x66BA2E25u, 0x5159B36Au, 0x8DB4CE21u, 0x498FF58Bu},
+    {0x5DD09A2Fu, 0x6B00841Eu, 0xAC55AAD4u, 0x858C5948u, 0xDCC223D7u,
+     0xB92B6CACu, 0x07242571u, 0x304D3D15u, 0x20C6D682u, 0xC8FCCB4Fu},
+    {0xD73CEA92u, 0xD56DC136u, 0xD744F371u, 0x6D239EE4u, 0xBE200A6Eu,
+     0x00481B5Cu, 0xF8EB5F46u, 0x3405B98Cu, 0xDF0D1159u, 0x35B542BAu},
+    {0x3AA75E81u, 0x7DBDB64Cu, 0xECA70012u, 0x97F16955u, 0x636D7473u,
+     0x6ECE15CEu, 0xC93D5ECFu, 0xD0222576u, 0x1E98EC3Eu, 0x975E8B5Fu},
+    {0xC58E0D20u, 0x4C1EEAB3u, 0xB2CF997Fu, 0x7900D050u, 0x6B50E8E1u,
+     0x648DD2AAu, 0x7BCCBCFBu, 0xCE63EFD7u, 0x5B5236D3u, 0xD33D98F1u},
+    {0x3CB80C83u, 0x0128E5AFu, 0x9C1F4904u, 0xECA46A3Cu, 0x2ACC26BEu,
+     0x6912D082u, 0x98318013u, 0x44F8C1FAu, 0x08703B44u, 0xFD4C1C53u},
+    {0x208BEFEAu, 0x3079BF27u, 0xA8606EB3u, 0x8839063Au, 0x647330F1u,
+     0xC1170F7Eu, 0xC298E6A6u, 0x41925E91u, 0x5902AA9Du, 0xC3E537E3u},
+};
+
+/* Conversion and key-derivation literals (same names as selftest.rs). */
+static const uint64_t PHILOX_S7_C1_U64 = 0x2EC4F55D249EF5F4ull;
+static const uint64_t PHILOX_S7_C1_F64_BITS = 0x3FC7627AAE924F78ull;
+static const uint32_t PHILOX_S7_C1_F32_BITS = 0x3E3B13D4u;
+static const uint64_t CHILD_SEED_R7_C3 = 0xBC8312B734DE4237ull;
+static const uint64_t GRANDCHILD_SEED_R7_C3_C5 = 0x2D4C1D0A85956C49ull;
+static const uint64_t CHILD_SEED_R7_E2_C3 = 0x2E49EAEDC17E2B71ull;
+static const uint32_t CHILD_STREAM_WORDS[2] = {0x90229F37u, 0x89AF95F5u};
+static const uint64_t CHILD_STREAM_F64_BITS = 0x3FE20453E6F135F2ull;
+
+static uint64_t f64_bits(double x) {
+    uint64_t b;
+    memcpy(&b, &x, sizeof b);
+    return b;
+}
+
+static uint32_t f32_bits(float x) {
+    uint32_t b;
+    memcpy(&b, &x, sizeof b);
+    return b;
+}
+
+/* Word tables, drawn twice per engine: word-at-a-time and bulk fill. */
+static void engine_word_tables(void) {
+    for (int g = 0; g < 7; g++) {
+        openrand_engine *e = NULL;
+        CHECK(openrand_create(TAGS[g], 7, 1, &e) == OPENRAND_OK, TAGS[g]);
+        for (int i = 0; i < 10; i++) {
+            uint32_t w = 0;
+            CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+            CHECK(w == ENGINE_WORDS_S7_C1[g][i], "next_u32 word table");
+        }
+        openrand_destroy(e);
+
+        uint32_t buf[10] = {0};
+        CHECK(openrand_create(TAGS[g], 7, 1, &e) == OPENRAND_OK, TAGS[g]);
+        CHECK(openrand_fill_u32(e, buf, 10) == OPENRAND_OK, "fill_u32 rc");
+        CHECK(memcmp(buf, ENGINE_WORDS_S7_C1[g], sizeof buf) == 0,
+              "fill_u32 word table");
+        openrand_destroy(e);
+    }
+}
+
+/* The normative u64 / f64 / f32 conversions, scalar and bulk. */
+static void conversions(void) {
+    openrand_engine *e = NULL;
+    uint64_t v64 = 0;
+    double d = 0.0;
+    float f = 0.0f;
+
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_next_u64(e, &v64) == OPENRAND_OK, "next_u64 rc");
+    CHECK(v64 == PHILOX_S7_C1_U64, "u64 word order");
+    openrand_destroy(e);
+
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_uniform_f64(e, &d) == OPENRAND_OK, "uniform_f64 rc");
+    CHECK(f64_bits(d) == PHILOX_S7_C1_F64_BITS, "f64 bits");
+    openrand_destroy(e);
+
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_uniform_f32(e, &f) == OPENRAND_OK, "uniform_f32 rc");
+    CHECK(f32_bits(f) == PHILOX_S7_C1_F32_BITS, "f32 bits");
+    openrand_destroy(e);
+
+    /* Bulk doubles == repeated scalar draws; element 0 is the pinned
+     * conversion literal. */
+    double bulk[7] = {0};
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_fill_f64(e, bulk, 7) == OPENRAND_OK, "fill_f64 rc");
+    openrand_destroy(e);
+    CHECK(f64_bits(bulk[0]) == PHILOX_S7_C1_F64_BITS, "fill_f64[0] bits");
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    for (int i = 0; i < 7; i++) {
+        CHECK(openrand_uniform_f64(e, &d) == OPENRAND_OK, "uniform_f64 rc");
+        CHECK(f64_bits(d) == f64_bits(bulk[i]), "fill_f64 == scalar");
+    }
+    openrand_destroy(e);
+}
+
+/* StreamKey derivation and the streams it addresses. */
+static void key_derivation(void) {
+    openrand_key *root = NULL, *child = NULL, *grand = NULL, *epoch = NULL;
+    uint64_t seed = 0;
+    uint32_t ctr = 0;
+
+    CHECK(openrand_key_root(7, &root) == OPENRAND_OK, "key_root");
+    CHECK(openrand_key_child(root, 3, &child) == OPENRAND_OK, "key_child");
+    CHECK(openrand_key_seed(child, &seed) == OPENRAND_OK, "key_seed rc");
+    CHECK(seed == CHILD_SEED_R7_C3, "child seed");
+    CHECK(openrand_key_ctr(child, &ctr) == OPENRAND_OK, "key_ctr rc");
+    CHECK(ctr == 0, "child ctr");
+
+    CHECK(openrand_key_child(child, 5, &grand) == OPENRAND_OK, "grandchild");
+    CHECK(openrand_key_seed(grand, &seed) == OPENRAND_OK, "key_seed rc");
+    CHECK(seed == GRANDCHILD_SEED_R7_C3_C5, "grandchild seed");
+    openrand_key_free(grand);
+
+    /* Epoch separates child spaces: root(7).epoch(2).child(3). */
+    CHECK(openrand_key_epoch(root, 2, &epoch) == OPENRAND_OK, "key_epoch");
+    CHECK(openrand_key_child(epoch, 3, &grand) == OPENRAND_OK, "epoch child");
+    CHECK(openrand_key_seed(grand, &seed) == OPENRAND_OK, "key_seed rc");
+    CHECK(seed == CHILD_SEED_R7_E2_C3, "epoch-separated child seed");
+    openrand_key_free(grand);
+    openrand_key_free(epoch);
+
+    /* Open the derived stream root(7).child(3).epoch(1) and replay its
+     * pinned opening words and f64 bits. */
+    CHECK(openrand_key_epoch(child, 1, &epoch) == OPENRAND_OK, "key_epoch");
+    openrand_engine *e = NULL;
+    uint32_t w = 0;
+    CHECK(openrand_create_keyed("philox", epoch, &e) == OPENRAND_OK,
+          "create_keyed");
+    for (int i = 0; i < 2; i++) {
+        CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+        CHECK(w == CHILD_STREAM_WORDS[i], "derived stream words");
+    }
+    openrand_destroy(e);
+    double d = 0.0;
+    CHECK(openrand_create_keyed("philox", epoch, &e) == OPENRAND_OK,
+          "create_keyed");
+    CHECK(openrand_uniform_f64(e, &d) == OPENRAND_OK, "uniform_f64 rc");
+    CHECK(f64_bits(d) == CHILD_STREAM_F64_BITS, "derived stream f64 bits");
+    openrand_destroy(e);
+
+    /* key_raw(seed, ctr) opens the same stream as openrand_create. */
+    openrand_key *raw = NULL;
+    CHECK(openrand_key_raw(7, 1, &raw) == OPENRAND_OK, "key_raw");
+    CHECK(openrand_create_keyed("philox", raw, &e) == OPENRAND_OK,
+          "create_keyed raw");
+    CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+    CHECK(w == ENGINE_WORDS_S7_C1[0][0], "raw key == (seed, ctr)");
+    openrand_destroy(e);
+    openrand_key_free(raw);
+
+    openrand_key_free(child);
+    openrand_key_free(root);
+}
+
+/* Jump-ahead literals (test_jump_ahead.py / selftest.rs). */
+static void jump_ahead(void) {
+    openrand_engine *e = NULL;
+    uint32_t w = 0;
+
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_jump(e) == OPENRAND_OK, "philox jump rc");
+    CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+    CHECK(w == 0x3A294131u, "philox jump 2^33");
+    openrand_destroy(e);
+
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_set_position(e, (1ull << 34) + 2) == OPENRAND_OK,
+          "set_position rc");
+    CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+    CHECK(w == 0x275A0C0Fu, "philox word 2^34+2");
+    openrand_destroy(e);
+
+    CHECK(openrand_create("philox", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_advance(e, 9) == OPENRAND_OK, "advance rc");
+    CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+    CHECK(w == ENGINE_WORDS_S7_C1[0][9], "philox advance(9)");
+    openrand_destroy(e);
+
+    CHECK(openrand_create("squares", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_jump(e) == OPENRAND_OK, "squares jump rc");
+    CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+    CHECK(w == 0x853F0F97u, "squares jump 2^16");
+    openrand_destroy(e);
+
+    /* Tyche: advance is exact O(n) stepping; jump is a typed error
+     * (checked in error_codes below). */
+    CHECK(openrand_create("tyche", 7, 1, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_advance(e, 5) == OPENRAND_OK, "tyche advance rc");
+    CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "next_u32 rc");
+    CHECK(w == ENGINE_WORDS_S7_C1[5][5], "tyche advance(5)");
+    openrand_destroy(e);
+}
+
+/* The panic-surface contract: typed codes, never an abort. */
+static void error_codes(void) {
+    openrand_engine *e = NULL;
+    uint32_t w = 0;
+
+    CHECK(openrand_create("not-an-engine", 1, 0, &e) ==
+              OPENRAND_ERR_BAD_GENERATOR,
+          "bad generator tag");
+    CHECK(openrand_create(NULL, 1, 0, &e) == OPENRAND_ERR_NULL, "null tag");
+    CHECK(openrand_create("philox", 1, 0, NULL) == OPENRAND_ERR_NULL,
+          "null out");
+    CHECK(openrand_next_u32(NULL, &w) == OPENRAND_ERR_NULL, "null engine");
+
+    CHECK(openrand_create("philox", 1, 0, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_next_u32(e, NULL) == OPENRAND_ERR_NULL, "null out param");
+    /* range_u32(0) panics in Rust; here it must be a code, and the
+     * stream must be untouched by the failed call. */
+    CHECK(openrand_range_u32(e, 0, &w) == OPENRAND_ERR_EMPTY_RANGE,
+          "empty range code");
+    CHECK(openrand_next_u32(e, &w) == OPENRAND_OK, "stream still usable");
+    CHECK(openrand_fill_u32(e, NULL, 4) == OPENRAND_ERR_NULL, "null buf");
+    CHECK(openrand_fill_u32(e, NULL, 0) == OPENRAND_OK, "len 0 any buf");
+    openrand_destroy(e);
+
+    /* jump() on tyche/tyche_i panics in Rust; a code here. */
+    CHECK(openrand_create("tyche", 1, 0, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_jump(e) == OPENRAND_ERR_NO_JUMP, "tyche no-jump code");
+    openrand_destroy(e);
+    CHECK(openrand_create("tyche_i", 1, 0, &e) == OPENRAND_OK, "create");
+    CHECK(openrand_jump(e) == OPENRAND_ERR_NO_JUMP, "tyche_i no-jump code");
+    openrand_destroy(e);
+
+    /* Key surface null discipline. */
+    openrand_key *k = NULL;
+    uint64_t seed = 0;
+    CHECK(openrand_key_child(NULL, 1, &k) == OPENRAND_ERR_NULL, "null key");
+    CHECK(openrand_key_seed(NULL, &seed) == OPENRAND_ERR_NULL, "null key");
+    CHECK(openrand_key_root(7, NULL) == OPENRAND_ERR_NULL, "null key out");
+    CHECK(openrand_create_keyed("philox", NULL, &e) == OPENRAND_ERR_NULL,
+          "null key to create_keyed");
+
+    /* Null handles are no-op frees, and strerror never returns NULL. */
+    openrand_destroy(NULL);
+    openrand_key_free(NULL);
+    for (int code = -1; code < 8; code++) {
+        CHECK(openrand_strerror(code) != NULL, "strerror non-null");
+    }
+}
+
+int main(void) {
+    printf("kat_harness: %s\n", openrand_version());
+    CHECK(openrand_selftest() == OPENRAND_OK, "openrand_selftest");
+    engine_word_tables();
+    conversions();
+    key_derivation();
+    jump_ahead();
+    error_codes();
+    if (failures) {
+        fprintf(stderr, "kat_harness: %d FAILURE(S)\n", failures);
+        return 1;
+    }
+    printf("kat_harness: all C-side KATs passed\n");
+    return 0;
+}

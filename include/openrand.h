@@ -1,0 +1,126 @@
+/* openrand.h — C ABI for the openrand counter-based RNG core.
+ *
+ * Hand-maintained (no cbindgen): this header IS the ABI document, and
+ * ffi/tests/kat_harness.c compiles against it in CI to keep it honest.
+ * The implementing library is the `openrand_ffi` crate (ffi/src/lib.rs,
+ * built as libopenrand_ffi.{a,so}); the full contract — error-code
+ * table, ownership rules, panic-surface audit, and a worked example —
+ * lives in docs/ffi.md.
+ *
+ * Reproducibility contract: for a given engine tag and (seed, ctr),
+ * every function below returns bit-identical values to the Rust crate
+ * and the Python/JAX oracle. The shared known-answer vectors are pinned
+ * in rust/src/selftest.rs, python/tests/test_ffi_vectors.py, and
+ * ffi/tests/kat_harness.c; openrand_selftest() replays them in-process.
+ *
+ * Thread model: handles are NOT thread-safe. Streams are cheap — open
+ * one engine per thread/work item (the paper's model) instead of
+ * sharing one behind a lock.
+ */
+
+#ifndef OPENRAND_H
+#define OPENRAND_H
+
+#include <stddef.h>
+#include <stdint.h>
+
+#ifdef __cplusplus
+extern "C" {
+#endif
+
+/* ---- error codes ----------------------------------------------------
+ * Every fallible function returns int: OPENRAND_OK (0) on success, a
+ * positive code otherwise. No function aborts the process: conditions
+ * that panic in the Rust API (range bound 0, jump() on tyche) are
+ * pre-checked into codes, and a catch-all unwind guard turns any
+ * library bug into OPENRAND_ERR_PANIC instead of UB across the FFI
+ * boundary. Out-parameters are untouched on error.
+ */
+#define OPENRAND_OK 0
+#define OPENRAND_ERR_NULL 1          /* required pointer was NULL       */
+#define OPENRAND_ERR_BAD_GENERATOR 2 /* unknown engine tag              */
+#define OPENRAND_ERR_EMPTY_RANGE 3   /* range bound == 0                */
+#define OPENRAND_ERR_NO_JUMP 4       /* engine has no O(1) jump         */
+#define OPENRAND_ERR_PANIC 5         /* internal panic caught (a bug)   */
+#define OPENRAND_ERR_SELFTEST 6      /* KAT battery found a divergence  */
+
+/* Opaque handles. Allocated by this library; release engines with
+ * openrand_destroy and keys with openrand_key_free — never free(3). */
+typedef struct openrand_engine openrand_engine;
+typedef struct openrand_key openrand_key;
+
+/* Static "openrand_ffi <version>" string (do not free). */
+const char *openrand_version(void);
+
+/* Static message for an OPENRAND_* code (do not free). */
+const char *openrand_strerror(int code);
+
+/* Replay the pinned cross-language known-answer battery in-process:
+ * all seven engine word tables, the normative u64/f64/f32 conversions,
+ * stream-key derivation, and the jump-ahead literals. OPENRAND_OK
+ * means this build reproduces the shared vectors bitwise. */
+int openrand_selftest(void);
+
+/* ---- engines --------------------------------------------------------
+ * gen_tag is one of: "philox" (Philox4x32-10), "philox2x32",
+ * "threefry" (Threefry4x32-20), "threefry2x32", "squares", "tyche",
+ * "tyche_i". (seed, ctr) identifies the stream: seed names the work
+ * item, ctr the sub-stream (timestep / kernel launch / epoch).
+ */
+int openrand_create(const char *gen_tag, uint64_t seed, uint32_t ctr,
+                    openrand_engine **out);
+int openrand_create_keyed(const char *gen_tag, const openrand_key *key,
+                          openrand_engine **out);
+void openrand_destroy(openrand_engine *e);
+
+/* Scalar draws. next_u64 composes two stream words first-word-high;
+ * uniform_f32 is the top 24 bits of one word times 2^-24; uniform_f64
+ * is the top 53 bits of the composed u64 times 2^-53 (the normative
+ * conversions — bit-identical across Rust, Python, and C). */
+int openrand_next_u32(openrand_engine *e, uint32_t *out);
+int openrand_next_u64(openrand_engine *e, uint64_t *out);
+int openrand_uniform_f32(openrand_engine *e, float *out);
+int openrand_uniform_f64(openrand_engine *e, double *out);
+
+/* Uniform integer in [0, bound) via Lemire rejection (one word plus
+ * rare retries). bound == 0 returns OPENRAND_ERR_EMPTY_RANGE without
+ * consuming stream words. */
+int openrand_range_u32(openrand_engine *e, uint32_t bound, uint32_t *out);
+
+/* Bulk fills through the engines' block path — bit-identical to len
+ * scalar calls (double i consumes stream words 2i, 2i+1). len == 0 is
+ * OK with any buf. */
+int openrand_fill_u32(openrand_engine *e, uint32_t *buf, size_t len);
+int openrand_fill_f64(openrand_engine *e, double *buf, size_t len);
+
+/* Stream positioning. advance(n) == draw-and-discard n words (O(1) on
+ * counter engines, O(n) on tyche/tyche_i); set_position is absolute;
+ * jump skips the engine's fixed stride (2^33 words for the 4x32
+ * engines, 2^16 for philox2x32/threefry2x32/squares) in O(1) and
+ * returns OPENRAND_ERR_NO_JUMP on tyche/tyche_i. */
+int openrand_advance(openrand_engine *e, uint64_t n);
+int openrand_set_position(openrand_engine *e, uint64_t pos);
+int openrand_jump(openrand_engine *e);
+
+/* ---- stream keys ----------------------------------------------------
+ * The hierarchical addressing scheme (docs/stream-contracts.md §2):
+ * root(seed) is (seed, 0); child(id) derives a statistically
+ * independent seed via the normative splitmix64 mix; epoch(t) sets the
+ * counter absolutely (last call wins). Derivation functions return
+ * fresh handles; inputs are unchanged and remain live.
+ */
+int openrand_key_root(uint64_t seed, openrand_key **out);
+int openrand_key_raw(uint64_t seed, uint32_t ctr, openrand_key **out);
+int openrand_key_child(const openrand_key *key, uint64_t id,
+                       openrand_key **out);
+int openrand_key_epoch(const openrand_key *key, uint32_t epoch,
+                       openrand_key **out);
+int openrand_key_seed(const openrand_key *key, uint64_t *out);
+int openrand_key_ctr(const openrand_key *key, uint32_t *out);
+void openrand_key_free(openrand_key *key);
+
+#ifdef __cplusplus
+} /* extern "C" */
+#endif
+
+#endif /* OPENRAND_H */

@@ -1,0 +1,80 @@
+"""The shared three-language KAT table (Rust/Python/C bitwise agreement).
+
+This file pins the exact vector set that `rust/src/selftest.rs` asserts
+natively and `ffi/tests/kat_harness.c` replays through the C ABI: stream
+words 0..10 of ``(seed=7, ctr=1)`` for every engine, the normative u64 /
+f64 / f32 conversions, the ``StreamKey`` derivation literals, and the
+derived-stream opening words. One table, three languages — the repro
+claim of the FFI subsystem (docs/ffi.md).
+"""
+
+import struct
+
+import numpy as np
+
+from compile.kernels import common as cm
+from compile.kernels import ref
+
+# Engine order matches Rust's `Generator::ALL` and the C `gen_tag`
+# strings accepted by `openrand_create`.
+ENGINE_WORDS_S7_C1 = {
+    "philox": [0x2EC4F55D, 0x249EF5F4, 0xF681EC7F, 0x807A6601, 0x3CBE7593,
+               0x21951225, 0x66BA2E25, 0x5159B36A, 0x8DB4CE21, 0x498FF58B],
+    "philox2x32": [0x5DD09A2F, 0x6B00841E, 0xAC55AAD4, 0x858C5948, 0xDCC223D7,
+                   0xB92B6CAC, 0x07242571, 0x304D3D15, 0x20C6D682, 0xC8FCCB4F],
+    "threefry": [0xD73CEA92, 0xD56DC136, 0xD744F371, 0x6D239EE4, 0xBE200A6E,
+                 0x00481B5C, 0xF8EB5F46, 0x3405B98C, 0xDF0D1159, 0x35B542BA],
+    "threefry2x32": [0x3AA75E81, 0x7DBDB64C, 0xECA70012, 0x97F16955, 0x636D7473,
+                     0x6ECE15CE, 0xC93D5ECF, 0xD0222576, 0x1E98EC3E, 0x975E8B5F],
+    "squares": [0xC58E0D20, 0x4C1EEAB3, 0xB2CF997F, 0x7900D050, 0x6B50E8E1,
+                0x648DD2AA, 0x7BCCBCFB, 0xCE63EFD7, 0x5B5236D3, 0xD33D98F1],
+    "tyche": [0x3CB80C83, 0x0128E5AF, 0x9C1F4904, 0xECA46A3C, 0x2ACC26BE,
+              0x6912D082, 0x98318013, 0x44F8C1FA, 0x08703B44, 0xFD4C1C53],
+    "tyche_i": [0x208BEFEA, 0x3079BF27, 0xA8606EB3, 0x8839063A, 0x647330F1,
+                0xC1170F7E, 0xC298E6A6, 0x41925E91, 0x5902AA9D, 0xC3E537E3],
+}
+
+PHILOX_S7_C1_U64 = 0x2EC4F55D249EF5F4
+PHILOX_S7_C1_F64_BITS = 0x3FC7627AAE924F78
+PHILOX_S7_C1_F32_BITS = 0x3E3B13D4
+CHILD_SEED_R7_C3 = 0xBC8312B734DE4237
+CHILD_STREAM_WORDS = [0x90229F37, 0x89AF95F5]
+CHILD_STREAM_F64_BITS = 0x3FE20453E6F135F2
+
+
+def _stream(name, seed, ctr, n):
+    return {
+        "philox": lambda: ref.philox4x32_stream(seed, ctr, n),
+        "philox2x32": lambda: ref.philox2x32_stream(seed, ctr, n),
+        "threefry": lambda: ref.threefry4x32_stream(seed, ctr, n),
+        "threefry2x32": lambda: ref.threefry2x32_stream(seed, ctr, n),
+        "squares": lambda: ref.squares_stream(seed, ctr, n),
+        "tyche": lambda: ref.tyche_stream_api(seed, ctr, n),
+        "tyche_i": lambda: ref.tyche_stream_api(seed, ctr, n, inverse=True),
+    }[name]()
+
+
+def test_engine_word_table_matches_oracle():
+    for name, want in ENGINE_WORDS_S7_C1.items():
+        got = [int(w) for w in _stream(name, 7, 1, 10)]
+        assert got == want, name
+
+
+def test_conversion_bits_match_oracle():
+    w = [int(v) for v in ref.philox4x32_stream(7, 1, 2)]
+    u64 = (w[0] << 32) | w[1]
+    assert u64 == PHILOX_S7_C1_U64
+    f64 = (u64 >> 11) * 2.0**-53
+    assert struct.unpack("<Q", struct.pack("<d", f64))[0] == PHILOX_S7_C1_F64_BITS
+    f32 = np.float32(np.float32(w[0] >> 8) * np.float32(2.0**-24))
+    assert struct.unpack("<I", struct.pack("<f", f32))[0] == PHILOX_S7_C1_F32_BITS
+
+
+def test_derived_stream_vectors_match_oracle():
+    child = cm.derive_child_seed(7, 0, 3)
+    assert child == CHILD_SEED_R7_C3
+    w = [int(v) for v in ref.philox4x32_stream(child, 1, 2)]
+    assert w == CHILD_STREAM_WORDS
+    u64 = (w[0] << 32) | w[1]
+    f64 = (u64 >> 11) * 2.0**-53
+    assert struct.unpack("<Q", struct.pack("<d", f64))[0] == CHILD_STREAM_F64_BITS

@@ -330,6 +330,44 @@ mod tests {
         }
     }
 
+    #[test]
+    fn byte_layout_is_pinned_little_endian() {
+        // The endianness pin (portability audit, docs/ffi.md §Layout):
+        // the v1 format is little-endian byte for byte, including the
+        // f64 payloads (IEEE 754 bits, LE) and the FNV-1a trailer. The
+        // expected octets — trailer included — were computed by an
+        // independent implementation, so a host-endian encode (which
+        // every roundtrip test would miss) or an accidental change to
+        // the hash constants fails here on any machine.
+        let ck = Checkpoint {
+            model: Model::Brownian,
+            gen: Generator::Threefry,
+            key: StreamKey::root(0x0102_0304_0506_0708),
+            epoch: 7,
+            tile: 128,
+            x: vec![1.5],
+            y: vec![-0.0],
+            vx: vec![-2.0],
+            vy: vec![f64::from_bits(1)], // smallest subnormal
+        };
+        #[rustfmt::skip]
+        let want: [u8; 88] = [
+            0x4F, 0x52, 0x43, 0x41, 0x4D, 0x50, 0x43, 0x4B, // "ORCAMPCK"
+            0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // version, model
+            0x02, 0x00, 0x00, 0x00, 0x07, 0x00, 0x00, 0x00, // gen, epoch
+            0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // seed u64le
+            0x00, 0x00, 0x00, 0x00, 0x80, 0x00, 0x00, 0x00, // ctr, tile
+            0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // n u64le
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xF8, 0x3F, // x = 1.5
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x80, // y = -0.0
+            0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0xC0, // vx = -2.0
+            0x01, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, 0x00, // vy subnormal
+            0x72, 0xFF, 0x43, 0x73, 0xB3, 0x9E, 0xC8, 0x39, // fnv1a trailer
+        ];
+        assert_eq!(ck.encode(), want);
+        assert_eq!(Checkpoint::decode(&want).unwrap(), ck);
+    }
+
     /// Recompute the trailer after a test mutates the body (so the
     /// mutation under test is the *only* defect).
     fn rehash(bytes: &mut Vec<u8>) {

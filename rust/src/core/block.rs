@@ -38,7 +38,7 @@ pub trait BlockRng: CounterRng {
     const WORDS_PER_BLOCK: usize;
 
     /// The block storage type — concretely `[u32; WORDS_PER_BLOCK]`.
-    type Block: Copy + Default + AsRef<[u32]> + AsMut<[u32]> + std::fmt::Debug;
+    type Block: Copy + Default + AsRef<[u32]> + AsMut<[u32]> + core::fmt::Debug;
 
     /// Write the next `WORDS_PER_BLOCK` stream words into `out`,
     /// advancing the stream past them.

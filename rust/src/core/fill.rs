@@ -37,6 +37,7 @@
 use super::block::BlockRng;
 use super::traits::Rng;
 use super::Generator;
+#[cfg(feature = "std")]
 use crate::coordinator::partition_ranges;
 
 // The normative word → value conversions live next to the draw API in
@@ -170,6 +171,7 @@ pub fn fill_f64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f64]) {
 /// coordinator partition) and run `shard(range_start, chunk)` on scoped
 /// threads. Output depends only on what each shard writes at its
 /// absolute positions — never on scheduling.
+#[cfg(feature = "std")]
 fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u64, &mut [T]) + Sync) {
     assert!(threads > 0, "threads must be positive");
     if threads == 1 || out.len() <= 1 {
@@ -193,24 +195,28 @@ fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u64, &mut [
 }
 
 /// Parallel block fill: same output as [`fill_u32`] for every `threads`.
+#[cfg(feature = "std")]
 pub fn par_fill_u32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u32], threads: usize) {
     assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_u32::<G>(seed, ctr, start, chunk));
 }
 
 /// Parallel block fill: same output as [`fill_u64`] for every `threads`.
+#[cfg(feature = "std")]
 pub fn par_fill_u64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u64], threads: usize) {
     assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_u64::<G>(seed, ctr, start, chunk));
 }
 
 /// Parallel block fill: same output as [`fill_f32`] for every `threads`.
+#[cfg(feature = "std")]
 pub fn par_fill_f32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f32], threads: usize) {
     assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_f32::<G>(seed, ctr, start, chunk));
 }
 
 /// Parallel block fill: same output as [`fill_f64`] for every `threads`.
+#[cfg(feature = "std")]
 pub fn par_fill_f64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [f64], threads: usize) {
     assert!(out.len() <= (u32::MAX / 2) as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_f64::<G>(seed, ctr, start, chunk));
@@ -239,6 +245,7 @@ macro_rules! gen_dispatch {
 }
 
 /// Same, for the `par_fill_*` family (extra `threads` parameter).
+#[cfg(feature = "std")]
 macro_rules! gen_dispatch_par {
     ($(#[$doc:meta])* $name:ident, $target:ident, $t:ty) => {
         $(#[$doc])*
@@ -269,15 +276,19 @@ gen_dispatch!(
 gen_dispatch!(
     /// [`fill_f64`] dispatched over the runtime [`Generator`] tag.
     fill_f64_gen, fill_f64, f64);
+#[cfg(feature = "std")]
 gen_dispatch_par!(
     /// [`par_fill_u32`] dispatched over the runtime [`Generator`] tag.
     par_fill_u32_gen, par_fill_u32, u32);
+#[cfg(feature = "std")]
 gen_dispatch_par!(
     /// [`par_fill_u64`] dispatched over the runtime [`Generator`] tag.
     par_fill_u64_gen, par_fill_u64, u64);
+#[cfg(feature = "std")]
 gen_dispatch_par!(
     /// [`par_fill_f32`] dispatched over the runtime [`Generator`] tag.
     par_fill_f32_gen, par_fill_f32, f32);
+#[cfg(feature = "std")]
 gen_dispatch_par!(
     /// [`par_fill_f64`] dispatched over the runtime [`Generator`] tag.
     par_fill_f64_gen, par_fill_f64, f64);

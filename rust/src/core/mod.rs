@@ -119,6 +119,7 @@ impl Generator {
 
     /// Boxed engine for stream `(seed, ctr)`, cursor at word 0 — the
     /// dispatch the CLI, batteries, and `stream::DynStream` share.
+    #[cfg(feature = "std")]
     pub fn boxed(self, seed: u64, ctr: u32) -> Box<dyn Rng> {
         self.boxed_at(seed, ctr, 0)
     }
@@ -128,6 +129,7 @@ impl Generator {
     /// `set_position` exception). `pos` is a full 64-bit word index —
     /// engines with shorter periods reduce it per their
     /// `set_position` contract.
+    #[cfg(feature = "std")]
     pub fn boxed_at(self, seed: u64, ctr: u32, pos: u64) -> Box<dyn Rng> {
         fn mk<G: CounterRng + 'static>(seed: u64, ctr: u32, pos: u64) -> Box<dyn Rng> {
             let mut g = G::new(seed, ctr);

@@ -74,6 +74,8 @@ impl Distribution<u64> for Binomial {
 /// table + alias table in O(n); each sample then costs one bounded
 /// integer draw (`range_u32`, Lemire — 1 word plus rare rejections) and
 /// one `draw_double` (2 words), regardless of how many categories exist.
+/// (`std`: the tables are heap-allocated.)
+#[cfg(feature = "std")]
 #[derive(Debug, Clone, PartialEq)]
 pub struct DiscreteAlias {
     /// Acceptance probability of column i's own index.
@@ -82,6 +84,7 @@ pub struct DiscreteAlias {
     alias: Vec<u32>,
 }
 
+#[cfg(feature = "std")]
 impl DiscreteAlias {
     /// Build the alias table. Requires at least one weight, all finite
     /// and non-negative, with a positive sum.
@@ -131,6 +134,7 @@ impl DiscreteAlias {
     }
 }
 
+#[cfg(feature = "std")]
 impl Distribution<usize> for DiscreteAlias {
     #[inline]
     fn sample(&self, rng: &mut dyn Rng) -> usize {

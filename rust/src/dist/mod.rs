@@ -58,15 +58,29 @@
 //! assert!(k < 100);
 //! ```
 
+// Sampler availability under `--no-default-features`: the scalar
+// fixed-pattern samplers that need only integer ops and f64 arithmetic
+// (Uniform, Bernoulli, Binomial) are `no_std`; the transcendental
+// samplers (BoxMuller/Ziggurat need ln/sqrt/sin/cos, Exponential ln,
+// Poisson exp/ln/floor — `f64` intrinsics that live in `std`, and no
+// libm is vendored) and the alias table (heap) are `std`-gated.
 pub mod discrete;
+#[cfg(feature = "std")]
 pub mod exponential;
+#[cfg(feature = "std")]
 pub mod normal;
+#[cfg(feature = "std")]
 pub mod poisson;
 pub mod uniform;
 
-pub use discrete::{Bernoulli, Binomial, DiscreteAlias};
+#[cfg(feature = "std")]
+pub use discrete::DiscreteAlias;
+pub use discrete::{Bernoulli, Binomial};
+#[cfg(feature = "std")]
 pub use exponential::Exponential;
+#[cfg(feature = "std")]
 pub use normal::{BoxMuller, ZigguratNormal};
+#[cfg(feature = "std")]
 pub use poisson::Poisson;
 pub use uniform::Uniform;
 
@@ -95,6 +109,7 @@ pub trait Distribution<T> {
     }
 
     /// Collect `n` samples.
+    #[cfg(feature = "std")]
     fn sample_n(&self, rng: &mut dyn Rng, n: usize) -> Vec<T>
     where
         T: Default + Clone,
@@ -119,6 +134,7 @@ pub trait Distribution<T> {
     /// arm, per `docs/backends.md`) and transform host-side.
     ///
     /// [`fill`]: Distribution::fill
+    #[cfg(feature = "std")]
     fn fill_backend(
         &self,
         backend: &mut dyn crate::backend::FillBackend,

@@ -69,6 +69,7 @@ impl Distribution<f64> for Uniform {
     /// in place (the identical expression, so the output is
     /// byte-identical to [`Uniform::sample_fill`] on a fresh `gen`
     /// engine at `(seed, ctr)` — on every arm, by the backend contract).
+    #[cfg(feature = "std")]
     fn fill_backend(
         &self,
         backend: &mut dyn crate::backend::FillBackend,

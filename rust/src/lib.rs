@@ -75,18 +75,38 @@
 // see docs/stream-contracts.md §2); iterator rewrites would hide the
 // normative offsets clippy-cleanly but reviewer-opaquely.
 #![allow(clippy::needless_range_loop)]
+// Portability split (the paper's "drop into anything" claim): with
+// `--no-default-features` the crate is `#![no_std]` and ships only the
+// layers a freestanding target (or the C ABI in `ffi/`) needs — the
+// seven engines + `BlockRng` + serial fills ([`core`]), `StreamKey`
+// derivation ([`stream`]), the scalar `dist` samplers, and the pinned
+// KAT smoke ([`selftest`]). Everything that needs threads, I/O,
+// `Instant`, or allocation lives behind the `std` feature below.
+#![cfg_attr(not(feature = "std"), no_std)]
 
+#[cfg(feature = "std")]
 pub mod backend;
+#[cfg(feature = "std")]
 pub mod baseline;
+#[cfg(feature = "std")]
 pub mod bench;
+#[cfg(feature = "std")]
 pub mod campaign;
+#[cfg(feature = "std")]
 pub mod coordinator;
 pub mod core;
 pub mod dist;
+#[cfg(feature = "std")]
 pub mod runtime;
+pub mod selftest;
+#[cfg(feature = "std")]
 pub mod serve;
+#[cfg(feature = "std")]
 pub mod sim;
+#[cfg(feature = "std")]
 pub mod stats;
 pub mod stream;
+#[cfg(feature = "std")]
 pub mod testing;
+#[cfg(feature = "std")]
 pub mod util;

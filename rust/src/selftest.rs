@@ -1,0 +1,245 @@
+//! The pinned KAT smoke — one `no_std`-safe battery of the cross-layer
+//! known-answer vectors, runnable from every language surface.
+//!
+//! These are the *same literals* asserted by the Rust unit tests
+//! (`core/philox.rs`, `stream/mod.rs`, …), pinned against the jnp
+//! oracle by `python/tests/` (`test_kat.py`, `test_stream_keys.py`,
+//! `test_jump_ahead.py`, `test_ffi_vectors.py`), and replayed through
+//! the C ABI by `ffi/tests/kat_harness.c`. Three languages, one table.
+//!
+//! The module deliberately avoids everything `std`: no allocation, no
+//! formatting machinery beyond `&'static str`, no panics — each check
+//! returns `Err(name)` naming the first vector that failed, so the FFI
+//! layer can surface it as an error code and a freestanding caller can
+//! print it. `rust/tests/properties.rs` runs [`run`] in both feature
+//! lanes (the feature-matrix guard): the words must be identical with
+//! and without `std` because nothing below this module is allowed to
+//! change behavior across that boundary.
+
+use crate::core::{
+    CounterRng, Generator, Philox, Philox2x32, Rng, Squares, Threefry, Threefry2x32, Tyche, TycheI,
+};
+use crate::stream::{derive_child_seed, StreamKey};
+
+/// The shared engine-word table: stream words `0..10` of `(seed = 7,
+/// ctr = 1)` for every engine, in [`Generator::ALL`] order. Mirrored
+/// verbatim in `python/tests/test_ffi_vectors.py` and
+/// `ffi/tests/kat_harness.c`.
+pub const ENGINE_WORDS_S7_C1: [[u32; 10]; 7] = [
+    // philox (Philox4x32-10)
+    [
+        0x2EC4_F55D, 0x249E_F5F4, 0xF681_EC7F, 0x807A_6601, 0x3CBE_7593, 0x2195_1225, 0x66BA_2E25,
+        0x5159_B36A, 0x8DB4_CE21, 0x498F_F58B,
+    ],
+    // philox2x32
+    [
+        0x5DD0_9A2F, 0x6B00_841E, 0xAC55_AAD4, 0x858C_5948, 0xDCC2_23D7, 0xB92B_6CAC, 0x0724_2571,
+        0x304D_3D15, 0x20C6_D682, 0xC8FC_CB4F,
+    ],
+    // threefry (Threefry4x32-20)
+    [
+        0xD73C_EA92, 0xD56D_C136, 0xD744_F371, 0x6D23_9EE4, 0xBE20_0A6E, 0x0048_1B5C, 0xF8EB_5F46,
+        0x3405_B98C, 0xDF0D_1159, 0x35B5_42BA,
+    ],
+    // threefry2x32
+    [
+        0x3AA7_5E81, 0x7DBD_B64C, 0xECA7_0012, 0x97F1_6955, 0x636D_7473, 0x6ECE_15CE, 0xC93D_5ECF,
+        0xD022_2576, 0x1E98_EC3E, 0x975E_8B5F,
+    ],
+    // squares
+    [
+        0xC58E_0D20, 0x4C1E_EAB3, 0xB2CF_997F, 0x7900_D050, 0x6B50_E8E1, 0x648D_D2AA, 0x7BCC_BCFB,
+        0xCE63_EFD7, 0x5B52_36D3, 0xD33D_98F1,
+    ],
+    // tyche
+    [
+        0x3CB8_0C83, 0x0128_E5AF, 0x9C1F_4904, 0xECA4_6A3C, 0x2ACC_26BE, 0x6912_D082, 0x9831_8013,
+        0x44F8_C1FA, 0x0870_3B44, 0xFD4C_1C53,
+    ],
+    // tyche_i
+    [
+        0x208B_EFEA, 0x3079_BF27, 0xA860_6EB3, 0x8839_063A, 0x6473_30F1, 0xC117_0F7E, 0xC298_E6A6,
+        0x4192_5E91, 0x5902_AA9D, 0xC3E5_37E3,
+    ],
+];
+
+/// `next_u64` of Philox `(7, 1)` — words 0, 1 first-word-high (§2).
+pub const PHILOX_S7_C1_U64: u64 = 0x2EC4_F55D_249E_F5F4;
+/// `draw_double` of Philox `(7, 1)` as an f64 bit pattern (top 53 bits
+/// of [`PHILOX_S7_C1_U64`]; the value is 0.1826928474807763).
+pub const PHILOX_S7_C1_F64_BITS: u64 = 0x3FC7_627A_AE92_4F78;
+/// `draw_float` of Philox `(7, 1)` as an f32 bit pattern (top 24 bits
+/// of word 0; the value is ~0.18269283).
+pub const PHILOX_S7_C1_F32_BITS: u32 = 0x3E3B_13D4;
+
+/// splitmix64(0) — the published reference vector the key mix builds on.
+pub const SPLITMIX64_ZERO: u64 = 0xE220_A839_7B1D_CDAF;
+/// `derive_child_seed(7, 0, 3)` — `root(7).child(3)`.
+pub const CHILD_SEED_R7_C3: u64 = 0xBC83_12B7_34DE_4237;
+/// `root(7).child(3).child(5)` — the grandchild literal.
+pub const GRANDCHILD_SEED_R7_C3_C5: u64 = 0x2D4C_1D0A_8595_6C49;
+/// `root(7).epoch(2).child(3)` — epoch separates child spaces.
+pub const CHILD_SEED_R7_E2_C3: u64 = 0x2E49_EAED_C17E_2B71;
+/// Philox words 0, 1 of the derived stream `root(7).child(3).epoch(1)`.
+pub const CHILD_STREAM_WORDS: [u32; 2] = [0x9022_9F37, 0x89AF_95F5];
+/// `draw_double` bits of that derived stream (0.5630282888975542).
+pub const CHILD_STREAM_F64_BITS: u64 = 0x3FE2_0453_E6F1_35F2;
+
+/// Run every pinned check; `Err` names the first failing vector.
+pub fn run() -> Result<(), &'static str> {
+    engine_words()?;
+    conversions()?;
+    key_derivation()?;
+    jump_ahead()?;
+    Ok(())
+}
+
+/// Words `0..10` of `(7, 1)` for all seven engines, drawn twice: word
+/// at a time through [`Rng::next_u32`] and bulk through
+/// [`Rng::fill_u32`] (the block path) — both must hit the table.
+pub fn engine_words() -> Result<(), &'static str> {
+    for (gi, g) in Generator::ALL.into_iter().enumerate() {
+        let want = &ENGINE_WORDS_S7_C1[gi];
+        let serial_ok = g.with_rng(7, 1, |r| {
+            let mut ok = true;
+            for w in want.iter() {
+                ok &= r.next_u32() == *w;
+            }
+            ok
+        });
+        if !serial_ok {
+            return Err("engine_words: next_u32 diverged from the pinned table");
+        }
+        let mut buf = [0u32; 10];
+        g.with_rng(7, 1, |r| r.fill_u32(&mut buf));
+        if buf != *want {
+            return Err("engine_words: fill_u32 diverged from the pinned table");
+        }
+    }
+    Ok(())
+}
+
+/// The §2 conversions: u64 word order, f64 top-53, f32 top-24.
+pub fn conversions() -> Result<(), &'static str> {
+    let mut r = Philox::new(7, 1);
+    if r.next_u64() != PHILOX_S7_C1_U64 {
+        return Err("conversions: next_u64 word order");
+    }
+    let mut r = Philox::new(7, 1);
+    if r.draw_double().to_bits() != PHILOX_S7_C1_F64_BITS {
+        return Err("conversions: draw_double bits");
+    }
+    let mut r = Philox::new(7, 1);
+    if r.draw_float().to_bits() != PHILOX_S7_C1_F32_BITS {
+        return Err("conversions: draw_float bits");
+    }
+    Ok(())
+}
+
+/// The normative key mix and the streams it addresses.
+pub fn key_derivation() -> Result<(), &'static str> {
+    if crate::core::counter::splitmix64(0) != SPLITMIX64_ZERO {
+        return Err("key_derivation: splitmix64 reference vector");
+    }
+    if derive_child_seed(7, 0, 3) != CHILD_SEED_R7_C3 {
+        return Err("key_derivation: derive_child_seed(7, 0, 3)");
+    }
+    let k = StreamKey::root(7).child(3).epoch(1);
+    if k.seed() != CHILD_SEED_R7_C3 || k.ctr() != 1 {
+        return Err("key_derivation: root(7).child(3).epoch(1) address");
+    }
+    if StreamKey::root(7).child(3).child(5).seed() != GRANDCHILD_SEED_R7_C3_C5 {
+        return Err("key_derivation: grandchild seed");
+    }
+    if StreamKey::root(7).epoch(2).child(3).seed() != CHILD_SEED_R7_E2_C3 {
+        return Err("key_derivation: epoch-separated child seed");
+    }
+    let mut s = Philox::new(k.seed(), k.ctr());
+    if s.next_u32() != CHILD_STREAM_WORDS[0] || s.next_u32() != CHILD_STREAM_WORDS[1] {
+        return Err("key_derivation: derived stream words");
+    }
+    let mut s = Philox::new(k.seed(), k.ctr());
+    if s.draw_double().to_bits() != CHILD_STREAM_F64_BITS {
+        return Err("key_derivation: derived stream draw_double bits");
+    }
+    Ok(())
+}
+
+/// The jump-ahead contract literals (`test_jump_ahead.py`): per-engine
+/// `jump()` strides, period wraps, and Tyche's O(n) stepping.
+pub fn jump_ahead() -> Result<(), &'static str> {
+    let mut j = Philox::new(7, 1);
+    j.jump(); // 2^33 words
+    if j.next_u32() != 0x3A29_4131 {
+        return Err("jump_ahead: philox jump 2^33");
+    }
+    let mut far = Philox::new(7, 1);
+    far.set_position((1 << 34) + 2); // block 2^32, lane 2
+    if far.next_u32() != 0x275A_0C0F {
+        return Err("jump_ahead: philox word 2^34+2");
+    }
+    let mut a = Philox::new(7, 1);
+    a.advance(9);
+    if a.next_u32() != ENGINE_WORDS_S7_C1[0][9] {
+        return Err("jump_ahead: philox advance(9)");
+    }
+    let mut j = Philox2x32::new(7, 1);
+    j.jump(); // 2^16 words
+    if j.next_u32() != 0x44EF_38AA {
+        return Err("jump_ahead: philox2x32 jump 2^16");
+    }
+    let mut w = Philox2x32::new(7, 1);
+    w.advance((1 << 33) + 5); // period 2^33 wrap: == advance(5)
+    if w.next_u32() != ENGINE_WORDS_S7_C1[1][5] {
+        return Err("jump_ahead: philox2x32 period wrap");
+    }
+    let mut j = Threefry::new(2, 6);
+    j.jump();
+    if j.next_u32() != 0xDFC6_93FF {
+        return Err("jump_ahead: threefry jump 2^33");
+    }
+    let mut far = Threefry::new(2, 6);
+    far.set_position(1 << 34); // block 2^32, lane 0
+    if far.next_u32() != 0x31AD_C0A0 {
+        return Err("jump_ahead: threefry word 2^34");
+    }
+    let mut j = Threefry2x32::new(5, 3);
+    j.jump();
+    if j.next_u32() != 0xFB12_54E1 {
+        return Err("jump_ahead: threefry2x32 jump 2^16");
+    }
+    let mut j = Squares::new(7, 1);
+    j.jump(); // 2^16 words
+    if j.next_u32() != 0x853F_0F97 {
+        return Err("jump_ahead: squares jump 2^16");
+    }
+    let mut w = Squares::new(7, 1);
+    w.advance((1u64 << 32) + 3); // period 2^32 wrap: == advance(3)
+    if w.next_u32() != ENGINE_WORDS_S7_C1[4][3] {
+        return Err("jump_ahead: squares period wrap");
+    }
+    // Tyche/Tyche-i: no O(1) jump (JUMP_LOG2 == None is part of the
+    // contract); advance is exact stepping.
+    if Tyche::JUMP_LOG2.is_some() || TycheI::JUMP_LOG2.is_some() {
+        return Err("jump_ahead: tyche must not advertise a jump stride");
+    }
+    let mut t = Tyche::new(7, 1);
+    t.advance(5);
+    if t.next_u32() != ENGINE_WORDS_S7_C1[5][5] {
+        return Err("jump_ahead: tyche advance(5)");
+    }
+    let mut t = TycheI::new(7, 1);
+    t.advance(5);
+    if t.next_u32() != ENGINE_WORDS_S7_C1[6][5] {
+        return Err("jump_ahead: tyche_i advance(5)");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn selftest_passes() {
+        super::run().unwrap();
+    }
+}

@@ -486,4 +486,47 @@ mod tests {
         buf.truncate(6);
         assert!(read_frame(&mut &buf[..], 64).is_err());
     }
+
+    #[test]
+    fn wire_layout_is_pinned_little_endian() {
+        // The endianness pin (portability audit, docs/ffi.md §Layout):
+        // every multi-byte integer on the wire is little-endian, byte
+        // for byte, regardless of host. A roundtrip test cannot catch a
+        // host-endian encode (it would roundtrip fine on the same
+        // machine), so this asserts the exact octets of a FILL frame.
+        let req = Request::Fill(FillRequest {
+            tenant: 0x0102_0304_0506_0708,
+            path: "c3/e1".into(),
+            gen: Generator::Threefry,
+            kind: PayloadKind::F64,
+            offset: 0x1122_3344_5566_7788,
+            len: 0x000A_0B0C,
+        });
+        let mut frame = Vec::new();
+        write_frame(&mut frame, &encode_request(&req)).unwrap();
+        #[rustfmt::skip]
+        let want: [u8; 34] = [
+            0x1E, 0x00, 0x00, 0x00,                         // len = 30, u32le
+            0x01,                                           // REQ_FILL
+            0x08, 0x07, 0x06, 0x05, 0x04, 0x03, 0x02, 0x01, // tenant u64le
+            0x05, 0x00,                                     // path_len u16le
+            b'c', b'3', b'/', b'e', b'1',                   // path bytes
+            0x02,                                           // gen = Threefry
+            0x03,                                           // kind = F64
+            0x88, 0x77, 0x66, 0x55, 0x44, 0x33, 0x22, 0x11, // offset u64le
+            0x0C, 0x0B, 0x0A, 0x00,                         // len u32le
+        ];
+        assert_eq!(frame, want);
+
+        // Wire codes are Generator::ALL / PayloadKind::ALL indices —
+        // part of the frozen layout, so pin them by value.
+        let gens: Vec<u8> = Generator::ALL.into_iter().map(gen_code).collect();
+        assert_eq!(gens, [0, 1, 2, 3, 4, 5, 6]);
+        let kinds: Vec<u8> = PayloadKind::ALL.into_iter().map(PayloadKind::code).collect();
+        assert_eq!(kinds, [0, 1, 2, 3, 4]);
+
+        // Reply payloads are raw little-endian element bytes.
+        let rep = Reply::Ok(0xAABB_CCDDu32.to_le_bytes().to_vec());
+        assert_eq!(encode_reply(&rep), [0x81, 0xDD, 0xCC, 0xBB, 0xAA]);
+    }
 }

@@ -57,8 +57,10 @@
 //! assert_eq!(a.next_u32(), b.next_u32());
 //! ```
 
+#[cfg(feature = "std")]
 use anyhow::Result;
 
+#[cfg(feature = "std")]
 use crate::backend::{self, FillBackend};
 use crate::core::counter::splitmix64;
 use crate::core::{fill, BlockRng, CounterRng, Generator, Rng};
@@ -181,7 +183,8 @@ impl StreamKey {
     /// (decimal or `0x` hex) followed by `c`-prefixed child ids and
     /// `e`-prefixed epochs, applied left to right. `7/c3/e1` is
     /// `root(7).child(3).epoch(1)`; `7/e1` is the legacy `--seed 7
-    /// --ctr 1`.
+    /// --ctr 1`. (`std`: error strings allocate.)
+    #[cfg(feature = "std")]
     pub fn parse_path(spec: &str) -> Result<StreamKey, String> {
         fn int(s: &str, what: &str) -> Result<u64, String> {
             let s = s.trim();
@@ -219,8 +222,8 @@ impl StreamKey {
     }
 }
 
-impl std::fmt::Display for StreamKey {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+impl core::fmt::Display for StreamKey {
+    fn fmt(&self, f: &mut core::fmt::Formatter<'_>) -> core::fmt::Result {
         write!(f, "0x{:016x}/e{}", self.seed, self.ctr)
     }
 }
@@ -236,10 +239,12 @@ impl std::fmt::Display for StreamKey {
 /// and `DeviceFill`'s compiled-graph / buffer pools are paid once per
 /// thread, not once per call. First use on a thread pins that thread's
 /// calibration table.
+#[cfg(feature = "std")]
 pub fn default_backend() -> Box<dyn FillBackend> {
     Box::new(backend::Auto::new(backend::HostParallel::auto_threads().threads()))
 }
 
+#[cfg(feature = "std")]
 thread_local! {
     /// The per-thread cached default backend ([`FillBackend`] is not
     /// `Send` — the device arm is thread-confined like the PJRT client
@@ -253,6 +258,7 @@ thread_local! {
 /// duration of `f` and put back afterwards, so a re-entrant `None` fill
 /// constructs a fresh temporary instead of panicking on a double
 /// borrow.
+#[cfg(feature = "std")]
 fn route<R>(
     backend: Option<&mut dyn FillBackend>,
     f: impl FnOnce(&mut dyn FillBackend) -> R,
@@ -272,6 +278,7 @@ fn route<R>(
 /// stream of `gen`, through `backend` (`None` = the calibrated
 /// [`default_backend`]). Byte-identical on every arm by the backend
 /// contract (`docs/backends.md`).
+#[cfg(feature = "std")]
 pub fn fill_u32_key(
     backend: Option<&mut dyn FillBackend>,
     gen: Generator,
@@ -283,6 +290,7 @@ pub fn fill_u32_key(
 
 /// Key-addressed `u64` fill — element `i` ← words `2i, 2i+1`
 /// (first word high), per the §2 conversion contract.
+#[cfg(feature = "std")]
 pub fn fill_u64_key(
     backend: Option<&mut dyn FillBackend>,
     gen: Generator,
@@ -293,6 +301,7 @@ pub fn fill_u64_key(
 }
 
 /// Key-addressed `f32` fill — element `i` ← word `i` (top 24 bits).
+#[cfg(feature = "std")]
 pub fn fill_f32_key(
     backend: Option<&mut dyn FillBackend>,
     gen: Generator,
@@ -304,6 +313,7 @@ pub fn fill_f32_key(
 
 /// Key-addressed `f64` fill — element `i` ← words `2i, 2i+1`
 /// (top 53 bits).
+#[cfg(feature = "std")]
 pub fn fill_f64_key(
     backend: Option<&mut dyn FillBackend>,
     gen: Generator,
@@ -394,6 +404,22 @@ impl<E: CounterRng + BlockRng> Stream<E> {
         Generator::parse(E::NAME)
     }
 
+    /// Positioned block fill: stream words `pos..pos + out.len()` of
+    /// the key, host-side through the engine's block path
+    /// ([`fill::fill_from`]). O(1) jump for the counter engines;
+    /// Tyche's documented O(pos) exception applies. (Available without
+    /// `std` — this is the serial-core fill surface the C ABI exports.)
+    pub fn fill_u32_at(&self, pos: u64, out: &mut [u32]) {
+        let mut g = E::new(self.key.seed(), self.key.ctr());
+        if pos != 0 {
+            g.set_position(pos);
+        }
+        fill::fill_from(&mut g, pos, out);
+    }
+}
+
+#[cfg(feature = "std")]
+impl<E: CounterRng + BlockRng> Stream<E> {
     /// Key-addressed bulk fill: stream words `0..out.len()` of the key,
     /// through `backend` (`None` = the calibrated [`default_backend`]).
     /// Independent of — and not advancing — the scalar cursor.
@@ -440,18 +466,6 @@ impl<E: CounterRng + BlockRng> Stream<E> {
         }
     }
 
-    /// Positioned block fill: stream words `pos..pos + out.len()` of
-    /// the key, host-side through the engine's block path
-    /// ([`fill::fill_from`]). O(1) jump for the counter engines;
-    /// Tyche's documented O(pos) exception applies.
-    pub fn fill_u32_at(&self, pos: u64, out: &mut [u32]) {
-        let mut g = E::new(self.key.seed(), self.key.ctr());
-        if pos != 0 {
-            g.set_position(pos);
-        }
-        fill::fill_from(&mut g, pos, out);
-    }
-
     /// Key-addressed bulk sampling: samples `0..out.len()` of the key's
     /// sample sequence under `d`, routed through
     /// [`Distribution::fill_backend`] (`None` backend = the calibrated
@@ -494,12 +508,14 @@ impl<E: CounterRng> Rng for Stream<E> {
 /// The object-safe stream handle: [`Stream`] over the runtime
 /// [`Generator`] tag (built on the same boxed dispatch the CLI and the
 /// batteries use). Same surface as [`Stream`], minus the generic.
+#[cfg(feature = "std")]
 pub struct DynStream {
     key: StreamKey,
     gen: Generator,
     rng: Box<dyn Rng>,
 }
 
+#[cfg(feature = "std")]
 impl DynStream {
     /// Open the stream `key` addresses on engine `gen`, cursor at 0.
     pub fn open(gen: Generator, key: StreamKey) -> DynStream {
@@ -578,6 +594,7 @@ impl DynStream {
     }
 }
 
+#[cfg(feature = "std")]
 impl Rng for DynStream {
     #[inline]
     fn next_u32(&mut self) -> u32 {
@@ -611,12 +628,14 @@ pub const MAX_PREFETCH_WORDS: usize = 1 << 22;
 /// prefix fill buys is that bulk generation runs on whichever backend
 /// arm the crossover table picks. This is how the statistical batteries
 /// drain keyed streams (`openrand stats --key ...`).
+#[cfg(feature = "std")]
 pub struct BackendWords {
     buf: Vec<u32>,
     pos: usize,
     spill: DynStream,
 }
 
+#[cfg(feature = "std")]
 impl BackendWords {
     /// A source for `key`'s stream of `gen` with `prefetch` words
     /// (capped at [`MAX_PREFETCH_WORDS`]) materialized through
@@ -640,6 +659,7 @@ impl BackendWords {
     }
 }
 
+#[cfg(feature = "std")]
 impl Rng for BackendWords {
     #[inline]
     fn next_u32(&mut self) -> u32 {

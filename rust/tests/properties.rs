@@ -1,5 +1,70 @@
 //! Property-based tests over the core invariants, driven by the in-house
-//! `testing::prop` framework (the proptest substitute).
+//! `testing::prop` framework (the proptest substitute) — plus the
+//! feature-matrix guard.
+//!
+//! This is the ONE integration-test target built in both CI lanes
+//! (`cargo test --test properties` and `cargo test --no-default-features
+//! --test properties`; every other target carries `required-features =
+//! ["std"]`). [`feature_matrix`] exercises only the `no_std`-available
+//! surface against the pinned literals, so a stream that drifts across
+//! the feature boundary fails the lane that drifted. The test binary
+//! itself always links `std` — the constraint is on which `openrand`
+//! APIs exist, which is exactly what the gated [`std_properties`]
+//! wrapper encodes.
+
+/// The feature-matrix guard: the `no_std` surface must produce the same
+/// pinned words as the `std` build. Runs in BOTH feature lanes.
+mod feature_matrix {
+    use openrand::core::{fill, CounterRng, Generator, Philox, Rng};
+    use openrand::selftest;
+    use openrand::stream::{Stream, StreamKey};
+
+    #[test]
+    fn selftest_battery_passes() {
+        // The full no_std KAT battery: engine word tables, normative
+        // conversions, key derivation, jump-ahead literals.
+        selftest::run().unwrap();
+    }
+
+    #[test]
+    fn pinned_words_via_no_std_surface_only() {
+        // Re-assert the headline literals through each no_std entry
+        // point (engine, dispatch enum, serial fill, stream facade).
+        let mut r = Philox::new(7, 1);
+        assert_eq!(r.next_u32(), 0x2EC4_F55D);
+        assert_eq!(Generator::Philox.with_rng(7, 1, |r| r.next_u32()), 0x2EC4_F55D);
+        let mut buf = [0u32; 4];
+        fill::fill_u32::<Philox>(7, 1, &mut buf);
+        assert_eq!(buf, selftest::ENGINE_WORDS_S7_C1[0][..4]);
+        let mut s = Stream::<Philox>::new(StreamKey::raw(7, 1));
+        assert_eq!(s.next_u64(), selftest::PHILOX_S7_C1_U64);
+    }
+
+    #[test]
+    fn key_derivation_via_no_std_surface() {
+        let k = StreamKey::root(7).child(3).epoch(1);
+        assert_eq!(k.seed(), selftest::CHILD_SEED_R7_C3);
+        assert_eq!(k.ctr(), 1);
+        let mut s = Stream::<Philox>::new(k);
+        let mut out = [0u32; 2];
+        s.fill_u32_at(0, &mut out);
+        assert_eq!(out, selftest::CHILD_STREAM_WORDS);
+    }
+
+    #[test]
+    fn scalar_dist_path_via_no_std_surface() {
+        use openrand::dist::{Bernoulli, Binomial, Distribution, Uniform};
+        let mut r = Philox::new(7, 1);
+        let u = Uniform::standard().sample(&mut r);
+        assert_eq!(u.to_bits(), selftest::PHILOX_S7_C1_F64_BITS);
+        let mut r = Philox::new(7, 1);
+        let _ = Bernoulli::new(0.5).sample(&mut r);
+        let _ = Binomial::new(4, 0.5).sample(&mut r);
+    }
+}
+
+#[cfg(feature = "std")]
+mod std_properties {
 
 use openrand::baseline::{Lcg64, Pcg32, SplitMix64};
 use openrand::core::{
@@ -645,3 +710,5 @@ fn prop_campaign_resume_bitwise() {
         },
     );
 }
+
+} // mod std_properties
