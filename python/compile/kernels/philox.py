@@ -80,6 +80,42 @@ def philox4x32_block(params, n: int, rounds: int = 10):
     )(params)
 
 
+def _philox4_block_at_kernel(params_ref, o_ref, *, rounds):
+    # params: (4,) u32 = [seed_lo, seed_hi, ctr, base_block]
+    #
+    # Identical to `_philox4_block_kernel` except the counter lane starts
+    # at `base_block` instead of 0 — the formerly-unused 4th params word.
+    # u32 addition wraps, matching the host engine's counter arithmetic.
+    pid = pl.program_id(0).astype(U32)
+    j = params_ref[3] + pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    k0 = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    k1 = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    c1 = jnp.broadcast_to(params_ref[2], (BLOCK,))
+    z = jnp.zeros((BLOCK,), U32)
+    c0, c1, c2, c3 = _philox4_rounds(j, c1, z, z, k0, k1, rounds)
+    o_ref[...] = jnp.stack([c0, c1, c2, c3], axis=-1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "rounds"))
+def philox4x32_block_at(params, n: int, rounds: int = 10):
+    """Stream words `4*base .. 4*base + n` of the Philox4x32-R stream.
+
+    params: (4,) u32 `[seed_lo, seed_hi, ctr, base_block]` — block index
+    `base_block` contributes stream words `4*base_block..`. With base 0
+    this is bitwise `philox4x32_block` (the prefix artifact).
+    """
+    assert n % (4 * BLOCK) == 0, n
+    grid = n // (4 * BLOCK)
+    return pl.pallas_call(
+        functools.partial(_philox4_block_at_kernel, rounds=rounds),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((4 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)
+
+
 def _philox2_block_kernel(params_ref, o_ref, *, rounds):
     # params: (4,) u32 = [key, ctr, unused, unused]  (2x32 key is 1 word)
     pid = pl.program_id(0).astype(U32)

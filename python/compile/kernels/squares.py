@@ -39,6 +39,47 @@ def _squares_block_kernel(params_ref, o_ref):
     o_ref[...] = ((x * x + z) >> np.uint64(32)).astype(U32)
 
 
+def _squares_block_at_kernel(params_ref, o_ref):
+    # params: (4,) u32 = [key_lo, key_hi, ctr, base_word] — the offset
+    # variant: word index starts at base_word. The u32 add wraps, which
+    # is exactly the engine's 2^32-word stream period.
+    pid = pl.program_id(0).astype(U32)
+    j = (params_ref[3] + pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)).astype(U64)
+    key = (params_ref[1].astype(U64) << np.uint64(32)) | params_ref[0].astype(U64)
+    key = jnp.broadcast_to(key, (BLOCK,))
+    ctr = (params_ref[2].astype(U64) << np.uint64(32)) | j
+    x = ctr * key
+    y = x
+    z = y + key
+    x = x * x + y
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    x = x * x + z
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    x = x * x + y
+    x = (x >> np.uint64(32)) | (x << np.uint64(32))
+    o_ref[...] = ((x * x + z) >> np.uint64(32)).astype(U32)
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def squares_block_at(params, n: int):
+    """Stream words `base .. base + n` of the Squares stream.
+
+    params: (4,) u32 `[key_lo, key_hi, ctr, base_word]` (Squares emits one
+    word per counter, so the base is a word index); base 0 is bitwise
+    `squares_block`.
+    """
+    assert n % BLOCK == 0, n
+    grid = n // BLOCK
+    return pl.pallas_call(
+        _squares_block_at_kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)
+
+
 @functools.partial(jax.jit, static_argnames=("n",))
 def squares_block(params, n: int):
     """First `n` u32 outputs of the Squares stream.

@@ -76,6 +76,38 @@ def threefry4x32_block(params, n: int, rounds: int = 20):
     )(params)
 
 
+def _tf4_block_at_kernel(params_ref, o_ref, *, rounds):
+    # params: (4,) u32 = [seed_lo, seed_hi, ctr, base_block] — the offset
+    # variant of `_tf4_block_kernel`: counter lane starts at base_block.
+    pid = pl.program_id(0).astype(U32)
+    j = params_ref[3] + pid * np.uint32(BLOCK) + jnp.arange(BLOCK, dtype=U32)
+    k0 = jnp.broadcast_to(params_ref[0], (BLOCK,))
+    k1 = jnp.broadcast_to(params_ref[1], (BLOCK,))
+    c1 = jnp.broadcast_to(params_ref[2], (BLOCK,))
+    z = jnp.zeros((BLOCK,), U32)
+    x0, x1, x2, x3 = _tf4_rounds(j, c1, z, z, k0, k1, z, z, rounds)
+    o_ref[...] = jnp.stack([x0, x1, x2, x3], axis=-1).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "rounds"))
+def threefry4x32_block_at(params, n: int, rounds: int = 20):
+    """Stream words `4*base .. 4*base + n` of the Threefry4x32-R stream.
+
+    params: (4,) u32 `[seed_lo, seed_hi, ctr, base_block]`; base 0 is
+    bitwise `threefry4x32_block`.
+    """
+    assert n % (4 * BLOCK) == 0, n
+    grid = n // (4 * BLOCK)
+    return pl.pallas_call(
+        functools.partial(_tf4_block_at_kernel, rounds=rounds),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((4,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((4 * BLOCK,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), U32),
+        interpret=True,
+    )(params)
+
+
 def _tf2_block_kernel(params_ref, o_ref, *, rounds):
     # params: (4,) u32 = [seed_lo, seed_hi, ctr, unused]
     pid = pl.program_id(0).astype(U32)

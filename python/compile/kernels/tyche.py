@@ -17,6 +17,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.experimental import pallas as pl
 
 from . import common as cm
@@ -65,6 +66,43 @@ def _tyche_block_kernel(params_ref, o_ref, *, words, inverse):
         a, b, c, d = mix(a, b, c, d)
         outs.append(a if inverse else b)
     o_ref[...] = jnp.stack(outs, axis=0).reshape(-1)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "inverse"))
+def tyche_stream_block(params, n: int, inverse: bool = False):
+    """Stream-ordered Tyche: words `base .. base + n` of ONE (seed, ctr) stream.
+
+    params: (4,) u32 `[seed_lo, seed_hi, ctr, base_word]`. Unlike the
+    lane-major `tyche_block` above (one stream per lane), this serves the
+    single sequential stream the host engine produces — word `w` is the
+    output of the `(20 + w + 1)`-th MIX after init — so it matches the
+    `fill_u32` stream layout and the device backend can serve Tyche fills.
+
+    A dependency chain of length `20 + base + n` cannot be expressed as a
+    Pallas grid (there is no lane parallelism to map), so this graph is
+    plain `lax` — it lowers to the same HLO-text artifact format either
+    way: a fori_loop warm-up of `20 + base` mixes (dynamic trip count —
+    the base is a runtime parameter) followed by a length-`n` scan
+    emitting one word per mix.
+    """
+    mix = _mix_i if inverse else _mix
+    a = jnp.broadcast_to(params[1], ())
+    b = jnp.broadcast_to(params[0], ())
+    c = jnp.asarray(cm.TYCHE_C, U32)
+    d = jnp.asarray(cm.TYCHE_D, U32) ^ params[2]
+    warmups = np.uint64(20) + params[3].astype(cm.U64)
+
+    def warm(_i, s):
+        return mix(*s)
+
+    state = lax.fori_loop(np.uint64(0), warmups, warm, (a, b, c, d))
+
+    def step(s, _):
+        s = mix(*s)
+        return s, (s[0] if inverse else s[1])
+
+    _, out = lax.scan(step, state, None, length=n)
+    return out
 
 
 @functools.partial(jax.jit, static_argnames=("n", "words", "inverse"))

@@ -55,10 +55,29 @@ BLOCK_FNS = {
     "tyche": ktyche.tyche_block,
 }
 
+# Offset (base-parameterized) variants: the formerly-unused 4th params
+# word is the starting counter-block index (philox/threefry), the
+# starting word index (squares), or the starting stream word (tyche,
+# which is stream-ordered here, not lane-major — see kernels/tyche.py).
+# With base 0 each is bitwise its prefix counterpart, which the pytest
+# layer pins; the Rust scheduler uses these to serve interior shards.
+AT_BLOCK_FNS = {
+    "philox": kphilox.philox4x32_block_at,
+    "threefry": kthreefry.threefry4x32_block_at,
+    "squares": ksquares.squares_block_at,
+    "tyche": ktyche.tyche_stream_block,
+}
+
 
 def uniform_u32_block(params, n: int, gen: str = "philox"):
     """(n,) u32 raw stream block for generator `gen` (see kernels/)."""
     return BLOCK_FNS[gen](params, n)
+
+
+def uniform_u32_at_block(params, n: int, gen: str = "philox"):
+    """(n,) u32 interior stream span for `gen`, starting at params[3]
+    (block or word units per AT_BLOCK_FNS — the §4 offset-fill layout)."""
+    return AT_BLOCK_FNS[gen](params, n)
 
 
 def uniform_f64_block(params, n: int, gen: str = "philox"):
@@ -226,6 +245,9 @@ def aot_graphs(sizes_block=(65536, 1048576), sizes_sim=(16384, 1048576)):
         for gen in ("philox", "threefry", "squares", "tyche"):
             graphs[f"{gen}_u32_{n}"] = (
                 functools.partial(uniform_u32_block, n=n, gen=gen), (p4,))
+        for gen in ("philox", "threefry", "squares", "tyche"):
+            graphs[f"{gen}_u32_at_{n}"] = (
+                functools.partial(uniform_u32_at_block, n=n, gen=gen), (p4,))
         graphs[f"philox_f64_{n // 2}"] = (
             functools.partial(uniform_f64_block, n=n // 2, gen="philox"), (p4,))
         graphs[f"normal_f64_{n // 2}"] = (

@@ -1,0 +1,287 @@
+"""CPython `ctypes` consumer of the C ABI (`libopenrand_ffi.so`).
+
+The third language of the three-way bitwise agreement actually *loads
+the shared library* here: the same KAT table that `rust/src/selftest.rs`
+asserts natively and `test_ffi_vectors.py` derives from the Python
+oracle is replayed through `ctypes` against the built cdylib — engine
+word tables, the normative u64/f64/f32 conversions, key derivation, the
+bulk fills, and the typed error codes of `include/openrand.h`.
+
+Self-skips when the cdylib is not built (fresh checkout / no Rust
+toolchain); point `OPENRAND_FFI_LIB` at the library to force a
+particular build. Build with::
+
+    cargo build --release -p openrand_ffi
+"""
+
+import ctypes
+import os
+import struct
+from pathlib import Path
+
+import pytest
+
+from test_ffi_vectors import (
+    CHILD_SEED_R7_C3,
+    CHILD_STREAM_F64_BITS,
+    CHILD_STREAM_WORDS,
+    ENGINE_WORDS_S7_C1,
+    PHILOX_S7_C1_F32_BITS,
+    PHILOX_S7_C1_F64_BITS,
+    PHILOX_S7_C1_U64,
+)
+
+OK, ERR_NULL, ERR_BAD_GENERATOR, ERR_EMPTY_RANGE, ERR_NO_JUMP = 0, 1, 2, 3, 4
+
+_ROOT = Path(__file__).resolve().parents[2]
+
+
+def _find_library():
+    override = os.environ.get("OPENRAND_FFI_LIB")
+    if override:
+        return Path(override)
+    candidates = [
+        _ROOT / "target" / profile / "libopenrand_ffi.so"
+        for profile in ("release", "debug")
+    ] + [
+        _ROOT / "ffi" / "target" / profile / "libopenrand_ffi.so"
+        for profile in ("release", "debug")
+    ]
+    for path in candidates:
+        if path.exists():
+            return path
+    return None
+
+
+_LIB_PATH = _find_library()
+if _LIB_PATH is None or not _LIB_PATH.exists():
+    pytest.skip(
+        "libopenrand_ffi.so not built (cargo build --release -p openrand_ffi)",
+        allow_module_level=True,
+    )
+
+
+def _bind(lib):
+    """Declare every prototype exactly as `include/openrand.h` spells it."""
+    h = ctypes.c_void_p  # opaque openrand_engine* / openrand_key*
+    sigs = {
+        "openrand_version": (ctypes.c_char_p, []),
+        "openrand_strerror": (ctypes.c_char_p, [ctypes.c_int]),
+        "openrand_selftest": (ctypes.c_int, []),
+        "openrand_create": (
+            ctypes.c_int,
+            [ctypes.c_char_p, ctypes.c_uint64, ctypes.c_uint32, ctypes.POINTER(h)],
+        ),
+        "openrand_create_keyed": (ctypes.c_int, [ctypes.c_char_p, h, ctypes.POINTER(h)]),
+        "openrand_destroy": (None, [h]),
+        "openrand_next_u32": (ctypes.c_int, [h, ctypes.POINTER(ctypes.c_uint32)]),
+        "openrand_next_u64": (ctypes.c_int, [h, ctypes.POINTER(ctypes.c_uint64)]),
+        "openrand_uniform_f32": (ctypes.c_int, [h, ctypes.POINTER(ctypes.c_float)]),
+        "openrand_uniform_f64": (ctypes.c_int, [h, ctypes.POINTER(ctypes.c_double)]),
+        "openrand_range_u32": (
+            ctypes.c_int,
+            [h, ctypes.c_uint32, ctypes.POINTER(ctypes.c_uint32)],
+        ),
+        "openrand_fill_u32": (
+            ctypes.c_int,
+            [h, ctypes.POINTER(ctypes.c_uint32), ctypes.c_size_t],
+        ),
+        "openrand_fill_f64": (
+            ctypes.c_int,
+            [h, ctypes.POINTER(ctypes.c_double), ctypes.c_size_t],
+        ),
+        "openrand_advance": (ctypes.c_int, [h, ctypes.c_uint64]),
+        "openrand_set_position": (ctypes.c_int, [h, ctypes.c_uint64]),
+        "openrand_jump": (ctypes.c_int, [h]),
+        "openrand_key_root": (ctypes.c_int, [ctypes.c_uint64, ctypes.POINTER(h)]),
+        "openrand_key_raw": (
+            ctypes.c_int,
+            [ctypes.c_uint64, ctypes.c_uint32, ctypes.POINTER(h)],
+        ),
+        "openrand_key_child": (ctypes.c_int, [h, ctypes.c_uint64, ctypes.POINTER(h)]),
+        "openrand_key_epoch": (ctypes.c_int, [h, ctypes.c_uint32, ctypes.POINTER(h)]),
+        "openrand_key_seed": (ctypes.c_int, [h, ctypes.POINTER(ctypes.c_uint64)]),
+        "openrand_key_ctr": (ctypes.c_int, [h, ctypes.POINTER(ctypes.c_uint32)]),
+        "openrand_key_free": (None, [h]),
+    }
+    for name, (restype, argtypes) in sigs.items():
+        fn = getattr(lib, name)
+        fn.restype = restype
+        fn.argtypes = argtypes
+    return lib
+
+
+LIB = _bind(ctypes.CDLL(str(_LIB_PATH)))
+
+
+class Engine:
+    """RAII wrapper so a failing assert never leaks a handle."""
+
+    def __init__(self, tag, seed, ctr):
+        self.h = ctypes.c_void_p()
+        rc = LIB.openrand_create(tag.encode(), seed, ctr, ctypes.byref(self.h))
+        assert rc == OK, f"openrand_create({tag!r}) -> {rc}"
+
+    @classmethod
+    def keyed(cls, tag, key):
+        self = cls.__new__(cls)
+        self.h = ctypes.c_void_p()
+        rc = LIB.openrand_create_keyed(tag.encode(), key.h, ctypes.byref(self.h))
+        assert rc == OK, f"openrand_create_keyed({tag!r}) -> {rc}"
+        return self
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        LIB.openrand_destroy(self.h)
+
+    def next_u32(self):
+        out = ctypes.c_uint32()
+        assert LIB.openrand_next_u32(self.h, ctypes.byref(out)) == OK
+        return out.value
+
+    def next_u64(self):
+        out = ctypes.c_uint64()
+        assert LIB.openrand_next_u64(self.h, ctypes.byref(out)) == OK
+        return out.value
+
+    def uniform_f32(self):
+        out = ctypes.c_float()
+        assert LIB.openrand_uniform_f32(self.h, ctypes.byref(out)) == OK
+        return out.value
+
+    def uniform_f64(self):
+        out = ctypes.c_double()
+        assert LIB.openrand_uniform_f64(self.h, ctypes.byref(out)) == OK
+        return out.value
+
+
+class Key:
+    def __init__(self, handle):
+        self.h = handle
+
+    @classmethod
+    def root(cls, seed):
+        h = ctypes.c_void_p()
+        assert LIB.openrand_key_root(seed, ctypes.byref(h)) == OK
+        return cls(h)
+
+    def child(self, child_id):
+        h = ctypes.c_void_p()
+        assert LIB.openrand_key_child(self.h, child_id, ctypes.byref(h)) == OK
+        return Key(h)
+
+    def epoch(self, epoch):
+        h = ctypes.c_void_p()
+        assert LIB.openrand_key_epoch(self.h, epoch, ctypes.byref(h)) == OK
+        return Key(h)
+
+    def seed(self):
+        out = ctypes.c_uint64()
+        assert LIB.openrand_key_seed(self.h, ctypes.byref(out)) == OK
+        return out.value
+
+    def ctr(self):
+        out = ctypes.c_uint32()
+        assert LIB.openrand_key_ctr(self.h, ctypes.byref(out)) == OK
+        return out.value
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        LIB.openrand_key_free(self.h)
+
+
+def f32_bits(v):
+    return struct.unpack("<I", struct.pack("<f", v))[0]
+
+
+def f64_bits(v):
+    return struct.unpack("<Q", struct.pack("<d", v))[0]
+
+
+def test_version_strerror_and_selftest():
+    assert LIB.openrand_version().decode().startswith("openrand_ffi")
+    assert LIB.openrand_strerror(OK) == b"ok"
+    # Unknown codes still return a static string, never NULL.
+    assert LIB.openrand_strerror(999)
+    # The library's built-in KAT battery agrees with its own pins.
+    assert LIB.openrand_selftest() == OK
+
+
+def test_engine_word_tables_match_shared_vectors():
+    for tag, want in ENGINE_WORDS_S7_C1.items():
+        with Engine(tag, 7, 1) as e:
+            got = [e.next_u32() for _ in range(len(want))]
+        assert got == want, tag
+
+
+def test_conversion_bits_match_shared_vectors():
+    with Engine("philox", 7, 1) as e:
+        assert e.next_u64() == PHILOX_S7_C1_U64
+    with Engine("philox", 7, 1) as e:
+        assert f64_bits(e.uniform_f64()) == PHILOX_S7_C1_F64_BITS
+    with Engine("philox", 7, 1) as e:
+        assert f32_bits(e.uniform_f32()) == PHILOX_S7_C1_F32_BITS
+
+
+def test_key_derivation_matches_shared_vectors():
+    with Key.root(7) as root, root.child(3) as child, child.epoch(1) as key:
+        assert key.seed() == CHILD_SEED_R7_C3
+        assert key.ctr() == 1
+        with Engine.keyed("philox", key) as e:
+            assert [e.next_u32() for _ in range(2)] == CHILD_STREAM_WORDS
+        with Engine.keyed("philox", key) as e:
+            assert f64_bits(e.uniform_f64()) == CHILD_STREAM_F64_BITS
+
+
+def test_fill_matches_scalar_draws():
+    n = 257
+    with Engine("threefry", 11, 4) as e:
+        want = [e.next_u32() for _ in range(n)]
+    with Engine("threefry", 11, 4) as e:
+        buf = (ctypes.c_uint32 * n)()
+        assert LIB.openrand_fill_u32(e.h, buf, n) == OK
+        assert list(buf) == want
+    with Engine("squares", 3, 9) as e:
+        want_f = [e.uniform_f64() for _ in range(40)]
+    with Engine("squares", 3, 9) as e:
+        fbuf = (ctypes.c_double * 40)()
+        assert LIB.openrand_fill_f64(e.h, fbuf, 40) == OK
+        assert [f64_bits(v) for v in fbuf] == [f64_bits(v) for v in want_f]
+
+
+def test_advance_set_position_and_jump():
+    with Engine("philox", 5, 2) as e:
+        words = [e.next_u32() for _ in range(8)]
+    with Engine("philox", 5, 2) as e:
+        assert LIB.openrand_advance(e.h, 5) == OK
+        assert e.next_u32() == words[5]
+        assert LIB.openrand_set_position(e.h, 3) == OK
+        assert e.next_u32() == words[3]
+    # O(1) jump exists on the counter engines, not on tyche/tyche_i.
+    with Engine("philox", 5, 2) as e:
+        assert LIB.openrand_jump(e.h) == OK
+    for tag in ("tyche", "tyche_i"):
+        with Engine(tag, 5, 2) as e:
+            assert LIB.openrand_jump(e.h) == ERR_NO_JUMP
+
+
+def test_error_codes_match_header_contract():
+    out = ctypes.c_void_p()
+    assert LIB.openrand_create(b"not_an_engine", 0, 0, ctypes.byref(out)) == ERR_BAD_GENERATOR
+    assert LIB.openrand_create(None, 0, 0, ctypes.byref(out)) == ERR_NULL
+    assert LIB.openrand_create(b"philox", 0, 0, None) == ERR_NULL
+    with Engine("philox", 1, 0) as e:
+        got = ctypes.c_uint32()
+        assert LIB.openrand_range_u32(e.h, 0, ctypes.byref(got)) == ERR_EMPTY_RANGE
+        # bound=1 can only ever produce 0.
+        assert LIB.openrand_range_u32(e.h, 1, ctypes.byref(got)) == OK
+        assert got.value == 0
+    w = ctypes.c_uint32()
+    assert LIB.openrand_next_u32(None, ctypes.byref(w)) == ERR_NULL
+    # NULL destroy / key_free are documented no-ops.
+    LIB.openrand_destroy(None)
+    LIB.openrand_key_free(None)

@@ -105,6 +105,75 @@ def test_tyche_inverse_kernel():
     np.testing.assert_array_equal(got, want)
 
 
+AT_CASES = [
+    # (name, offset kernel, prefix kernel, params fn, oracle, words/tile, words/base-unit)
+    ("philox", kphilox.philox4x32_block_at, kphilox.philox4x32_block, params4,
+     ref.philox4x32_stream, 4 * BLOCK, 4),
+    ("threefry", kthreefry.threefry4x32_block_at, kthreefry.threefry4x32_block, params4,
+     ref.threefry4x32_stream, 4 * BLOCK, 4),
+    ("squares", ksquares.squares_block_at, ksquares.squares_block, params_squares,
+     ref.squares_stream, BLOCK, 1),
+]
+
+
+def params_at(mkparams, seed, ctr, base):
+    p = np.asarray(mkparams(seed, ctr)).copy()
+    p[3] = np.uint32(base)
+    return jnp.asarray(p, U32)
+
+
+@pytest.mark.parametrize("name,kern_at,kern,mkparams,oracle,quantum,wpb",
+                         AT_CASES, ids=[c[0] for c in AT_CASES])
+@pytest.mark.parametrize("seed,ctr,base", [(7, 1, 3), (42, 0, 1027), (0xDEADBEEF12345678, 3, 9)])
+def test_offset_kernel_matches_oracle_slice(name, kern_at, kern, mkparams, oracle,
+                                            quantum, wpb, seed, ctr, base):
+    """The `_at` kernels serve interior stream spans: starting at base
+    blocks (philox/threefry) or base words (squares), the output equals
+    the same slice of the serial stream oracle — the offset-fill layout
+    contract the Rust scheduler stitches against."""
+    n = 2 * quantum  # two grid tiles -> exercises the BlockSpec index map
+    got = np.asarray(kern_at(params_at(mkparams, seed, ctr, base), n))
+    want = np.asarray(oracle(seed, ctr, base * wpb + n))[base * wpb:]
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("name,kern_at,kern,mkparams,oracle,quantum,wpb",
+                         AT_CASES, ids=[c[0] for c in AT_CASES])
+def test_offset_kernel_base_zero_is_prefix(name, kern_at, kern, mkparams, oracle, quantum, wpb):
+    """base=0 `_at` output is bitwise the prefix kernel's output, so one
+    artifact family can serve both prefix and interior fills."""
+    n = quantum
+    got = np.asarray(kern_at(params_at(mkparams, 9, 2, 0), n))
+    want = np.asarray(kern(mkparams(9, 2), n))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("inverse", [False, True], ids=["tyche", "tyche_i"])
+@pytest.mark.parametrize("base", [0, 17])
+def test_tyche_stream_block_matches_oracle(inverse, base):
+    """The stream-ordered tyche graph (sequential scan, NOT the lane-major
+    block) reproduces words base..base+n of the single host stream —
+    the artifact that lets the device arm stop refusing tyche."""
+    n = 256
+    got = np.asarray(ktyche.tyche_stream_block(params_at(params4, 7, 1, base), n, inverse=inverse))
+    want = np.asarray(ref.tyche_stream_api(7, 1, base + n, inverse=inverse))[base:]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_offset_kernel_base_wraps_mod_period_squares():
+    """Squares has a 2^32-word period; the u32 base add must wrap exactly
+    like the host engine's counter arithmetic."""
+    base = (1 << 32) - 512  # wraps into words 0.. after 512 words
+    n = BLOCK
+    got = np.asarray(ksquares.squares_block_at(params_at(params_squares, 5, 0, base), n))
+    head = np.asarray(ref.squares_stream(5, 0, 1 << 10))
+    tail = np.asarray(
+        ref.squares32(jnp.arange(base, base + 512, dtype=jnp.uint64) & jnp.uint64(0xFFFFFFFF),
+                      jnp.full((512,), np.uint64(cm.squares_key(5)), jnp.uint64)))
+    np.testing.assert_array_equal(got[:512], tail)
+    np.testing.assert_array_equal(got[512:], head[:n - 512])
+
+
 def test_philox_rounds_ablation_kernel():
     """The R-rounds variants (ablation A1) also match the oracle."""
     for rounds in (6, 7, 10):

@@ -12,10 +12,11 @@
 //! cargo bench --bench fig_backend
 //! OPENRAND_BENCH_QUICK=1 cargo bench --bench fig_backend   # CI smoke
 //! OPENRAND_PERSIST_CROSSOVER=1 cargo bench --bench fig_backend
-//! # ^ writes <artifacts>/backend_crossover.txt for the Auto arm
+//! # ^ writes <artifacts>/backend_crossover.txt for the Auto arm and
+//! #   <artifacts>/backend_cost_model.txt (rates) for the Sched arm
 //! ```
 
-use openrand::backend::{auto, Auto, CrossoverTable, DeviceFill, HostSerial};
+use openrand::backend::{auto, Auto, CostModel, CrossoverTable, DeviceFill, HostSerial};
 use openrand::coordinator::repro;
 use openrand::core::Generator;
 use openrand::stream::{self, StreamKey};
@@ -99,6 +100,20 @@ fn main() {
              Auto keeps its current table (default: {} words)",
             CrossoverTable::DEFAULT_DEVICE_MIN_WORDS
         ),
+    }
+    // The generalized calibration: crossover + per-arm sustained rates,
+    // which the shard scheduler uses to size device vs host shards.
+    let model = auto::cost_model(&samples, CostModel::load().crossover);
+    println!(
+        "cost model: host {} words/s, device {}, device_fraction {:.2}",
+        model.host_words_per_sec.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into()),
+        model.device_words_per_sec.map(|v| format!("{v:.3e}")).unwrap_or_else(|| "-".into()),
+        model.device_fraction(),
+    );
+    if std::env::var("OPENRAND_PERSIST_CROSSOVER").as_deref() == Ok("1") {
+        let path = CostModel::default_path();
+        model.persist(&path).expect("persist cost model");
+        println!("persisted to {path:?} (sched arms on this machine now use it)");
     }
     println!(
         "\nreading: the device column only beats the host past the dispatch-\n\

@@ -113,6 +113,149 @@ impl CrossoverTable {
     }
 }
 
+/// The generalized calibration: the legacy crossover *switch* plus
+/// measured per-arm sustained throughput, which turns size-based
+/// selection into genuine scheduling — [`crate::backend::Sched`] sizes
+/// its device shard as the device's fair share of the fill,
+/// `device_words_per_sec / (host + device)`.
+///
+/// Persisted as `<artifacts>/backend_cost_model.txt` (written by
+/// `benches/fig_backend.rs` under `OPENRAND_PERSIST_CROSSOVER=1`, a
+/// strict superset of the `backend_crossover.txt` line format); loading
+/// falls back to a legacy `backend_crossover.txt` (crossover only,
+/// rates uncalibrated), so existing calibration files keep working.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostModel {
+    /// The host/device switch point ([`Auto`]'s selection input).
+    pub crossover: CrossoverTable,
+    /// Sustained host-parallel fill rate (u32 words/sec); `None` until
+    /// measured.
+    pub host_words_per_sec: Option<f64>,
+    /// Sustained device fill rate (words/sec); `None` when unmeasured
+    /// or no device arm ever ran.
+    pub device_words_per_sec: Option<f64>,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        CostModel::from_crossover(CrossoverTable::default())
+    }
+}
+
+impl CostModel {
+    /// A model holding only the crossover switch (rates uncalibrated) —
+    /// the shape a legacy `backend_crossover.txt` loads as.
+    pub fn from_crossover(crossover: CrossoverTable) -> CostModel {
+        CostModel { crossover, host_words_per_sec: None, device_words_per_sec: None }
+    }
+
+    /// Default persistence location, next to the artifacts.
+    pub fn default_path() -> PathBuf {
+        crate::runtime::artifact::default_artifact_dir().join("backend_cost_model.txt")
+    }
+
+    /// Cost-model file → legacy crossover file → default, then the
+    /// `OPENRAND_BACKEND_CROSSOVER` env override (crossover knob only)
+    /// on top — the same resolution order [`CrossoverTable::load`] uses,
+    /// extended with the richer file.
+    pub fn load() -> CostModel {
+        let mut m = Self::load_from(&Self::default_path())
+            .or_else(|| {
+                CrossoverTable::load_from(&CrossoverTable::default_path())
+                    .map(CostModel::from_crossover)
+            })
+            .unwrap_or_default();
+        if let Ok(v) = std::env::var("OPENRAND_BACKEND_CROSSOVER") {
+            if let Some(t) = CrossoverTable::from_env_value(&v) {
+                m.crossover = t;
+            }
+        }
+        m
+    }
+
+    /// Read a persisted model; `None` when missing or malformed.
+    pub fn load_from(path: &Path) -> Option<CostModel> {
+        let text = std::fs::read_to_string(path).ok()?;
+        Self::parse(&text)
+    }
+
+    /// Line format: `device_min_words=N` (required) plus optional
+    /// `host_words_per_sec=F` / `device_words_per_sec=F` and `#`
+    /// comments. Unknown `key=value` lines are skipped (forward
+    /// compatibility), any non-`key=value` line poisons the parse —
+    /// the exact discipline of [`CrossoverTable::parse`], which can
+    /// itself read these files by skipping the rate lines.
+    pub fn parse(text: &str) -> Option<CostModel> {
+        let mut min_words = None;
+        let mut host = None;
+        let mut device = None;
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (key, val) = line.split_once('=')?;
+            let val = val.trim();
+            match key.trim() {
+                "device_min_words" => {
+                    let n: usize = val.parse().ok()?;
+                    if n == 0 {
+                        return None;
+                    }
+                    min_words = Some(n);
+                }
+                "host_words_per_sec" => {
+                    host = val.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0);
+                }
+                "device_words_per_sec" => {
+                    device = val.parse::<f64>().ok().filter(|v| v.is_finite() && *v > 0.0);
+                }
+                _ => {}
+            }
+        }
+        min_words.map(|n| CostModel {
+            crossover: CrossoverTable { device_min_words: n },
+            host_words_per_sec: host,
+            device_words_per_sec: device,
+        })
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "# openrand backend cost model (see docs/backends.md §Scheduler)\n\
+             # measured by `cargo bench --bench fig_backend`; superset of the\n\
+             # legacy backend_crossover.txt line format.\n\
+             device_min_words={}\n",
+            self.crossover.device_min_words
+        );
+        if let Some(h) = self.host_words_per_sec {
+            s.push_str(&format!("host_words_per_sec={h:.0}\n"));
+        }
+        if let Some(d) = self.device_words_per_sec {
+            s.push_str(&format!("device_words_per_sec={d:.0}\n"));
+        }
+        s
+    }
+
+    /// Persist for future scheduler arms on this machine.
+    pub fn persist(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.render())
+    }
+
+    /// Fraction of a large fill the device shard should take so both
+    /// arms finish together: `device / (host + device)` from the
+    /// measured rates, `0.5` while uncalibrated. Always in `(0, 1)`.
+    pub fn device_fraction(&self) -> f64 {
+        match (self.host_words_per_sec, self.device_words_per_sec) {
+            (Some(h), Some(d)) if h > 0.0 && d > 0.0 => d / (h + d),
+            _ => 0.5,
+        }
+    }
+}
+
 /// One point of the calibration sweep (`fig_backend`).
 #[derive(Debug, Clone, Copy)]
 pub struct CrossoverSample {
@@ -187,6 +330,28 @@ pub fn recommend(samples: &[CrossoverSample]) -> Option<CrossoverTable> {
         .map(|s| CrossoverTable { device_min_words: s.words })
 }
 
+/// Build a [`CostModel`] from a calibration sweep: the crossover from
+/// [`recommend`] (falling back to `fallback` when the device never won,
+/// same "no flaky-run poisoning" rule) plus sustained per-arm rates
+/// taken from the largest swept size of each arm, where dispatch
+/// overhead is best amortized — the regime the shard scheduler
+/// operates in.
+pub fn cost_model(samples: &[CrossoverSample], fallback: CrossoverTable) -> CostModel {
+    let crossover = recommend(samples).unwrap_or(fallback);
+    let host = samples
+        .iter()
+        .filter(|s| s.words > 0 && s.host_ns > 0.0)
+        .last()
+        .map(|s| s.words as f64 / (s.host_ns * 1e-9));
+    let device = samples
+        .iter()
+        .filter_map(|s| s.device_ns.map(|ns| (s.words, ns)))
+        .filter(|&(w, ns)| w > 0 && ns > 0.0)
+        .last()
+        .map(|(w, ns)| w as f64 / (ns * 1e-9));
+    CostModel { crossover, host_words_per_sec: host, device_words_per_sec: device }
+}
+
 /// The size-based selector. Owns a host arm, an optional device arm
 /// (absent on stub/artifact-less builds), and the calibration table.
 pub struct Auto {
@@ -256,6 +421,26 @@ impl FillBackend for Auto {
 
     fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()> {
         self.route_u32(gen, seed, ctr, out)
+    }
+
+    fn fill_u32_at(
+        &mut self,
+        gen: Generator,
+        seed: u64,
+        ctr: u32,
+        start: u64,
+        out: &mut [u32],
+    ) -> Result<()> {
+        if self.selection(gen, out.len()) == BackendKind::Device {
+            if let Some(d) = self.device.as_mut() {
+                if d.supports_fill_at(gen, start, out.len())
+                    && d.fill_u32_at(gen, seed, ctr, start, out).is_ok()
+                {
+                    return Ok(());
+                }
+            }
+        }
+        self.host.fill_u32_at(gen, seed, ctr, start, out)
     }
 
     // Typed fills: selection is by *word* count (2 words per u64/f64
@@ -333,6 +518,91 @@ mod tests {
     }
 
     #[test]
+    fn cost_model_parse_roundtrip_and_legacy_interop() {
+        let m = CostModel {
+            crossover: CrossoverTable { device_min_words: 262_144 },
+            host_words_per_sec: Some(2.0e9),
+            device_words_per_sec: Some(6.0e9),
+        };
+        assert_eq!(CostModel::parse(&m.render()), Some(m));
+        // A legacy crossover file is a valid (rate-less) cost model...
+        let legacy = CrossoverTable { device_min_words: 4096 };
+        assert_eq!(
+            CostModel::parse(&legacy.render()),
+            Some(CostModel::from_crossover(legacy))
+        );
+        // ...and the legacy parser reads the new file, skipping rates.
+        assert_eq!(
+            CrossoverTable::parse(&m.render()),
+            Some(CrossoverTable { device_min_words: 262_144 })
+        );
+        // Same poison rules as the table.
+        assert_eq!(CostModel::parse("host_words_per_sec=1e9\n"), None, "no crossover -> no model");
+        assert_eq!(CostModel::parse("device_min_words=0"), None);
+        assert_eq!(CostModel::parse("garbage"), None);
+        // Bad rates degrade to uncalibrated, they don't poison.
+        assert_eq!(
+            CostModel::parse("device_min_words=64\nhost_words_per_sec=-3\n"),
+            Some(CostModel::from_crossover(CrossoverTable { device_min_words: 64 }))
+        );
+    }
+
+    #[test]
+    fn cost_model_device_fraction() {
+        let mut m = CostModel::default();
+        assert_eq!(m.device_fraction(), 0.5, "uncalibrated -> even split");
+        m.host_words_per_sec = Some(1.0e9);
+        assert_eq!(m.device_fraction(), 0.5, "one-sided -> still even");
+        m.device_words_per_sec = Some(3.0e9);
+        assert!((m.device_fraction() - 0.75).abs() < 1e-12);
+        let f = m.device_fraction();
+        assert!(f > 0.0 && f < 1.0);
+    }
+
+    #[test]
+    fn cost_model_from_samples() {
+        let s = |w: usize, h: f64, d: Option<f64>| CrossoverSample {
+            words: w,
+            host_ns: h,
+            device_ns: d,
+        };
+        let samples = vec![
+            s(1 << 16, 100.0, Some(120.0)),
+            // Largest size: 2^20 words in 1 ms host / 0.5 ms device.
+            s(1 << 20, 1.0e6, Some(0.5e6)),
+        ];
+        let m = cost_model(&samples, CrossoverTable::default());
+        assert_eq!(m.crossover.device_min_words, 1 << 20);
+        let h = m.host_words_per_sec.unwrap();
+        let d = m.device_words_per_sec.unwrap();
+        assert!((h - (1u64 << 20) as f64 / 1.0e-3).abs() / h < 1e-9);
+        assert!((d - (1u64 << 20) as f64 / 0.5e-3).abs() / d < 1e-9);
+        // Device never ran: crossover keeps the fallback, host rate still
+        // measured, device rate absent.
+        let host_only = cost_model(
+            &[s(1 << 16, 100.0, None)],
+            CrossoverTable { device_min_words: 777 },
+        );
+        assert_eq!(host_only.crossover.device_min_words, 777);
+        assert!(host_only.host_words_per_sec.is_some());
+        assert!(host_only.device_words_per_sec.is_none());
+    }
+
+    #[test]
+    fn cost_model_persist_and_reload() {
+        let dir = std::env::temp_dir().join("openrand_cost_model_test");
+        let path = dir.join("backend_cost_model.txt");
+        let m = CostModel {
+            crossover: CrossoverTable { device_min_words: 8192 },
+            host_words_per_sec: Some(1.5e9),
+            device_words_per_sec: None,
+        };
+        m.persist(&path).unwrap();
+        assert_eq!(CostModel::load_from(&path), Some(m));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
     fn persist_and_reload() {
         let dir = std::env::temp_dir().join("openrand_crossover_test");
         let path = dir.join("backend_crossover.txt");
@@ -363,8 +633,8 @@ mod tests {
     #[test]
     fn selection_respects_support_and_size() {
         let mut auto = Auto::with_table(2, CrossoverTable { device_min_words: 1000 });
-        // Tyche has no stream-ordered artifact: always host.
-        assert_eq!(auto.selection(Generator::Tyche, 1 << 20), BackendKind::HostParallel);
+        // TycheI has no device artifact of either family: always host.
+        assert_eq!(auto.selection(Generator::TycheI, 1 << 20), BackendKind::HostParallel);
         // Below the crossover: host, regardless of device availability.
         assert_eq!(auto.selection(Generator::Philox, 999), BackendKind::HostParallel);
         if auto.device_available() {

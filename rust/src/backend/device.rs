@@ -11,13 +11,27 @@
 //! `par_fill_*` shards that same index space, which is how all three
 //! arms land every output element in the same position.
 //!
-//! Supported engines: Philox, Threefry, Squares (their artifacts are
-//! stream-ordered). The Tyche artifact is **lane-major** (lane `i` holds
-//! the first word of stream `(seed, ctr ^ i)` — a breadth-first layout
-//! for per-lane micro-streams, see `kernels/tyche.py`), so it is *not* a
-//! serial-stream fill and Tyche reports unsupported here rather than
-//! returning reordered words. The 2x32 engines have no lowered block
-//! artifacts.
+//! Supported engines: Philox, Threefry, Squares (their `{gen}_u32_{n}`
+//! artifacts are stream-ordered) and Tyche through the stream-ordered
+//! `tyche_u32_at_{n}` artifact (a sequential scan graph — the *other*
+//! tyche artifact, `tyche_u32_{n}`, is **lane-major**: lane `i` holds
+//! the first word of stream `(seed, ctr ^ i)`, a breadth-first layout
+//! for per-lane micro-streams, see `kernels/tyche.py`, and is never used
+//! for fills). The 2x32 engines and Tyche-i have no lowered stream
+//! artifacts and report unsupported.
+//!
+//! ## Offset fills (`fill_u32_at`)
+//!
+//! The `{gen}_u32_at_{n}` artifact family parameterizes the formerly
+//! unused 4th params word as the **starting counter-block index**
+//! (philox/threefry; stream word = `4·base`) or **starting word index**
+//! (squares/tyche). An interior span `start..start+len` is served by the
+//! artifact at `base = start / W` with the first `start % W` words of
+//! the returned block skipped — bitwise the same slice the host engines
+//! produce, which is what lets the shard scheduler hand the device an
+//! interior shard. Stores lowered before this family existed simply
+//! error here (and schedulers degrade to host), exactly like a missing
+//! prefix artifact.
 //!
 //! ## Buffer pool
 //!
@@ -50,21 +64,65 @@ pub const MAX_DEVICE_WORDS: usize = ARTIFACT_SIZES[ARTIFACT_SIZES.len() - 1];
 const POOL_CAP: usize = 256;
 
 /// Map a generator to its artifact name prefix and the 4-word params
-/// vector its kernel expects (`kernels/*.py` headers are normative).
-/// `None` = no stream-ordered artifact for this engine.
+/// vector its kernel expects (`kernels/*.py` headers are normative),
+/// with params word 3 (the base index) zero. `None` = no stream-ordered
+/// artifact family for this engine.
 fn artifact_params(gen: Generator, seed: u64, ctr: u32) -> Option<(&'static str, [u32; 4])> {
     match gen {
-        // philox/threefry kernels take [seed_lo, seed_hi, ctr, 0].
+        // philox/threefry kernels take [seed_lo, seed_hi, ctr, base].
         Generator::Philox => Some(("philox", [seed as u32, (seed >> 32) as u32, ctr, 0])),
         Generator::Threefry => Some(("threefry", [seed as u32, (seed >> 32) as u32, ctr, 0])),
-        // squares takes the derived key: [key_lo, key_hi, ctr, 0].
+        // squares takes the derived key: [key_lo, key_hi, ctr, base].
         Generator::Squares => {
             let key = counter::squares_key(seed);
             Some(("squares", [key as u32, (key >> 32) as u32, ctr, 0]))
         }
-        // tyche artifact is lane-major, not stream-ordered; 2x32 and
-        // tyche_i have no lowered artifacts.
+        // tyche is served by the stream-ordered scan artifact
+        // (`tyche_u32_at_{n}`, [seed_lo, seed_hi, ctr, base_word]) —
+        // NOT the lane-major `tyche_u32_{n}`.
+        Generator::Tyche => Some(("tyche", [seed as u32, (seed >> 32) as u32, ctr, 0])),
+        // 2x32 and tyche_i have no lowered stream artifacts.
         _ => None,
+    }
+}
+
+/// Output words per counter block of `gen`'s artifact — the unit of the
+/// base index in params word 3 (stream word = `W·base`).
+fn words_per_block(gen: Generator) -> u64 {
+    match gen {
+        Generator::Philox | Generator::Threefry => 4,
+        _ => 1,
+    }
+}
+
+/// Whether prefix fills of `gen` run through the `_at` artifact family
+/// at base 0 (true only for tyche, whose base-less artifact name is the
+/// unrelated lane-major layout).
+fn prefix_uses_at_family(gen: Generator) -> bool {
+    gen == Generator::Tyche
+}
+
+/// Artifact name for `prefix` at block size `n`, `_at` family or not.
+fn artifact_name(prefix: &str, at: bool, n: usize) -> String {
+    if at {
+        format!("{prefix}_u32_at_{n}")
+    } else {
+        format!("{prefix}_u32_{n}")
+    }
+}
+
+/// Base index (params word 3) and leading words to skip for a span
+/// starting at stream word `start`. `None` when the base exceeds the
+/// artifact's u32 parameter — except Squares, whose stream period *is*
+/// 2^32 words, so the u32 wrap is the engine's own counter arithmetic.
+fn base_and_skip(gen: Generator, start: u64) -> Option<(u32, usize)> {
+    let w = words_per_block(gen);
+    let base = start / w;
+    let skip = (start % w) as usize;
+    if gen == Generator::Squares || base <= u32::MAX as u64 {
+        Some((base as u32, skip))
+    } else {
+        None
     }
 }
 
@@ -110,29 +168,49 @@ impl DeviceFill {
     fn probe_artifact(&self) -> Option<String> {
         ["philox", "threefry", "squares"].iter().find_map(|prefix| {
             ARTIFACT_SIZES.iter().find_map(|n| {
-                let name = format!("{prefix}_u32_{n}");
-                self.store.manifest.get(&name).map(|_| name)
+                [artifact_name(prefix, false, *n), artifact_name(prefix, true, *n)]
+                    .into_iter()
+                    .find(|name| self.store.manifest.get(name).is_some())
             })
         })
     }
 
-    /// Whether this arm can serve `gen` at all (artifact layout is
-    /// stream-ordered and lowered).
+    /// Whether this arm can serve `gen` at all (a stream-ordered
+    /// artifact family is lowered for it — for tyche that is the `_at`
+    /// scan family, see the module header).
     pub fn supports(&self, gen: Generator) -> bool {
         artifact_params(gen, 0, 0)
             .map(|(prefix, _)| {
+                let at = prefix_uses_at_family(gen);
                 ARTIFACT_SIZES
                     .iter()
-                    .any(|n| self.store.manifest.get(&format!("{prefix}_u32_{n}")).is_some())
+                    .any(|&n| self.store.manifest.get(&artifact_name(prefix, at, n)).is_some())
             })
             .unwrap_or(false)
     }
 
-    /// Whether a `len`-word fill of `gen` fits a single lowered artifact.
+    /// Whether a `len`-word prefix fill of `gen` fits a single lowered
+    /// artifact.
     pub fn supports_fill(&self, gen: Generator, len: usize) -> bool {
         artifact_params(gen, 0, 0)
-            .map(|(prefix, _)| self.pick_artifact(prefix, len).is_some())
+            .map(|(prefix, _)| {
+                self.pick_artifact(prefix, prefix_uses_at_family(gen), len).is_some()
+            })
             .unwrap_or(false)
+    }
+
+    /// Whether an interior span `start..start + len` of `gen` can be
+    /// served through the `_at` artifact family (present, span fits,
+    /// base index representable — the `fill_u32_at` preconditions).
+    pub fn supports_fill_at(&self, gen: Generator, start: u64, len: usize) -> bool {
+        if start == 0 {
+            return self.supports_fill(gen, len);
+        }
+        let Some((prefix, _)) = artifact_params(gen, 0, 0) else { return false };
+        match base_and_skip(gen, start) {
+            Some((_, skip)) => self.pick_artifact(prefix, true, skip + len).is_some(),
+            None => false,
+        }
     }
 
     /// `(pool hits, uploads)` — observability for the pool's claim that
@@ -141,10 +219,11 @@ impl DeviceFill {
         (self.pool_hits, self.pool_uploads)
     }
 
-    /// Smallest lowered artifact (name, size) covering `len` words.
-    fn pick_artifact(&self, prefix: &str, len: usize) -> Option<(String, usize)> {
+    /// Smallest lowered artifact (name, size) covering `len` words, in
+    /// the prefix (`at=false`) or offset (`at=true`) family.
+    fn pick_artifact(&self, prefix: &str, at: bool, len: usize) -> Option<(String, usize)> {
         ARTIFACT_SIZES.iter().copied().filter(|&n| n >= len).find_map(|n| {
-            let name = format!("{prefix}_u32_{n}");
+            let name = artifact_name(prefix, at, n);
             self.store.manifest.get(&name).map(|_| (name, n))
         })
     }
@@ -197,14 +276,16 @@ impl FillBackend for DeviceFill {
         let (prefix, params) = artifact_params(gen, seed, ctr).ok_or_else(|| {
             anyhow!(
                 "no stream-ordered device artifact for generator '{}' \
-                 (device arm serves philox|threefry|squares)",
+                 (device arm serves philox|threefry|squares|tyche)",
                 gen.name()
             )
         })?;
-        let Some((name, n_art)) = self.pick_artifact(prefix, out.len()) else {
+        let at = prefix_uses_at_family(gen);
+        let Some((name, n_art)) = self.pick_artifact(prefix, at, out.len()) else {
             bail!(
                 "fill of {} words exceeds the largest '{prefix}' block artifact \
-                 ({MAX_DEVICE_WORDS}); use a host arm or split across ctr values",
+                 ({MAX_DEVICE_WORDS}) or the family is not lowered; \
+                 use a host arm or split across ctr values",
                 out.len()
             );
         };
@@ -216,6 +297,58 @@ impl FillBackend for DeviceFill {
         // The artifact computes the full block; a shorter request is the
         // stream prefix (identical to the host fill from position 0).
         out.copy_from_slice(&words[..out.len()]);
+        Ok(())
+    }
+
+    fn fill_u32_at(
+        &mut self,
+        gen: Generator,
+        seed: u64,
+        ctr: u32,
+        start: u64,
+        out: &mut [u32],
+    ) -> Result<()> {
+        if start == 0 {
+            // Byte-stable with pre-`_at` artifact stores: prefix fills
+            // keep running through the prefix family.
+            return self.fill_u32(gen, seed, ctr, out);
+        }
+        if out.is_empty() {
+            return Ok(());
+        }
+        let (prefix, mut params) = artifact_params(gen, seed, ctr).ok_or_else(|| {
+            anyhow!(
+                "no stream-ordered device artifact for generator '{}' \
+                 (device arm serves philox|threefry|squares|tyche)",
+                gen.name()
+            )
+        })?;
+        let Some((base, skip)) = base_and_skip(gen, start) else {
+            bail!(
+                "offset {start} exceeds the u32 base index of the '{prefix}' \
+                 offset artifacts; use a host arm",
+            );
+        };
+        let Some((name, _)) = self.pick_artifact(prefix, true, skip + out.len()) else {
+            bail!(
+                "no '{prefix}' offset artifact covers {} words (+{skip} skip) — \
+                 artifacts predate the `_at` family or the span exceeds \
+                 {MAX_DEVICE_WORDS}; re-run `make artifacts` or use a host arm",
+                out.len()
+            );
+        };
+        params[3] = base;
+        let words = self.call_block(&name, params)?;
+        if words.len() < skip + out.len() {
+            bail!(
+                "artifact '{name}' returned {} words, need {}",
+                words.len(),
+                skip + out.len()
+            );
+        }
+        // The artifact emits words W·base .. W·base + n_art; the request
+        // begins `skip` words into that block.
+        out.copy_from_slice(&words[skip..skip + out.len()]);
         Ok(())
     }
 }
@@ -237,15 +370,39 @@ mod tests {
         let (p, v) = artifact_params(Generator::Squares, seed, 5).unwrap();
         assert_eq!(p, "squares");
         assert_eq!(v, [key as u32, (key >> 32) as u32, 5, 0]);
-        // Lane-major / unlowered engines are refused.
-        for g in [
-            Generator::Tyche,
-            Generator::TycheI,
-            Generator::Philox2x32,
-            Generator::Threefry2x32,
-        ] {
+        // Tyche is served by the stream-ordered `_at` scan family.
+        let (p, v) = artifact_params(Generator::Tyche, seed, 9).unwrap();
+        assert_eq!((p, v), ("tyche", [0x89AB_CDEF, 0x0123_4567, 9, 0]));
+        assert!(prefix_uses_at_family(Generator::Tyche));
+        assert!(!prefix_uses_at_family(Generator::Philox));
+        // Unlowered engines are refused.
+        for g in [Generator::TycheI, Generator::Philox2x32, Generator::Threefry2x32] {
             assert!(artifact_params(g, seed, 0).is_none(), "{}", g.name());
         }
+    }
+
+    #[test]
+    fn base_and_skip_units_and_bounds() {
+        // philox/threefry: base is a 4-word counter block index.
+        assert_eq!(base_and_skip(Generator::Philox, 0), Some((0, 0)));
+        assert_eq!(base_and_skip(Generator::Philox, 7), Some((1, 3)));
+        assert_eq!(base_and_skip(Generator::Threefry, 4096), Some((1024, 0)));
+        // Representable up to 2^34 words (2^32 blocks), refused past it.
+        assert_eq!(base_and_skip(Generator::Philox, (1u64 << 34) - 1), Some((u32::MAX, 3)));
+        assert_eq!(base_and_skip(Generator::Philox, 1u64 << 34), None);
+        // squares/tyche: base is a word index.
+        assert_eq!(base_and_skip(Generator::Squares, 77), Some((77, 0)));
+        assert_eq!(base_and_skip(Generator::Tyche, 77), Some((77, 0)));
+        // Squares wraps at its 2^32-word period; tyche refuses instead.
+        assert_eq!(base_and_skip(Generator::Squares, (1u64 << 32) + 5), Some((5, 0)));
+        assert_eq!(base_and_skip(Generator::Tyche, (1u64 << 32) + 5), None);
+    }
+
+    #[test]
+    fn artifact_names_cover_both_families() {
+        assert_eq!(artifact_name("philox", false, 65_536), "philox_u32_65536");
+        assert_eq!(artifact_name("philox", true, 65_536), "philox_u32_at_65536");
+        assert_eq!(artifact_name("tyche", true, 1_048_576), "tyche_u32_at_1048576");
     }
 
     #[test]

@@ -22,6 +22,12 @@
 //!   calibration table ([`CrossoverTable`], measured the way
 //!   `benches/ablation_block.rs` measures dispatch amortization,
 //!   re-measured by `benches/fig_backend.rs`).
+//! * [`Sched`] — the shard scheduler: splits one fill into contiguous
+//!   word-index shards and runs host threads and the device
+//!   *simultaneously* on disjoint spans of the same stream, stitched
+//!   bitwise-identical to the serial layout via the
+//!   [`FillBackend::fill_u32_at`] offset entry point and sized by the
+//!   persisted [`auto::CostModel`].
 //!
 //! ## The backend contract (normative — `docs/backends.md`)
 //!
@@ -44,9 +50,11 @@
 
 pub mod auto;
 pub mod device;
+pub mod sched;
 
-pub use auto::{Auto, CrossoverTable};
+pub use auto::{Auto, CostModel, CrossoverTable};
 pub use device::DeviceFill;
+pub use sched::{Sched, Shard, ShardArm, ShardPlan};
 
 use anyhow::Result;
 
@@ -64,14 +72,18 @@ pub enum BackendKind {
     Device,
     /// Size-based host/device selection from the calibration table.
     Auto,
+    /// Heterogeneous shard scheduler: host threads and the device fill
+    /// disjoint contiguous shards of one stream concurrently.
+    Sched,
 }
 
 impl BackendKind {
-    pub const ALL: [BackendKind; 4] = [
+    pub const ALL: [BackendKind; 5] = [
         BackendKind::HostSerial,
         BackendKind::HostParallel,
         BackendKind::Device,
         BackendKind::Auto,
+        BackendKind::Sched,
     ];
 
     pub fn name(self) -> &'static str {
@@ -80,10 +92,11 @@ impl BackendKind {
             BackendKind::HostParallel => "par",
             BackendKind::Device => "device",
             BackendKind::Auto => "auto",
+            BackendKind::Sched => "sched",
         }
     }
 
-    /// Parse a CLI spelling (`host|par|device|auto`; `serial` and
+    /// Parse a CLI spelling (`host|par|device|auto|sched`; `serial` and
     /// `parallel` accepted as aliases).
     pub fn parse(s: &str) -> Option<BackendKind> {
         match s {
@@ -91,6 +104,7 @@ impl BackendKind {
             "par" | "parallel" => Some(BackendKind::HostParallel),
             "device" => Some(BackendKind::Device),
             "auto" => Some(BackendKind::Auto),
+            "sched" => Some(BackendKind::Sched),
             _ => None,
         }
     }
@@ -138,6 +152,26 @@ pub trait FillBackend {
 
     /// Stream words `0..out.len()` of the `(seed, ctr)` stream of `gen`.
     fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()>;
+
+    /// Stream words `start..start + out.len()` — the **offset entry
+    /// point** (§4 offset-fill layout): bitwise the `[start..]` slice of
+    /// a serial prefix fill of `start + out.len()` words. This is what
+    /// the shard scheduler stitches with, and what positioned stream /
+    /// serve interior fills route through. Default: the serial
+    /// positioned host fill, so host arms satisfy the contract with no
+    /// code of their own; the device arm overrides it with the
+    /// base-block-parameterized `{gen}_u32_at_{n}` artifacts.
+    fn fill_u32_at(
+        &mut self,
+        gen: Generator,
+        seed: u64,
+        ctr: u32,
+        start: u64,
+        out: &mut [u32],
+    ) -> Result<()> {
+        fill::fill_u32_at_gen(gen, seed, ctr, start, out);
+        Ok(())
+    }
 
     /// `u64` element `i` ← words `2i, 2i+1` (first word high) — the
     /// [`crate::core::Rng::next_u64`] pattern. Default: fetch words via
@@ -233,6 +267,18 @@ impl FillBackend for HostParallel {
         Ok(())
     }
 
+    fn fill_u32_at(
+        &mut self,
+        gen: Generator,
+        seed: u64,
+        ctr: u32,
+        start: u64,
+        out: &mut [u32],
+    ) -> Result<()> {
+        fill::par_fill_u32_at_gen(gen, seed, ctr, start, out, self.threads);
+        Ok(())
+    }
+
     fn fill_u64(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u64]) -> Result<()> {
         fill::par_fill_u64_gen(gen, seed, ctr, out, self.threads);
         Ok(())
@@ -258,6 +304,7 @@ pub fn make(kind: BackendKind, threads: usize) -> Result<Box<dyn FillBackend>> {
         BackendKind::HostParallel => Ok(Box::new(HostParallel::new(threads))),
         BackendKind::Device => Ok(Box::new(DeviceFill::try_new()?)),
         BackendKind::Auto => Ok(Box::new(Auto::new(threads))),
+        BackendKind::Sched => Ok(Box::new(Sched::new(threads))),
     }
 }
 
@@ -327,6 +374,26 @@ mod tests {
             af.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
             bf.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn offset_entry_point_matches_prefix_slice() {
+        // The trait default and the parallel override must both produce
+        // the [start..] slice of the serial prefix fill — the contract
+        // the shard scheduler stitches against.
+        for gen in [Generator::Philox, Generator::Squares, Generator::Tyche] {
+            let mut whole = vec![0u32; 4096];
+            HostSerial.fill_u32(gen, 0xF00, 3, &mut whole).unwrap();
+            for start in [1u64, 4, 777, 4000] {
+                let n = 4096 - start as usize;
+                let mut a = vec![0u32; n];
+                HostSerial.fill_u32_at(gen, 0xF00, 3, start, &mut a).unwrap();
+                assert_eq!(a, whole[start as usize..], "{} start={start}", gen.name());
+                let mut b = vec![0u32; n];
+                HostParallel::new(3).fill_u32_at(gen, 0xF00, 3, start, &mut b).unwrap();
+                assert_eq!(b, a, "{} start={start} par", gen.name());
+            }
+        }
     }
 
     #[test]

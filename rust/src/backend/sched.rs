@@ -1,0 +1,426 @@
+//! The shard scheduler: one fill, host threads and the device at once.
+//!
+//! [`Sched`] splits a single keyed fill into contiguous word-index
+//! shards ([`ShardPlan`]), dispatches every host shard to its own
+//! scoped thread and every device shard to the offset entry point
+//! ([`FillBackend::fill_u32_at`], backed by the `{gen}_u32_at_{n}`
+//! artifacts), and stitches the result in place. Because each arm
+//! writes exactly the stream words its shard names — bitwise the
+//! `[start..]` slice of the serial prefix fill, by the §4 offset-fill
+//! layout — the stitched buffer is byte-identical to serial
+//! [`crate::core::fill::fill_u32`] for *any* plan. Planning is
+//! therefore purely a performance decision, exactly like `Auto`'s
+//! host/device selection, and `coordinator::repro` asserts it over
+//! random plans.
+//!
+//! Shard sizing comes from the persisted [`CostModel`]: the device
+//! takes the *tail* `device_fraction()` of the fill (capped at the
+//! largest lowered artifact), the host prefix splits evenly across the
+//! worker threads. The device runs on the calling thread — the PJRT
+//! client is thread-confined — and overlaps with the host workers. A
+//! device execution error degrades to the serial host fill of that
+//! span mid-flight, so a plan can fail to be *fast* but never fail to
+//! be *correct*. On the vendored `xla` stub there is no device arm and
+//! every plan is host-only, the same degradation `DeviceFill` and
+//! `Auto` exhibit.
+
+use anyhow::{bail, Result};
+use std::thread;
+
+use super::auto::CostModel;
+use super::device::{DeviceFill, MAX_DEVICE_WORDS};
+use super::{BackendKind, FillBackend};
+use crate::core::fill;
+use crate::core::Generator;
+
+/// Which execution arm a shard runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ShardArm {
+    /// A scoped host worker thread (serial fill of the shard).
+    Host,
+    /// The device offset artifact, driven from the calling thread.
+    Device,
+}
+
+impl ShardArm {
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardArm::Host => "host",
+            ShardArm::Device => "device",
+        }
+    }
+}
+
+/// One contiguous span of the output: stream words
+/// `start..start + len`, produced by `arm`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    /// First stream word index of the span.
+    pub start: u64,
+    /// Span length in u32 words (never 0 in a valid plan).
+    pub len: usize,
+    /// Where the span is generated.
+    pub arm: ShardArm,
+}
+
+/// A validated tiling of a fill: shards are non-empty and contiguous
+/// from word 0 (shard `i+1` starts exactly where shard `i` ends), so a
+/// plan names every output word exactly once — the precondition for
+/// the stitch guarantee.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    shards: Vec<Shard>,
+}
+
+impl ShardPlan {
+    /// Validate an arbitrary tiling (the repro ladder feeds random
+    /// ones). Rejects empty shards, gaps, overlaps, and plans not
+    /// anchored at word 0.
+    pub fn new(shards: Vec<Shard>) -> Result<ShardPlan> {
+        let mut pos = 0u64;
+        for (i, s) in shards.iter().enumerate() {
+            if s.len == 0 {
+                bail!("shard {i} is empty");
+            }
+            if s.start != pos {
+                bail!(
+                    "shard {i} starts at word {} but the plan covers 0..{pos}: \
+                     shards must tile the fill contiguously from word 0",
+                    s.start
+                );
+            }
+            pos = match pos.checked_add(s.len as u64) {
+                Some(p) => p,
+                None => bail!("shard {i} overflows the u64 word index space"),
+            };
+        }
+        Ok(ShardPlan { shards })
+    }
+
+    /// An all-host plan: `len` words split into at most `pieces`
+    /// near-equal contiguous shards (fewer when `len < pieces`).
+    pub fn host_only(len: usize, pieces: usize) -> ShardPlan {
+        let pieces = pieces.max(1).min(len.max(1));
+        let (base, rem) = (len / pieces, len % pieces);
+        let mut shards = Vec::with_capacity(pieces);
+        let mut pos = 0u64;
+        for i in 0..pieces {
+            let n = base + usize::from(i < rem);
+            if n == 0 {
+                continue;
+            }
+            shards.push(Shard { start: pos, len: n, arm: ShardArm::Host });
+            pos += n as u64;
+        }
+        ShardPlan { shards }
+    }
+
+    pub fn shards(&self) -> &[Shard] {
+        &self.shards
+    }
+
+    /// Total words the plan covers (== the output length it fills).
+    pub fn total_words(&self) -> u64 {
+        self.shards.iter().map(|s| s.len as u64).sum()
+    }
+
+    /// Words assigned to the device arm.
+    pub fn device_words(&self) -> u64 {
+        self.shards
+            .iter()
+            .filter(|s| s.arm == ShardArm::Device)
+            .map(|s| s.len as u64)
+            .sum()
+    }
+
+    /// Compact human form for reports: `host:0+512,device:512+4096`.
+    pub fn describe(&self) -> String {
+        self.shards
+            .iter()
+            .map(|s| format!("{}:{}+{}", s.arm.name(), s.start, s.len))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+}
+
+/// The heterogeneous scheduler arm (CLI `--backend sched`).
+pub struct Sched {
+    host_threads: usize,
+    device: Option<DeviceFill>,
+    model: CostModel,
+}
+
+impl Sched {
+    /// Standard construction: probe the device, load the cost model
+    /// through the env → cost-model file → legacy crossover → default
+    /// chain.
+    pub fn new(threads: usize) -> Sched {
+        Sched::with_model(threads, CostModel::load())
+    }
+
+    /// Injection point for tests and the bench.
+    pub fn with_model(threads: usize, model: CostModel) -> Sched {
+        assert!(threads > 0, "threads must be positive");
+        Sched { host_threads: threads, device: DeviceFill::try_new().ok(), model }
+    }
+
+    pub fn host_threads(&self) -> usize {
+        self.host_threads
+    }
+
+    pub fn model(&self) -> CostModel {
+        self.model
+    }
+
+    pub fn device_available(&self) -> bool {
+        self.device.is_some()
+    }
+
+    /// `(pool hits, uploads)` of the device arm's param-buffer pool,
+    /// `None` without a device (mirrors [`super::Auto::device_pool_stats`]).
+    pub fn device_pool_stats(&self) -> Option<(u64, u64)> {
+        self.device.as_ref().map(|d| d.pool_stats())
+    }
+
+    /// Words of a `len`-word fill the device tail shard should take:
+    /// the cost model's `device_fraction()`, capped at the largest
+    /// lowered artifact, zero when the fill is below the crossover or
+    /// the device cannot serve the span.
+    fn device_shard_len(&self, gen: Generator, len: usize) -> usize {
+        let Some(d) = &self.device else { return 0 };
+        if len < self.model.crossover.device_min_words {
+            return 0;
+        }
+        let want = ((len as f64) * self.model.device_fraction()) as usize;
+        let want = want.min(MAX_DEVICE_WORDS).min(len);
+        if want == 0 {
+            return 0;
+        }
+        // Align the shard start UP to a 4-word boundary (a multiple of
+        // every engine's counter-block width), so the device shard has
+        // skip = 0 and never burns artifact capacity on discarded
+        // leading words. Alignment can push a tiny shard past the end
+        // of the fill — not worth a device dispatch anyway.
+        let start = ((len - want) as u64 + 3) & !3;
+        if start as usize >= len {
+            return 0;
+        }
+        let want = len - start as usize;
+        if d.supports_fill_at(gen, start, want) {
+            want
+        } else {
+            0
+        }
+    }
+
+    /// Build the performance plan for a `len`-word fill of `gen`: host
+    /// prefix split across the worker threads, device tail sized by the
+    /// cost model. Any plan is equally correct; this one is merely the
+    /// fast one for the measured rates.
+    pub fn plan_for(&self, gen: Generator, len: usize) -> ShardPlan {
+        let device_len = self.device_shard_len(gen, len);
+        let host_len = len - device_len;
+        let mut plan = ShardPlan::host_only(host_len, self.host_threads);
+        if device_len > 0 {
+            plan.shards.push(Shard {
+                start: host_len as u64,
+                len: device_len,
+                arm: ShardArm::Device,
+            });
+        }
+        plan
+    }
+
+    /// Execute an explicit plan. Host shards run on scoped threads
+    /// (serial within a shard — the plan already is the parallelism);
+    /// device shards run on the calling thread, overlapping the host
+    /// workers, and degrade to the serial host fill of their span on
+    /// any device error. Fails only on a plan/buffer length mismatch.
+    pub fn fill_u32_plan(
+        &mut self,
+        gen: Generator,
+        seed: u64,
+        ctr: u32,
+        plan: &ShardPlan,
+        out: &mut [u32],
+    ) -> Result<()> {
+        if plan.total_words() != out.len() as u64 {
+            bail!(
+                "plan covers {} words but the buffer holds {}",
+                plan.total_words(),
+                out.len()
+            );
+        }
+        let mut host_spans: Vec<(u64, &mut [u32])> = Vec::new();
+        let mut device_spans: Vec<(u64, &mut [u32])> = Vec::new();
+        let mut rest = out;
+        for s in plan.shards() {
+            let (span, tail) = rest.split_at_mut(s.len);
+            rest = tail;
+            match s.arm {
+                ShardArm::Host => host_spans.push((s.start, span)),
+                ShardArm::Device => device_spans.push((s.start, span)),
+            }
+        }
+        let device = &mut self.device;
+        thread::scope(|scope| {
+            let mut workers = Vec::with_capacity(host_spans.len());
+            for (start, span) in host_spans {
+                workers.push(scope.spawn(move || fill::fill_u32_at_gen(gen, seed, ctr, start, span)));
+            }
+            for (start, span) in device_spans {
+                let served = device
+                    .as_mut()
+                    .map(|d| d.fill_u32_at(gen, seed, ctr, start, span).is_ok())
+                    .unwrap_or(false);
+                if !served {
+                    fill::fill_u32_at_gen(gen, seed, ctr, start, span);
+                }
+            }
+            for w in workers {
+                w.join().expect("host shard worker panicked");
+            }
+        });
+        Ok(())
+    }
+}
+
+impl FillBackend for Sched {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Sched
+    }
+
+    fn fill_u32(&mut self, gen: Generator, seed: u64, ctr: u32, out: &mut [u32]) -> Result<()> {
+        let plan = self.plan_for(gen, out.len());
+        self.fill_u32_plan(gen, seed, ctr, &plan, out)
+    }
+
+    fn fill_u32_at(
+        &mut self,
+        gen: Generator,
+        seed: u64,
+        ctr: u32,
+        start: u64,
+        out: &mut [u32],
+    ) -> Result<()> {
+        // Interior spans are already sub-fill-sized: the sharded host
+        // fill is the right tool, no device tail worth planning.
+        fill::par_fill_u32_at_gen(gen, seed, ctr, start, out, self.host_threads);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::backend::HostSerial;
+
+    fn serial(gen: Generator, seed: u64, ctr: u32, n: usize) -> Vec<u32> {
+        let mut v = vec![0u32; n];
+        HostSerial.fill_u32(gen, seed, ctr, &mut v).unwrap();
+        v
+    }
+
+    #[test]
+    fn plan_validation() {
+        let h = |start: u64, len: usize| Shard { start, len, arm: ShardArm::Host };
+        assert!(ShardPlan::new(vec![]).is_ok(), "empty plan covers an empty fill");
+        assert!(ShardPlan::new(vec![h(0, 10), h(10, 5)]).is_ok());
+        assert!(ShardPlan::new(vec![h(0, 10), h(11, 5)]).is_err(), "gap");
+        assert!(ShardPlan::new(vec![h(0, 10), h(9, 5)]).is_err(), "overlap");
+        assert!(ShardPlan::new(vec![h(1, 10)]).is_err(), "not anchored at 0");
+        assert!(ShardPlan::new(vec![h(0, 0)]).is_err(), "empty shard");
+    }
+
+    #[test]
+    fn host_only_tiles_exactly() {
+        for (len, pieces) in [(0usize, 4usize), (1, 4), (7, 3), (4096, 8), (5, 16)] {
+            let plan = ShardPlan::host_only(len, pieces);
+            assert_eq!(plan.total_words(), len as u64, "len={len} pieces={pieces}");
+            assert!(plan.shards().len() <= pieces.max(1));
+            assert_eq!(plan.device_words(), 0);
+            // Re-validate through the public constructor.
+            assert!(ShardPlan::new(plan.shards().to_vec()).is_ok());
+        }
+    }
+
+    #[test]
+    fn plan_for_covers_fill_exactly() {
+        let sched = Sched::new(3);
+        for gen in [Generator::Philox, Generator::Tyche, Generator::Squares] {
+            for len in [0usize, 100, 1 << 16, (1 << 20) + 17] {
+                let plan = sched.plan_for(gen, len);
+                assert_eq!(plan.total_words(), len as u64, "{} len={len}", gen.name());
+                assert!(ShardPlan::new(plan.shards().to_vec()).is_ok());
+                if !sched.device_available() {
+                    assert_eq!(plan.device_words(), 0, "stub build plans host-only");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sched_matches_serial_reference() {
+        let mut sched = Sched::new(4);
+        for gen in [Generator::Philox, Generator::Threefry, Generator::Squares, Generator::Tyche] {
+            for len in [1usize, 37, 4096, 1 << 17] {
+                let mut got = vec![0u32; len];
+                sched.fill_u32(gen, 0xC0FFEE, 5, &mut got).unwrap();
+                assert_eq!(got, serial(gen, 0xC0FFEE, 5, len), "{} len={len}", gen.name());
+            }
+        }
+    }
+
+    #[test]
+    fn explicit_mixed_plans_stitch_bitwise() {
+        // Device shards in the plan are legal even without a device:
+        // they degrade to the serial host fill of the span, so the
+        // stitched bytes never depend on what hardware showed up.
+        let mut sched = Sched::new(2);
+        let n = 10_000usize;
+        let want = serial(Generator::Philox, 7, 1, n);
+        let plans = [
+            vec![
+                Shard { start: 0, len: 3, arm: ShardArm::Host },
+                Shard { start: 3, len: 4093, arm: ShardArm::Device },
+                Shard { start: 4096, len: 5904, arm: ShardArm::Host },
+            ],
+            vec![Shard { start: 0, len: n, arm: ShardArm::Device }],
+            vec![
+                Shard { start: 0, len: 5000, arm: ShardArm::Device },
+                Shard { start: 5000, len: 5000, arm: ShardArm::Device },
+            ],
+        ];
+        for shards in plans {
+            let plan = ShardPlan::new(shards).unwrap();
+            let mut got = vec![0u32; n];
+            sched.fill_u32_plan(Generator::Philox, 7, 1, &plan, &mut got).unwrap();
+            assert_eq!(got, want, "plan {}", plan.describe());
+        }
+    }
+
+    #[test]
+    fn plan_length_mismatch_rejected() {
+        let mut sched = Sched::new(2);
+        let plan = ShardPlan::host_only(100, 2);
+        let mut out = vec![0u32; 99];
+        assert!(sched.fill_u32_plan(Generator::Philox, 1, 0, &plan, &mut out).is_err());
+    }
+
+    #[test]
+    fn typed_and_offset_paths_match_serial() {
+        let mut sched = Sched::new(3);
+        let mut a = vec![0.0f64; 600];
+        sched.fill_f64(Generator::Threefry, 11, 2, &mut a).unwrap();
+        let mut b = vec![0.0f64; 600];
+        HostSerial.fill_f64(Generator::Threefry, 11, 2, &mut b).unwrap();
+        assert_eq!(
+            a.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let whole = serial(Generator::Tyche, 3, 9, 2048);
+        let mut tail = vec![0u32; 1000];
+        sched.fill_u32_at(Generator::Tyche, 3, 9, 1048, &mut tail).unwrap();
+        assert_eq!(tail, whole[1048..]);
+    }
+}

@@ -196,6 +196,104 @@ pub fn verify_backend_invariance(
     }
 }
 
+/// The mixed-arm shard-scheduler ladder: [`crate::backend::Sched`]
+/// output over pseudo-random shard plans — arbitrary word boundaries,
+/// host and device shards interleaved — must be **byte-identical** to
+/// the serial `core::fill` layout. The host arms are exercised
+/// unconditionally: device shards in a plan degrade to the host fill of
+/// their span when no device exists (the stub-build contract), so every
+/// random plan is legal everywhere. When a real device + `_at`
+/// artifacts are present, the same plans genuinely land interior spans
+/// on the device (the note in the description says which happened).
+/// Plans are derived deterministically from `seed` via the splitmix64
+/// chain, so the ladder replays bitwise like everything else here.
+pub fn verify_sched_invariance(
+    gen: Generator,
+    n: usize,
+    seed: u64,
+    ctr: u32,
+    plans: usize,
+    threads: usize,
+) -> ReproReport {
+    use crate::backend::{Sched, Shard, ShardArm, ShardPlan};
+    use crate::core::counter::splitmix64;
+    let fp = |words: &[u32]| {
+        let mut h = Fnv1a::new();
+        h.write_u32_slice(words);
+        h.finish()
+    };
+    let mut reference = vec![0u32; n];
+    fill::fill_u32_gen(gen, seed, ctr, &mut reference);
+    let mut hashes = vec![("serial".to_string(), fp(&reference))];
+    let mut consistent = true;
+    let mut sched = Sched::new(threads.max(1));
+    // Row 1: the scheduler's own cost-model plan (what `--backend
+    // sched` runs).
+    let model_plan = sched.plan_for(gen, n);
+    let mut got = vec![0u32; n];
+    match sched.fill_u32_plan(gen, seed, ctr, &model_plan, &mut got) {
+        Ok(()) => {
+            if got != reference {
+                consistent = false;
+            }
+            hashes.push((format!("plan:model({})", model_plan.shards().len()), fp(&got)));
+        }
+        Err(_) => consistent = false,
+    }
+    // Rows 2..: deterministic random plans with arbitrary shard
+    // boundaries and arms.
+    let mut state = seed ^ 0x5EED_0F_5C_4ED0_1E5u64;
+    let mut next = |state: &mut u64| {
+        *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        splitmix64(*state)
+    };
+    let mut device_shards_ran = 0u64;
+    for p in 0..plans {
+        let mut shards = Vec::new();
+        let mut pos = 0usize;
+        while pos < n {
+            let r = next(&mut state);
+            let len = 1 + (r as usize >> 8) % (n / 4 + 1).min(n - pos + 1).max(1);
+            let len = len.min(n - pos);
+            let arm = if r & 1 == 0 { ShardArm::Host } else { ShardArm::Device };
+            shards.push(Shard { start: pos as u64, len, arm });
+            pos += len;
+        }
+        let plan = match ShardPlan::new(shards) {
+            Ok(p) => p,
+            Err(_) => {
+                consistent = false;
+                continue;
+            }
+        };
+        device_shards_ran +=
+            plan.shards().iter().filter(|s| s.arm == ShardArm::Device).count() as u64;
+        let mut got = vec![0u32; n];
+        match sched.fill_u32_plan(gen, seed, ctr, &plan, &mut got) {
+            Ok(()) => {
+                if got != reference {
+                    consistent = false;
+                }
+                hashes.push((format!("plan{p}({})", plan.shards().len()), fp(&got)));
+            }
+            Err(_) => consistent = false,
+        }
+    }
+    let note = if sched.device_available() {
+        "device arm live"
+    } else {
+        "device shards degraded to host (stub/no artifacts)"
+    };
+    ReproReport {
+        description: format!(
+            "sched shard-plan ladder ({}, n={n}, plans={plans}, {device_shards_ran} device shards; {note})",
+            gen.name()
+        ),
+        hashes,
+        consistent,
+    }
+}
+
 /// The `StreamKey` zero-drift ladder: for every engine,
 /// `StreamKey::raw(seed, ctr)` must open the byte-identical stream as
 /// `CounterRng::new(seed, ctr)` (the facade's documented equivalence),
@@ -321,6 +419,19 @@ mod tests {
             "{}",
             r.render()
         );
+    }
+
+    #[test]
+    fn sched_invariance_holds() {
+        // Counter engine and a sequential engine; device shards degrade
+        // to host on stub builds, so this is unconditional.
+        let r = verify_sched_invariance(Generator::Philox, 20_000, 0x5EED, 3, 5, 4);
+        assert!(r.consistent, "{}", r.render());
+        // serial + model plan + 5 random plans.
+        assert_eq!(r.hashes.len(), 7, "{}", r.render());
+        let r = verify_sched_invariance(Generator::Tyche, 4_000, 0x5EED, 3, 3, 2);
+        assert!(r.consistent, "{}", r.render());
+        assert!(r.description.contains("sched"), "{}", r.description);
     }
 
     #[test]

@@ -149,6 +149,15 @@ pub fn fill_u32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u32]) {
     shard_u32::<G>(seed, ctr, 0, out);
 }
 
+/// Serial offset fill: stream words `start..start + out.len()` of
+/// `(seed, ctr)` — bitwise the `[start..]` slice of a longer serial
+/// prefix fill (the §4 index-space contract). This is the reference
+/// semantics of [`crate::backend::FillBackend::fill_u32_at`] and the
+/// per-shard primitive the shard scheduler stitches with.
+pub fn fill_u32_at<G: BlockRng>(seed: u64, ctr: u32, start: u64, out: &mut [u32]) {
+    shard_u32::<G>(seed, ctr, start, out);
+}
+
 /// Serial block fill of u64s — element `i` == the `i`-th [`Rng::next_u64`]
 /// of a fresh engine.
 pub fn fill_u64<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u64]) {
@@ -199,6 +208,22 @@ fn par_shards<T: Send>(out: &mut [T], threads: usize, shard: impl Fn(u64, &mut [
 pub fn par_fill_u32<G: BlockRng>(seed: u64, ctr: u32, out: &mut [u32], threads: usize) {
     assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
     par_shards(out, threads, move |start, chunk| shard_u32::<G>(seed, ctr, start, chunk));
+}
+
+/// Parallel offset fill: same output as [`fill_u32_at`] for every
+/// `threads` (each worker jumps to `start` + its shard offset).
+#[cfg(feature = "std")]
+pub fn par_fill_u32_at<G: BlockRng>(
+    seed: u64,
+    ctr: u32,
+    start: u64,
+    out: &mut [u32],
+    threads: usize,
+) {
+    assert!(out.len() <= u32::MAX as usize, "fill exceeds the 2^32-word period of the shortest-period engine");
+    par_shards(out, threads, move |s, chunk| {
+        shard_u32::<G>(seed, ctr, start.wrapping_add(s), chunk)
+    });
 }
 
 /// Parallel block fill: same output as [`fill_u64`] for every `threads`.
@@ -264,9 +289,35 @@ macro_rules! gen_dispatch_par {
     };
 }
 
+/// Same, for the offset (`_at`) family (extra `start` parameter).
+macro_rules! gen_dispatch_at {
+    ($(#[$doc:meta])* $name:ident, $target:ident $(, $threads:ident)?) => {
+        $(#[$doc])*
+        pub fn $name(gen: Generator, seed: u64, ctr: u32, start: u64, out: &mut [u32] $(, $threads: usize)?) {
+            use super::{Philox, Philox2x32, Squares, Threefry, Threefry2x32, Tyche, TycheI};
+            match gen {
+                Generator::Philox => $target::<Philox>(seed, ctr, start, out $(, $threads)?),
+                Generator::Philox2x32 => $target::<Philox2x32>(seed, ctr, start, out $(, $threads)?),
+                Generator::Threefry => $target::<Threefry>(seed, ctr, start, out $(, $threads)?),
+                Generator::Threefry2x32 => $target::<Threefry2x32>(seed, ctr, start, out $(, $threads)?),
+                Generator::Squares => $target::<Squares>(seed, ctr, start, out $(, $threads)?),
+                Generator::Tyche => $target::<Tyche>(seed, ctr, start, out $(, $threads)?),
+                Generator::TycheI => $target::<TycheI>(seed, ctr, start, out $(, $threads)?),
+            }
+        }
+    };
+}
+
 gen_dispatch!(
     /// [`fill_u32`] dispatched over the runtime [`Generator`] tag.
     fill_u32_gen, fill_u32, u32);
+gen_dispatch_at!(
+    /// [`fill_u32_at`] dispatched over the runtime [`Generator`] tag.
+    fill_u32_at_gen, fill_u32_at);
+#[cfg(feature = "std")]
+gen_dispatch_at!(
+    /// [`par_fill_u32_at`] dispatched over the runtime [`Generator`] tag.
+    par_fill_u32_at_gen, par_fill_u32_at, threads);
 gen_dispatch!(
     /// [`fill_u64`] dispatched over the runtime [`Generator`] tag.
     fill_u64_gen, fill_u64, u64);
@@ -389,6 +440,23 @@ mod tests {
             par_fill_f64::<Philox>(3, 3, &mut out, threads);
             let got: Vec<u64> = out.iter().map(|v| v.to_bits()).collect();
             assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn fill_u32_at_is_a_slice_of_the_prefix_fill() {
+        for g in Generator::ALL {
+            let mut whole = vec![0u32; 512];
+            fill_u32_gen(g, 0xA7, 2, &mut whole);
+            for start in [0u64, 1, 3, 4, 129, 500] {
+                let n = 512 - start as usize;
+                let mut out = vec![0u32; n];
+                fill_u32_at_gen(g, 0xA7, 2, start, &mut out);
+                assert_eq!(out, whole[start as usize..], "{} start={start}", g.name());
+                let mut par = vec![0u32; n];
+                par_fill_u32_at_gen(g, 0xA7, 2, start, &mut par, 3);
+                assert_eq!(par, out, "{} start={start} par", g.name());
+            }
         }
     }
 

@@ -58,7 +58,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "key", help: "hierarchical stream key path 'SEED[/cID|/eT]...' (e.g. 7/c3/e1 = root(7).child(3).epoch(1)); replaces --seed/--ctr — '7/e1' is byte-identical to --seed 7 --ctr 1 (brownian/repro take the seed and derive epochs internally)", default: None, is_flag: false },
         OptSpec { name: "n", help: "count (supports k/M/G suffix)", default: Some("16"), is_flag: false },
         OptSpec { name: "format", help: "generate/fetch output: u32|u64|f32|f64 (fetch also: normal)", default: Some("u32"), is_flag: false },
-        OptSpec { name: "crossover", help: "generate: auto-backend device crossover in words (k/M/G ok; overrides the persisted calibration; env OPENRAND_BACKEND_CROSSOVER elsewhere)", default: None, is_flag: false },
+        OptSpec { name: "crossover", help: "generate: auto/sched device crossover in words (k/M/G ok; overrides the persisted calibration; env OPENRAND_BACKEND_CROSSOVER elsewhere)", default: None, is_flag: false },
         OptSpec { name: "chunk-sweep", help: "stats: sweep BufferedWords chunk sizes {1k,4k,16k,64k} and report battery throughput per size", default: None, is_flag: true },
         OptSpec { name: "dist", help: "generate: sample a distribution instead of raw words: none|uniform|normal|ziggurat|exp|poisson|bernoulli|binomial|alias", default: Some("none"), is_flag: false },
         OptSpec { name: "lambda", help: "dist: rate for exp/poisson", default: Some("1.0"), is_flag: false },
@@ -76,7 +76,7 @@ fn specs() -> Vec<OptSpec> {
         OptSpec { name: "relax", help: "campaign validate: epochs to discard before MSD sampling", default: Some("1000"), is_flag: false },
         OptSpec { name: "sample-every", help: "campaign validate: epochs between MSD samples", default: Some("50"), is_flag: false },
         OptSpec { name: "tolerance", help: "campaign validate: relative tolerance on the recovered diffusion constant", default: Some("0.05"), is_flag: false },
-        OptSpec { name: "backend", help: "generate: host|par|device|auto (fill backend); brownian: host|device", default: None, is_flag: false },
+        OptSpec { name: "backend", help: "generate: host|par|device|auto|sched (fill backend); brownian: host|device", default: None, is_flag: false },
         OptSpec { name: "style", help: "brownian: openrand|curand_style|random123", default: Some("openrand"), is_flag: false },
         OptSpec { name: "words", help: "stats: words per test", default: Some("4M"), is_flag: false },
         OptSpec { name: "parallel", help: "stats: run the HOOMD parallel-stream suite", default: None, is_flag: true },
@@ -180,12 +180,14 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
     let kind = match args.get("backend") {
         Some(s) => Some(
             BackendKind::parse(s)
-                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (host|par|device|auto)"))?,
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}' (host|par|device|auto|sched)"))?,
         ),
         None => None,
     };
-    if args.get("crossover").is_some() && kind != Some(BackendKind::Auto) {
-        anyhow::bail!("--crossover only applies to --backend auto");
+    if args.get("crossover").is_some()
+        && !matches!(kind, Some(BackendKind::Auto) | Some(BackendKind::Sched))
+    {
+        anyhow::bail!("--crossover only applies to --backend auto|sched");
     }
     if let Some(kind) = kind {
         if dist != "none" {
@@ -230,8 +232,8 @@ fn cmd_generate(args: &Args) -> anyhow::Result<()> {
 /// backend (`openrand::backend`). Every arm is
 /// byte-identical to the word-at-a-time path for every format — the
 /// backend contract (`docs/backends.md`); `rust/tests/cli.rs` pins it
-/// end to end. `--crossover N` overrides the `auto` arm's calibrated
-/// host/device switch point.
+/// end to end. `--crossover N` overrides the calibrated host/device
+/// switch point of the `auto` and `sched` arms.
 #[allow(clippy::too_many_arguments)]
 fn generate_backend(
     args: &Args,
@@ -249,6 +251,13 @@ fn generate_backend(
             let table = CrossoverTable::from_env_value(v)
                 .ok_or_else(|| anyhow::anyhow!("--crossover: '{v}' is not a word count"))?;
             Box::new(backend::Auto::with_table(threads, table))
+        }
+        (BackendKind::Sched, Some(v)) => {
+            let table = CrossoverTable::from_env_value(v)
+                .ok_or_else(|| anyhow::anyhow!("--crossover: '{v}' is not a word count"))?;
+            let mut model = backend::CostModel::load();
+            model.crossover = table;
+            Box::new(backend::Sched::with_model(threads, model))
         }
         _ => backend::make(kind, threads)?,
     };
@@ -587,6 +596,11 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
     // cross-layer derivation KAT.
     let r6 = repro::verify_key_equivalence(seed, key.ctr(), 1 << 16);
     print!("{}", r6.render());
+    // The mixed-arm shard-scheduler ladder: sched output over random
+    // shard plans byte-equal to the serial fill; device shards degrade
+    // to host on stub builds (the note in the row says which ran).
+    let r7 = repro::verify_sched_invariance(gen, 1 << 18, seed, key.ctr(), 6, max_threads);
+    print!("{}", r7.render());
     if args.flag("verbose") {
         // Device buffer-pool observability (the serve metrics layer
         // aggregates the same counters fleet-wide): repeated fills of
@@ -613,6 +627,7 @@ fn cmd_repro(args: &Args) -> anyhow::Result<()> {
         && r4.consistent
         && r5.consistent
         && r6.consistent
+        && r7.consistent
     {
         println!("ALL REPRODUCIBILITY CHECKS PASSED");
         Ok(())

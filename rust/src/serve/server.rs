@@ -23,12 +23,12 @@
 //! fill's slot instead of issuing a duplicate backend call. Because a
 //! block's bytes are a pure function of `(key, gen, block)`, hits,
 //! waits, and fresh fills are indistinguishable in the reply bytes;
-//! only the metrics differ. Runs of missing blocks that start at stream
-//! word 0 are filled through the worker's backend arm (host / par /
-//! device / auto — the §4 sharding contract makes them all identical);
-//! interior runs use the positioned serial host fill
-//! ([`Generator::boxed_at`]), since device artifacts serve only prefix
-//! fills. `rust/tests/serve.rs` holds the whole stack to the
+//! only the metrics differ. Runs of missing blocks are filled through
+//! the worker's backend arm (host / par / device / auto / sched — the
+//! §4 sharding contract makes them all identical): prefix runs via
+//! `fill_u32`, interior runs via the offset entry point
+//! ([`FillBackend::fill_u32_at`], device-served by the `_at`
+//! artifacts). `rust/tests/serve.rs` holds the whole stack to the
 //! single-threaded `Stream` replay, across cache sizes including zero.
 
 use std::collections::HashMap;
@@ -367,10 +367,11 @@ impl StreamService {
     }
 }
 
-/// One span fill: a prefix span goes through the backend arm (host /
-/// par / device / auto — all byte-identical by the backend contract);
-/// an interior span uses the positioned serial host fill, since device
-/// artifacts only serve stream prefixes.
+/// One span fill through the worker's backend arm: a prefix span via
+/// `fill_u32`, an interior span via the offset entry point
+/// ([`FillBackend::fill_u32_at`], served by the `_at` artifacts on the
+/// device arm) — byte-identical either way by the backend and §4
+/// offset-fill contracts.
 fn fill_span(
     backend: &mut dyn FillBackend,
     gen: Generator,
@@ -381,8 +382,7 @@ fn fill_span(
     if first_word == 0 {
         backend.fill_u32(gen, key.seed(), key.ctr(), out)
     } else {
-        gen.boxed_at(key.seed(), key.ctr(), first_word).fill_u32(out);
-        Ok(())
+        backend.fill_u32_at(gen, key.seed(), key.ctr(), first_word, out)
     }
 }
 

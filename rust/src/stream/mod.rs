@@ -335,7 +335,9 @@ pub fn fill_f64_key(
 ///   write stream words `0..n` of the *key* (not the cursor) through a
 ///   [`FillBackend`], defaulting to the calibrated `Auto` arm.
 /// * **Positioned block fills** — [`Stream::fill_u32_at`] writes words
-///   `pos..pos + n` host-side via the engine's block path.
+///   `pos..pos + n` through the backend offset entry point
+///   ([`FillBackend::fill_u32_at`]; the engine's host block path on
+///   `no_std`).
 /// * **Distribution sampling** — [`Stream::sample`] (cursor-advancing)
 ///   and [`Stream::sample_fill`] (key-addressed bulk, backend-routed
 ///   for fixed-pattern samplers) are the one distribution surface (the
@@ -405,16 +407,40 @@ impl<E: CounterRng + BlockRng> Stream<E> {
     }
 
     /// Positioned block fill: stream words `pos..pos + out.len()` of
-    /// the key, host-side through the engine's block path
-    /// ([`fill::fill_from`]). O(1) jump for the counter engines;
-    /// Tyche's documented O(pos) exception applies. (Available without
-    /// `std` — this is the serial-core fill surface the C ABI exports.)
+    /// the key. Under `std` this routes through the backend **offset
+    /// entry point** ([`FillBackend::fill_u32_at`] on the thread's
+    /// cached [`default_backend`]) — device-capable for interior spans
+    /// via the `_at` artifacts, byte-identical to the positioned host
+    /// fill by the §4 offset-fill layout. Without `std` (the serial
+    /// core the C ABI exports) it is the engine's own block path:
+    /// O(1) jump for the counter engines; Tyche's documented O(pos)
+    /// exception applies.
+    #[cfg(not(feature = "std"))]
     pub fn fill_u32_at(&self, pos: u64, out: &mut [u32]) {
         let mut g = E::new(self.key.seed(), self.key.ctr());
         if pos != 0 {
             g.set_position(pos);
         }
         fill::fill_from(&mut g, pos, out);
+    }
+
+    /// Positioned block fill (std: routed through the offset entry
+    /// point — see the `no_std` twin above for the full contract).
+    #[cfg(feature = "std")]
+    pub fn fill_u32_at(&self, pos: u64, out: &mut [u32]) {
+        match Generator::parse(E::NAME) {
+            Some(gen) => {
+                route(None, |b| b.fill_u32_at(gen, self.key.seed(), self.key.ctr(), pos, out))
+                    .expect("offset fills degrade to the infallible host path")
+            }
+            None => {
+                let mut g = E::new(self.key.seed(), self.key.ctr());
+                if pos != 0 {
+                    g.set_position(pos);
+                }
+                fill::fill_from(&mut g, pos, out);
+            }
+        }
     }
 }
 
@@ -577,10 +603,15 @@ impl DynStream {
         fill_f64_key(backend, self.gen, self.key, out)
     }
 
-    /// Positioned block fill: words `pos..pos + out.len()` of the key.
+    /// Positioned block fill: words `pos..pos + out.len()` of the key,
+    /// routed through the backend offset entry point
+    /// ([`FillBackend::fill_u32_at`] on the thread's cached
+    /// [`default_backend`]) instead of the host-only positioned cursor
+    /// — byte-identical by the §4 offset-fill layout, device-capable
+    /// for interior spans.
     pub fn fill_u32_at(&self, pos: u64, out: &mut [u32]) {
-        let mut g = self.gen.boxed_at(self.key.seed(), self.key.ctr(), pos);
-        g.fill_u32(out);
+        route(None, |b| b.fill_u32_at(self.gen, self.key.seed(), self.key.ctr(), pos, out))
+            .expect("offset fills degrade to the infallible host path")
     }
 
     /// Key-addressed bulk sampling (see [`Stream::sample_fill`]).

@@ -166,14 +166,90 @@ fn device_arm_refuses_unsupported_engines() {
         assert!(!format!("{err:#}").is_empty());
         return;
     };
+    // Tyche graduated to the `_at` scan artifacts (PR 4 carry-over);
+    // only the engines with no artifact of either family still refuse.
     let mut out = vec![0u32; 64];
-    for gen in [Generator::Tyche, Generator::TycheI, Generator::Philox2x32] {
+    for gen in [Generator::TycheI, Generator::Philox2x32, Generator::Threefry2x32] {
         let err = dev.fill_u32(gen, 1, 0, &mut out).unwrap_err();
         assert!(
             format!("{err:#}").contains("stream-ordered"),
             "{}: {err:#}",
             gen.name()
         );
+    }
+}
+
+#[test]
+fn device_arm_serves_tyche_stream_order_or_skip() {
+    // The former refusal path: the lane-major tyche artifact could not
+    // serve stream-ordered fills, so `DeviceFill` refused the engine.
+    // The `tyche_u32_at_{n}` scan artifacts lower the true sequential
+    // stream; prefix fills route through them at base 0.
+    let Some(mut dev) = device() else { return };
+    if !dev.supports(Generator::Tyche) {
+        assert!(
+            !strict(),
+            "OPENRAND_REQUIRE_ARTIFACTS=1 but the tyche `_at` artifacts are missing \
+             (artifacts predate the offset family; re-run `make artifacts`)"
+        );
+        eprintln!("skipping tyche device KAT (artifacts predate the `_at` family)");
+        return;
+    }
+    for (seed, ctr) in [(0u64, 0u32), (42, 7), (0xDEAD_BEEF_1234_5678, 3)] {
+        for n in [1usize, 5, 4096] {
+            let mut got = vec![0u32; n];
+            dev.fill_u32(Generator::Tyche, seed, ctr, &mut got).unwrap();
+            assert_eq!(
+                got,
+                serial_words(Generator::Tyche, seed, ctr, n),
+                "tyche seed={seed:#x} ctr={ctr} n={n}"
+            );
+        }
+    }
+}
+
+#[test]
+fn device_offset_artifact_kat_or_skip() {
+    // The offset-fill KAT: `fill_u32_at(gen, seed, ctr, start, out)`
+    // through the `{gen}_u32_at_{n}` artifacts must be bitwise the
+    // `[start..]` slice of the serial prefix fill (§4 offset-fill
+    // layout), including starts that are not block-aligned (the skip
+    // path) and engines whose base counts 4-word blocks.
+    let Some(mut dev) = device() else { return };
+    let engines =
+        [Generator::Philox, Generator::Threefry, Generator::Squares, Generator::Tyche];
+    for gen in engines {
+        if !dev.supports_fill_at(gen, 4, 64) {
+            assert!(
+                !strict(),
+                "OPENRAND_REQUIRE_ARTIFACTS=1 but the '{}' `_at` artifacts are missing \
+                 (re-run `make artifacts`)",
+                gen.name()
+            );
+            eprintln!("skipping {} offset KAT (no `_at` artifacts)", gen.name());
+            continue;
+        }
+        for (seed, ctr) in [(7u64, 1u32), (0xDEAD_BEEF_1234_5678, 3)] {
+            // Unaligned and aligned starts; spans crossing the artifact
+            // pick boundary.
+            for (start, n) in [(1u64, 63usize), (3, 500), (4, 4096), (1027, 1), (65_000, 1000)] {
+                let whole = serial_words(gen, seed, ctr, start as usize + n);
+                let mut got = vec![0u32; n];
+                dev.fill_u32_at(gen, seed, ctr, start, &mut got).unwrap();
+                assert_eq!(
+                    got,
+                    whole[start as usize..],
+                    "{} seed={seed:#x} ctr={ctr} start={start} n={n}",
+                    gen.name()
+                );
+            }
+        }
+    }
+    // Beyond-period starts: squares wraps (its stream period is 2^32
+    // words), the others refuse rather than alias.
+    if dev.supports_fill_at(Generator::Tyche, 4, 64) {
+        let mut out = vec![0u32; 8];
+        assert!(dev.fill_u32_at(Generator::Tyche, 1, 0, 1u64 << 32, &mut out).is_err());
     }
 }
 

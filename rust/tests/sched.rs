@@ -1,0 +1,128 @@
+//! Shard-scheduler suite: `Sched` must stitch **byte-identical** output
+//! to the serial `core::fill` layout for *any* shard plan — arbitrary
+//! boundaries, host and device arms interleaved — across random
+//! `(gen, seed, ctr, len, plan)` tuples. Device shards degrade to the
+//! host fill of their span on stub builds, so the property holds
+//! unconditionally; on artifact builds the same plans land interior
+//! spans on the `_at` artifacts.
+
+use openrand::backend::{
+    CostModel, CrossoverTable, FillBackend, Sched, Shard, ShardArm, ShardPlan,
+};
+use openrand::core::counter::splitmix64;
+use openrand::core::{fill, Generator};
+use openrand::coordinator::repro;
+use openrand::testing::prop::{Gen, Prop};
+
+fn serial_words(gen: Generator, seed: u64, ctr: u32, n: usize) -> Vec<u32> {
+    let mut out = vec![0u32; n];
+    fill::fill_u32_gen(gen, seed, ctr, &mut out);
+    out
+}
+
+/// Derive a random-but-deterministic plan for `len` words from `rng`
+/// state: shard lengths are arbitrary (down to a single word), arms
+/// alternate pseudo-randomly.
+fn random_plan(state: &mut u64, len: usize) -> ShardPlan {
+    let mut next = |s: &mut u64| {
+        *s = s.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        splitmix64(*s)
+    };
+    let mut shards = Vec::new();
+    let mut pos = 0usize;
+    while pos < len {
+        let r = next(state);
+        let chunk = 1 + (r as usize >> 8) % (len / 3 + 1);
+        let chunk = chunk.min(len - pos);
+        let arm = if r & 1 == 0 { ShardArm::Host } else { ShardArm::Device };
+        shards.push(Shard { start: pos as u64, len: chunk, arm });
+        pos += chunk;
+    }
+    ShardPlan::new(shards).expect("contiguous by construction")
+}
+
+#[test]
+fn prop_random_shard_plans_stitch_serial_bytes() {
+    // The tentpole property: for random (gen, seed, ctr, len) tuples
+    // and random shard plans over them, the stitched output equals the
+    // serial reference byte-for-byte.
+    let gens = [Generator::Philox, Generator::Threefry, Generator::Squares, Generator::Tyche];
+    Prop::new("sched random plans == serial bytes").cases(25).check3(
+        Gen::u64(),
+        Gen::u32(),
+        Gen::usize_in(1, 6000),
+        move |seed, ctr, len| {
+            let mut sched = Sched::new(3);
+            let mut plan_state = seed ^ (len as u64).rotate_left(17);
+            for gen in gens {
+                let want = serial_words(gen, seed, ctr, len);
+                for _ in 0..2 {
+                    let plan = random_plan(&mut plan_state, len);
+                    let mut got = vec![0u32; len];
+                    sched.fill_u32_plan(gen, seed, ctr, &plan, &mut got).unwrap();
+                    if got != want {
+                        eprintln!("plan {} diverged for {}", plan.describe(), gen.name());
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_sched_backend_equals_serial_bytes() {
+    // The FillBackend face (cost-model planning included) over random
+    // tuples, with a crossover low enough that device shards appear on
+    // artifact builds.
+    let model = CostModel::from_crossover(CrossoverTable { device_min_words: 512 });
+    Prop::new("sched backend == serial bytes").cases(15).check3(
+        Gen::u64(),
+        Gen::u32(),
+        Gen::usize_in(0, 3000),
+        move |seed, ctr, len| {
+            let mut sched = Sched::with_model(4, model);
+            let mut got = vec![0u32; len];
+            sched.fill_u32(Generator::Philox, seed, ctr, &mut got).unwrap();
+            got == serial_words(Generator::Philox, seed, ctr, len)
+        },
+    );
+}
+
+#[test]
+fn sched_invariance_ladder_passes() {
+    // The acceptance ladder at test scale (the `repro` r7 rung): model
+    // plan + random mixed-arm plans, byte-compared against serial.
+    for gen in [Generator::Philox, Generator::Tyche] {
+        let r = repro::verify_sched_invariance(gen, 30_000, 0x5C_4ED, 5, 6, 8);
+        assert!(r.consistent, "{}", r.render());
+    }
+}
+
+#[test]
+fn single_word_shards_and_typed_fills() {
+    // Degenerate plans: every word its own shard, alternating arms.
+    let n = 257usize;
+    let shards = (0..n)
+        .map(|i| Shard {
+            start: i as u64,
+            len: 1,
+            arm: if i % 2 == 0 { ShardArm::Host } else { ShardArm::Device },
+        })
+        .collect::<Vec<_>>();
+    let plan = ShardPlan::new(shards).unwrap();
+    let mut sched = Sched::new(2);
+    let mut got = vec![0u32; n];
+    sched.fill_u32_plan(Generator::Squares, 9, 2, &plan, &mut got).unwrap();
+    assert_eq!(got, serial_words(Generator::Squares, 9, 2, n));
+    // Typed fills ride the same words through the trait defaults.
+    let mut gf = vec![0.0f64; 400];
+    sched.fill_f64(Generator::Philox, 5, 1, &mut gf).unwrap();
+    let mut wf = vec![0.0f64; 400];
+    openrand::backend::HostSerial.fill_f64(Generator::Philox, 5, 1, &mut wf).unwrap();
+    assert_eq!(
+        gf.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        wf.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+}
